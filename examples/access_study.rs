@@ -1,0 +1,99 @@
+//! Access study: explore the InCRS design space on your own parameters —
+//! the Table I/II machinery as an interactive tool.
+//!
+//! Run: `cargo run --release --example access_study -- \
+//!         --rows 500 --cols 8192 --density 0.05 --sections 256 --blocks 8,16,32,64`
+
+use spmm_accel::access::column::{read_columns_csr, read_columns_incrs};
+use spmm_accel::access::locate::{measure, analytic_cost};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::convert::{from_coo, ALL_KINDS};
+use spmm_accel::formats::incrs::{InCrs, InCrsParams};
+use spmm_accel::formats::traits::{CountSink, SparseMatrix};
+use spmm_accel::util::args::Args;
+use spmm_accel::util::tables::{sig, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let rows = args.get_or("rows", 300usize).unwrap();
+    let cols = args.get_or("cols", 8192usize).unwrap();
+    let density = args.get_or("density", 0.05f64).unwrap();
+    let section = args.get_or("sections", 256usize).unwrap();
+    let blocks: Vec<usize> = args.list("blocks").unwrap().unwrap_or(vec![8, 16, 32, 64]);
+    let seed = args.get_or("seed", 1u64).unwrap();
+
+    let m = uniform(rows, cols, density, seed);
+    let coo = m.to_coo();
+    println!(
+        "matrix: {rows}x{cols} D={:.2}% nnz={}\n",
+        m.density() * 100.0,
+        m.nnz()
+    );
+
+    // Part 1: every format's random-access cost (Table I)
+    let mut t1 = Table::new(
+        "random-access cost by format",
+        &["format", "analytic", "measured avg MA", "storage words"],
+    );
+    for kind in ALL_KINDS {
+        let mat = from_coo(kind, &coo).unwrap();
+        let cost = measure(mat.as_ref(), 10_000, seed + 1);
+        t1.row(vec![
+            kind.name().to_string(),
+            analytic_cost(mat.as_ref()).map(sig).unwrap_or_default(),
+            sig(cost.avg()),
+            mat.storage_words().to_string(),
+        ]);
+    }
+    t1.print();
+
+    // Part 2: InCRS block-size sweep (the paper's S/b tradeoff, §III.C:
+    // "by reducing the size of the blocks the storage overhead and the
+    // expected benefit both increase")
+    let mut t2 = Table::new(
+        &format!("InCRS design sweep (S={section})"),
+        &[
+            "b", "counter bits", "est MA ratio", "meas MA ratio (col read)",
+            "storage ratio", "build ok",
+        ],
+    );
+    for &b in &blocks {
+        let params = InCrsParams { section, block: b };
+        if let Err(e) = params.validate() {
+            t2.row(vec![
+                b.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("no: {e}"),
+            ]);
+            continue;
+        }
+        let incrs = match InCrs::from_csr_params(&m, params) {
+            Ok(x) => x,
+            Err(e) => {
+                t2.row(vec![b.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), e]);
+                continue;
+            }
+        };
+        let mut c_crs = CountSink::default();
+        read_columns_csr(&m, Some(cols / 8), &mut c_crs);
+        let mut c_in = CountSink::default();
+        read_columns_incrs(&incrs, Some(cols / 8), &mut c_in);
+        let crs_words = (rows + 1) + 2 * m.nnz();
+        t2.row(vec![
+            b.to_string(),
+            format!(
+                "16+{}x{}",
+                params.blocks_per_section(),
+                params.bits_per_block()
+            ),
+            sig(incrs.estimated_ma_ratio()),
+            sig(c_crs.total as f64 / c_in.total as f64),
+            sig(crs_words as f64 / incrs.storage_words() as f64),
+            "yes".into(),
+        ]);
+    }
+    t2.print();
+}

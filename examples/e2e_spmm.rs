@@ -1,0 +1,189 @@
+//! END-TO-END driver: the full system on a real (synthetic, spec-matched)
+//! workload — proves all three layers compose (EXPERIMENTS.md §E2E).
+//!
+//! Pipeline, per the paper's story:
+//!   1. dataset: Docword-scale sparse matrix (Table II spec), stored
+//!      row-ordered;
+//!   2. routing: the coordinator decides InCRS pays off (N·D/(b+2) >> 1);
+//!   3. representation: InCRS build + measured column-access MA ratio and
+//!      cache-simulated time ratio vs CRS (contribution 1);
+//!   4. architecture: cycle-accurate latency of the synchronized mesh vs
+//!      FPIC and conventional MM at the Table V design points
+//!      (contribution 2);
+//!   5. numerics: the same multiplication executed for real, batched
+//!      through the coordinator onto the AOT-compiled Pallas block-sparse
+//!      kernel via PJRT (CPU fallback when artifacts are absent), verified
+//!      against the CPU oracle;
+//!   6. serving: a batch of jobs through the worker pool with metrics.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_spmm`
+//! (add `--scale 0.25` style args via env E2E_SCALE for quicker runs)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spmm_accel::arch::{
+    conv_cycles, fpic_simulate, model, sync_cycle_model, ConvMmConfig, FpicConfig,
+    SyncMeshConfig,
+};
+use spmm_accel::cachesim::{compare, HierarchyConfig};
+use spmm_accel::coordinator::{
+    route, EngineKind, JobOptions, RoutingPolicy, Server, ServerConfig, SpmmJob,
+};
+use spmm_accel::datasets::spec::table2_by_name;
+use spmm_accel::datasets::synth::generate;
+use spmm_accel::formats::incrs::InCrsParams;
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::runtime::Manifest;
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::tables::{human, sig};
+
+fn main() {
+    let scale: f64 = std::env::var("E2E_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let t0 = Instant::now();
+    println!("=== spmm-accel end-to-end driver (scale {scale}) ===\n");
+
+    // ---- 1. workload -----------------------------------------------------
+    let mut spec = table2_by_name("docword").expect("registry");
+    spec.rows = ((spec.rows as f64 * scale) as usize).max(64);
+    let b = generate(&spec, 42);
+    let a = generate(
+        &spmm_accel::datasets::spec::DatasetSpec {
+            name: "driver",
+            rows: 128,
+            cols: spec.rows,
+            stated_density: 0.1,
+            nnz_row: spmm_accel::datasets::spec::NnzRow {
+                min: 1,
+                avg: 0.1 * spec.rows as f64,
+                max: (0.25 * spec.rows as f64) as usize,
+            },
+            dist: spmm_accel::datasets::spec::ColumnDist::Uniform,
+        },
+        43,
+    );
+    println!(
+        "[1] workload: A {}x{} (nnz {}), B=docword {}x{} (nnz {}, D {:.1}%)",
+        a.rows(), a.cols(), human(a.nnz() as u64),
+        b.rows(), b.cols(), human(b.nnz() as u64), b.density() * 100.0
+    );
+
+    // ---- 2. routing -------------------------------------------------------
+    let artifacts = Manifest::default_dir().join("manifest.json").exists();
+    let r = route(&b, true, artifacts, &RoutingPolicy::default());
+    println!(
+        "[2] route: access={:?} engine={:?} (est. MA ratio {})",
+        r.access, r.engine, sig(r.estimated_ma_ratio)
+    );
+
+    // ---- 3. representation (contribution 1) -------------------------------
+    let cols_probe = ((b.cols() as f64 * scale) as usize).max(128);
+    let cmp = compare(
+        &b,
+        InCrsParams::default(),
+        HierarchyConfig::default(),
+        Some(cols_probe),
+    )
+    .expect("cache comparison");
+    println!(
+        "[3] InCRS vs CRS column read ({} cols probed): L1 accesses {}x, \
+         mem time {}x, total time {}x  (paper: 14-49x)",
+        cols_probe,
+        sig(cmp.l1_access_ratio()),
+        sig(cmp.mem_time_ratio()),
+        sig(cmp.total_time_ratio()),
+    );
+
+    // ---- 4. architecture (contribution 2) ---------------------------------
+    let sync = sync_cycle_model(&b, &b, SyncMeshConfig::default());
+    let (fpic_bw, _) = fpic_simulate(
+        &b,
+        &b,
+        FpicConfig { units: model::fpic_units_same_bandwidth(64), ..FpicConfig::default() },
+    );
+    let (fpic_buf, _) = fpic_simulate(
+        &b,
+        &b,
+        FpicConfig { units: model::fpic_units_same_buffer(64), ..FpicConfig::default() },
+    );
+    let conv = conv_cycles(b.rows(), b.rows(), b.cols(), ConvMmConfig::default());
+    println!(
+        "[4] B x Bᵀ latency (cycles): sync mesh {} | FPIC-sameBW {} ({}x) | \
+         FPIC-sameBuf {} ({}x) | conv MM {} ({}x)   (paper: FPIC 2-30x, conv 1.5-39x)",
+        human(sync.cycles),
+        human(fpic_bw.cycles),
+        sig(fpic_bw.cycles as f64 / sync.cycles as f64),
+        human(fpic_buf.cycles),
+        sig(fpic_buf.cycles as f64 / sync.cycles as f64),
+        human(conv.cycles),
+        sig(conv.cycles as f64 / sync.cycles as f64),
+    );
+    println!(
+        "    sync mesh: {} passes, {} useful MACs, utilization {:.2}%",
+        human(sync.passes),
+        human(sync.macs),
+        sync.utilization(64) * 100.0
+    );
+
+    // ---- 5 & 6. numerics through the serving stack ------------------------
+    let engine_kind = if artifacts { EngineKind::Pjrt } else { EngineKind::Cpu };
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        engine: engine_kind,
+        geometry: Geometry::default(),
+        artifacts_dir: Manifest::default_dir(),
+    });
+    let a = Arc::new(a);
+    let b = Arc::new(b);
+    let n_jobs = 8u64;
+    let t_serve = Instant::now();
+    let rxs: Vec<_> = (0..n_jobs)
+        .map(|i| {
+            server.submit(
+                SpmmJob::new(i, a.clone(), b.clone()).with_opts(JobOptions {
+                    verify: i == 0, // verify the first job against the oracle
+                    keep_result: false,
+                }),
+            )
+        })
+        .collect();
+    let mut max_err = 0.0f32;
+    let mut dispatches = 0u64;
+    let mut pairs = 0u64;
+    let mut backend = "";
+    for rx in rxs {
+        let out = rx.recv().expect("response").result.expect("job ok");
+        if let Some(e) = out.max_err {
+            max_err = max_err.max(e);
+        }
+        dispatches += out.report.dispatches;
+        pairs += out.report.real_pairs;
+        backend = out.backend;
+    }
+    let serve_wall = t_serve.elapsed();
+    let snap = server.metrics.snapshot();
+    println!(
+        "[5] numerics: {n_jobs} jobs on backend={backend}: {} dispatches, {} tile pairs, \
+         verified max|err| {:.2e}",
+        human(dispatches),
+        human(pairs),
+        max_err
+    );
+    println!(
+        "[6] serving: {:?} wall, p50 {} us, p99 {} us, throughput {:.1} jobs/s",
+        serve_wall,
+        snap.p50_us,
+        snap.p99_us,
+        n_jobs as f64 / serve_wall.as_secs_f64()
+    );
+    server.shutdown();
+
+    assert!(max_err < 1e-2, "numeric verification failed: {max_err}");
+    assert!(cmp.total_time_ratio() > 1.0, "InCRS must beat CRS end to end");
+    assert!(fpic_bw.cycles > sync.cycles, "sync mesh must beat FPIC");
+    println!("\nE2E OK in {:?} — all layers compose.", t0.elapsed());
+}

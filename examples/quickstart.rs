@@ -1,0 +1,71 @@
+//! Quickstart: the public API in one minute.
+//!
+//! Build a sparse matrix, convert it to the paper's InCRS format, compare
+//! random-access cost against CRS, and multiply through the accelerator
+//! dispatch path (CPU fallback so it runs without artifacts).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use spmm_accel::access::locate::measure;
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::incrs::InCrs;
+use spmm_accel::formats::traits::{CountSink, SparseMatrix};
+use spmm_accel::runtime::NumericEngine;
+use spmm_accel::spmm::plan::Geometry;
+
+fn main() {
+    // 1. a synthetic "docword-like" sparse matrix: 200 x 4096 at 4% density
+    let b = uniform(200, 4096, 0.04, 42);
+    println!(
+        "B: {}x{}, nnz={} (D={:.1}%)",
+        b.rows(),
+        b.cols(),
+        b.nnz(),
+        b.density() * 100.0
+    );
+
+    // 2. the paper's format: CRS + counter-vectors (S=256, b=32)
+    let incrs = InCrs::from_csr(&b).expect("rows fit the 16-bit prefix");
+    println!(
+        "InCRS storage: {} words vs CRS {} words (ratio {:.3})",
+        incrs.storage_words(),
+        (b.rows() + 1) + 2 * b.nnz(),
+        ((b.rows() + 1) + 2 * b.nnz()) as f64 / incrs.storage_words() as f64
+    );
+
+    // 3. random-access cost, CRS vs InCRS (Table I/II mechanism)
+    let crs_cost = measure(&b, 20_000, 7).avg();
+    let incrs_cost = measure(&incrs, 20_000, 7).avg();
+    println!(
+        "avg memory accesses to locate one element: CRS {crs_cost:.1}, \
+         InCRS {incrs_cost:.1} -> {:.1}x fewer",
+        crs_cost / incrs_cost
+    );
+
+    // 4. one full column read with explicit accounting
+    let mut sink = CountSink::default();
+    for i in 0..b.rows() {
+        incrs.locate(i, 1234, &mut sink);
+    }
+    println!(
+        "reading column 1234 through InCRS: {} accesses ({} counter words)",
+        sink.total,
+        sink.site(spmm_accel::formats::Site::Counter)
+    );
+
+    // 5. SpMM through the accelerator dispatch path (32x32 block pairs).
+    //    Use `NumericEngine::pjrt(Path::new("artifacts"))` after
+    //    `make artifacts` to run the AOT Pallas kernel instead.
+    let engine = NumericEngine::cpu(Geometry::default());
+    let a = uniform(96, 200, 0.1, 1);
+    let (c, report) = engine.spmm(&a, &b).expect("spmm");
+    let oracle = spmm_accel::spmm::dense::multiply(&a, &b);
+    println!(
+        "C = A x B: {}x{}, {} dispatches, {} real tile pairs, max err {:.2e}",
+        c.shape().0,
+        c.shape().1,
+        report.dispatches,
+        report.real_pairs,
+        c.max_abs_diff(&oracle)
+    );
+}

@@ -1,0 +1,92 @@
+"""AOT compile path: lower every L2 graph to an HLO-text artifact.
+
+Run ONCE by ``make artifacts``; Python never appears on the request path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering goes StableHLO -> XlaComputation with ``return_tuple=True``; the
+Rust side unwraps with ``to_tuple1()``.
+
+Alongside the ``.hlo.txt`` files we emit ``manifest.json`` recording the
+dispatch geometry (BLOCK/PAIRS/SLOTS/DENSE_DIM) and per-artifact operand
+shapes.  ``rust/src/runtime/artifact.rs`` parses and asserts against it, so
+the planner and the artifacts cannot drift apart silently.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from . import model
+
+try:  # jax moved the private xla_client around minor releases
+    from jax._src.lib import xla_client as xc
+except ImportError:  # pragma: no cover
+    from jaxlib import xla_client as xc  # type: ignore
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(name: str):
+    fn = model.GRAPHS[name]
+    args = model.example_args(name)
+    return jax.jit(fn).lower(*args)
+
+
+def shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def build(out_dir: str, names=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    names = names or list(model.GRAPHS)
+    manifest = {
+        "block": model.BLOCK,
+        "pairs": model.PAIRS,
+        "slots": model.SLOTS,
+        "dense_dim": model.DENSE_DIM,
+        "artifacts": {},
+    }
+    for name in names:
+        lowered = lower_graph(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [shape_entry(s) for s in model.example_args(name)],
+            "hlo_bytes": len(text),
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of graph names")
+    args = ap.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Reference planner: dense/CSR matrices -> sorted tile-pair dispatches.
+
+This is the *Python mirror* of ``rust/src/spmm/{blocks,plan}.rs``: numpy-only,
+used by the pytest suite to validate the kernel contract end-to-end (dense
+matrices -> blocking -> pair matching -> kernel dispatches -> scatter ->
+dense product).  Keeping the two planners behaviourally identical is part of
+the test surface (rust integration tests replay fixture plans emitted here —
+see tests/test_pipeline.py which stores golden plans).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Dispatch:
+    """One accelerator call: P pairs (padded), <=T distinct output slots."""
+
+    seg: np.ndarray          # int32[P] sorted, padding repeats last real id
+    a: np.ndarray            # f32[P, B, B]
+    b: np.ndarray            # f32[P, B, B]
+    n_real: int              # pairs before padding
+    # slot -> (output block row, output block col); only visited slots listed
+    slot_map: list
+
+
+def _nonzero_blocks(m, block):
+    """Map {(bi, bk) -> dense tile} of the non-empty block grid of ``m``."""
+    rows, cols = m.shape
+    nbr = (rows + block - 1) // block
+    nbc = (cols + block - 1) // block
+    out = {}
+    for bi in range(nbr):
+        for bk in range(nbc):
+            tile = m[bi * block:(bi + 1) * block, bk * block:(bk + 1) * block]
+            if np.any(tile != 0):
+                padded = np.zeros((block, block), m.dtype)
+                padded[: tile.shape[0], : tile.shape[1]] = tile
+                out[(bi, bk)] = padded
+    return out
+
+
+def plan(a_dense, b_dense, *, block, pairs, slots):
+    """Match nonzero blocks of A and B along K, sort by output tile, chunk.
+
+    The pair list is the block-granular version of the paper's comparator
+    mesh output: only (nonzero x nonzero) work survives.
+    """
+    assert a_dense.shape[1] == b_dense.shape[0]
+    ab = _nonzero_blocks(a_dense, block)
+    bb = _nonzero_blocks(b_dense, block)
+
+    # Index B's blocks by K-block for the intersection.
+    b_by_k = {}
+    for (bk, bj), tile in bb.items():
+        b_by_k.setdefault(bk, []).append((bj, tile))
+
+    # (out_bi, out_bj) -> [(a_tile, b_tile)], insertion-ordered by K.
+    by_out = {}
+    for (bi, bk) in sorted(ab.keys()):
+        a_tile = ab[(bi, bk)]
+        for bj, b_tile in b_by_k.get(bk, ()):
+            by_out.setdefault((bi, bj), []).append((a_tile, b_tile))
+
+    flat = []  # (out_coord, a_tile, b_tile), grouped by out_coord
+    for out_coord in sorted(by_out):
+        for a_tile, b_tile in by_out[out_coord]:
+            flat.append((out_coord, a_tile, b_tile))
+
+    dispatches = []
+    i = 0
+    while i < len(flat):
+        seg, av, bv, slot_map, slot_of = [], [], [], [], {}
+        while i < len(flat) and len(seg) < pairs:
+            out_coord, a_tile, b_tile = flat[i]
+            if out_coord not in slot_of:
+                if len(slot_map) == slots:
+                    break  # dispatch full on slots
+                # never split one output tile's pair group across dispatches
+                # unless it alone exceeds P (then revisit-accumulate resumes
+                # in the next dispatch and the scatter side adds partials)
+                slot_of[out_coord] = len(slot_map)
+                slot_map.append(out_coord)
+            seg.append(slot_of[out_coord])
+            av.append(a_tile)
+            bv.append(b_tile)
+            i += 1
+        n_real = len(seg)
+        while len(seg) < pairs:  # pad: repeat last slot with zero tiles
+            seg.append(seg[-1] if seg else 0)
+            av.append(np.zeros_like(flat[0][1]) if flat else np.zeros((1, 1)))
+            bv.append(np.zeros_like(flat[0][2]) if flat else np.zeros((1, 1)))
+        dispatches.append(
+            Dispatch(
+                seg=np.asarray(seg, np.int32),
+                a=np.stack(av),
+                b=np.stack(bv),
+                n_real=n_real,
+                slot_map=slot_map,
+            )
+        )
+    return dispatches
+
+
+def scatter(dispatches, out_tiles_fn, m, n, *, block, dtype=np.float32):
+    """Run ``out_tiles_fn(dispatch) -> (T,B,B)`` and assemble dense C."""
+    nbr = (m + block - 1) // block
+    nbc = (n + block - 1) // block
+    c = np.zeros((nbr * block, nbc * block), dtype)
+    for d in dispatches:
+        tiles = np.asarray(out_tiles_fn(d))
+        for slot, (bi, bj) in enumerate(d.slot_map):
+            c[bi * block:(bi + 1) * block, bj * block:(bj + 1) * block] += \
+                tiles[slot]
+    return c[:m, :n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness pin.
+
+Every kernel in ``spmm_block.py`` has an exact (same reduction order not
+required, allclose suffices) reference here; ``python/tests`` sweeps shapes,
+dtypes, densities, and segment patterns against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_pairs_ref(a, b):
+    """Batched tile products: einsum over the pair axis."""
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return jnp.einsum(
+        "pik,pkj->pij", a, b, preferred_element_type=out_dtype
+    ).astype(out_dtype)
+
+
+def spmm_block_ref(seg, a, b, *, slots):
+    """Segment-sum of pair products into output slots.
+
+    Unlike the kernel, unvisited slots here are exact zeros — tests compare
+    only visited slots (matching the kernel's contract).
+    """
+    prods = spmm_pairs_ref(a, b)
+    return jax.ops.segment_sum(prods, seg, num_segments=slots)
+
+
+def dense_mm_ref(x, y):
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    return jnp.dot(x, y, preferred_element_type=out_dtype).astype(out_dtype)
+
+
+def blocked_spmm_ref(a_dense, b_dense, block):
+    """End-to-end oracle for the full block-sparse pipeline: plain matmul.
+
+    The planner/gather/scatter plumbing (numpy in tests, Rust in production)
+    must make kernel output equal this, modulo f32 accumulation order.
+    """
+    del block  # blocking must not change the product
+    return dense_mm_ref(a_dense, b_dense)

@@ -1,0 +1,178 @@
+"""L1 Pallas kernels: the MAC hot-spot of the synchronized SpMM mesh, re-thought
+for the TPU MXU.
+
+The paper's FPGA mesh pairs every MAC node with an index comparator so only
+useful (nonzero x nonzero) work reaches the multiplier.  The TPU analogue
+(DESIGN.md `§Hardware-Adaptation`) is *block-sparse SpMM*: the comparator
+mesh's job — locating useful computation — is done at 32x32-block granularity
+by the Rust coordinator (mirroring the paper's R=32 round synchronization),
+and the MAC mesh's job is done here as dense 32x32 tile matmuls on the MXU.
+
+Two kernels:
+
+``spmm_pairs``
+    grid over P gathered tile pairs; step p computes ``a[p] @ b[p]``.
+    Pure batched MXU work; accumulation happens downstream.
+
+``spmm_block``
+    the full block-sparse contraction: pairs arrive *sorted by output tile*
+    (the coordinator guarantees this — it is the block-granular version of
+    the paper's sorted index streams), the output BlockSpec routes step p to
+    output slot ``seg[p]`` via scalar prefetch, and consecutive steps that
+    revisit the same slot accumulate in VMEM.  HBM traffic is one load per
+    input tile and one store per output tile — the Pallas expression of the
+    paper's "share operands along a row/column of the mesh".
+
+Both kernels MUST be lowered with ``interpret=True``: real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute.  Correctness is
+pinned against ``ref.py`` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile geometry.  32 matches the paper's round size R=32: one round of
+# the synchronized mesh consumes (up to) 32 index positions per stream, one
+# grid step here consumes a 32-wide K slab.
+BLOCK = 32
+# Default dispatch geometry (must match rust/src/runtime/artifact.rs and the
+# manifest emitted by aot.py).
+PAIRS = 128
+SLOTS = 64
+
+
+def _pairs_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[p] = a[p] @ b[p] (a single 32x32 MXU pass)."""
+    o_ref[...] = jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=o_ref.dtype
+    )[None]
+
+
+def spmm_pairs(a, b, *, interpret=True):
+    """Batched tile products: ``(P, bm, bk) x (P, bk, bn) -> (P, bm, bn)``.
+
+    The caller (L2 graph or the Rust coordinator) owns accumulation.
+    """
+    p, bm, bk = a.shape
+    pb, bk2, bn = b.shape
+    assert p == pb and bk == bk2, (a.shape, b.shape)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return pl.pallas_call(
+        _pairs_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bk, bn), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, bm, bn), out_dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _block_kernel(seg_ref, a_ref, b_ref, o_ref):
+    """One grid step of the block-sparse contraction.
+
+    ``seg_ref`` is the scalar-prefetched output-slot id per pair.  The output
+    BlockSpec already routed ``o_ref`` to slot ``seg[p]``; we zero it on first
+    visit (slot boundary in the sorted pair list) and accumulate otherwise.
+    """
+    p = pl.program_id(0)
+    is_first = jnp.logical_or(
+        p == 0, seg_ref[p] != seg_ref[jnp.maximum(p, 1) - 1]
+    )
+
+    prod = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=o_ref.dtype)
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = prod[None]
+
+    @pl.when(jnp.logical_not(is_first))
+    def _acc():
+        o_ref[...] += prod[None]
+
+
+def spmm_block(seg, a, b, *, slots=SLOTS, interpret=True):
+    """Block-sparse SpMM contraction over gathered tile pairs.
+
+    Args:
+      seg: int32[P], output slot per pair, **sorted ascending** (grouped is
+        enough; sorted is what the coordinator produces).  Padding pairs must
+        repeat the last real slot id with zero-valued tiles.
+      a:   (P, bm, bk) multiplicand tiles.
+      b:   (P, bk, bn) multiplier tiles.
+      slots: number of output tile slots T.
+
+    Returns:
+      (T, bm, bn) accumulated output tiles.  Slots never named in ``seg``
+      hold unspecified values — callers must only read slots they routed
+      pairs to (the Rust planner tracks the visited set).
+    """
+    p, bm, bk = a.shape
+    pb, bk2, bn = b.shape
+    assert p == pb and bk == bk2, (a.shape, b.shape)
+    assert seg.shape == (p,) and seg.dtype == jnp.int32, (seg.shape, seg.dtype)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, seg: (i, 0, 0)),
+            pl.BlockSpec((1, bk, bn), lambda i, seg: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, seg: (seg[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, bm, bn), out_dtype),
+        interpret=interpret,
+    )(seg, a, b)
+
+
+def _dense_mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k):
+    """Tiled dense matmul step: accumulate one K-slab into the (i,j) tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=acc_ref.dtype
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dense_mm(x, y, *, tile=64, interpret=True):
+    """Dense tiled matmul — the numeric twin of the conventional systolic MM
+    baseline (every K element processed, zeros included)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % tile == 0 and n % tile == 0 and k % tile == 0, (x.shape, y.shape, tile)
+    n_k = k // tile
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    return pl.pallas_call(
+        functools.partial(_dense_mm_kernel, n_k=n_k),
+        grid=(m // tile, n // tile, n_k),
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile, tile), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

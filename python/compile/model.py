@@ -1,0 +1,74 @@
+"""L2: the SpMM compute graphs that get AOT-lowered for the Rust runtime.
+
+The paper's system splits cleanly: *where* the useful work is (index
+matching) is decided by the coordinator; *doing* the work (MACs) is the
+accelerator mesh.  At L2 this is a single fused graph per dispatch shape —
+there is no Python on the request path, these functions exist only to be
+``jax.jit(...).lower()``-ed once by ``aot.py``.
+
+Graphs:
+  * ``spmm_block_graph``  — primary: scalar-prefetch Pallas contraction.
+  * ``spmm_pairs_graph``  — products-only fallback / ablation artifact.
+  * ``dense_mm_graph``    — conventional-MM numeric twin.
+
+All are shape-monomorphic per artifact; the dispatch geometry lives in the
+manifest so the Rust planner and this file cannot drift apart silently.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import spmm_block as kernels
+
+# Canonical artifact geometry — single source of truth, exported into
+# artifacts/manifest.json and asserted by rust/src/runtime/artifact.rs.
+BLOCK = kernels.BLOCK  # 32: tile edge == the paper's round size R
+PAIRS = kernels.PAIRS  # 128: tile pairs per dispatch
+SLOTS = kernels.SLOTS  # 64: output tile slots per dispatch
+DENSE_DIM = 256        # dense_mm artifact operand edge
+
+
+def spmm_block_graph(seg, a, b):
+    """One accelerator dispatch: P sorted tile pairs -> T output tiles."""
+    return (kernels.spmm_block(seg, a, b, slots=SLOTS, interpret=True),)
+
+
+def spmm_pairs_graph(a, b):
+    """Ablation/fallback dispatch: products only, accumulation downstream."""
+    return (kernels.spmm_pairs(a, b, interpret=True),)
+
+
+def dense_mm_graph(x, y):
+    """Dense baseline dispatch (processes zeros, like the conventional MM)."""
+    return (kernels.dense_mm(x, y, tile=64, interpret=True),)
+
+
+def example_args(name, dtype=jnp.float32):
+    """ShapeDtypeStructs used both for lowering and in the manifest."""
+    f = jax.ShapeDtypeStruct
+    if name == "spmm_block":
+        return (
+            f((PAIRS,), jnp.int32),
+            f((PAIRS, BLOCK, BLOCK), dtype),
+            f((PAIRS, BLOCK, BLOCK), dtype),
+        )
+    if name == "spmm_pairs":
+        return (
+            f((PAIRS, BLOCK, BLOCK), dtype),
+            f((PAIRS, BLOCK, BLOCK), dtype),
+        )
+    if name == "dense_mm":
+        return (
+            f((DENSE_DIM, DENSE_DIM), dtype),
+            f((DENSE_DIM, DENSE_DIM), dtype),
+        )
+    raise KeyError(name)
+
+
+GRAPHS = {
+    "spmm_block": spmm_block_graph,
+    "spmm_pairs": spmm_pairs_graph,
+    "dense_mm": dense_mm_graph,
+}

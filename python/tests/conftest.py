@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make `compile` importable whether pytest runs from python/ or the repo root.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY_ROOT = os.path.dirname(_HERE)
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, densities, and segment patterns; the fixed
+cases pin the exact artifact geometry (BLOCK/PAIRS/SLOTS) used by the Rust
+runtime.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import spmm_block as k
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.dtype(jnp.bfloat16) else dict(rtol=1e-4, atol=1e-4)
+
+
+def rand_tiles(p, bm, bk, dtype=np.float32, density=1.0, rng=RNG):
+    x = rng.standard_normal((p, bm, bk)).astype(np.float32)
+    if density < 1.0:
+        x *= rng.random((p, bm, bk)) < density
+    return jnp.asarray(x).astype(dtype)
+
+
+# ---------------------------------------------------------------- spmm_pairs
+
+class TestPairs:
+    @pytest.mark.parametrize("p", [1, 2, 7, 128])
+    def test_matches_ref_f32(self, p):
+        a, b = rand_tiles(p, 32, 32), rand_tiles(p, 32, 32)
+        np.testing.assert_allclose(
+            np.asarray(k.spmm_pairs(a, b)),
+            np.asarray(ref.spmm_pairs_ref(a, b)),
+            **tol(np.float32),
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p=st.integers(1, 16),
+        bm=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        bn=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep(self, p, bm, bk, bn, seed):
+        rng = np.random.default_rng(seed)
+        a = rand_tiles(p, bm, bk, rng=rng)
+        b = rand_tiles(p, bk, bn, rng=rng)
+        out = k.spmm_pairs(a, b)
+        assert out.shape == (p, bm, bn)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.spmm_pairs_ref(a, b)), **tol(np.float32)
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        a, b = rand_tiles(4, 32, 32, dtype), rand_tiles(4, 32, 32, dtype)
+        out = k.spmm_pairs(a, b)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref.spmm_pairs_ref(a, b), np.float32),
+            **tol(np.dtype(dtype)),
+        )
+
+    def test_zero_tiles_give_zero(self):
+        a = jnp.zeros((3, 32, 32), jnp.float32)
+        b = rand_tiles(3, 32, 32)
+        assert not np.asarray(k.spmm_pairs(a, b)).any()
+
+
+# ---------------------------------------------------------------- spmm_block
+
+def sorted_segments(draw_list, slots):
+    """Normalize arbitrary ints to a sorted, grouped segment vector."""
+    seg = np.sort(np.asarray(draw_list, np.int64) % slots).astype(np.int32)
+    return jnp.asarray(seg)
+
+
+class TestBlock:
+    def run_and_check(self, seg, a, b, slots):
+        out = np.asarray(k.spmm_block(seg, a, b, slots=slots))
+        want = np.asarray(ref.spmm_block_ref(seg, a, b, slots=slots))
+        visited = np.unique(np.asarray(seg))
+        np.testing.assert_allclose(out[visited], want[visited], **tol(a.dtype))
+
+    def test_single_pair(self):
+        a, b = rand_tiles(1, 32, 32), rand_tiles(1, 32, 32)
+        self.run_and_check(jnp.asarray([0], jnp.int32), a, b, 4)
+
+    def test_all_same_slot(self):
+        a, b = rand_tiles(9, 32, 32), rand_tiles(9, 32, 32)
+        self.run_and_check(jnp.asarray([3] * 9, jnp.int32), a, b, 8)
+
+    def test_all_distinct_slots(self):
+        a, b = rand_tiles(8, 32, 32), rand_tiles(8, 32, 32)
+        self.run_and_check(jnp.arange(8, dtype=jnp.int32), a, b, 8)
+
+    def test_artifact_geometry(self):
+        """The exact (PAIRS, SLOTS, BLOCK) shape the Rust runtime dispatches."""
+        p, slots = k.PAIRS, k.SLOTS
+        seg = sorted_segments(RNG.integers(0, slots, p), slots)
+        a, b = rand_tiles(p, k.BLOCK, k.BLOCK), rand_tiles(p, k.BLOCK, k.BLOCK)
+        self.run_and_check(seg, a, b, slots)
+
+    def test_padding_contract(self):
+        """Zero tiles repeating the last slot leave results unchanged."""
+        a, b = rand_tiles(4, 32, 32), rand_tiles(4, 32, 32)
+        seg = jnp.asarray([0, 0, 2, 2], jnp.int32)
+        base = np.asarray(k.spmm_block(seg, a, b, slots=4))
+        ap = jnp.concatenate([a, jnp.zeros((3, 32, 32), jnp.float32)])
+        bp = jnp.concatenate([b, jnp.zeros((3, 32, 32), jnp.float32)])
+        segp = jnp.asarray([0, 0, 2, 2, 2, 2, 2], jnp.int32)
+        padded = np.asarray(k.spmm_block(segp, ap, bp, slots=4))
+        for s in (0, 2):
+            np.testing.assert_allclose(padded[s], base[s], rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p=st.integers(1, 24),
+        slots=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+        density=st.sampled_from([0.1, 0.5, 1.0]),
+    )
+    def test_segment_sweep(self, p, slots, seed, density):
+        rng = np.random.default_rng(seed)
+        seg = sorted_segments(rng.integers(0, slots, p), slots)
+        a = rand_tiles(p, 16, 16, density=density, rng=rng)
+        b = rand_tiles(p, 16, 16, density=density, rng=rng)
+        self.run_and_check(seg, a, b, slots)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        a = rand_tiles(6, 32, 32, dtype)
+        b = rand_tiles(6, 32, 32, dtype)
+        seg = jnp.asarray([0, 0, 0, 1, 1, 3], jnp.int32)
+        self.run_and_check(seg, a, b, 4)
+
+    def test_rejects_bad_seg_dtype(self):
+        # (int64 silently truncates to int32 on CPU jax, so use float32 here)
+        a, b = rand_tiles(2, 32, 32), rand_tiles(2, 32, 32)
+        with pytest.raises(AssertionError):
+            k.spmm_block(jnp.asarray([0.0, 1.0], jnp.float32), a, b, slots=2)
+
+
+# ------------------------------------------------------------------ dense_mm
+
+class TestDense:
+    @pytest.mark.parametrize("m,kk,n", [(64, 64, 64), (128, 256, 64), (256, 256, 256)])
+    def test_matches_ref(self, m, kk, n):
+        rng = np.random.default_rng(m * 7 + n)
+        x = jnp.asarray(rng.standard_normal((m, kk)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((kk, n)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(k.dense_mm(x, y, tile=64)),
+            np.asarray(ref.dense_mm_ref(x, y)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_rejects_unaligned(self):
+        x = jnp.zeros((65, 64), jnp.float32)
+        y = jnp.zeros((64, 64), jnp.float32)
+        with pytest.raises(AssertionError):
+            k.dense_mm(x, y, tile=64)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mt=st.integers(1, 3), ktt=st.integers(1, 4), nt=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tile_sweep(self, mt, ktt, nt, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((mt * 64, ktt * 64)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((ktt * 64, nt * 64)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(k.dense_mm(x, y, tile=64)),
+            np.asarray(x) @ np.asarray(y),
+            rtol=1e-3, atol=1e-3,
+        )

@@ -1,0 +1,61 @@
+//! Architecture-simulator throughput: the Fig-4/5 sweep machinery must
+//! finish Table-IV-scale datasets in seconds (DESIGN.md §6 target: the full
+//! fig5 sweep < 30 s).
+
+use spmm_accel::arch::{
+    fpic_simulate, sync_cycle_model, sync_multiply, FpicConfig, SyncMeshConfig,
+};
+use spmm_accel::datasets::spec::by_name;
+use spmm_accel::datasets::synth::{generate, uniform};
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::util::bench::{bench, black_box, report};
+
+fn main() {
+    println!("== bench_arch ==");
+
+    // stream-level cycle model on a mid-size dataset (A x Aᵀ)
+    let mks = {
+        let mut s = by_name("mks").unwrap();
+        s.rows = 2_000;
+        s.cols = 2_000;
+        generate(&s, 3)
+    };
+    let r = bench(1, 5, || {
+        black_box(sync_cycle_model(&mks, &mks, SyncMeshConfig::default()).cycles);
+    });
+    report("sync/cycle_model(mks 2k)", r, mks.nnz() as f64, "nnz");
+
+    // FPIC MaxNode sweep on the same dataset
+    let r = bench(1, 5, || {
+        black_box(fpic_simulate(&mks, &mks, FpicConfig { units: 8, ..FpicConfig::default() }).0.cycles);
+    });
+    report("fpic/maxnode(mks 2k)", r, mks.nnz() as f64, "nnz");
+
+    // full-size sch (banded 20k) through the sync cycle model — the
+    // heaviest single fig5 cell
+    let sch = generate(&by_name("sch").unwrap(), 3);
+    let r = bench(0, 3, || {
+        black_box(sync_cycle_model(&sch, &sch, SyncMeshConfig::default()).cycles);
+    });
+    report("sync/cycle_model(sch 20k)", r, sch.nnz() as f64, "nnz");
+    let r = bench(0, 3, || {
+        black_box(
+            fpic_simulate(&sch, &sch, FpicConfig { units: 8, ..FpicConfig::default() })
+                .0
+                .cycles,
+        );
+    });
+    report("fpic/maxnode(sch 20k)", r, sch.nnz() as f64, "nnz");
+
+    // node-level functional sim (small — used by tests/validation);
+    // A×Aᵀ so the second operand is A itself (rows of Bᵀ = rows of A)
+    let small = uniform(32, 128, 0.15, 4);
+    let r = bench(1, 5, || {
+        black_box(
+            sync_multiply(&small, &small, SyncMeshConfig { mesh: 8, round: 32 })
+                .1
+                .cycles,
+        );
+    });
+    report("sync/functional(32x128, mesh 8)", r, small.nnz() as f64, "nnz");
+}

@@ -1,0 +1,83 @@
+//! Cache-simulator throughput — the L3 §Perf hot path. Target (DESIGN.md
+//! §6): ≥ 100 M simulated accesses/s on the demand path.
+
+use spmm_accel::cachesim::{Hierarchy, HierarchyConfig};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::incrs::InCrsParams;
+use spmm_accel::formats::traits::{AccessSink, Site};
+use spmm_accel::util::bench::{bench, black_box, report};
+use spmm_accel::util::rng::Rng;
+
+fn main() {
+    println!("== bench_cachesim ==");
+
+    // raw demand-access throughput: sequential (hits) and random (misses)
+    let n = 2_000_000u64;
+    let r = bench(1, 5, || {
+        let mut h = Hierarchy::new(HierarchyConfig::default());
+        for i in 0..n {
+            h.touch(0x100000 + (i % 8192) * 4, Site::Idx);
+        }
+        black_box(h.stats().l1_hits);
+    });
+    report("hierarchy/sequential_hot", r, n as f64, "accesses");
+
+    let mut rng = Rng::new(5);
+    let addrs: Vec<u64> = (0..n).map(|_| rng.below(1 << 30)).collect();
+    let r = bench(1, 5, || {
+        let mut h = Hierarchy::new(HierarchyConfig::default());
+        for &a in &addrs {
+            h.touch(a, Site::Val);
+        }
+        black_box(h.stats().mem_cycles);
+    });
+    report("hierarchy/random_cold", r, n as f64, "accesses");
+
+    // no-prefetch ablation
+    let r = bench(1, 5, || {
+        let mut h = Hierarchy::new(HierarchyConfig::default().no_prefetch());
+        for i in 0..n {
+            h.touch(0x100000 + i * 4, Site::Idx);
+        }
+        black_box(h.stats().l1_hits);
+    });
+    report("hierarchy/sequential_nopf", r, n as f64, "accesses");
+
+    // the Fig-3 inner loop end to end (format locate -> hierarchy)
+    let m = uniform(200, 8192, 0.05, 9);
+    let r = bench(0, 3, || {
+        let run = spmm_accel::cachesim::run_crs(&m, HierarchyConfig::default(), Some(256));
+        black_box(run.stats.l1_accesses);
+    });
+    // items = L1 accesses of one run (measure once for the count)
+    let once = spmm_accel::cachesim::run_crs(&m, HierarchyConfig::default(), Some(256));
+    report(
+        "fig3/crs_column_read(256 cols)",
+        r,
+        once.stats.l1_accesses as f64,
+        "accesses",
+    );
+    let incrs_run = spmm_accel::cachesim::run_incrs(
+        &m,
+        InCrsParams::default(),
+        HierarchyConfig::default(),
+        Some(256),
+    )
+    .unwrap();
+    let r = bench(0, 3, || {
+        let run = spmm_accel::cachesim::run_incrs(
+            &m,
+            InCrsParams::default(),
+            HierarchyConfig::default(),
+            Some(256),
+        )
+        .unwrap();
+        black_box(run.stats.l1_accesses);
+    });
+    report(
+        "fig3/incrs_column_read(256 cols)",
+        r,
+        incrs_run.stats.l1_accesses as f64,
+        "accesses",
+    );
+}

@@ -1,0 +1,71 @@
+//! End-to-end numeric-path benchmarks: plan construction, CPU vs PJRT
+//! dispatch execution, and served throughput through the coordinator.
+
+use std::sync::Arc;
+
+use spmm_accel::coordinator::{
+    EngineKind, JobOptions, Server, ServerConfig, SpmmJob,
+};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::runtime::{Manifest, NumericEngine};
+use spmm_accel::spmm::plan::{plan, Geometry};
+use spmm_accel::util::bench::{bench, black_box, report};
+
+fn main() {
+    println!("== bench_e2e ==");
+    let a = uniform(256, 512, 0.06, 1);
+    let b = uniform(512, 256, 0.06, 2);
+    let geom = Geometry::default();
+
+    // planning (block pair matching + chunking)
+    let r = bench(1, 5, || {
+        black_box(plan(&a, &b, geom).total_pairs);
+    });
+    let p = plan(&a, &b, geom);
+    report("plan/build(256x512x256)", r, p.total_pairs as f64, "pairs");
+
+    // CPU backend execution
+    let cpu = NumericEngine::cpu(geom);
+    let r = bench(1, 3, || {
+        black_box(cpu.spmm(&a, &b).unwrap().1.real_pairs);
+    });
+    let macs = p.total_pairs as f64 * (32.0 * 32.0 * 32.0);
+    report("exec/cpu_backend", r, macs, "MACs");
+
+    // PJRT backend execution (AOT Pallas kernel), if artifacts exist
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let pjrt = NumericEngine::pjrt(&dir).expect("pjrt engine");
+        let r = bench(1, 3, || {
+            black_box(pjrt.spmm(&a, &b).unwrap().1.real_pairs);
+        });
+        report("exec/pjrt_backend", r, macs, "MACs");
+    } else {
+        println!("exec/pjrt_backend: skipped (run `make artifacts`)");
+    }
+
+    // served throughput: 16 jobs through 4 CPU workers
+    let r = bench(0, 3, || {
+        let server = Server::start(ServerConfig {
+            workers: 4,
+            queue_depth: 8,
+            engine: EngineKind::Cpu,
+            geometry: geom,
+            artifacts_dir: dir.clone(),
+        });
+        let aj = Arc::new(uniform(128, 128, 0.08, 3));
+        let rxs: Vec<_> = (0..16u64)
+            .map(|i| {
+                server.submit(
+                    SpmmJob::new(i, aj.clone(), aj.clone())
+                        .with_opts(JobOptions { verify: false, keep_result: false }),
+                )
+            })
+            .collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap().result.unwrap().report.real_pairs);
+        }
+        server.shutdown();
+    });
+    report("serve/16_jobs_4_workers", r, 16.0, "jobs");
+}

@@ -1,0 +1,71 @@
+//! Format-layer microbenchmarks: locate throughput per format, InCRS build
+//! rate, column reads, conversions. (custom harness; criterion unavailable)
+
+use spmm_accel::access::column::{read_columns_csr, read_columns_incrs};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::convert::{from_coo, ALL_KINDS};
+use spmm_accel::formats::incrs::InCrs;
+use spmm_accel::formats::traits::{CountSink, NullSink, SparseMatrix};
+use spmm_accel::util::bench::{bench, black_box, report};
+use spmm_accel::util::rng::Rng;
+
+fn main() {
+    println!("== bench_formats ==");
+    let m = uniform(400, 8192, 0.05, 7);
+    let coo = m.to_coo();
+    let probes = 20_000usize;
+
+    // locate throughput per format (NullSink: pure locate cost)
+    for kind in ALL_KINDS {
+        let mat = from_coo(kind, &coo).unwrap();
+        let mut rng = Rng::new(3);
+        let coords: Vec<(usize, usize)> = (0..probes)
+            .map(|_| (rng.usize_below(400), rng.usize_below(8192)))
+            .collect();
+        let r = bench(1, 5, || {
+            let mut sink = NullSink;
+            let mut hits = 0u32;
+            for &(i, j) in &coords {
+                if mat.locate_dyn(i, j, &mut sink).is_some() {
+                    hits += 1;
+                }
+            }
+            black_box(hits);
+        });
+        report(
+            &format!("locate/{}", kind.name()),
+            r,
+            probes as f64,
+            "probes",
+        );
+    }
+
+    // InCRS construction rate
+    let r = bench(1, 10, || {
+        black_box(InCrs::from_csr(&m).unwrap());
+    });
+    report("incrs/build", r, m.nnz() as f64, "nnz");
+
+    // full column-order read, counting sink (Table II inner loop)
+    let incrs = InCrs::from_csr(&m).unwrap();
+    let r = bench(1, 3, || {
+        let mut sink = CountSink::default();
+        black_box(read_columns_csr(&m, Some(512), &mut sink));
+        black_box(sink.total);
+    });
+    report("column_read/crs(512 cols)", r, 512.0 * 400.0, "cells");
+    let r = bench(1, 3, || {
+        let mut sink = CountSink::default();
+        black_box(read_columns_incrs(&incrs, Some(512), &mut sink));
+        black_box(sink.total);
+    });
+    report("column_read/incrs(512 cols)", r, 512.0 * 400.0, "cells");
+
+    // conversion throughput via COO
+    for kind in ALL_KINDS {
+        let r = bench(1, 3, || {
+            black_box(from_coo(kind, &coo).unwrap().nnz());
+        });
+        report(&format!("convert/{}", kind.name()), r, m.nnz() as f64, "nnz");
+    }
+}

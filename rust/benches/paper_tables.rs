@@ -1,0 +1,40 @@
+//! THE regeneration harness: reruns every paper table and figure and prints
+//! the same rows/series the paper reports, with wall-clock per experiment.
+//!
+//! `cargo bench --bench paper_tables` runs everything at PAPER_SCALE
+//! (default 1.0 = full paper workloads; set PAPER_SCALE=0.1 for a quick
+//! pass). Output is what EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+use spmm_accel::eval::{run_experiment, ExpOptions, ALL_EXPERIMENTS};
+
+fn main() {
+    let scale: f64 = std::env::var("PAPER_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let seed: u64 = std::env::var("PAPER_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let opts = ExpOptions { seed, scale };
+    println!("== paper_tables (scale {scale}, seed {seed}) ==\n");
+    let t_all = Instant::now();
+    for id in ALL_EXPERIMENTS.iter().chain(["table5"].iter()) {
+        let t = Instant::now();
+        match run_experiment(id, opts) {
+            Ok(results) => {
+                for r in results {
+                    r.print();
+                    if let Ok(dir) = std::env::var("PAPER_SAVE") {
+                        let _ = r.save(std::path::Path::new(&dir));
+                    }
+                }
+                println!("[{id} done in {:?}]\n", t.elapsed());
+            }
+            Err(e) => println!("[{id} FAILED: {e}]\n"),
+        }
+    }
+    println!("all experiments done in {:?}", t_all.elapsed());
+}

@@ -1,0 +1,165 @@
+//! Column-order read drivers — the Fig 3 workload.
+//!
+//! The paper's SpMM memory experiment simplifies the first operand to a
+//! vector and measures the column-order traversal of the second operand `B`
+//! stored row-ordered (CRS vs InCRS): "to read one column of data stored in
+//! a row-based format, many of the non-zeros of each row are accessed to
+//! locate the elements of that column" (§II). The driver probes every
+//! (row, col) cell in column-major order via `locate`, exactly the paper's
+//! per-element access model, and can stream the resulting addresses into
+//! either a counting sink (Table II "MA ratio") or the cache simulator
+//! (Fig 3).
+
+use crate::formats::csr::Csr;
+use crate::formats::incrs::InCrs;
+use crate::formats::traits::{AccessSink, SparseMatrix};
+
+/// Result of one full column-order traversal.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ColumnReadStats {
+    pub cells_probed: u64,
+    pub nonzeros_found: u64,
+}
+
+/// Generic column-order traversal over any format with a monomorphized
+/// locate.
+///
+/// `col_limit` restricts how many columns are probed, but the probed columns
+/// are spread evenly across the FULL column range (stride sampling): the
+/// paper resized datasets by removing *rows* and explicitly kept all columns
+/// ("the columns' lengths and distributions of non-zeros are important
+/// factors"), and probing a prefix would bias CRS scans short.
+pub fn read_columns<M, S, F>(
+    m: &M,
+    locate: F,
+    col_limit: Option<usize>,
+    sink: &mut S,
+) -> ColumnReadStats
+where
+    M: SparseMatrix,
+    S: AccessSink,
+    F: Fn(&M, usize, usize, &mut S) -> Option<f32>,
+{
+    let (rows, cols) = m.shape();
+    let n_probe = col_limit.unwrap_or(cols).min(cols);
+    let mut stats = ColumnReadStats::default();
+    for t in 0..n_probe {
+        let j = t * cols / n_probe;
+        for i in 0..rows {
+            stats.cells_probed += 1;
+            if locate(m, i, j, sink).is_some() {
+                stats.nonzeros_found += 1;
+            }
+        }
+    }
+    stats
+}
+
+/// Column-order traversal of a CRS matrix (the paper's baseline).
+pub fn read_columns_csr<S: AccessSink>(
+    m: &Csr,
+    col_limit: Option<usize>,
+    sink: &mut S,
+) -> ColumnReadStats {
+    read_columns(m, |m, i, j, s| m.locate(i, j, s), col_limit, sink)
+}
+
+/// Column-order traversal of an InCRS matrix (the paper's proposal).
+pub fn read_columns_incrs<S: AccessSink>(
+    m: &InCrs,
+    col_limit: Option<usize>,
+    sink: &mut S,
+) -> ColumnReadStats {
+    read_columns(m, |m, i, j, s| m.locate(i, j, s), col_limit, sink)
+}
+
+/// SpMV v×B with column-order access to B — the full Fig 3 kernel, including
+/// the (dense) input-vector and output accesses so "total run time" has the
+/// same composition as the paper's gem5 runs.
+pub fn spmv_column_order<S: AccessSink, F>(
+    rows: usize,
+    cols: usize,
+    v_base: u64,
+    out_base: u64,
+    mut locate: F,
+    sink: &mut S,
+) -> u64
+where
+    F: FnMut(usize, usize, &mut S) -> Option<f32>,
+{
+    use crate::formats::traits::Site;
+    let mut macs = 0u64;
+    for j in 0..cols {
+        let mut acc = 0.0f32;
+        for i in 0..rows {
+            if let Some(b) = locate(i, j, sink) {
+                sink.touch(v_base + 4 * i as u64, Site::Dense);
+                acc += b; // v[i]*b; value of v irrelevant to access counts
+                macs += 1;
+            }
+        }
+        let _ = acc;
+        sink.touch(out_base + 4 * j as u64, Site::Dense);
+    }
+    macs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::incrs::InCrs;
+    use crate::formats::traits::CountSink;
+
+    #[test]
+    fn traversal_finds_every_nonzero() {
+        let csr = uniform(40, 300, 0.06, 21);
+        let incrs = InCrs::from_csr(&csr).unwrap();
+        let mut s1 = CountSink::default();
+        let st1 = read_columns_csr(&csr, None, &mut s1);
+        let mut s2 = CountSink::default();
+        let st2 = read_columns_incrs(&incrs, None, &mut s2);
+        assert_eq!(st1.nonzeros_found as usize, csr.nnz());
+        assert_eq!(st2.nonzeros_found as usize, csr.nnz());
+        assert_eq!(st1.cells_probed, 40 * 300);
+    }
+
+    #[test]
+    fn incrs_reduces_accesses_by_the_predicted_factor() {
+        // docword-like slice: the Table II mechanism at small scale
+        let csr = uniform(60, 2048, 0.04, 5);
+        let incrs = InCrs::from_csr(&csr).unwrap();
+        let mut s_crs = CountSink::default();
+        read_columns_csr(&csr, None, &mut s_crs);
+        let mut s_in = CountSink::default();
+        read_columns_incrs(&incrs, None, &mut s_in);
+        let ratio = s_crs.total as f64 / s_in.total as f64;
+        // CRS ≈ ½·N·D ≈ 41 accesses/probe; InCRS ≈ 2.3 → ratio >> 5
+        assert!(ratio > 5.0, "MA ratio {ratio}");
+    }
+
+    #[test]
+    fn col_limit_truncates() {
+        let csr = uniform(10, 100, 0.1, 6);
+        let mut s = CountSink::default();
+        let st = read_columns_csr(&csr, Some(7), &mut s);
+        assert_eq!(st.cells_probed, 70);
+    }
+
+    #[test]
+    fn spmv_counts_macs() {
+        let csr = uniform(20, 50, 0.2, 8);
+        let mut s = CountSink::default();
+        let macs = spmv_column_order(
+            20,
+            50,
+            1 << 40,
+            (1 << 40) + 4096,
+            |i, j, sink| csr.locate(i, j, sink),
+            &mut s,
+        );
+        assert_eq!(macs as usize, csr.nnz());
+        // output written once per column
+        assert!(s.total > 0);
+    }
+}

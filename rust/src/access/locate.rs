@@ -1,0 +1,156 @@
+//! Random-access cost measurement (paper Table I): average memory accesses
+//! to locate one arbitrary element in each format.
+
+use crate::formats::traits::{CountSink, SparseMatrix};
+use crate::util::rng::Rng;
+
+/// Measured locate cost for one format.
+#[derive(Clone, Debug)]
+pub struct LocateCost {
+    pub format: &'static str,
+    pub probes: u64,
+    pub total_accesses: u64,
+    pub hits: u64,
+    /// Analytic expectation per the paper's Table I (None for dense/CCS/InCRS
+    /// where the paper gives the closed forms elsewhere).
+    pub analytic: Option<f64>,
+}
+
+impl LocateCost {
+    pub fn avg(&self) -> f64 {
+        self.total_accesses as f64 / self.probes.max(1) as f64
+    }
+}
+
+/// Paper Table I closed forms, in the same notation (M rows, N cols, D
+/// density, b InCRS block width).
+pub fn analytic_cost(m: &dyn SparseMatrix) -> Option<f64> {
+    use crate::formats::traits::FormatKind::*;
+    let (rows, cols) = m.shape();
+    let d = m.density();
+    let n = cols as f64;
+    match m.kind() {
+        Ellpack | Lil | Csr => Some(0.5 * n * d),
+        Jad => Some(n * d),
+        Coo | Sll => Some(0.5 * rows as f64 * n * d),
+        Dense => Some(1.0),
+        Csc => Some(0.5 * rows as f64 * d),
+        InCrs => Some(crate::formats::incrs::BLOCK as f64 / 2.0 + 1.0),
+    }
+}
+
+/// Probe `probes` uniformly random (i, j) cells and return the measured
+/// average access count. Probing uniformly over *all* cells (hit or miss)
+/// matches the paper's "read one arbitrary element" model.
+pub fn measure(m: &dyn SparseMatrix, probes: u64, seed: u64) -> LocateCost {
+    let (rows, cols) = m.shape();
+    let mut rng = Rng::new(seed);
+    let mut sink = CountSink::default();
+    let mut hits = 0u64;
+    for _ in 0..probes {
+        let i = rng.usize_below(rows);
+        let j = rng.usize_below(cols);
+        if m.locate_dyn(i, j, &mut sink).is_some() {
+            hits += 1;
+        }
+    }
+    LocateCost {
+        format: m.kind().name(),
+        probes,
+        total_accesses: sink.total,
+        hits,
+        analytic: analytic_cost(m),
+    }
+}
+
+/// Probe only cells that are known non-zero (locate cost conditional on a
+/// hit — the quantity InCRS's b/2+1 estimate describes).
+pub fn measure_hits(m: &dyn SparseMatrix, probes: u64, seed: u64) -> LocateCost {
+    let coo = m.to_coo();
+    let nnz = coo.entries.len();
+    let mut rng = Rng::new(seed);
+    let mut sink = CountSink::default();
+    let mut hits = 0u64;
+    for _ in 0..probes {
+        let (i, j, _) = coo.entries[rng.usize_below(nnz)];
+        if m.locate_dyn(i as usize, j as usize, &mut sink).is_some() {
+            hits += 1;
+        }
+    }
+    assert_eq!(hits, probes, "{}: probe of a known non-zero missed", m.kind().name());
+    LocateCost {
+        format: m.kind().name(),
+        probes,
+        total_accesses: sink.total,
+        hits,
+        analytic: analytic_cost(m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::convert::{from_coo, ALL_KINDS};
+    use crate::formats::traits::{FormatKind, SparseMatrix};
+
+    #[test]
+    fn measured_tracks_analytic_for_crs() {
+        let csr = uniform(64, 512, 0.08, 3);
+        let coo = csr.to_coo();
+        let m = from_coo(FormatKind::Csr, &coo).unwrap();
+        let cost = measure(m.as_ref(), 4000, 7);
+        let analytic = cost.analytic.unwrap(); // 0.5*N*D ≈ 20.5
+        // locate also touches ptr + val; allow generous band
+        let avg = cost.avg();
+        assert!(
+            avg > 0.5 * analytic && avg < 2.5 * analytic,
+            "avg {avg} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn incrs_is_cheapest_sparse_format() {
+        let csr = uniform(48, 2048, 0.05, 11);
+        let coo = csr.to_coo();
+        let mut costs = std::collections::BTreeMap::new();
+        for kind in ALL_KINDS {
+            let m = from_coo(kind, &coo).unwrap();
+            costs.insert(kind, measure(m.as_ref(), 1500, 5).avg());
+        }
+        let incrs = costs[&FormatKind::InCrs];
+        for (&kind, &c) in &costs {
+            if kind != FormatKind::Dense && kind != FormatKind::InCrs && kind != FormatKind::Csc {
+                assert!(
+                    incrs < c,
+                    "InCRS {incrs} should beat {:?} {c}",
+                    kind
+                );
+            }
+        }
+        assert!(costs[&FormatKind::Dense] <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn table1_ordering_holds() {
+        // COO/SLL (O(M·N·D)) must cost far more than row-based formats.
+        let csr = uniform(32, 256, 0.1, 2);
+        let coo = csr.to_coo();
+        let crs_cost = measure(from_coo(FormatKind::Csr, &coo).unwrap().as_ref(), 800, 1).avg();
+        let coo_cost = measure(from_coo(FormatKind::Coo, &coo).unwrap().as_ref(), 800, 1).avg();
+        let jad_cost = measure(from_coo(FormatKind::Jad, &coo).unwrap().as_ref(), 800, 1).avg();
+        assert!(coo_cost > 4.0 * crs_cost, "coo {coo_cost} vs crs {crs_cost}");
+        assert!(jad_cost > 1.2 * crs_cost, "jad {jad_cost} vs crs {crs_cost}");
+    }
+
+    #[test]
+    fn measure_hits_always_hits() {
+        let csr = uniform(16, 128, 0.1, 4);
+        let coo = csr.to_coo();
+        let m = from_coo(FormatKind::InCrs, &coo).unwrap();
+        let cost = measure_hits(m.as_ref(), 500, 9);
+        assert_eq!(cost.hits, 500);
+        // hit cost ≈ ptr + counter + ~half-block scan + val: small
+        assert!(cost.avg() < 10.0, "{}", cost.avg());
+    }
+}

@@ -1,0 +1,11 @@
+//! Access-pattern drivers: random-element locate cost (Table I) and
+//! column-order traversal of a row-stored matrix (Table II / Fig 3).
+
+pub mod column;
+pub mod locate;
+
+pub use column::{
+    read_columns, read_columns_csr, read_columns_incrs, spmv_column_order,
+    ColumnReadStats,
+};
+pub use locate::{analytic_cost, measure, measure_hits, LocateCost};

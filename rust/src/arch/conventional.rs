@@ -1,0 +1,64 @@
+//! Conventional dense systolic matrix multiplier (paper Fig 2a) — processes
+//! every element including zeros, so its latency is density-independent.
+//!
+//! Cycle model: each `mesh × mesh` output tile streams the full inner
+//! dimension `K` through the array once, plus `2·mesh` fill/drain skew;
+//! tiles = ⌈M/mesh⌉ · ⌈N/mesh⌉ passes.
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConvMmConfig {
+    /// Mesh edge N_conv.
+    pub mesh: usize,
+}
+
+impl Default for ConvMmConfig {
+    /// Paper Table V: 96×96 (same input bandwidth as the 64×64 sync mesh
+    /// because dense streams carry no index bits — see `arch::model`).
+    fn default() -> Self {
+        ConvMmConfig { mesh: 96 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvMmStats {
+    pub cycles: u64,
+    pub tiles: u64,
+    /// All MACs issued (including on zeros).
+    pub macs_issued: u64,
+}
+
+/// Latency of C(M×N) = A(M×K) × B(K×N) on the dense systolic mesh.
+pub fn cycles(m: usize, n: usize, k: usize, cfg: ConvMmConfig) -> ConvMmStats {
+    let t = ((m + cfg.mesh - 1) / cfg.mesh) as u64 * ((n + cfg.mesh - 1) / cfg.mesh) as u64;
+    ConvMmStats {
+        cycles: t * (k as u64 + 2 * cfg.mesh as u64),
+        tiles: t,
+        macs_issued: t * (cfg.mesh * cfg.mesh) as u64 * k as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_tile() {
+        let s = cycles(64, 64, 1000, ConvMmConfig { mesh: 96 });
+        assert_eq!(s.tiles, 1);
+        assert_eq!(s.cycles, 1000 + 192);
+    }
+
+    #[test]
+    fn tiling_rounds_up() {
+        let s = cycles(97, 96, 10, ConvMmConfig { mesh: 96 });
+        assert_eq!(s.tiles, 2);
+        assert_eq!(s.cycles, 2 * (10 + 192));
+    }
+
+    #[test]
+    fn density_independence() {
+        // the whole point: conventional MM's cost has no density term
+        let a = cycles(512, 512, 512, ConvMmConfig::default());
+        assert_eq!(a.cycles, 36 * (512 + 192));
+    }
+}

@@ -1,0 +1,28 @@
+//! Cycle-accurate architecture simulators (paper §IV/§V.C).
+//!
+//! * [`sync_mesh`] — the paper's proposed synchronized comparator mesh
+//!   (Algorithm 2): node-level functional sim + fast stream-level cycle
+//!   model, cross-validated.
+//! * [`fpic`] — the FPIC baseline (Algorithm 1, 8×8 units, independent
+//!   per-node reads, perfect k-unit load-balance scaling).
+//! * [`conventional`] — dense systolic MM (density-independent).
+//! * [`model`] — the paper's fairness equations (1)/(2) and Table V
+//!   resource accounting.
+//!
+//! All simulators share the paper's §V.A assumptions: memory supplies
+//! operands every cycle, and every MAC/comparison is single-cycle.
+
+pub mod conventional;
+pub mod fpic;
+pub mod model;
+pub mod node;
+pub mod stream;
+pub mod sync_mesh;
+
+pub use conventional::{cycles as conv_cycles, ConvMmConfig, ConvMmStats};
+pub use fpic::{simulate as fpic_simulate, Fidelity, FpicConfig, FpicStats};
+pub use model::{table5, DesignPoint};
+pub use sync_mesh::{
+    cycle_model as sync_cycle_model, multiply_functional as sync_multiply,
+    useful_macs, SyncMeshConfig, SyncMeshStats,
+};

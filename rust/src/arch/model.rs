@@ -1,0 +1,130 @@
+//! Design-point calculator: the paper's fairness equations (1) and (2) and
+//! the Table V resource accounting.
+//!
+//! Widths (paper §V.C): index 16 bits, value 32 bits, so a sparse operand is
+//! `W_tot = 48` bits and a dense operand `W_val = 32` bits.
+
+pub const W_IDX: u64 = 16;
+pub const W_VAL: u64 = 32;
+pub const W_TOT: u64 = W_IDX + W_VAL;
+
+/// FPIC geometry constants from [11]: 8×8 units, 32-element buffers, and
+/// 2×64 buffers per unit (64 for A + 64 for B).
+pub const FPIC_DIM: u64 = 8;
+pub const FPIC_BUFFERS_PER_UNIT: u64 = 2 * FPIC_DIM * FPIC_DIM;
+pub const BUFFER_ELEMS: u64 = 32;
+
+/// Eq (1): `2·N_synch·W_tot = 2·8·k_FPIC·W_tot` — FPIC unit count matching
+/// the sync mesh's input bandwidth.
+pub fn fpic_units_same_bandwidth(n_synch: usize) -> usize {
+    (n_synch as u64 / FPIC_DIM).max(1) as usize
+}
+
+/// Eq (2): `N_synch² = 2·8²·k_FPIC` — FPIC unit count matching the sync
+/// mesh's total buffer capacity.
+pub fn fpic_units_same_buffer(n_synch: usize) -> usize {
+    ((n_synch * n_synch) as u64 / FPIC_BUFFERS_PER_UNIT).max(1) as usize
+}
+
+/// Conventional mesh edge with the same input bandwidth as the sync mesh:
+/// `N_conv = (W_tot / W_val) · N_synch` (dense operands carry no indices).
+pub fn conv_mesh_same_bandwidth(n_synch: usize) -> usize {
+    (n_synch as u64 * W_TOT / W_VAL) as usize
+}
+
+/// One Table V row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignPoint {
+    pub name: &'static str,
+    pub units: usize,
+    pub mesh: usize,
+    /// Input bandwidth in bits/cycle.
+    pub bw_bits_per_cycle: u64,
+    pub macs: u64,
+    /// Total operand-buffer capacity in bytes.
+    pub buffer_bytes: u64,
+}
+
+impl DesignPoint {
+    pub fn sync(n_synch: usize, round: usize) -> DesignPoint {
+        DesignPoint {
+            name: "this work",
+            units: 1,
+            mesh: n_synch,
+            bw_bits_per_cycle: 2 * n_synch as u64 * W_TOT,
+            macs: (n_synch * n_synch) as u64,
+            // one operand buffer per node, `round` elements of W_TOT bits
+            buffer_bytes: (n_synch * n_synch) as u64 * round as u64 * W_TOT / 8,
+        }
+    }
+
+    pub fn fpic(units: usize, name: &'static str) -> DesignPoint {
+        DesignPoint {
+            name,
+            units,
+            mesh: FPIC_DIM as usize,
+            bw_bits_per_cycle: 2 * FPIC_DIM * units as u64 * W_TOT,
+            macs: units as u64 * FPIC_DIM * FPIC_DIM,
+            buffer_bytes: units as u64 * FPIC_BUFFERS_PER_UNIT * BUFFER_ELEMS * W_TOT / 8,
+        }
+    }
+
+    pub fn conventional(mesh: usize) -> DesignPoint {
+        DesignPoint {
+            name: "conv. MM",
+            units: 1,
+            mesh,
+            bw_bits_per_cycle: 2 * mesh as u64 * W_VAL,
+            macs: (mesh * mesh) as u64,
+            buffer_bytes: 0,
+        }
+    }
+}
+
+/// The paper's Table V design points for a given sync-mesh size (64 in the
+/// paper) and round (32).
+pub fn table5(n_synch: usize, round: usize) -> [DesignPoint; 4] {
+    [
+        DesignPoint::sync(n_synch, round),
+        DesignPoint::fpic(fpic_units_same_bandwidth(n_synch), "FPIC-same BW"),
+        DesignPoint::fpic(fpic_units_same_buffer(n_synch), "FPIC-same buffer"),
+        DesignPoint::conventional(conv_mesh_same_bandwidth(n_synch)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table5_numbers() {
+        let [sync, fpic_bw, fpic_buf, conv] = table5(64, 32);
+
+        assert_eq!(sync.bw_bits_per_cycle, 6144); // "6 kb/cycles"
+        assert_eq!(sync.macs, 4096);
+        assert_eq!(sync.buffer_bytes, 768 * 1024); // 768 kB
+
+        assert_eq!(fpic_bw.units, 8);
+        assert_eq!(fpic_bw.macs, 512);
+        assert_eq!(fpic_bw.bw_bits_per_cycle, 6144);
+        assert_eq!(fpic_bw.buffer_bytes, 192 * 1024); // 192 kB
+
+        assert_eq!(fpic_buf.units, 32);
+        assert_eq!(fpic_buf.macs, 2048);
+        assert_eq!(fpic_buf.bw_bits_per_cycle, 24 * 1024); // 24 kb/cycle
+        assert_eq!(fpic_buf.buffer_bytes, 768 * 1024); // 768 kB
+
+        assert_eq!(conv.mesh, 96);
+        assert_eq!(conv.macs, 9216);
+        assert_eq!(conv.bw_bits_per_cycle, 6144);
+    }
+
+    #[test]
+    fn equations_scale_linearly() {
+        assert_eq!(fpic_units_same_bandwidth(16), 2);
+        assert_eq!(fpic_units_same_bandwidth(128), 16);
+        assert_eq!(fpic_units_same_buffer(16), 2);
+        assert_eq!(fpic_units_same_buffer(128), 128);
+        assert_eq!(conv_mesh_same_bandwidth(32), 48);
+    }
+}

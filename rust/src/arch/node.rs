@@ -1,0 +1,336 @@
+//! The mesh nodes, implemented exactly as the paper's pseudo-code.
+//!
+//! * [`SyncNode`] — Algorithm 2: the proposed design's comparator +
+//!   operand-buffer + flag + MAC node. Consumes one operand from the row
+//!   stream *and* one from the column stream every cycle; the operand with
+//!   the larger index is buffered instead of stalling, and the smaller-index
+//!   operand is matched against the buffer (binary search — the paper notes
+//!   the buffer is sorted, at most `log2(depth)` comparisons, or a CAM).
+//! * [`fpic_merge`] — Algorithm 1: FPIC's two-pointer sparse dot product,
+//!   consuming one or two operands per cycle.
+
+/// Which matrix's operands currently occupy the buffer (paper's `flag_op`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flag {
+    A,
+    B,
+}
+
+/// Sentinel index for an exhausted stream (∞ — never matches a real index
+/// and always compares greater).
+pub const INF: u32 = u32::MAX;
+
+/// One node of the proposed synchronized mesh (paper Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct SyncNode {
+    buf_idx: Vec<u32>,
+    buf_val: Vec<f32>,
+    flag: Option<Flag>,
+    pub acc: f32,
+    /// MACs actually performed (useful-work accounting).
+    pub macs: u64,
+    /// buffer searches performed (cost accounting for the CAM/binary search)
+    pub searches: u64,
+}
+
+impl SyncNode {
+    pub fn new(depth: usize) -> SyncNode {
+        SyncNode {
+            buf_idx: Vec::with_capacity(depth),
+            buf_val: Vec::with_capacity(depth),
+            flag: None,
+            acc: 0.0,
+            macs: 0,
+            searches: 0,
+        }
+    }
+
+    /// Round boundary: "On starting a new round all the operand buffers are
+    /// reset since any remaining buffer operands are no longer needed."
+    pub fn reset_round(&mut self) {
+        self.buf_idx.clear();
+        self.buf_val.clear();
+        self.flag = None;
+    }
+
+    /// End of an output-tile pass: emit and clear the accumulator.
+    pub fn take_acc(&mut self) -> f32 {
+        let v = self.acc;
+        self.acc = 0.0;
+        self.reset_round();
+        v
+    }
+
+    fn search(&mut self, idx: u32) -> Option<f32> {
+        self.searches += 1;
+        match self.buf_idx.binary_search(&idx) {
+            Ok(p) => Some(self.buf_val[p]),
+            Err(_) => None,
+        }
+    }
+
+    /// One cycle (paper Algorithm 2, verbatim). `a`/`b` are the operands
+    /// arriving on the row/column stream this cycle; `None` = exhausted
+    /// stream (index ∞). Both streams advance unconditionally (lines 27-28)
+    /// — that's the design's whole point.
+    pub fn step(&mut self, a: Option<(u32, f32)>, b: Option<(u32, f32)>) {
+        let (ai, av) = a.map_or((INF, 0.0), |x| x);
+        let (bi, bv) = b.map_or((INF, 0.0), |x| x);
+        if ai == bi {
+            // line 1-3: match (or both ∞ — no work), MAC + reset
+            if ai != INF {
+                self.acc += av * bv;
+                self.macs += 1;
+            }
+            self.buf_idx.clear();
+            self.buf_val.clear();
+            self.flag = None;
+        } else if ai > bi {
+            // lines 4-14: b has the smaller index; a gets buffered
+            if self.flag == Some(Flag::A) {
+                if let Some(v) = self.search(bi) {
+                    self.acc += v * bv;
+                    self.macs += 1;
+                }
+            } else {
+                self.buf_idx.clear();
+                self.buf_val.clear();
+                self.flag = Some(Flag::A);
+            }
+            if ai != INF {
+                debug_assert!(self.buf_idx.last().map_or(true, |&l| l < ai));
+                self.buf_idx.push(ai);
+                self.buf_val.push(av);
+            }
+        } else {
+            // lines 15-25: symmetric — a smaller, b buffered
+            if self.flag == Some(Flag::B) {
+                if let Some(v) = self.search(ai) {
+                    self.acc += v * av;
+                    self.macs += 1;
+                }
+            } else {
+                self.buf_idx.clear();
+                self.buf_val.clear();
+                self.flag = Some(Flag::B);
+            }
+            if bi != INF {
+                debug_assert!(self.buf_idx.last().map_or(true, |&l| l < bi));
+                self.buf_idx.push(bi);
+                self.buf_val.push(bv);
+            }
+        }
+    }
+
+    pub fn buffer_len(&self) -> usize {
+        self.buf_idx.len()
+    }
+}
+
+/// Algorithm 1 (FPIC node): two-pointer sparse dot product. Returns
+/// `(cycles, dot)` — one comparison per cycle, terminating when either
+/// stream exhausts (no further matches are possible).
+pub fn fpic_merge(a: super::stream::StreamRef, b: super::stream::StreamRef) -> (u64, f32) {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut cycles = 0u64;
+    let mut dot = 0.0f32;
+    while i < a.len() && j < b.len() {
+        cycles += 1;
+        let (ai, bi) = (a.idx[i], b.idx[j]);
+        if ai == bi {
+            dot += a.val[i] * b.val[j];
+            i += 1;
+            j += 1;
+        } else if ai > bi {
+            j += 1;
+        } else {
+            i += 1;
+        }
+    }
+    (cycles, dot)
+}
+
+/// FPIC merge cycle count only (hot path of the cycle model — no values).
+pub fn fpic_merge_cycles(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut cycles = 0u64;
+    while i < a.len() && j < b.len() {
+        cycles += 1;
+        let (ai, bi) = (a[i], b[j]);
+        if ai == bi {
+            i += 1;
+            j += 1;
+        } else if ai > bi {
+            j += 1;
+        } else {
+            i += 1;
+        }
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::stream::StreamRef;
+
+    /// Drive one node through two full (padded) streams round by round and
+    /// return its accumulator — the reference harness for Algorithm 2.
+    pub fn run_node(
+        a_idx: &[u32],
+        a_val: &[f32],
+        b_idx: &[u32],
+        b_val: &[f32],
+        r: usize,
+        index_space: u32,
+    ) -> f32 {
+        let a = StreamRef::new(a_idx, a_val);
+        let b = StreamRef::new(b_idx, b_val);
+        let mut node = SyncNode::new(r);
+        let mut lo = 0u32;
+        while lo < index_space {
+            let hi = lo + r as u32;
+            let ra = a.slice_range(lo, hi);
+            let rb = b.slice_range(lo, hi);
+            let steps = ra.len().max(rb.len());
+            for t in 0..steps {
+                let ao = (t < ra.len()).then(|| (ra.idx[t], ra.val[t]));
+                let bo = (t < rb.len()).then(|| (rb.idx[t], rb.val[t]));
+                node.step(ao, bo);
+            }
+            node.reset_round();
+            lo = hi;
+        }
+        node.acc
+    }
+
+    fn dot(a_idx: &[u32], a_val: &[f32], b_idx: &[u32], b_val: &[f32]) -> f32 {
+        let mut s = 0.0;
+        for (i, &ai) in a_idx.iter().enumerate() {
+            if let Ok(p) = b_idx.binary_search(&ai) {
+                s += a_val[i] * b_val[p];
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn aligned_streams_mac_every_cycle() {
+        let idx = [2u32, 7, 9];
+        let av = [1.0f32, 2.0, 3.0];
+        let bv = [4.0f32, 5.0, 6.0];
+        let got = run_node(&idx, &av, &idx, &bv, 32, 32);
+        assert_eq!(got, 1.0 * 4.0 + 2.0 * 5.0 + 3.0 * 6.0);
+    }
+
+    #[test]
+    fn offset_match_found_via_buffer() {
+        // a = [(5,x)], b = [(1,_), (5,y)]: the (5,5) match needs the buffer
+        let got = run_node(&[5], &[2.0], &[1, 5], &[9.0, 3.0], 32, 32);
+        assert_eq!(got, 6.0);
+    }
+
+    #[test]
+    fn flag_flip_preserves_future_matches() {
+        // worked example from DESIGN review: a=[2,9,11], b=[5,6,9]
+        let got = run_node(
+            &[2, 9, 11],
+            &[1.0, 2.0, 3.0],
+            &[5, 6, 9],
+            &[1.0, 1.0, 10.0],
+            32,
+            32,
+        );
+        assert_eq!(got, 20.0); // only (9,9): 2*10
+    }
+
+    #[test]
+    fn disjoint_streams_accumulate_nothing() {
+        let got = run_node(&[0, 2, 4], &[1.0; 3], &[1, 3, 5], &[1.0; 3], 32, 32);
+        assert_eq!(got, 0.0);
+    }
+
+    #[test]
+    fn cross_round_indices_cannot_match_and_dont() {
+        // indices land in different rounds; buffers reset between rounds
+        let got = run_node(&[1, 40], &[1.0, 2.0], &[1, 40], &[3.0, 4.0], 32, 96);
+        assert_eq!(got, 1.0 * 3.0 + 2.0 * 4.0);
+    }
+
+    #[test]
+    fn random_streams_match_reference_dot() {
+        let mut rng = crate::util::rng::Rng::new(0xAB);
+        let mut scratch = Vec::new();
+        for case in 0..300 {
+            let space = 128u32;
+            let na = rng.usize_below(40);
+            let nb = rng.usize_below(40);
+            let a_idx = rng.sample_sorted(space as usize, na, &mut scratch);
+            let b_idx = rng.sample_sorted(space as usize, nb, &mut scratch);
+            let a_val: Vec<f32> = (0..na).map(|_| rng.f32() + 0.5).collect();
+            let b_val: Vec<f32> = (0..nb).map(|_| rng.f32() + 0.5).collect();
+            let want = dot(&a_idx, &a_val, &b_idx, &b_val);
+            let got = run_node(&a_idx, &a_val, &b_idx, &b_val, 32, space);
+            assert!(
+                (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                "case {case}: got {got}, want {want}\n a={a_idx:?}\n b={b_idx:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn buffer_never_exceeds_round_depth() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut scratch = Vec::new();
+        let r = 16usize;
+        for _ in 0..100 {
+            let na = rng.usize_below(30);
+            let nb = rng.usize_below(30);
+            let a_idx = rng.sample_sorted(64, na, &mut scratch);
+            let b_idx = rng.sample_sorted(64, nb, &mut scratch);
+            let a_val = vec![1.0f32; a_idx.len()];
+            let b_val = vec![1.0f32; b_idx.len()];
+            let a = StreamRef::new(&a_idx, &a_val);
+            let b = StreamRef::new(&b_idx, &b_val);
+            let mut node = SyncNode::new(r);
+            let mut lo = 0u32;
+            while lo < 64 {
+                let (ra, rb) = (a.slice_range(lo, lo + r as u32), b.slice_range(lo, lo + r as u32));
+                for t in 0..ra.len().max(rb.len()) {
+                    node.step(
+                        (t < ra.len()).then(|| (ra.idx[t], ra.val[t])),
+                        (t < rb.len()).then(|| (rb.idx[t], rb.val[t])),
+                    );
+                    assert!(node.buffer_len() <= r, "buffer {} > R {r}", node.buffer_len());
+                }
+                node.reset_round();
+                lo += r as u32;
+            }
+        }
+    }
+
+    #[test]
+    fn fpic_merge_matches_dot_and_counts_cycles() {
+        let a_idx = [1u32, 4, 6, 9];
+        let a_val = [1.0f32, 2.0, 3.0, 4.0];
+        let b_idx = [2u32, 4, 9];
+        let b_val = [5.0f32, 6.0, 7.0];
+        let (cycles, d) = fpic_merge(
+            StreamRef::new(&a_idx, &a_val),
+            StreamRef::new(&b_idx, &b_val),
+        );
+        assert_eq!(d, 2.0 * 6.0 + 4.0 * 7.0);
+        // merge trace: (1,2)a,(4,2)b,(4,4)m,(6,9)a,(9,9)m -> 5 cycles
+        assert_eq!(cycles, 5);
+        assert_eq!(fpic_merge_cycles(&a_idx, &b_idx), 5);
+    }
+
+    #[test]
+    fn fpic_merge_empty_streams() {
+        let (c, d) = fpic_merge(
+            StreamRef::new(&[], &[]),
+            StreamRef::new(&[1], &[1.0]),
+        );
+        assert_eq!((c, d), (0, 0.0));
+    }
+}

@@ -1,0 +1,161 @@
+//! Sorted sparse operand streams — what the mesh's rows and columns consume.
+//!
+//! A stream is one row of `A` (or one column of `B`, i.e. one row of `Bᵀ`)
+//! as parallel (index, value) arrays sorted by index. Round partitioning
+//! (paper §IV.B.b: synchronization every `R` index positions) is computed
+//! here both as per-round slices (functional simulation) and as per-round
+//! count histograms (the fast cycle model).
+
+/// Borrowed view of one operand stream.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamRef<'a> {
+    pub idx: &'a [u32],
+    pub val: &'a [f32],
+}
+
+impl<'a> StreamRef<'a> {
+    pub fn new(idx: &'a [u32], val: &'a [f32]) -> StreamRef<'a> {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "stream not sorted");
+        StreamRef { idx, val }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Sub-stream with indices in `[lo, hi)` (one synchronization round).
+    pub fn slice_range(&self, lo: u32, hi: u32) -> StreamRef<'a> {
+        let a = self.idx.partition_point(|&x| x < lo);
+        let b = self.idx.partition_point(|&x| x < hi);
+        StreamRef {
+            idx: &self.idx[a..b],
+            val: &self.val[a..b],
+        }
+    }
+}
+
+/// Per-round non-zero counts for one stream: `hist[k]` = #indices in
+/// `[k·r, (k+1)·r)`. `n_rounds` = ceil(index_space / r).
+pub fn round_histogram(idx: &[u32], r: usize, n_rounds: usize) -> Vec<u16> {
+    let mut h = vec![0u16; n_rounds];
+    for &x in idx {
+        let k = x as usize / r;
+        debug_assert!(k < n_rounds, "index {x} outside {n_rounds} rounds of {r}");
+        h[k] = h[k].saturating_add(1);
+    }
+    h
+}
+
+/// Flat row-major histogram matrix for many streams (rows × n_rounds),
+/// plus an element-wise max over groups of `group` consecutive streams —
+/// the precomputation behind the fast mesh cycle model.
+pub struct RoundHists {
+    pub n_rounds: usize,
+    /// per-stream histograms, row-major [streams × n_rounds]
+    pub per_stream: Vec<u16>,
+    pub n_streams: usize,
+}
+
+impl RoundHists {
+    pub fn from_csr(m: &crate::formats::csr::Csr, r: usize) -> RoundHists {
+        use crate::formats::traits::SparseMatrix;
+        let (rows, cols) = m.shape();
+        let n_rounds = (cols + r - 1) / r;
+        let mut per_stream = vec![0u16; rows * n_rounds];
+        for i in 0..rows {
+            let (idx, _) = m.row(i);
+            let base = i * n_rounds;
+            for &x in idx {
+                per_stream[base + x as usize / r] += 1;
+            }
+        }
+        RoundHists {
+            n_rounds,
+            per_stream,
+            n_streams: rows,
+        }
+    }
+
+    #[inline]
+    pub fn stream(&self, i: usize) -> &[u16] {
+        &self.per_stream[i * self.n_rounds..(i + 1) * self.n_rounds]
+    }
+
+    /// Element-wise max over stream groups of size `group` (the mesh tile's
+    /// row/column bundle): returns [n_groups × n_rounds].
+    pub fn group_max(&self, group: usize) -> (usize, Vec<u16>) {
+        let n_groups = (self.n_streams + group - 1) / group;
+        let mut out = vec![0u16; n_groups * self.n_rounds];
+        for g in 0..n_groups {
+            let dst = &mut out[g * self.n_rounds..(g + 1) * self.n_rounds];
+            for i in (g * group)..((g + 1) * group).min(self.n_streams) {
+                let src = self.stream(i);
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    if s > *d {
+                        *d = s;
+                    }
+                }
+            }
+        }
+        (n_groups, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::traits::SparseMatrix;
+
+    #[test]
+    fn slice_range_partitions_stream() {
+        let idx = [1u32, 5, 8, 9, 31, 32, 64];
+        let val = [1.0f32; 7];
+        let s = StreamRef::new(&idx, &val);
+        let r0 = s.slice_range(0, 32);
+        assert_eq!(r0.idx, &[1, 5, 8, 9, 31]);
+        let r1 = s.slice_range(32, 64);
+        assert_eq!(r1.idx, &[32]);
+        let r2 = s.slice_range(64, 96);
+        assert_eq!(r2.idx, &[64]);
+    }
+
+    #[test]
+    fn histogram_counts_match_slices() {
+        let idx = [0u32, 3, 31, 32, 95];
+        let h = round_histogram(&idx, 32, 3);
+        assert_eq!(h, vec![3, 1, 1]);
+    }
+
+    #[test]
+    fn hists_from_csr_sum_to_nnz() {
+        let m = uniform(30, 200, 0.1, 4);
+        let h = RoundHists::from_csr(&m, 32);
+        let total: u64 = h.per_stream.iter().map(|&x| x as u64).sum();
+        assert_eq!(total as usize, m.nnz());
+        for i in 0..30 {
+            let row_total: usize = h.stream(i).iter().map(|&x| x as usize).sum();
+            assert_eq!(row_total, m.row_nnz(i));
+        }
+    }
+
+    #[test]
+    fn group_max_dominates_members() {
+        let m = uniform(20, 128, 0.15, 9);
+        let h = RoundHists::from_csr(&m, 32);
+        let (n_groups, gm) = h.group_max(8);
+        assert_eq!(n_groups, 3);
+        for g in 0..n_groups {
+            for i in (g * 8)..((g + 1) * 8).min(20) {
+                for k in 0..h.n_rounds {
+                    assert!(gm[g * h.n_rounds + k] >= h.stream(i)[k]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! The proposed synchronized systolic SpMM mesh (paper §IV.B).
+//!
+//! Two implementations that agree on cycle counts by construction and are
+//! cross-validated by tests:
+//!
+//! * [`multiply_functional`] — node-level simulation: every node runs
+//!   Algorithm 2 verbatim with its operand buffer and flag; used to verify
+//!   *what* the architecture computes (C == A×B) and the buffer-depth /
+//!   synchronization invariants. O(mesh² · cycles) — for tests and small
+//!   inputs.
+//! * [`cycle_model`] — stream-level model computing only *how long* it
+//!   takes. Per output tile pass, per round `k`, every active stream must
+//!   push its in-round operands one per cycle and then wait for the slowest
+//!   (paper: "they wait for the rest of the rows and columns to finish the
+//!   round"), so the round costs the max in-round count; a pass adds `mesh` pipeline skew
+//!   (drain overlaps the next pass's fill).
+//!
+//! Cost accounting assumptions (same for FPIC and conventional MM, per the
+//! paper §V.A: "we assume a single cycle latency for all operations
+//! including MAC and comparisons").
+
+use super::stream::{RoundHists, StreamRef};
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::traits::SparseMatrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SyncMeshConfig {
+    /// Mesh edge N_synch (N×N nodes).
+    pub mesh: usize,
+    /// Round size R (synchronization granularity and operand-buffer depth).
+    pub round: usize,
+}
+
+impl Default for SyncMeshConfig {
+    /// Paper Table V design point: 64×64 mesh, R = 32.
+    fn default() -> Self {
+        SyncMeshConfig { mesh: 64, round: 32 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncMeshStats {
+    pub cycles: u64,
+    /// Useful MACs performed (index matches found).
+    pub macs: u64,
+    /// Buffer searches performed.
+    pub searches: u64,
+    /// Output-tile passes executed.
+    pub passes: u64,
+    /// Synchronization rounds with at least one operand.
+    pub active_rounds: u64,
+}
+
+impl SyncMeshStats {
+    /// MAC-array utilization: useful MACs / (nodes × cycles).
+    pub fn utilization(&self, mesh: usize) -> f64 {
+        self.macs as f64 / ((mesh * mesh) as f64 * self.cycles.max(1) as f64)
+    }
+}
+
+/// Cycle cost of one round given the max in-round operand count: streaming
+/// the operands one per cycle. Globally empty rounds are free — the round
+/// counter fast-forwards (streams are sorted, so all heads already being
+/// past the boundary is detectable combinationally), and the barrier itself
+/// costs no dead cycle: the synchronization signal overlaps the last
+/// operand's consumption.
+#[inline]
+fn round_cycles(max_count: u64) -> u64 {
+    max_count
+}
+
+/// Node-level functional simulation computing `C = A × B` where `b_t` is
+/// `Bᵀ` in CSR (its rows are B's columns). Returns (C, stats).
+pub fn multiply_functional(a: &Csr, b_t: &Csr, cfg: SyncMeshConfig) -> (Dense, SyncMeshStats) {
+    assert_eq!(
+        a.cols(),
+        b_t.cols(),
+        "inner dimensions (A cols vs Bᵀ cols) must agree"
+    );
+    let m = a.rows();
+    let n = b_t.rows(); // = B.cols
+    let k_space = a.cols() as u32;
+    let mesh = cfg.mesh;
+    let r = cfg.round as u32;
+    let mut c = Dense::zeros(m, n);
+    let mut stats = SyncMeshStats::default();
+
+    let mut nodes: Vec<super::node::SyncNode> =
+        (0..mesh * mesh).map(|_| super::node::SyncNode::new(cfg.round)).collect();
+
+    let n_row_tiles = (m + mesh - 1) / mesh;
+    let n_col_tiles = (n + mesh - 1) / mesh;
+    for ti in 0..n_row_tiles {
+        let rows = (ti * mesh)..((ti + 1) * mesh).min(m);
+        for tj in 0..n_col_tiles {
+            let cols = (tj * mesh)..((tj + 1) * mesh).min(n);
+            stats.passes += 1;
+            stats.cycles += mesh as u64; // pipeline skew (drain overlaps next fill)
+
+            let a_streams: Vec<StreamRef> = rows
+                .clone()
+                .map(|i| {
+                    let (idx, val) = a.row(i);
+                    StreamRef::new(idx, val)
+                })
+                .collect();
+            let b_streams: Vec<StreamRef> = cols
+                .clone()
+                .map(|j| {
+                    let (idx, val) = b_t.row(j);
+                    StreamRef::new(idx, val)
+                })
+                .collect();
+
+            let mut lo = 0u32;
+            while lo < k_space {
+                let hi = lo.saturating_add(r).min(k_space);
+                let ra: Vec<StreamRef> =
+                    a_streams.iter().map(|s| s.slice_range(lo, hi)).collect();
+                let rb: Vec<StreamRef> =
+                    b_streams.iter().map(|s| s.slice_range(lo, hi)).collect();
+                let steps = ra
+                    .iter()
+                    .chain(rb.iter())
+                    .map(|s| s.len())
+                    .max()
+                    .unwrap_or(0) as u64;
+                stats.cycles += round_cycles(steps);
+                if steps > 0 {
+                    stats.active_rounds += 1;
+                }
+                for t in 0..steps as usize {
+                    for (pi, sa) in ra.iter().enumerate() {
+                        let ao = (t < sa.len()).then(|| (sa.idx[t], sa.val[t]));
+                        for (pj, sb) in rb.iter().enumerate() {
+                            let bo = (t < sb.len()).then(|| (sb.idx[t], sb.val[t]));
+                            nodes[pi * mesh + pj].step(ao, bo);
+                        }
+                    }
+                }
+                for node in nodes.iter_mut() {
+                    node.reset_round();
+                }
+                lo = hi;
+            }
+
+            // drain accumulators into C
+            for (pi, i) in rows.clone().enumerate() {
+                for (pj, j) in cols.clone().enumerate() {
+                    *c.at_mut(i, j) = nodes[pi * mesh + pj].take_acc();
+                }
+            }
+        }
+    }
+    for node in &nodes {
+        stats.macs += node.macs;
+        stats.searches += node.searches;
+    }
+    (c, stats)
+}
+
+/// Fast stream-level cycle model — identical accounting, no value movement.
+/// Handles Table-IV-scale datasets in milliseconds-to-seconds.
+pub fn cycle_model(a: &Csr, b_t: &Csr, cfg: SyncMeshConfig) -> SyncMeshStats {
+    assert_eq!(a.cols(), b_t.cols());
+    let mesh = cfg.mesh;
+    let ha = RoundHists::from_csr(a, cfg.round);
+    let (ga_n, ga) = ha.group_max(mesh);
+    // A×Aᵀ fast path: reuse the same histograms when a and b_t coincide
+    let same = std::ptr::eq(a, b_t);
+    let (hb, gb_n, gb);
+    if same {
+        (gb_n, gb) = (ga_n, ga.clone());
+        hb = None;
+    } else {
+        let h = RoundHists::from_csr(b_t, cfg.round);
+        let (n, g) = h.group_max(mesh);
+        (gb_n, gb) = (n, g);
+        hb = Some(h);
+    }
+    let _ = hb;
+    let n_rounds = ha.n_rounds;
+
+    let mut stats = SyncMeshStats::default();
+    stats.macs = useful_macs(a, b_t);
+    for gi in 0..ga_n {
+        let ra = &ga[gi * n_rounds..(gi + 1) * n_rounds];
+        for gj in 0..gb_n {
+            let rb = &gb[gj * n_rounds..(gj + 1) * n_rounds];
+            stats.passes += 1;
+            stats.cycles += mesh as u64; // pipeline skew, as in the functional sim
+            let mut pass_cycles = 0u64;
+            let mut active = 0u64;
+            for k in 0..n_rounds {
+                let mx = ra[k].max(rb[k]) as u64;
+                pass_cycles += round_cycles(mx);
+                active += (mx > 0) as u64;
+            }
+            stats.cycles += pass_cycles;
+            stats.active_rounds += active;
+        }
+    }
+    stats
+}
+
+/// Exact count of index matches (useful MACs) for C = A × B with `b_t` = Bᵀ;
+/// used by the cycle models for utilization accounting.
+pub fn useful_macs(a: &Csr, b_t: &Csr) -> u64 {
+    // MAC count = Σ_{i,j} |row_i(A) ∩ row_j(Bᵀ)| = Σ_k nnz_col_k(A)·nnz_row...
+    // cheaper: count per k-index: (#rows of A with k) × (#rows of Bᵀ with k)
+    let mut a_cnt = vec![0u32; a.cols()];
+    for &c in &a.col_idx {
+        a_cnt[c as usize] += 1;
+    }
+    if std::ptr::eq(a, b_t) {
+        return a_cnt.iter().map(|&x| x as u64 * x as u64).sum();
+    }
+    let mut b_cnt = vec![0u32; b_t.cols()];
+    for &c in &b_t.col_idx {
+        b_cnt[c as usize] += 1;
+    }
+    a_cnt
+        .iter()
+        .zip(&b_cnt)
+        .map(|(&x, &y)| x as u64 * y as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    fn small_cfg() -> SyncMeshConfig {
+        SyncMeshConfig { mesh: 4, round: 8 }
+    }
+
+    #[test]
+    fn functional_matches_dense_reference() {
+        let a = uniform(10, 24, 0.3, 1);
+        let b = uniform(24, 9, 0.25, 2);
+        let b_t = b.transpose();
+        let (c, stats) = multiply_functional(&a, &b_t, small_cfg());
+        let want = dense_ref(&a, &b);
+        assert!(
+            c.max_abs_diff(&want) < 1e-4,
+            "max diff {}",
+            c.max_abs_diff(&want)
+        );
+        assert!(stats.cycles > 0);
+        assert!(stats.macs > 0);
+    }
+
+    #[test]
+    fn functional_a_at_self_transpose() {
+        let a = uniform(12, 20, 0.2, 3);
+        let a_t = a.transpose();
+        let (c, _) = multiply_functional(&a, &a, small_cfg()); // A×Aᵀ: b_t = (Aᵀ)ᵀ = A
+        let want = dense_ref(&a, &a_t);
+        assert!(c.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn cycle_model_agrees_with_functional() {
+        for seed in 0..5 {
+            let a = uniform(13, 40, 0.15, seed);
+            let b = uniform(40, 11, 0.2, seed + 100);
+            let b_t = b.transpose();
+            let cfg = small_cfg();
+            let (_, f) = multiply_functional(&a, &b_t, cfg);
+            let m = cycle_model(&a, &b_t, cfg);
+            assert_eq!(f.cycles, m.cycles, "seed {seed}");
+            assert_eq!(f.passes, m.passes);
+            assert_eq!(f.active_rounds, m.active_rounds);
+            assert_eq!(f.macs, m.macs, "useful MAC accounting");
+        }
+    }
+
+    #[test]
+    fn denser_input_costs_more_cycles() {
+        let cfg = SyncMeshConfig { mesh: 8, round: 32 };
+        let sparse = uniform(32, 256, 0.02, 5);
+        let dense = uniform(32, 256, 0.2, 5);
+        let cs = cycle_model(&sparse, &sparse, cfg).cycles;
+        let cd = cycle_model(&dense, &dense, cfg).cycles;
+        assert!(cd > cs, "{cd} !> {cs}");
+    }
+
+    #[test]
+    fn empty_matrix_costs_only_fill() {
+        let a = uniform(8, 64, 0.0, 1);
+        let cfg = small_cfg();
+        let s = cycle_model(&a, &a, cfg);
+        // 2x2 tile passes of `mesh` skew each, zero round work
+        assert_eq!(s.passes, 4);
+        assert_eq!(s.cycles, 4 * 4);
+        assert_eq!(s.macs, 0);
+    }
+
+    #[test]
+    fn utilization_below_one() {
+        let a = uniform(32, 128, 0.1, 9);
+        let s = cycle_model(&a, &a, SyncMeshConfig { mesh: 8, round: 32 });
+        let u = s.utilization(8);
+        assert!(u > 0.0 && u < 1.0, "utilization {u}");
+    }
+}

@@ -1,0 +1,74 @@
+//! gem5 simulation parameters (paper Table III), as data.
+
+/// One cache level's geometry and hit latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub block_bytes: usize,
+    pub hit_latency: u64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.block_bytes)
+    }
+}
+
+/// Full hierarchy configuration (paper Table III values by default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HierarchyConfig {
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    /// Memory (beyond-L2) latency in cycles @ 1 GHz.
+    pub mem_latency: u64,
+    /// Stride prefetcher degree (0 disables prefetching).
+    pub prefetch_degree: usize,
+}
+
+impl Default for HierarchyConfig {
+    /// Paper Table III: L1 32 KiB 2-way LRU (hit 2), L2 1 MiB 8-way LRU
+    /// (hit 20), 64 B blocks, stride prefetching with degree 4. Memory
+    /// latency is not stated in the paper; 100 cycles @ 1 GHz is gem5's
+    /// typical DDR3 round-trip and is an explicit knob here.
+    fn default() -> Self {
+        HierarchyConfig {
+            l1: CacheConfig {
+                size_bytes: 32 * 1024,
+                ways: 2,
+                block_bytes: 64,
+                hit_latency: 2,
+            },
+            l2: CacheConfig {
+                size_bytes: 1024 * 1024,
+                ways: 8,
+                block_bytes: 64,
+                hit_latency: 20,
+            },
+            mem_latency: 100,
+            prefetch_degree: 4,
+        }
+    }
+}
+
+impl HierarchyConfig {
+    pub fn no_prefetch(mut self) -> Self {
+        self.prefetch_degree = 0;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_geometry() {
+        let c = HierarchyConfig::default();
+        assert_eq!(c.l1.sets(), 256); // 32KiB / (2 * 64B)
+        assert_eq!(c.l2.sets(), 2048); // 1MiB / (8 * 64B)
+        assert_eq!(c.l1.hit_latency, 2);
+        assert_eq!(c.l2.hit_latency, 20);
+        assert_eq!(c.prefetch_degree, 4);
+    }
+}

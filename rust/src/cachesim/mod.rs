@@ -1,0 +1,23 @@
+//! gem5-substitute memory-hierarchy simulator (paper Table III / Fig 3).
+//!
+//! Trace-driven, in-order, two-level (L1 32 KiB 2-way, L2 1 MiB 8-way, both
+//! LRU with 64 B blocks) with an L1 stride prefetcher of degree 4. The
+//! formats' `locate` calls feed it the exact address streams their array
+//! layouts produce, so CRS's long sequential scans and InCRS's short jumpy
+//! probes hit the hierarchy the same way they would in the paper's gem5
+//! runs (DESIGN.md §2 explains why this substitution preserves Fig 3).
+
+pub mod cache;
+pub mod config;
+pub mod hierarchy;
+pub mod prefetch;
+pub mod runner;
+pub mod stats;
+pub mod trace;
+
+pub use cache::Cache;
+pub use config::{CacheConfig, HierarchyConfig};
+pub use hierarchy::Hierarchy;
+pub use runner::{compare, run_crs, run_incrs, CacheRun, Comparison};
+pub use stats::HierarchyStats;
+pub use trace::TraceSink;

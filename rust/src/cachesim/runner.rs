@@ -1,0 +1,121 @@
+//! Fig-3 experiment runner: replay a column-order traversal of a dataset
+//! through the gem5-parameter hierarchy, for CRS and for InCRS, and report
+//! the normalized ratios the paper plots.
+
+use super::config::HierarchyConfig;
+use super::hierarchy::Hierarchy;
+use super::stats::HierarchyStats;
+use crate::access::column::{read_columns_csr, read_columns_incrs};
+use crate::formats::csr::Csr;
+use crate::formats::incrs::{InCrs, InCrsParams};
+
+/// One format's run through the hierarchy.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheRun {
+    pub stats: HierarchyStats,
+    pub cells_probed: u64,
+    pub nonzeros_found: u64,
+}
+
+/// CRS-vs-InCRS comparison on one dataset (one Fig-3 dataset group).
+#[derive(Clone, Copy, Debug)]
+pub struct Comparison {
+    pub crs: CacheRun,
+    pub incrs: CacheRun,
+}
+
+impl Comparison {
+    /// The four bars Fig 3 plots (CRS normalized to InCRS).
+    pub fn l1_access_ratio(&self) -> f64 {
+        self.crs.stats.l1_accesses as f64 / self.incrs.stats.l1_accesses.max(1) as f64
+    }
+    pub fn l2_access_ratio(&self) -> f64 {
+        self.crs.stats.l2_accesses as f64 / self.incrs.stats.l2_accesses.max(1) as f64
+    }
+    pub fn mem_time_ratio(&self) -> f64 {
+        self.crs.stats.mem_cycles as f64 / self.incrs.stats.mem_cycles.max(1) as f64
+    }
+    pub fn total_time_ratio(&self) -> f64 {
+        self.crs.stats.total_cycles() as f64 / self.incrs.stats.total_cycles().max(1) as f64
+    }
+}
+
+/// Run the column-order traversal of `m` through a fresh hierarchy in CRS
+/// form. `col_limit` optionally truncates (paper-style resize knob).
+pub fn run_crs(m: &Csr, cfg: HierarchyConfig, col_limit: Option<usize>) -> CacheRun {
+    let mut h = Hierarchy::new(cfg);
+    let st = read_columns_csr(m, col_limit, &mut h);
+    CacheRun {
+        stats: h.stats(),
+        cells_probed: st.cells_probed,
+        nonzeros_found: st.nonzeros_found,
+    }
+}
+
+pub fn run_incrs(
+    m: &Csr,
+    params: InCrsParams,
+    cfg: HierarchyConfig,
+    col_limit: Option<usize>,
+) -> Result<CacheRun, String> {
+    let incrs = InCrs::from_csr_params(m, params)?;
+    let mut h = Hierarchy::new(cfg);
+    let st = read_columns_incrs(&incrs, col_limit, &mut h);
+    Ok(CacheRun {
+        stats: h.stats(),
+        cells_probed: st.cells_probed,
+        nonzeros_found: st.nonzeros_found,
+    })
+}
+
+/// Full Fig-3 comparison for one dataset.
+pub fn compare(
+    m: &Csr,
+    params: InCrsParams,
+    cfg: HierarchyConfig,
+    col_limit: Option<usize>,
+) -> Result<Comparison, String> {
+    let crs = run_crs(m, cfg, col_limit);
+    let incrs = run_incrs(m, params, cfg, col_limit)?;
+    debug_assert_eq!(crs.nonzeros_found, incrs.nonzeros_found);
+    Ok(Comparison { crs, incrs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::traits::SparseMatrix;
+
+    #[test]
+    fn incrs_wins_on_all_fig3_metrics() {
+        let m = uniform(80, 2048, 0.05, 13);
+        let cmp = compare(
+            &m,
+            InCrsParams::default(),
+            HierarchyConfig::default(),
+            None,
+        )
+        .unwrap();
+        assert!(cmp.l1_access_ratio() > 3.0, "l1 {}", cmp.l1_access_ratio());
+        assert!(cmp.total_time_ratio() > 1.5, "time {}", cmp.total_time_ratio());
+        assert!(cmp.crs.stats.consistent());
+        assert!(cmp.incrs.stats.consistent());
+        assert_eq!(cmp.crs.nonzeros_found as usize, m.nnz());
+    }
+
+    #[test]
+    fn ratios_grow_with_row_population() {
+        // denser rows -> bigger CRS scans -> bigger InCRS advantage
+        let sparse = uniform(60, 1024, 0.02, 1);
+        let dense = uniform(60, 1024, 0.15, 1);
+        let cfg = HierarchyConfig::default();
+        let p = InCrsParams::default();
+        let r_sparse = compare(&sparse, p, cfg, None).unwrap().l1_access_ratio();
+        let r_dense = compare(&dense, p, cfg, None).unwrap().l1_access_ratio();
+        assert!(
+            r_dense > r_sparse,
+            "dense rows {r_dense} should beat sparse rows {r_sparse}"
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Cache-hierarchy statistics: the quantities Fig 3 plots.
+
+use crate::formats::traits::NUM_SITES;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierarchyStats {
+    pub l1_accesses: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub mem_fetches: u64,
+    /// Total memory time in cycles (sum of access latencies).
+    pub mem_cycles: u64,
+    pub prefetch_fills: u64,
+    pub prefetch_useful: u64,
+    pub accesses_by_site: [u64; NUM_SITES],
+}
+
+impl HierarchyStats {
+    pub fn l1_hit_rate(&self) -> f64 {
+        self.l1_hits as f64 / self.l1_accesses.max(1) as f64
+    }
+
+    pub fn l2_hit_rate(&self) -> f64 {
+        self.l2_hits as f64 / self.l2_accesses.max(1) as f64
+    }
+
+    /// Total run time model for the Fig-3 workload: memory time plus one
+    /// issue cycle per access for the non-memory work of the in-order core
+    /// (compare/branch per scanned element).
+    pub fn total_cycles(&self) -> u64 {
+        self.mem_cycles + self.l1_accesses
+    }
+
+    /// Invariant check used by tests and debug assertions.
+    pub fn consistent(&self) -> bool {
+        self.l1_hits + self.l1_misses == self.l1_accesses
+            && self.l2_hits + self.l2_misses == self.l2_accesses
+            // every L2 *demand* access is an L1 miss; prefetch fills add more
+            && self.l2_accesses >= self.l1_misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let s = HierarchyStats {
+            l1_accesses: 10,
+            l1_hits: 8,
+            l1_misses: 2,
+            l2_accesses: 2,
+            l2_hits: 1,
+            l2_misses: 1,
+            mem_cycles: 150,
+            ..Default::default()
+        };
+        assert!((s.l1_hit_rate() - 0.8).abs() < 1e-12);
+        assert!(s.consistent());
+        assert_eq!(s.total_cycles(), 160);
+    }
+}

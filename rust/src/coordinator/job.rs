@@ -1,0 +1,87 @@
+//! SpMM job descriptors and results — the unit of work the coordinator
+//! routes, schedules, and dispatches.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::runtime::numeric::ExecReport;
+
+/// What the caller wants done.
+#[derive(Clone)]
+pub struct SpmmJob {
+    pub id: u64,
+    pub a: Arc<Csr>,
+    pub b: Arc<Csr>,
+    pub opts: JobOptions,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct JobOptions {
+    /// Cross-check the accelerator result against the CPU oracle
+    /// (test/debug traffic; adds a full reference multiply).
+    pub verify: bool,
+    /// Keep the dense result (large!) or return only the report.
+    pub keep_result: bool,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        JobOptions {
+            verify: false,
+            keep_result: true,
+        }
+    }
+}
+
+/// Outcome of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub result: Result<JobOutput, String>,
+}
+
+#[derive(Debug)]
+pub struct JobOutput {
+    pub c: Option<Dense>,
+    pub report: ExecReport,
+    pub backend: &'static str,
+    pub wall: Duration,
+    /// max |accel - oracle| when `verify` was requested.
+    pub max_err: Option<f32>,
+}
+
+impl SpmmJob {
+    pub fn new(id: u64, a: Arc<Csr>, b: Arc<Csr>) -> SpmmJob {
+        SpmmJob {
+            id,
+            a,
+            b,
+            opts: JobOptions::default(),
+        }
+    }
+
+    pub fn with_opts(mut self, opts: JobOptions) -> SpmmJob {
+        self.opts = opts;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+
+    #[test]
+    fn job_construction() {
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let j = SpmmJob::new(7, a.clone(), a).with_opts(JobOptions {
+            verify: true,
+            keep_result: false,
+        });
+        assert_eq!(j.id, 7);
+        assert!(j.opts.verify);
+        assert!(!j.opts.keep_result);
+    }
+}

@@ -1,0 +1,112 @@
+//! Lock-free service metrics: counters and a fixed-bucket latency
+//! histogram, shared between workers and observers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two microsecond buckets: [<1us, <2us, <4us, ... , <2^30us, rest]
+const BUCKETS: usize = 32;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub dispatches: AtomicU64,
+    pub real_pairs: AtomicU64,
+    pub busy_ns: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile from the histogram (upper bucket bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            real_pairs: self.real_pairs.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            p50_us: self.latency_quantile_us(0.5),
+            p99_us: self.latency_quantile_us(0.99),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub dispatches: u64,
+    pub real_pairs: u64,
+    pub busy_ns: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.observe_latency(Duration::from_micros(10)); // bucket <16
+        }
+        for _ in 0..10 {
+            m.observe_latency(Duration::from_micros(5_000)); // bucket <8192
+        }
+        assert!(m.latency_quantile_us(0.5) <= 16);
+        assert!(m.latency_quantile_us(0.99) >= 4096);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.jobs_completed.fetch_add(3, Ordering::Relaxed);
+        m.real_pairs.fetch_add(100, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 3);
+        assert_eq!(s.real_pairs, 100);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+}

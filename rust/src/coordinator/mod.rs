@@ -1,0 +1,22 @@
+//! L3 coordinator: the serving layer that owns process topology, routing,
+//! batching, and metrics (DESIGN.md §1).
+//!
+//! * [`job`] — SpMM job descriptors/results.
+//! * [`router`] — format strategy (InCRS or not) + engine selection, the
+//!   paper's §II/§III decision as an explicit, testable policy.
+//! * [`scheduler`] — dispatch batching with exactly-once coverage.
+//! * [`server`] — bounded-queue worker pool (backpressure, per-worker PJRT
+//!   engines, graceful shutdown).
+//! * [`metrics`] — lock-free counters + latency histogram.
+
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{route, AccessStrategy, EngineKind, Route, RoutingPolicy};
+pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,129 @@
+//! Format/engine routing — the paper's §II decision, made explicit.
+//!
+//! When an SpMM job needs column-order access to a row-stored `B`, the
+//! router decides whether to pay the one-time InCRS counter-vector build.
+//! The paper's estimate (§III.C): column access in CRS costs ≈ ½·N·D per
+//! locate vs ≈ b/2+1 in InCRS, a ratio of N·D/(b+2). InCRS pays off when
+//! that ratio clears a threshold — e.g. Table II shows Mks at only ≈3×,
+//! where the counter storage (12% extra) may not be worth it.
+
+use crate::formats::csr::Csr;
+use crate::formats::incrs::InCrsParams;
+use crate::formats::traits::SparseMatrix;
+
+/// How B will be accessed by the chosen algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessStrategy {
+    /// Row-order Gustavson on the CPU — no column access at all.
+    RowOrder,
+    /// Column access through plain CRS scans (paper's baseline).
+    ColumnCrs,
+    /// Column access through InCRS counter-vectors (paper's proposal).
+    ColumnInCrs,
+}
+
+/// Which execution backend gets the job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT Pallas kernels via PJRT (block-sparse dispatch path).
+    Pjrt,
+    /// Pure-Rust fallback of the same plan.
+    Cpu,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingPolicy {
+    /// Minimum estimated MA ratio N·D/(b+2) for InCRS to pay off.
+    pub incrs_min_ratio: f64,
+    pub incrs_params: InCrsParams,
+    pub prefer_pjrt: bool,
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> Self {
+        RoutingPolicy {
+            // Table II: Mks at ratio 3 is the paper's marginal case; below
+            // ~2 the counter storage and build time aren't justified.
+            incrs_min_ratio: 2.0,
+            incrs_params: InCrsParams::default(),
+            prefer_pjrt: true,
+        }
+    }
+}
+
+/// The routing decision with its rationale (logged + asserted in tests).
+#[derive(Clone, Copy, Debug)]
+pub struct Route {
+    pub access: AccessStrategy,
+    pub engine: EngineKind,
+    /// estimated N·D/(b+2) for B.
+    pub estimated_ma_ratio: f64,
+}
+
+/// Decide how to run C = A × B given that `b` is stored row-ordered and the
+/// chosen kernel needs it by column (`needs_column_access` = the accelerator
+/// / inner-product path; Gustavson jobs pass false).
+pub fn route(
+    b: &Csr,
+    needs_column_access: bool,
+    pjrt_available: bool,
+    policy: &RoutingPolicy,
+) -> Route {
+    let nd = b.nnz() as f64 / b.rows().max(1) as f64; // avg nnz/row = N·D
+    let ratio = nd / (policy.incrs_params.block as f64 + 2.0);
+    let access = if !needs_column_access {
+        AccessStrategy::RowOrder
+    } else if ratio >= policy.incrs_min_ratio {
+        AccessStrategy::ColumnInCrs
+    } else {
+        AccessStrategy::ColumnCrs
+    };
+    let engine = if policy.prefer_pjrt && pjrt_available {
+        EngineKind::Pjrt
+    } else {
+        EngineKind::Cpu
+    };
+    Route {
+        access,
+        engine,
+        estimated_ma_ratio: ratio,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+
+    #[test]
+    fn dense_rows_choose_incrs() {
+        // docword-like: 480 nnz/row -> ratio ≈ 14
+        let b = uniform(64, 12_000, 0.04, 1);
+        let r = route(&b, true, true, &RoutingPolicy::default());
+        assert_eq!(r.access, AccessStrategy::ColumnInCrs);
+        assert!(r.estimated_ma_ratio > 10.0);
+        assert_eq!(r.engine, EngineKind::Pjrt);
+    }
+
+    #[test]
+    fn sparse_rows_stay_on_crs() {
+        // ~17 nnz/row -> ratio ≈ 0.5: counters don't pay off
+        let b = uniform(64, 3_000, 0.0055, 2);
+        let r = route(&b, true, true, &RoutingPolicy::default());
+        assert_eq!(r.access, AccessStrategy::ColumnCrs);
+    }
+
+    #[test]
+    fn row_order_jobs_skip_the_question() {
+        let b = uniform(64, 12_000, 0.04, 3);
+        let r = route(&b, false, true, &RoutingPolicy::default());
+        assert_eq!(r.access, AccessStrategy::RowOrder);
+    }
+
+    #[test]
+    fn engine_falls_back_without_pjrt() {
+        let b = uniform(8, 64, 0.2, 4);
+        let r = route(&b, true, false, &RoutingPolicy::default());
+        assert_eq!(r.engine, EngineKind::Cpu);
+    }
+}

@@ -1,0 +1,290 @@
+//! Batching SpMM server: a worker pool over bounded channels.
+//!
+//! The L3 serving shape (DESIGN.md §1): callers `submit` jobs and get a
+//! per-job response channel; a bounded queue applies backpressure (submit
+//! blocks when `queue_depth` jobs are in flight); each worker owns its own
+//! execution engine (PJRT clients are not shared across threads) and
+//! processes whole jobs — dispatch-level parallelism inside a job uses the
+//! scheduler's batches.
+//!
+//! Built on std threads + mpsc because the offline registry has no tokio
+//! (DESIGN.md §2); the batching/backpressure semantics are identical.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::job::{JobOutput, JobResult, SpmmJob};
+use super::metrics::Metrics;
+use super::router::EngineKind;
+use crate::runtime::numeric::NumericEngine;
+use crate::spmm::plan::Geometry;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Max queued jobs before `submit` blocks (backpressure).
+    pub queue_depth: usize,
+    pub engine: EngineKind,
+    /// Geometry for CPU engines; PJRT engines read theirs from the manifest.
+    pub geometry: Geometry,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+            engine: EngineKind::Cpu,
+            geometry: Geometry::default(),
+            artifacts_dir: crate::runtime::Manifest::default_dir(),
+        }
+    }
+}
+
+enum Envelope {
+    Job(SpmmJob, SyncSender<JobResult>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: SyncSender<Envelope>,
+    handles: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> Server {
+        assert!(cfg.workers > 0, "need at least one worker");
+        let (tx, rx) = sync_channel::<Envelope>(cfg.queue_depth);
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("spmm-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, cfg, rx, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+        Server {
+            tx,
+            handles,
+            metrics,
+        }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure). Returns
+    /// the response channel.
+    pub fn submit(&self, job: SpmmJob) -> Receiver<JobResult> {
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Envelope::Job(job, rtx))
+            .expect("server shut down");
+        rrx
+    }
+
+    /// Non-blocking submit: `Err(job)` when the queue is full.
+    pub fn try_submit(&self, job: SpmmJob) -> Result<Receiver<JobResult>, SpmmJob> {
+        let (rtx, rrx) = sync_channel(1);
+        match self.tx.try_send(Envelope::Job(job, rtx)) {
+            Ok(()) => {
+                self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rrx)
+            }
+            Err(TrySendError::Full(Envelope::Job(job, _))) => Err(job),
+            Err(TrySendError::Disconnected(Envelope::Job(job, _))) => Err(job),
+            Err(_) => unreachable!("only jobs are try-sent"),
+        }
+    }
+
+    /// Graceful shutdown: drains queued jobs, then joins workers.
+    pub fn shutdown(self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Envelope::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    cfg: ServerConfig,
+    rx: Arc<std::sync::Mutex<Receiver<Envelope>>>,
+    metrics: Arc<Metrics>,
+) {
+    // Each worker owns its engine; PJRT load failure degrades to CPU with
+    // an explicit failure counter rather than killing the worker.
+    let engine = match cfg.engine {
+        EngineKind::Pjrt => match NumericEngine::pjrt(&cfg.artifacts_dir) {
+            Ok(e) => e,
+            Err(e) => {
+                log::warn!("worker PJRT init failed ({e:#}); falling back to CPU");
+                metrics.jobs_failed.fetch_add(0, Ordering::Relaxed);
+                NumericEngine::cpu(cfg.geometry)
+            }
+        },
+        EngineKind::Cpu => NumericEngine::cpu(cfg.geometry),
+    };
+
+    loop {
+        let env = {
+            let guard = rx.lock().expect("queue lock");
+            guard.recv()
+        };
+        match env {
+            Err(_) | Ok(Envelope::Shutdown) => return,
+            Ok(Envelope::Job(job, reply)) => {
+                let start = Instant::now();
+                let result = run_job(&engine, &job);
+                let wall = start.elapsed();
+                metrics.busy_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+                metrics.observe_latency(wall);
+                match &result {
+                    Ok(out) => {
+                        metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .dispatches
+                            .fetch_add(out.report.dispatches, Ordering::Relaxed);
+                        metrics
+                            .real_pairs
+                            .fetch_add(out.report.real_pairs, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = reply.send(JobResult {
+                    id: job.id,
+                    result,
+                });
+            }
+        }
+    }
+}
+
+fn run_job(engine: &NumericEngine, job: &SpmmJob) -> Result<JobOutput, String> {
+    use crate::formats::traits::SparseMatrix;
+    if job.a.cols() != job.b.rows() {
+        return Err(format!(
+            "dimension mismatch: A is {:?}, B is {:?}",
+            job.a.shape(),
+            job.b.shape()
+        ));
+    }
+    let start = Instant::now();
+    let (c, report) = engine.spmm(&job.a, &job.b).map_err(|e| format!("{e:#}"))?;
+    let max_err = if job.opts.verify {
+        let oracle = crate::spmm::dense::multiply(&job.a, &job.b);
+        Some(c.max_abs_diff(&oracle))
+    } else {
+        None
+    };
+    Ok(JobOutput {
+        c: job.opts.keep_result.then_some(c),
+        report,
+        backend: engine.backend_name(),
+        wall: start.elapsed(),
+        max_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobOptions;
+    use crate::datasets::synth::uniform;
+
+    fn cpu_server(workers: usize, depth: usize) -> Server {
+        Server::start(ServerConfig {
+            workers,
+            queue_depth: depth,
+            engine: EngineKind::Cpu,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn serves_jobs_and_verifies() {
+        let s = cpu_server(2, 8);
+        let a = Arc::new(uniform(24, 32, 0.2, 1));
+        let b = Arc::new(uniform(32, 20, 0.2, 2));
+        let rx = s.submit(
+            SpmmJob::new(1, a, b).with_opts(JobOptions { verify: true, keep_result: true }),
+        );
+        let res = rx.recv().unwrap();
+        let out = res.result.unwrap();
+        assert!(out.max_err.unwrap() < 1e-3);
+        assert!(out.c.is_some());
+        assert_eq!(out.backend, "cpu");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_jobs_all_complete() {
+        let s = cpu_server(4, 4);
+        let a = Arc::new(uniform(16, 16, 0.3, 3));
+        let rxs: Vec<_> = (0..20)
+            .map(|i| s.submit(SpmmJob::new(i, a.clone(), a.clone())))
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        assert_eq!(s.metrics.snapshot().jobs_completed, 20);
+        s.shutdown();
+    }
+
+    #[test]
+    fn dimension_mismatch_fails_cleanly() {
+        let s = cpu_server(1, 2);
+        let a = Arc::new(uniform(4, 5, 0.5, 1));
+        let b = Arc::new(uniform(7, 4, 0.5, 2));
+        let res = s.submit(SpmmJob::new(9, a, b)).recv().unwrap();
+        assert!(res.result.unwrap_err().contains("dimension mismatch"));
+        assert_eq!(s.metrics.snapshot().jobs_failed, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        // 1 worker, tiny queue, slow-ish jobs: try_submit must eventually Err
+        let s = cpu_server(1, 1);
+        let a = Arc::new(uniform(64, 64, 0.4, 5));
+        let mut accepted = Vec::new();
+        let mut rejected = 0;
+        for i in 0..30 {
+            match s.try_submit(SpmmJob::new(i, a.clone(), a.clone())) {
+                Ok(rx) => accepted.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "queue never filled");
+        for rx in accepted {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let s = cpu_server(2, 8);
+        let a = Arc::new(uniform(8, 8, 0.5, 6));
+        let rx = s.submit(SpmmJob::new(1, a.clone(), a));
+        s.shutdown();
+        // response was delivered before shutdown completed
+        assert!(rx.try_recv().is_ok());
+    }
+}

@@ -1,0 +1,22 @@
+//! Evaluation datasets: registry of the paper's nine datasets, a synthetic
+//! generator matching their published moments, and a MatrixMarket loader
+//! for real data (DESIGN.md §2 Substitutions).
+
+pub mod mtx;
+pub mod spec;
+pub mod synth;
+
+pub use spec::{by_name, table2_by_name, ColumnDist, DatasetSpec, NnzRow, TABLE2, TABLE4};
+pub use synth::{generate, uniform};
+
+use crate::formats::csr::Csr;
+
+/// Load a dataset: a real `.mtx` file if `path` is given, else synthesize
+/// from the registry spec.
+pub fn load(name: &str, mtx_path: Option<&std::path::Path>, seed: u64) -> Result<Csr, String> {
+    if let Some(p) = mtx_path {
+        return Ok(Csr::from_coo(&mtx::read(p)?));
+    }
+    let spec = by_name(name).ok_or_else(|| format!("unknown dataset {name:?}"))?;
+    Ok(generate(&spec, seed))
+}

@@ -1,0 +1,138 @@
+//! MatrixMarket (.mtx) coordinate reader/writer — the drop-in path for the
+//! real UFL/UCI datasets when a user has them (DESIGN.md §2: the synthetic
+//! generator is the default substrate, real files override it).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::formats::coo::Coo;
+
+/// Read a MatrixMarket coordinate file (general, real/integer/pattern).
+pub fn read(path: &Path) -> Result<Coo, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{path:?}: {e}"))?;
+    read_from(BufReader::new(f))
+}
+
+pub fn read_from(r: impl BufRead) -> Result<Coo, String> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or("empty file")?
+        .map_err(|e| e.to_string())?;
+    let h = header.to_ascii_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate") {
+        return Err(format!("unsupported MatrixMarket header: {header}"));
+    }
+    let pattern = h.contains(" pattern ") || h.ends_with(" pattern")
+        || h.contains(" pattern general") || h.split_whitespace().any(|w| w == "pattern");
+    let symmetric = h.split_whitespace().any(|w| w == "symmetric");
+
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut entries: Vec<(u32, u32, f32)> = Vec::new();
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        if dims.is_none() {
+            let m: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+            let n: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+            let nnz: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+            dims = Some((m, n, nnz));
+            entries.reserve(nnz);
+            continue;
+        }
+        let i: usize = it.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        let j: usize = it.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        let v: f32 = if pattern {
+            1.0
+        } else {
+            it.next().ok_or("missing value")?.parse().map_err(|e| format!("{e}"))?
+        };
+        if i == 0 || j == 0 {
+            return Err("MatrixMarket is 1-indexed; found 0".into());
+        }
+        entries.push((i as u32 - 1, j as u32 - 1, v));
+        if symmetric && i != j {
+            entries.push((j as u32 - 1, i as u32 - 1, v));
+        }
+    }
+    let (m, n, nnz) = dims.ok_or("missing size line")?;
+    let expected = if symmetric { None } else { Some(nnz) };
+    if let Some(e) = expected {
+        if entries.len() != e {
+            return Err(format!("expected {e} entries, found {}", entries.len()));
+        }
+    }
+    Ok(Coo::new(m, n, entries))
+}
+
+/// Write a COO matrix as MatrixMarket coordinate/real/general.
+pub fn write(coo: &Coo, path: &Path) -> Result<(), String> {
+    use crate::formats::traits::SparseMatrix;
+    let mut f = std::fs::File::create(path).map_err(|e| format!("{path:?}: {e}"))?;
+    let (m, n) = coo.shape();
+    let mut out = String::new();
+    out.push_str("%%MatrixMarket matrix coordinate real general\n");
+    out.push_str(&format!("{m} {n} {}\n", coo.nnz()));
+    for &(r, c, v) in &coo.entries {
+        out.push_str(&format!("{} {} {}\n", r + 1, c + 1, v));
+    }
+    f.write_all(out.as_bytes()).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::SparseMatrix;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 4 2\n\
+                   1 1 2.5\n\
+                   3 4 -1\n";
+        let c = read_from(Cursor::new(src)).unwrap();
+        assert_eq!(c.shape(), (3, 4));
+        assert_eq!(c.get(0, 0), Some(2.5));
+        assert_eq!(c.get(2, 3), Some(-1.0));
+    }
+
+    #[test]
+    fn parse_pattern_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                   3 3 2\n\
+                   2 1\n\
+                   3 3\n";
+        let c = read_from(Cursor::new(src)).unwrap();
+        assert_eq!(c.get(1, 0), Some(1.0));
+        assert_eq!(c.get(0, 1), Some(1.0)); // mirrored
+        assert_eq!(c.get(2, 2), Some(1.0)); // diagonal not duplicated
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read_from(Cursor::new("%%MatrixMarket matrix array real\n1 1\n1\n")).is_err());
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_from(Cursor::new(short)).is_err());
+        let zero_idx = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        assert!(read_from(Cursor::new(zero_idx)).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let c = Coo::new(2, 3, vec![(0, 2, 1.5), (1, 0, -2.0)]);
+        let dir = std::env::temp_dir().join("spmm_accel_mtx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mtx");
+        write(&c, &p).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.entries, c.entries);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,246 @@
+//! Registry of the paper's evaluation datasets (Tables II and IV).
+//!
+//! The originals come from the UFL Sparse Matrix Collection and the UCI
+//! repository; we cannot redistribute them, so each entry records the
+//! *published* dimension, density, and per-row non-zero spread, and the
+//! generator (`synth.rs`) synthesizes a matrix matching those moments
+//! (DESIGN.md §2 Substitutions). A MatrixMarket loader (`mtx.rs`) lets real
+//! files replace the synthetic ones transparently.
+//!
+//! Note on the paper's Table II: for Norris and Mks the stated density is
+//! inconsistent with the stated avg non-zeros/row (e.g. Norris: 360 nz over
+//! 3 600 columns is D = 10%, not 1%). All of the paper's *derived* columns
+//! (MA ratio ≈ N·D/(b+2), storage ratio) follow the nnz-per-row numbers, so
+//! we honor `nnz_row` and report the resulting density. EXPERIMENTS.md
+//! documents the discrepancy per dataset.
+
+/// Per-row non-zero spread as published: (min, avg, max).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NnzRow {
+    pub min: usize,
+    pub avg: f64,
+    pub max: usize,
+}
+
+/// How non-zero columns are placed within a row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ColumnDist {
+    /// Uniform random distinct columns.
+    Uniform,
+    /// Zipf-like popularity over columns (exponent), modeling the skewed
+    /// column degrees of bag-of-words / graph datasets. Used by ablations.
+    Zipf(f64),
+    /// Diagonal-band locality: row i's columns fall within a band of the
+    /// given width centered on the row's diagonal position. Models the
+    /// locality structure of circuit/mesh/web matrices (UFL's Schenk-like
+    /// families) — crucial for Fig 4/5, where the synchronized mesh's
+    /// round fast-forward exploits exactly this locality.
+    Banded(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    /// Published density (may disagree with nnz_row — see module docs).
+    pub stated_density: f64,
+    pub nnz_row: NnzRow,
+    pub dist: ColumnDist,
+}
+
+impl DatasetSpec {
+    /// Density implied by the honored nnz-per-row spec.
+    pub fn implied_density(&self) -> f64 {
+        self.nnz_row.avg / self.cols as f64
+    }
+
+    pub fn expected_nnz(&self) -> usize {
+        (self.nnz_row.avg * self.rows as f64) as usize
+    }
+}
+
+/// Table II datasets (InCRS memory-access evaluation; already resized by the
+/// authors to fit gem5 runtimes — we reproduce the resized shapes).
+pub const TABLE2: [DatasetSpec; 5] = [
+    DatasetSpec {
+        name: "amazon",
+        rows: 300,
+        cols: 10_000,
+        stated_density: 0.14,
+        nnz_row: NnzRow { min: 501, avg: 1400.0, max: 2011 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "belcastro",
+        rows: 370,
+        cols: 22_000,
+        stated_density: 0.06,
+        nnz_row: NnzRow { min: 1, avg: 1300.0, max: 6787 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "docword",
+        rows: 700,
+        cols: 12_000,
+        stated_density: 0.04,
+        nnz_row: NnzRow { min: 2, avg: 480.0, max: 906 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "norris",
+        rows: 1_200,
+        cols: 3_600,
+        stated_density: 0.01,
+        nnz_row: NnzRow { min: 3, avg: 360.0, max: 795 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "mks",
+        rows: 3_500,
+        cols: 7_500,
+        stated_density: 0.015,
+        nnz_row: NnzRow { min: 18, avg: 150.0, max: 957 },
+        dist: ColumnDist::Uniform,
+    },
+];
+
+/// Table IV datasets (architecture evaluation, A×Aᵀ), ordered by density.
+/// The paper gives dimensions only for the first four; for Arenas, Bates,
+/// Gleich and Sch we choose square shapes in the UFL collections' typical
+/// range so the density column is honored exactly (DESIGN.md §2).
+pub const TABLE4: [DatasetSpec; 8] = [
+    DatasetSpec {
+        name: "amazon",
+        rows: 1_500,
+        cols: 10_000,
+        stated_density: 0.14,
+        nnz_row: NnzRow { min: 501, avg: 1400.0, max: 2011 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "docword",
+        rows: 1_500,
+        cols: 12_000,
+        stated_density: 0.04,
+        nnz_row: NnzRow { min: 2, avg: 480.0, max: 906 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "mks",
+        rows: 7_500,
+        cols: 7_500,
+        stated_density: 0.015,
+        nnz_row: NnzRow { min: 18, avg: 112.5, max: 957 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "norris",
+        rows: 3_600,
+        cols: 3_600,
+        stated_density: 0.01,
+        nnz_row: NnzRow { min: 3, avg: 36.0, max: 180 },
+        dist: ColumnDist::Uniform,
+    },
+    DatasetSpec {
+        name: "arenas",
+        rows: 10_000,
+        cols: 10_000,
+        stated_density: 0.0085,
+        nnz_row: NnzRow { min: 1, avg: 85.0, max: 420 },
+        dist: ColumnDist::Banded(2048),
+    },
+    DatasetSpec {
+        name: "bates",
+        rows: 12_000,
+        cols: 12_000,
+        stated_density: 0.0011,
+        nnz_row: NnzRow { min: 1, avg: 13.2, max: 70 },
+        dist: ColumnDist::Banded(1024),
+    },
+    DatasetSpec {
+        name: "gleich",
+        rows: 16_000,
+        cols: 16_000,
+        stated_density: 0.00095,
+        nnz_row: NnzRow { min: 1, avg: 15.2, max: 80 },
+        dist: ColumnDist::Banded(1024),
+    },
+    DatasetSpec {
+        name: "sch",
+        rows: 20_000,
+        cols: 20_000,
+        stated_density: 0.00057,
+        nnz_row: NnzRow { min: 1, avg: 11.4, max: 60 },
+        dist: ColumnDist::Banded(768),
+    },
+];
+
+/// Look up a spec by name in both tables (Table IV takes precedence for the
+/// architecture experiments' shapes; `table2()` for the memory experiments).
+pub fn by_name(name: &str) -> Option<DatasetSpec> {
+    TABLE4
+        .iter()
+        .chain(TABLE2.iter())
+        .find(|s| s.name == name)
+        .copied()
+}
+
+pub fn table2_by_name(name: &str) -> Option<DatasetSpec> {
+    TABLE2.iter().find(|s| s.name == name).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper_rows() {
+        assert_eq!(TABLE2.len(), 5);
+        let dw = table2_by_name("docword").unwrap();
+        assert_eq!((dw.rows, dw.cols), (700, 12_000));
+        assert!((dw.implied_density() - 0.04).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table4_is_density_ordered() {
+        for w in TABLE4.windows(2) {
+            assert!(
+                w[0].stated_density >= w[1].stated_density,
+                "{} before {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+    }
+
+    #[test]
+    fn documented_norris_discrepancy() {
+        // Table II Norris: stated D=1% but avg nnz/row implies 10% —
+        // we honor nnz_row (see module docs); this test pins the fact.
+        let n = table2_by_name("norris").unwrap();
+        assert!(n.implied_density() > 5.0 * n.stated_density);
+    }
+
+    #[test]
+    fn consistent_specs_elsewhere() {
+        for s in TABLE4 {
+            let implied = s.implied_density();
+            assert!(
+                (implied - s.stated_density).abs() / s.stated_density < 0.25,
+                "{}: implied {implied} vs stated {}",
+                s.name,
+                s.stated_density
+            );
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("sch").is_some());
+        assert!(by_name("unknown").is_none());
+        // amazon appears in both tables with different rows
+        assert_eq!(by_name("amazon").unwrap().rows, 1_500);
+        assert_eq!(table2_by_name("amazon").unwrap().rows, 300);
+    }
+}

@@ -1,0 +1,271 @@
+//! Synthetic sparse-matrix generator matching a [`DatasetSpec`]'s moments.
+//!
+//! Per-row population is drawn from a two-sided triangular-mixture that hits
+//! the published (min, avg, max) exactly in expectation; column positions
+//! are uniform distinct (or Zipf-skewed for ablations). Deterministic from
+//! the seed — the same spec+seed reproduces bit-identical matrices on every
+//! run, which the experiment harness relies on.
+
+use super::spec::{ColumnDist, DatasetSpec, NnzRow};
+use crate::formats::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Draw one row population in `[min, max]` with expectation `avg`.
+///
+/// Mixture of U[min, avg] and U[avg, max] with the weight solving
+/// `p·(min+avg)/2 + (1-p)·(avg+max)/2 = avg`.
+fn draw_nnz(rng: &mut Rng, spec: NnzRow) -> usize {
+    let (lo, hi, avg) = (spec.min as f64, spec.max as f64, spec.avg);
+    if spec.min == spec.max {
+        return spec.min;
+    }
+    debug_assert!(lo <= avg && avg <= hi, "nnz spec violated: {spec:?}");
+    let mean_lo = (lo + avg) / 2.0;
+    let mean_hi = (avg + hi) / 2.0;
+    // p*mean_lo + (1-p)*mean_hi = avg
+    let p = if (mean_hi - mean_lo).abs() < 1e-12 {
+        0.5
+    } else {
+        ((mean_hi - avg) / (mean_hi - mean_lo)).clamp(0.0, 1.0)
+    };
+    let (a, b) = if rng.bool(p) { (lo, avg) } else { (avg, hi) };
+    let x = a + rng.f64() * (b - a);
+    (x.round() as usize).clamp(spec.min, spec.max)
+}
+
+/// Zipf-ish column sampler: popularity ∝ 1/(rank+1)^s over a shuffled
+/// column permutation (so hot columns aren't all at the left edge).
+struct ZipfCols {
+    perm: Vec<u32>,
+    cdf: Vec<f64>,
+}
+
+impl ZipfCols {
+    fn new(cols: usize, s: f64, rng: &mut Rng) -> ZipfCols {
+        let mut perm: Vec<u32> = (0..cols as u32).collect();
+        rng.shuffle(&mut perm);
+        let mut cdf = Vec::with_capacity(cols);
+        let mut acc = 0.0;
+        for r in 0..cols {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        ZipfCols { perm, cdf }
+    }
+
+    fn draw(&self, rng: &mut Rng) -> u32 {
+        let u = rng.f64();
+        let r = self.cdf.partition_point(|&c| c < u);
+        self.perm[r.min(self.perm.len() - 1)]
+    }
+}
+
+/// Generate a CSR matrix for `spec` with the given seed.
+pub fn generate(spec: &DatasetSpec, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ fxhash(spec.name));
+    let rows = spec.rows;
+    let cols = spec.cols;
+    let zipf = match spec.dist {
+        ColumnDist::Uniform | ColumnDist::Banded(_) => None,
+        ColumnDist::Zipf(s) => Some(ZipfCols::new(cols, s, &mut rng)),
+    };
+    let band = match spec.dist {
+        ColumnDist::Banded(w) => Some(w.min(cols)),
+        _ => None,
+    };
+
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    row_ptr.push(0u32);
+    let mut col_idx: Vec<u32> = Vec::with_capacity(spec.expected_nnz());
+    let mut vals: Vec<f32> = Vec::with_capacity(spec.expected_nnz());
+    let mut scratch: Vec<u64> = Vec::new();
+    let mut seen = vec![false; cols];
+
+    for row in 0..rows {
+        let k = draw_nnz(&mut rng, spec.nnz_row).min(cols);
+        match &zipf {
+            None if band.is_some() => {
+                // band centered on the row's diagonal position
+                let w = band.unwrap().max(k);
+                let center = row * cols / rows;
+                let lo = center.saturating_sub(w / 2).min(cols - w);
+                let picked = rng.sample_sorted(w, k, &mut scratch);
+                col_idx.extend(picked.into_iter().map(|c| c + lo as u32));
+            }
+            None => {
+                let picked = rng.sample_sorted(cols, k, &mut scratch);
+                col_idx.extend_from_slice(&picked);
+            }
+            Some(z) => {
+                // rejection for distinctness; k << cols in practice
+                let mut picked = Vec::with_capacity(k);
+                while picked.len() < k {
+                    let c = z.draw(&mut rng);
+                    if !seen[c as usize] {
+                        seen[c as usize] = true;
+                        picked.push(c);
+                    }
+                }
+                for &c in &picked {
+                    seen[c as usize] = false;
+                }
+                picked.sort_unstable();
+                col_idx.extend_from_slice(&picked);
+            }
+        }
+        for _ in 0..k {
+            // values uniform in [0.5, 1.5): away from zero so products
+            // never cancel to exactly 0 (keeps nnz accounting stable)
+            vals.push(0.5 + rng.f32());
+        }
+        row_ptr.push(col_idx.len() as u32);
+    }
+    Csr::from_parts(rows, cols, row_ptr, col_idx, vals)
+}
+
+/// Deterministic name hash (FNV-1a) for seed derivation.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generate a small ad-hoc uniform matrix (tests/examples): `rows × cols`
+/// with per-row population ~ Binomial(cols, density) clamped to ≥ 0.
+pub fn uniform(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
+    let spec = DatasetSpec {
+        name: "uniform",
+        rows,
+        cols,
+        stated_density: density,
+        nnz_row: NnzRow {
+            min: 0,
+            avg: density * cols as f64,
+            max: ((2.0 * density * cols as f64).ceil() as usize).min(cols).max(1),
+        },
+        dist: ColumnDist::Uniform,
+    };
+    generate(&spec, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::spec::{table2_by_name, TABLE2};
+    use crate::formats::traits::SparseMatrix;
+
+    #[test]
+    fn deterministic() {
+        let spec = table2_by_name("docword").unwrap();
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col_idx, b.col_idx);
+        let c = generate(&spec, 8);
+        assert_ne!(a.col_idx, c.col_idx);
+    }
+
+    #[test]
+    fn honors_row_bounds_and_mean() {
+        for spec in TABLE2 {
+            let m = generate(&spec, 1);
+            let (min, avg, max) = m.nnz_row_stats();
+            assert!(
+                min >= spec.nnz_row.min,
+                "{}: min {min} < {}",
+                spec.name,
+                spec.nnz_row.min
+            );
+            assert!(
+                max <= spec.nnz_row.max,
+                "{}: max {max} > {}",
+                spec.name,
+                spec.nnz_row.max
+            );
+            let rel = (avg - spec.nnz_row.avg).abs() / spec.nnz_row.avg;
+            assert!(rel < 0.08, "{}: avg {avg} vs {}", spec.name, spec.nnz_row.avg);
+        }
+    }
+
+    #[test]
+    fn rows_sorted_distinct() {
+        let m = uniform(50, 200, 0.1, 3);
+        for i in 0..50 {
+            let (cs, _) = m.row(i);
+            for w in cs.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skews_column_degree() {
+        let spec = DatasetSpec {
+            name: "zipf-test",
+            rows: 400,
+            cols: 500,
+            stated_density: 0.05,
+            nnz_row: NnzRow { min: 10, avg: 25.0, max: 40 },
+            dist: ColumnDist::Zipf(1.1),
+        };
+        let m = generate(&spec, 5);
+        let mut deg = vec![0usize; 500];
+        for &c in &m.col_idx {
+            deg[c as usize] += 1;
+        }
+        deg.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile: usize = deg[..50].iter().sum();
+        let total: usize = deg.iter().sum();
+        assert!(
+            top_decile as f64 > 0.35 * total as f64,
+            "top-10% columns hold {top_decile}/{total}"
+        );
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let spec = DatasetSpec {
+            name: "band-test",
+            rows: 500,
+            cols: 500,
+            stated_density: 0.02,
+            nnz_row: NnzRow { min: 2, avg: 10.0, max: 20 },
+            dist: ColumnDist::Banded(64),
+        };
+        let m = generate(&spec, 3);
+        for i in 0..500 {
+            let (cs, _) = m.row(i);
+            for &c in cs {
+                let d = (c as i64 - i as i64).unsigned_abs();
+                assert!(d <= 64, "row {i} col {c} outside band");
+            }
+        }
+        assert!(m.nnz() > 3000);
+    }
+
+    #[test]
+    fn banded_generator_for_sparse_table4_datasets() {
+        let spec = crate::datasets::spec::by_name("sch").unwrap();
+        assert!(matches!(spec.dist, ColumnDist::Banded(_)));
+    }
+
+    #[test]
+    fn uniform_density() {
+        let m = uniform(100, 1000, 0.05, 9);
+        let d = m.nnz() as f64 / 100_000.0;
+        assert!((d - 0.05).abs() < 0.01, "density {d}");
+    }
+
+    #[test]
+    fn values_away_from_zero() {
+        let m = uniform(10, 100, 0.2, 2);
+        assert!(m.vals.iter().all(|&v| (0.5..1.5).contains(&v)));
+    }
+}

@@ -1,0 +1,324 @@
+//! Ablation studies — the design-choice experiments DESIGN.md §4 calls out,
+//! including the paper's stated future work ("we will study the parameter
+//! selection process in more detail", §V.C) and its footnote-2 claim about
+//! binary search.
+//!
+//! * `incrs_params` — (S, b) sweep: measured MA per locate vs counter
+//!   storage overhead (paper §III.C tradeoff).
+//! * `round_size`  — sync-mesh R sweep: latency vs buffer size (paper
+//!   §IV.B.b tradeoff).
+//! * `fpic_bandwidth` — FPIC with/without the duplicate-fetch bound (our
+//!   model's key term; the "infinite bandwidth" variant is the paper's
+//!   stated best case for FPIC).
+//! * `search_policy` — linear vs binary CRS row search *under the cache
+//!   simulator* (paper footnote 2: binary search saves accesses but has
+//!   "poor caching behavior").
+//! * `column_dist`  — uniform vs Zipf vs banded placement at equal density:
+//!   which data structure favors which design.
+
+use super::report::{ExpOptions, ExpResult};
+use crate::access::locate::measure;
+use crate::arch::fpic::{simulate as fpic_simulate, FpicConfig};
+use crate::arch::sync_mesh::{cycle_model, SyncMeshConfig};
+use crate::cachesim::{Hierarchy, HierarchyConfig};
+use crate::datasets::spec::{ColumnDist, DatasetSpec, NnzRow};
+use crate::datasets::synth::{generate, uniform};
+use crate::formats::incrs::{InCrs, InCrsParams};
+use crate::formats::traits::SparseMatrix;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{human, sig, Table};
+
+/// (S, b) parameter-selection study (the paper's future work).
+pub fn incrs_params(opts: ExpOptions) -> ExpResult {
+    let m = uniform(
+        opts.scaled(400),
+        8192,
+        0.05,
+        opts.seed,
+    );
+    let crs_words = (m.rows() + 1) + 2 * m.nnz();
+    let mut table = Table::new(
+        "Ablation — InCRS (S, b) parameter selection (paper §V.C future work)",
+        &["S", "b", "counter bits", "meas MA/locate", "est b/2+1", "storage overhead %"],
+    );
+    let mut json_rows = Vec::new();
+    for (s, b) in [
+        (512usize, 64usize),
+        (256, 64),
+        (256, 32), // the paper's choice
+        (128, 32),
+        (128, 16),
+        (64, 8),
+    ] {
+        let params = InCrsParams { section: s, block: b };
+        if params.validate().is_err() {
+            continue;
+        }
+        let incrs = match InCrs::from_csr_params(&m, params) {
+            Ok(x) => x,
+            Err(_) => continue,
+        };
+        let cost = measure(&incrs, opts.scaled(20_000) as u64, opts.seed + 1);
+        let overhead =
+            100.0 * (incrs.storage_words() - crs_words) as f64 / crs_words as f64;
+        table.row(vec![
+            s.to_string(),
+            b.to_string(),
+            format!("16+{}x{}", params.blocks_per_section(), params.bits_per_block()),
+            sig(cost.avg()),
+            sig(b as f64 / 2.0 + 1.0),
+            sig(overhead),
+        ]);
+        json_rows.push(obj([
+            ("section", Json::from(s)),
+            ("block", Json::from(b)),
+            ("ma_per_locate", Json::Num(cost.avg())),
+            ("storage_overhead_pct", Json::Num(overhead)),
+        ]));
+    }
+    ExpResult {
+        id: "ablation_incrs_params",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Sync-mesh round-size sweep (paper §IV.B.b tradeoff).
+pub fn round_size(opts: ExpOptions) -> ExpResult {
+    let dense = uniform(opts.scaled(512), 2048, 0.1, opts.seed);
+    let sparse = generate(
+        &DatasetSpec {
+            name: "banded",
+            rows: opts.scaled(2048),
+            cols: 2048,
+            stated_density: 0.005,
+            nnz_row: NnzRow { min: 1, avg: 10.0, max: 40 },
+            dist: ColumnDist::Banded(256),
+        },
+        opts.seed,
+    );
+    let mut table = Table::new(
+        "Ablation — synchronization round size R (buffer depth = R)",
+        &["R", "dense cycles", "sparse(banded) cycles", "buffer kB (64x64 mesh)"],
+    );
+    let mut json_rows = Vec::new();
+    for r in [8usize, 16, 32, 64, 128] {
+        let cfg = SyncMeshConfig { mesh: 64, round: r };
+        let cd = cycle_model(&dense, &dense, cfg).cycles;
+        let cs = cycle_model(&sparse, &sparse, cfg).cycles;
+        let buf_kb = 64 * 64 * r as u64 * 48 / 8 / 1024;
+        table.row(vec![
+            r.to_string(),
+            human(cd),
+            human(cs),
+            buf_kb.to_string(),
+        ]);
+        json_rows.push(obj([
+            ("round", Json::from(r)),
+            ("dense_cycles", Json::from(cd)),
+            ("sparse_cycles", Json::from(cs)),
+            ("buffer_kb", Json::from(buf_kb)),
+        ]));
+    }
+    ExpResult {
+        id: "ablation_round_size",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// FPIC with and without the duplicate-fetch bandwidth bound.
+pub fn fpic_bandwidth(opts: ExpOptions) -> ExpResult {
+    let mut table = Table::new(
+        "Ablation — FPIC input-bandwidth modeling (duplicate per-node fetches)",
+        &["dataset", "cycles (BW-bound)", "cycles (infinite BW)", "ratio", "fill-bound tiles %"],
+    );
+    let mut json_rows = Vec::new();
+    for (name, m) in [
+        ("dense 14%", uniform(opts.scaled(512), 4096, 0.14, opts.seed)),
+        ("sparse 0.5%", uniform(opts.scaled(2048), 2048, 0.005, opts.seed)),
+    ] {
+        let (bw, _) = fpic_simulate(&m, &m, FpicConfig { units: 8, ..FpicConfig::default() });
+        let (inf, _) = fpic_simulate(
+            &m,
+            &m,
+            FpicConfig { units: 8, model_bandwidth: false, ..FpicConfig::default() },
+        );
+        table.row(vec![
+            name.to_string(),
+            human(bw.cycles),
+            human(inf.cycles),
+            sig(bw.cycles as f64 / inf.cycles.max(1) as f64),
+            sig(100.0 * bw.fill_bound_tiles as f64 / bw.tiles.max(1) as f64),
+        ]);
+        json_rows.push(obj([
+            ("dataset", Json::from(name)),
+            ("bw_cycles", Json::from(bw.cycles)),
+            ("inf_cycles", Json::from(inf.cycles)),
+        ]));
+    }
+    ExpResult {
+        id: "ablation_fpic_bandwidth",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Linear vs binary CRS row search under the cache hierarchy (footnote 2).
+pub fn search_policy(opts: ExpOptions) -> ExpResult {
+    let m = uniform(opts.scaled(300), 8192, 0.08, opts.seed);
+    let mut rng = crate::util::rng::Rng::new(opts.seed + 2);
+    let probes: Vec<(usize, usize)> = (0..opts.scaled(150_000))
+        .map(|_| (rng.usize_below(m.rows()), rng.usize_below(m.cols())))
+        .collect();
+
+    let run = |binary: bool| {
+        let mut h = Hierarchy::new(HierarchyConfig::default());
+        for &(i, j) in &probes {
+            if binary {
+                m.locate_binary(i, j, &mut h);
+            } else {
+                m.locate(i, j, &mut h);
+            }
+        }
+        h.stats()
+    };
+    let lin = run(false);
+    let bin = run(true);
+
+    let mut table = Table::new(
+        "Ablation — CRS row search policy under the Table-III hierarchy (paper footnote 2)",
+        &["policy", "L1 accesses", "L1 hit %", "mem cycles", "cycles/probe"],
+    );
+    for (name, s) in [("linear", lin), ("binary", bin)] {
+        table.row(vec![
+            name.to_string(),
+            human(s.l1_accesses),
+            format!("{:.1}", s.l1_hit_rate() * 100.0),
+            human(s.mem_cycles),
+            sig(s.mem_cycles as f64 / probes.len() as f64),
+        ]);
+    }
+    let json = obj([
+        ("linear_mem_cycles", Json::from(lin.mem_cycles)),
+        ("binary_mem_cycles", Json::from(bin.mem_cycles)),
+        ("linear_hit_rate", Json::Num(lin.l1_hit_rate())),
+        ("binary_hit_rate", Json::Num(bin.l1_hit_rate())),
+    ]);
+    ExpResult {
+        id: "ablation_search_policy",
+        table,
+        json,
+    }
+}
+
+/// Column-placement ablation at equal density.
+///
+/// Fixed-size square workload (scale-invariant on purpose: the locality
+/// effect needs the band to be sparse *per round*, which tiny scaled
+/// variants wouldn't be — see the in-band density note below).
+pub fn column_dist(opts: ExpOptions) -> ExpResult {
+    // 6 nz per row in a 512-wide band = 0.37 nz per 32-round per stream:
+    // sparse enough that the sync mesh's round fast-forward pays off.
+    let base = DatasetSpec {
+        name: "dist-ablation",
+        rows: 2048,
+        cols: 2048,
+        stated_density: 0.003,
+        nnz_row: NnzRow { min: 1, avg: 6.0, max: 24 },
+        dist: ColumnDist::Uniform,
+    };
+    let mut table = Table::new(
+        "Ablation — column placement at equal density (sync mesh vs FPIC)",
+        &["distribution", "sync cycles", "FPIC(sameBW) cycles", "speedup"],
+    );
+    let mut json_rows = Vec::new();
+    for (name, dist) in [
+        ("uniform", ColumnDist::Uniform),
+        ("zipf(1.1)", ColumnDist::Zipf(1.1)),
+        ("banded(512)", ColumnDist::Banded(512)),
+    ] {
+        let spec = DatasetSpec { dist, ..base };
+        let m = generate(&spec, opts.seed);
+        let sync = cycle_model(&m, &m, SyncMeshConfig::default()).cycles;
+        let (fp, _) = fpic_simulate(&m, &m, FpicConfig { units: 8, ..FpicConfig::default() });
+        table.row(vec![
+            name.to_string(),
+            human(sync),
+            human(fp.cycles),
+            sig(fp.cycles as f64 / sync.max(1) as f64),
+        ]);
+        json_rows.push(obj([
+            ("dist", Json::from(name)),
+            ("sync_cycles", Json::from(sync)),
+            ("fpic_cycles", Json::from(fp.cycles)),
+        ]));
+    }
+    ExpResult {
+        id: "ablation_column_dist",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+pub fn run_all(opts: ExpOptions) -> Vec<ExpResult> {
+    vec![
+        incrs_params(opts),
+        round_size(opts),
+        fpic_bandwidth(opts),
+        search_policy(opts),
+        column_dist(opts),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ExpOptions {
+        ExpOptions { seed: 3, scale: 0.1 }
+    }
+
+    #[test]
+    fn incrs_param_monotonicity() {
+        let r = incrs_params(small());
+        // smaller b -> smaller measured MA (col 3), larger overhead (col 5)
+        let rows = &r.table.rows;
+        assert!(rows.len() >= 4);
+        let ma: Vec<f64> = rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        let ov: Vec<f64> = rows.iter().map(|r| r[5].parse().unwrap()).collect();
+        assert!(ma.first().unwrap() >= ma.last().unwrap());
+        assert!(ov.first().unwrap() <= ov.last().unwrap());
+    }
+
+    #[test]
+    fn binary_search_saves_time_but_not_hit_rate() {
+        let r = search_policy(small());
+        let lin_hit = r.json.at(&["linear_hit_rate"]).unwrap().as_f64().unwrap();
+        let bin_hit = r.json.at(&["binary_hit_rate"]).unwrap().as_f64().unwrap();
+        // the paper's footnote: binary search has the worse hit rate...
+        assert!(bin_hit < lin_hit, "binary {bin_hit} !< linear {lin_hit}");
+    }
+
+    #[test]
+    fn banded_data_maximizes_sync_advantage() {
+        let r = column_dist(small());
+        let arr = r.json.as_arr().unwrap();
+        let get = |name: &str| {
+            arr.iter()
+                .find(|x| x.at(&["dist"]).unwrap().as_str().unwrap() == name)
+                .map(|x| {
+                    x.at(&["fpic_cycles"]).unwrap().as_f64().unwrap()
+                        / x.at(&["sync_cycles"]).unwrap().as_f64().unwrap()
+                })
+                .unwrap()
+        };
+        assert!(get("banded(512)") > get("uniform"));
+    }
+
+    #[test]
+    fn round_size_renders() {
+        let r = round_size(small());
+        assert_eq!(r.table.rows.len(), 5);
+    }
+}

@@ -1,0 +1,104 @@
+//! Fig 3: CRS vs InCRS under the gem5-parameter memory hierarchy — cache
+//! access counts, memory-access time, and total run time, CRS normalized to
+//! InCRS, per Table II dataset.
+
+use super::report::{ExpOptions, ExpResult};
+use crate::cachesim::config::HierarchyConfig;
+use crate::cachesim::runner::{compare, Comparison};
+use crate::datasets::spec::TABLE2;
+use crate::datasets::synth::generate;
+use crate::formats::incrs::InCrsParams;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{human, sig, Table};
+
+pub struct Fig3Row {
+    pub name: &'static str,
+    pub cmp: Comparison,
+}
+
+pub fn run_rows(opts: ExpOptions, cfg: HierarchyConfig) -> Vec<Fig3Row> {
+    TABLE2
+        .iter()
+        .map(|spec| {
+            let m = generate(spec, opts.seed);
+            let col_limit = Some(opts.scaled(spec.cols));
+            let cmp = compare(&m, InCrsParams::default(), cfg, col_limit)
+                .expect("fig3 comparison");
+            Fig3Row {
+                name: spec.name,
+                cmp,
+            }
+        })
+        .collect()
+}
+
+pub fn run(opts: ExpOptions) -> ExpResult {
+    let cfg = HierarchyConfig::default();
+    let rows = run_rows(opts, cfg);
+    let mut table = Table::new(
+        "Fig 3 — CRS normalized to InCRS under the Table-III hierarchy \
+         (paper: L1-access reductions 49x Belcastro, 31x Docword; total ~14-49x)",
+        &[
+            "dataset", "L1 acc (CRS)", "L1 acc ratio", "L2 acc ratio",
+            "mem time ratio", "total time ratio", "L1 hit% CRS", "L1 hit% InCRS",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        table.row(vec![
+            r.name.to_string(),
+            human(r.cmp.crs.stats.l1_accesses),
+            sig(r.cmp.l1_access_ratio()),
+            sig(r.cmp.l2_access_ratio()),
+            sig(r.cmp.mem_time_ratio()),
+            sig(r.cmp.total_time_ratio()),
+            format!("{:.1}", r.cmp.crs.stats.l1_hit_rate() * 100.0),
+            format!("{:.1}", r.cmp.incrs.stats.l1_hit_rate() * 100.0),
+        ]);
+        json_rows.push(obj([
+            ("dataset", Json::from(r.name)),
+            ("l1_ratio", Json::Num(r.cmp.l1_access_ratio())),
+            ("l2_ratio", Json::Num(r.cmp.l2_access_ratio())),
+            ("mem_time_ratio", Json::Num(r.cmp.mem_time_ratio())),
+            ("total_time_ratio", Json::Num(r.cmp.total_time_ratio())),
+        ]));
+    }
+    ExpResult {
+        id: "fig3",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds_scaled() {
+        let rows = run_rows(
+            ExpOptions { seed: 5, scale: 0.02 },
+            HierarchyConfig::default(),
+        );
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            // InCRS reduces both raw accesses and total time everywhere
+            assert!(
+                r.cmp.l1_access_ratio() > 1.5,
+                "{}: l1 ratio {}",
+                r.name,
+                r.cmp.l1_access_ratio()
+            );
+            assert!(
+                r.cmp.total_time_ratio() > 1.0,
+                "{}: time ratio {}",
+                r.name,
+                r.cmp.total_time_ratio()
+            );
+        }
+        // datasets with heavier rows benefit more (amazon vs mks)
+        let amazon = rows.iter().find(|r| r.name == "amazon").unwrap();
+        let mks = rows.iter().find(|r| r.name == "mks").unwrap();
+        assert!(amazon.cmp.l1_access_ratio() > mks.cmp.l1_access_ratio());
+    }
+}

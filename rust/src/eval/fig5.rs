@@ -1,0 +1,239 @@
+//! Fig 5 + Tables IV/V: end latency of the four fixed design points on the
+//! eight A×Aᵀ datasets, normalized to the proposed synchronized mesh.
+
+use super::report::{ExpOptions, ExpResult};
+use crate::arch::conventional::{cycles as conv_cycles, ConvMmConfig};
+use crate::arch::fpic::{simulate as fpic_simulate, Fidelity, FpicConfig};
+use crate::arch::model::{self, DesignPoint};
+use crate::arch::sync_mesh::{cycle_model, SyncMeshConfig};
+use crate::datasets::spec::TABLE4;
+use crate::datasets::synth::generate;
+use crate::formats::traits::SparseMatrix;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{human, sig, Table};
+
+pub struct Fig5Row {
+    pub dataset: &'static str,
+    pub density: f64,
+    pub sync_cycles: u64,
+    pub fpic_bw_cycles: u64,
+    pub fpic_buf_cycles: u64,
+    pub conv_cycles: u64,
+}
+
+impl Fig5Row {
+    pub fn norm(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.sync_cycles.max(1) as f64
+    }
+}
+
+/// Run all four Table-V design points on one dataset (A×Aᵀ).
+pub fn run_dataset(
+    a: &crate::formats::csr::Csr,
+    name: &'static str,
+    n_synch: usize,
+    round: usize,
+) -> Fig5Row {
+    let sync = cycle_model(a, a, SyncMeshConfig { mesh: n_synch, round });
+    let (fp_bw, _) = fpic_simulate(
+        a,
+        a,
+        FpicConfig {
+            units: model::fpic_units_same_bandwidth(n_synch),
+            unit_dim: 8,
+            fidelity: Fidelity::MaxNode,
+            model_bandwidth: true,
+        },
+    );
+    let (fp_buf, _) = fpic_simulate(
+        a,
+        a,
+        FpicConfig {
+            units: model::fpic_units_same_buffer(n_synch),
+            unit_dim: 8,
+            fidelity: Fidelity::MaxNode,
+            model_bandwidth: true,
+        },
+    );
+    let conv = conv_cycles(
+        a.rows(),
+        a.rows(), // C = A×Aᵀ is M×M
+        a.cols(),
+        ConvMmConfig {
+            mesh: model::conv_mesh_same_bandwidth(n_synch),
+        },
+    );
+    Fig5Row {
+        dataset: name,
+        density: a.density(),
+        sync_cycles: sync.cycles,
+        fpic_bw_cycles: fp_bw.cycles,
+        fpic_buf_cycles: fp_buf.cycles,
+        conv_cycles: conv.cycles,
+    }
+}
+
+pub fn run_rows(opts: ExpOptions) -> Vec<Fig5Row> {
+    TABLE4
+        .iter()
+        .map(|spec| {
+            let mut s = *spec;
+            s.rows = opts.scaled(s.rows);
+            if s.rows < spec.rows {
+                // square datasets shrink both ways (A×Aᵀ needs cols = K
+                // intact only for rectangular bag-of-words shapes)
+                if spec.rows == spec.cols {
+                    s.cols = s.rows;
+                    s.nnz_row = crate::datasets::spec::NnzRow {
+                        min: spec.nnz_row.min.min(s.cols),
+                        avg: (spec.nnz_row.avg * s.cols as f64 / spec.cols as f64).max(1.0),
+                        max: spec.nnz_row.max.min(s.cols),
+                    };
+                }
+            }
+            let a = generate(&s, opts.seed);
+            run_dataset(&a, spec.name, 64, 32)
+        })
+        .collect()
+}
+
+pub fn run(opts: ExpOptions) -> ExpResult {
+    let rows = run_rows(opts);
+    let mut table = Table::new(
+        "Fig 5 — latency normalized to the proposed sync mesh (Table V designs; \
+         paper: conv 1.5-39x, FPIC 2-30x slower)",
+        &[
+            "dataset", "D", "sync cycles", "FPIC-sameBW x", "FPIC-sameBuf x", "conv MM x",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        table.row(vec![
+            r.dataset.to_string(),
+            format!("{:.3}%", r.density * 100.0),
+            human(r.sync_cycles),
+            sig(r.norm(r.fpic_bw_cycles)),
+            sig(r.norm(r.fpic_buf_cycles)),
+            sig(r.norm(r.conv_cycles)),
+        ]);
+        json_rows.push(obj([
+            ("dataset", Json::from(r.dataset)),
+            ("density", Json::Num(r.density)),
+            ("sync_cycles", Json::from(r.sync_cycles)),
+            ("fpic_bw_norm", Json::Num(r.norm(r.fpic_bw_cycles))),
+            ("fpic_buf_norm", Json::Num(r.norm(r.fpic_buf_cycles))),
+            ("conv_norm", Json::Num(r.norm(r.conv_cycles))),
+        ]));
+    }
+    ExpResult {
+        id: "fig5",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Table IV: the architecture datasets as generated (dims, density, nnz).
+pub fn run_table4(opts: ExpOptions) -> ExpResult {
+    let mut table = Table::new(
+        "Table IV — architecture evaluation datasets (synthetic, spec-matched)",
+        &["dataset", "dim", "D stated", "D generated", "nnz", "nnz/row (min,avg,max)"],
+    );
+    let mut json_rows = Vec::new();
+    for spec in &TABLE4 {
+        let a = generate(spec, opts.seed);
+        let (mn, avg, mx) = a.nnz_row_stats();
+        table.row(vec![
+            spec.name.to_string(),
+            format!("{}x{}", spec.rows, spec.cols),
+            format!("{:.3}%", spec.stated_density * 100.0),
+            format!("{:.3}%", a.density() * 100.0),
+            human(a.nnz() as u64),
+            format!("({mn}, {avg:.0}, {mx})"),
+        ]);
+        json_rows.push(obj([
+            ("dataset", Json::from(spec.name)),
+            ("density", Json::Num(a.density())),
+            ("nnz", Json::from(a.nnz())),
+        ]));
+    }
+    ExpResult {
+        id: "table4",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Table V: the design points' resource accounting.
+pub fn run_table5() -> ExpResult {
+    let points = model::table5(64, 32);
+    let mut table = Table::new(
+        "Table V — SpMM design parameters",
+        &["design", "#units, NxN", "BW (kb/cycle)", "#MACs", "buffer (kB)"],
+    );
+    let mut json_rows = Vec::new();
+    for p in &points {
+        table.row(vec![
+            p.name.to_string(),
+            format!("{}, {}x{}", p.units, p.mesh, p.mesh),
+            sig(p.bw_bits_per_cycle as f64 / 1024.0),
+            p.macs.to_string(),
+            (p.buffer_bytes / 1024).to_string(),
+        ]);
+        json_rows.push(design_json(p));
+    }
+    ExpResult {
+        id: "table5",
+        table,
+        json: Json::Arr(json_rows),
+    }
+}
+
+fn design_json(p: &DesignPoint) -> Json {
+    obj([
+        ("name", Json::from(p.name)),
+        ("units", Json::from(p.units)),
+        ("mesh", Json::from(p.mesh)),
+        ("bw_bits_per_cycle", Json::from(p.bw_bits_per_cycle)),
+        ("macs", Json::from(p.macs)),
+        ("buffer_bytes", Json::from(p.buffer_bytes)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+
+    #[test]
+    fn design_points_order_as_in_paper() {
+        // mid density: sync fastest; conv competitive; FPIC-sameBW slowest
+        let a = uniform(256, 256, 0.01, 11);
+        let r = run_dataset(&a, "t", 64, 32);
+        assert!(r.norm(r.fpic_bw_cycles) > 1.0, "fpic bw {}", r.norm(r.fpic_bw_cycles));
+        assert!(
+            r.fpic_bw_cycles > r.fpic_buf_cycles,
+            "more units must be faster"
+        );
+    }
+
+    #[test]
+    fn conv_advantage_shrinks_with_density() {
+        let dense = uniform(192, 192, 0.14, 3);
+        let sparse = uniform(192, 192, 0.003, 3);
+        let rd = run_dataset(&dense, "d", 64, 32);
+        let rs = run_dataset(&sparse, "s", 64, 32);
+        // conv MM looks worse (normalized) as density falls
+        assert!(
+            rs.norm(rs.conv_cycles) > rd.norm(rd.conv_cycles),
+            "sparse {} !> dense {}",
+            rs.norm(rs.conv_cycles),
+            rd.norm(rd.conv_cycles)
+        );
+    }
+
+    #[test]
+    fn table5_renders() {
+        let r = run_table5();
+        assert_eq!(r.table.rows.len(), 4);
+    }
+}

@@ -1,0 +1,61 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4 index).
+//!
+//! Each driver returns an [`report::ExpResult`] carrying a paper-style text
+//! table and a JSON document; the CLI (`spmm-accel exp --id <id>`) and the
+//! `paper_tables` bench both dispatch through [`run_experiment`].
+
+pub mod ablations;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod report;
+pub mod table1;
+pub mod table2;
+
+pub use report::{ExpOptions, ExpResult};
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 7] = [
+    "table1", "table2", "fig3", "table4", "fig4a", "fig4b", "fig5",
+];
+// table5 is parameter accounting, printed alongside fig5
+
+/// Dispatch an experiment by id.
+pub fn run_experiment(id: &str, opts: ExpOptions) -> Result<Vec<ExpResult>, String> {
+    Ok(match id {
+        "table1" => vec![table1::run(opts)],
+        "table2" => vec![table2::run(opts)],
+        "fig3" => vec![fig3::run(opts)],
+        "table4" => vec![fig5::run_table4(opts)],
+        "table5" => vec![fig5::run_table5()],
+        "fig4a" => vec![fig4::run_a(opts)],
+        "fig4b" => vec![fig4::run_b(opts)],
+        "fig5" => vec![fig5::run_table5(), fig5::run(opts)],
+        "ablations" => ablations::run_all(opts),
+        "all" => {
+            let mut out = Vec::new();
+            for id in ALL_EXPERIMENTS {
+                out.extend(run_experiment(id, opts)?);
+            }
+            out
+        }
+        other => return Err(format!("unknown experiment {other:?}; try one of {ALL_EXPERIMENTS:?} or `all`")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_rejects_unknown() {
+        assert!(run_experiment("nope", ExpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn table5_is_instant() {
+        let r = run_experiment("table5", ExpOptions::default()).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, "table5");
+    }
+}

@@ -1,0 +1,74 @@
+//! Shared experiment plumbing: results carry both a paper-style text table
+//! and a JSON document; the CLI prints the former and can persist the
+//! latter for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::Json;
+use crate::util::tables::Table;
+
+#[derive(Debug)]
+pub struct ExpResult {
+    pub id: &'static str,
+    pub table: Table,
+    pub json: Json,
+}
+
+impl ExpResult {
+    pub fn print(&self) {
+        self.table.print();
+    }
+
+    pub fn save(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.json.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Common experiment knobs (from the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpOptions {
+    pub seed: u64,
+    /// Scale factor in (0, 1] applied to workload sizes (columns probed,
+    /// probe counts) — the paper's own "resize for simulation time" knob.
+    pub scale: f64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { seed: 42, scale: 1.0 }
+    }
+}
+
+impl ExpOptions {
+    pub fn scaled(&self, n: usize) -> usize {
+        ((n as f64 * self.scale).round() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling() {
+        let o = ExpOptions { seed: 1, scale: 0.25 };
+        assert_eq!(o.scaled(1000), 250);
+        assert_eq!(o.scaled(1), 1);
+        let full = ExpOptions::default();
+        assert_eq!(full.scaled(123), 123);
+    }
+
+    #[test]
+    fn save_writes_json() {
+        let r = ExpResult {
+            id: "test_exp",
+            table: Table::new("t", &["a"]),
+            json: Json::Num(1.0),
+        };
+        let dir = std::env::temp_dir().join("spmm_accel_reports");
+        let p = r.save(&dir).unwrap();
+        assert!(p.exists());
+        std::fs::remove_file(p).ok();
+    }
+}

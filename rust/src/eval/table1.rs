@@ -1,0 +1,99 @@
+//! Table I: measured cost of locating one arbitrary element per format,
+//! against the paper's closed-form complexities.
+
+use super::report::{ExpOptions, ExpResult};
+use crate::access::locate::{measure, LocateCost};
+use crate::datasets::synth::uniform;
+use crate::formats::convert::{from_coo, ALL_KINDS};
+use crate::formats::traits::SparseMatrix;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{sig, Table};
+
+/// Workload: a mid-size synthetic matrix (the complexity *ratios* are what
+/// Table I pins; its formulas are dimension-generic).
+pub fn run(opts: ExpOptions) -> ExpResult {
+    let rows = opts.scaled(256);
+    let cols = opts.scaled(2048);
+    let probes = opts.scaled(20_000) as u64;
+    let m = uniform(rows, cols, 0.05, opts.seed);
+    let coo = m.to_coo();
+
+    let mut table = Table::new(
+        &format!(
+            "Table I — avg memory accesses to locate one element ({}x{}, D=5%, {} probes)",
+            rows, cols, probes
+        ),
+        &["format", "analytic (paper)", "analytic value", "measured avg MA", "storage words"],
+    );
+    let mut rows_json = Vec::new();
+    for kind in ALL_KINDS {
+        let mat = from_coo(kind, &coo).expect("convert");
+        let cost: LocateCost = measure(mat.as_ref(), probes, opts.seed + 1);
+        let formula = match kind.name() {
+            "ELLPACK" | "LiL" | "CRS" => "1/2 · N · D",
+            "JAD" => "N · D",
+            "COO" | "SLL" => "1/2 · M · N · D",
+            "dense" => "1",
+            "CCS" => "1/2 · M · D",
+            "InCRS" => "b/2 + 1",
+            _ => "?",
+        };
+        table.row(vec![
+            kind.name().to_string(),
+            formula.to_string(),
+            cost.analytic.map(sig).unwrap_or_default(),
+            sig(cost.avg()),
+            mat.storage_words().to_string(),
+        ]);
+        rows_json.push(obj([
+            ("format", Json::from(kind.name())),
+            ("analytic", Json::Num(cost.analytic.unwrap_or(f64::NAN))),
+            ("measured", Json::Num(cost.avg())),
+            ("storage_words", Json::from(mat.storage_words())),
+        ]));
+    }
+    ExpResult {
+        id: "table1",
+        table,
+        json: obj([
+            ("rows", Json::from(rows)),
+            ("cols", Json::from(cols)),
+            ("probes", Json::from(probes)),
+            ("formats", Json::Arr(rows_json)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_all_formats_and_sane_ordering() {
+        let r = run(ExpOptions { seed: 1, scale: 0.1 });
+        assert_eq!(r.table.rows.len(), 9);
+        // measured column: dense=1 must be minimal, COO/SLL maximal
+        let measured: Vec<f64> = r
+            .json
+            .at(&["formats"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|f| f.at(&["measured"]).unwrap().as_f64().unwrap())
+            .collect();
+        let names: Vec<&str> = r
+            .json
+            .at(&["formats"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|f| f.at(&["format"]).unwrap().as_str().unwrap())
+            .collect();
+        let get = |n: &str| measured[names.iter().position(|&x| x == n).unwrap()];
+        assert!(get("dense") <= 1.0 + 1e-9);
+        assert!(get("COO") > get("CRS") * 3.0);
+        assert!(get("InCRS") < get("CRS"));
+    }
+}

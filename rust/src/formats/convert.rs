@@ -1,0 +1,137 @@
+//! Any-to-any format conversion through canonical COO, plus a boxed
+//! constructor used by the CLI and the Table I harness.
+
+use super::coo::Coo;
+use super::csc::Csc;
+use super::csr::Csr;
+use super::dense::Dense;
+use super::ell::Ellpack;
+use super::incrs::{InCrs, InCrsParams};
+use super::jad::Jad;
+use super::lil::Lil;
+use super::sll::Sll;
+use super::traits::{FormatKind, SparseMatrix};
+
+/// Build any format from canonical COO.
+pub fn from_coo(kind: FormatKind, coo: &Coo) -> Result<Box<dyn SparseMatrix>, String> {
+    Ok(match kind {
+        FormatKind::Dense => Box::new(Dense::from_coo(coo)),
+        FormatKind::Coo => Box::new(coo.clone()),
+        FormatKind::Csr => Box::new(Csr::from_coo(coo)),
+        FormatKind::Csc => Box::new(Csc::from_coo(coo)),
+        FormatKind::Sll => Box::new(Sll::from_coo(coo)),
+        FormatKind::Ellpack => Box::new(Ellpack::from_coo(coo)),
+        FormatKind::Lil => Box::new(Lil::from_coo(coo)),
+        FormatKind::Jad => Box::new(Jad::from_coo(coo)),
+        FormatKind::InCrs => Box::new(InCrs::from_csr(&Csr::from_coo(coo))?),
+    })
+}
+
+/// InCRS with explicit geometry.
+pub fn incrs_with_params(coo: &Coo, params: InCrsParams) -> Result<InCrs, String> {
+    InCrs::from_csr_params(&Csr::from_coo(coo), params)
+}
+
+/// Convert between any two formats (via COO).
+pub fn convert(
+    m: &dyn SparseMatrix,
+    to: FormatKind,
+) -> Result<Box<dyn SparseMatrix>, String> {
+    from_coo(to, &m.to_coo())
+}
+
+/// Parse a format name as used on the CLI.
+pub fn parse_kind(s: &str) -> Result<FormatKind, String> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "dense" => FormatKind::Dense,
+        "coo" => FormatKind::Coo,
+        "crs" | "csr" => FormatKind::Csr,
+        "ccs" | "csc" => FormatKind::Csc,
+        "sll" => FormatKind::Sll,
+        "ellpack" | "ell" => FormatKind::Ellpack,
+        "lil" => FormatKind::Lil,
+        "jad" => FormatKind::Jad,
+        "incrs" => FormatKind::InCrs,
+        other => return Err(format!("unknown format {other:?}")),
+    })
+}
+
+/// All format kinds, in Table I order.
+pub const ALL_KINDS: [FormatKind; 9] = [
+    FormatKind::Dense,
+    FormatKind::Ellpack,
+    FormatKind::Lil,
+    FormatKind::Csr,
+    FormatKind::Jad,
+    FormatKind::Coo,
+    FormatKind::Sll,
+    FormatKind::Csc,
+    FormatKind::InCrs,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        Coo::new(
+            4,
+            6,
+            vec![
+                (0, 1, 1.0),
+                (0, 5, 2.0),
+                (1, 0, 3.0),
+                (2, 2, 4.0),
+                (2, 3, 5.0),
+                (2, 4, 6.0),
+                (3, 0, 7.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn every_format_roundtrips_through_coo() {
+        let coo = sample();
+        for kind in ALL_KINDS {
+            let m = from_coo(kind, &coo).unwrap();
+            assert_eq!(m.kind(), kind);
+            let back = m.to_coo();
+            assert_eq!(back.entries, coo.entries, "{:?}", kind);
+            assert_eq!(m.nnz(), coo.nnz(), "{:?}", kind);
+            assert_eq!(m.shape(), coo.shape(), "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn every_format_locates_every_cell_identically() {
+        let coo = sample();
+        let dense = coo.to_dense();
+        for kind in ALL_KINDS {
+            let m = from_coo(kind, &coo).unwrap();
+            for i in 0..4 {
+                for j in 0..6 {
+                    let want = dense[i * 6 + j];
+                    let got = m.get(i, j).unwrap_or(0.0);
+                    assert_eq!(got, want, "{:?} ({i},{j})", kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn convert_between_formats() {
+        let coo = sample();
+        let csr = from_coo(FormatKind::Csr, &coo).unwrap();
+        let jad = convert(csr.as_ref(), FormatKind::Jad).unwrap();
+        assert_eq!(jad.kind(), FormatKind::Jad);
+        assert_eq!(jad.to_coo().entries, coo.entries);
+    }
+
+    #[test]
+    fn parse_kind_aliases() {
+        assert_eq!(parse_kind("CRS").unwrap(), FormatKind::Csr);
+        assert_eq!(parse_kind("csr").unwrap(), FormatKind::Csr);
+        assert_eq!(parse_kind("incrs").unwrap(), FormatKind::InCrs);
+        assert!(parse_kind("nope").is_err());
+    }
+}

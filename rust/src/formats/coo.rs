@@ -1,0 +1,223 @@
+//! Co-ordinate list (COO) — also the canonical interchange form: every
+//! format converts to/from COO, so any-to-any conversion is two hops.
+//!
+//! Stored as three parallel arrays (row, col, val). Random access has no
+//! pointer structure at all: a linear scan over all entries stored before
+//! the target (paper Table I: ≈ ½·M·N·D accesses).
+
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Coo {
+    rows: usize,
+    cols: usize,
+    /// Entries sorted row-major (row, then col), unique coordinates.
+    pub entries: Vec<(u32, u32, f32)>,
+    r_row: Region,
+    r_col: Region,
+    r_val: Region,
+}
+
+impl Coo {
+    /// Build from (possibly unsorted, must-be-unique) triplets.
+    pub fn new(rows: usize, cols: usize, mut entries: Vec<(u32, u32, f32)>) -> Coo {
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        for w in entries.windows(2) {
+            assert!(
+                (w[0].0, w[0].1) != (w[1].0, w[1].1),
+                "duplicate coordinate ({}, {})",
+                w[0].0,
+                w[0].1
+            );
+        }
+        if let Some(&(r, c, _)) = entries.last() {
+            let max_r = entries.iter().map(|e| e.0).max().unwrap_or(r);
+            let max_c = entries.iter().map(|e| e.1).max().unwrap_or(c);
+            assert!((max_r as usize) < rows, "row {max_r} out of {rows}");
+            assert!((max_c as usize) < cols, "col {max_c} out of {cols}");
+        }
+        let mut space = AddressSpace::default();
+        Self::with_space(rows, cols, entries, &mut space)
+    }
+
+    /// Like [`Coo::new`] but placing arrays in a caller-owned address space
+    /// (so multiple matrices in one simulation get disjoint addresses).
+    pub fn with_space(
+        rows: usize,
+        cols: usize,
+        entries: Vec<(u32, u32, f32)>,
+        space: &mut AddressSpace,
+    ) -> Coo {
+        let n = entries.len();
+        Coo {
+            rows,
+            cols,
+            entries,
+            r_row: space.alloc(n, 4),
+            r_col: space.alloc(n, 4),
+            r_val: space.alloc(n, 4),
+        }
+    }
+
+    /// Dense -> COO (drops exact zeros).
+    pub fn from_dense(rows: usize, cols: usize, data: &[f32]) -> Coo {
+        assert_eq!(data.len(), rows * cols);
+        let mut entries = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                let v = data[i * cols + j];
+                if v != 0.0 {
+                    entries.push((i as u32, j as u32, v));
+                }
+            }
+        }
+        Coo::new(rows, cols, entries)
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.rows * self.cols];
+        for &(r, c, v) in &self.entries {
+            d[r as usize * self.cols + c as usize] = v;
+        }
+        d
+    }
+
+    /// Random access with the paper's COO cost model: scan entries from the
+    /// start; each scanned record is one access (the row/col pair is read as
+    /// one unit); the value read on a hit is one more.
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        let (ti, tj) = (i as u32, j as u32);
+        for (k, &(r, c, v)) in self.entries.iter().enumerate() {
+            sink.touch(self.r_row.at(k), super::traits::Site::Entry);
+            if r > ti || (r == ti && c > tj) {
+                return None;
+            }
+            if r == ti && c == tj {
+                sink.touch(self.r_val.at(k), super::traits::Site::Val);
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Entries of row `i` as (col, val), sorted by col — no accounting.
+    pub fn row(&self, i: usize) -> Vec<(u32, f32)> {
+        let i = i as u32;
+        let lo = self.entries.partition_point(|e| e.0 < i);
+        let hi = self.entries.partition_point(|e| e.0 <= i);
+        self.entries[lo..hi].iter().map(|&(_, c, v)| (c, v)).collect()
+    }
+
+    /// Column-index region (used by cache-trace drivers).
+    pub fn col_region(&self) -> Region {
+        self.r_col
+    }
+}
+
+impl SparseMatrix for Coo {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Coo
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+    fn storage_words(&self) -> usize {
+        3 * self.entries.len() // row + col + val per entry
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        self.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Coo {
+        // 3x4:
+        // [1 0 2 0]
+        // [0 0 0 3]
+        // [4 5 0 0]
+        Coo::new(
+            3,
+            4,
+            vec![
+                (2, 1, 5.0),
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn sorts_entries() {
+        let c = sample();
+        let coords: Vec<(u32, u32)> = c.entries.iter().map(|e| (e.0, e.1)).collect();
+        assert_eq!(coords, vec![(0, 0), (0, 2), (1, 3), (2, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let c = sample();
+        let d = c.to_dense();
+        let c2 = Coo::from_dense(3, 4, &d);
+        assert_eq!(c.entries, c2.entries);
+    }
+
+    #[test]
+    fn locate_hits_and_misses() {
+        let c = sample();
+        assert_eq!(c.get(0, 2), Some(2.0));
+        assert_eq!(c.get(2, 1), Some(5.0));
+        assert_eq!(c.get(0, 1), None);
+        assert_eq!(c.get(2, 3), None);
+    }
+
+    #[test]
+    fn locate_cost_grows_with_position() {
+        let c = sample();
+        let mut early = CountSink::default();
+        c.locate(0, 0, &mut early);
+        let mut late = CountSink::default();
+        c.locate(2, 1, &mut late);
+        assert!(late.total > early.total, "{} !> {}", late.total, early.total);
+        // last entry: scans all 5 entries + 1 value read
+        assert_eq!(late.total, 6);
+    }
+
+    #[test]
+    fn row_extraction() {
+        let c = sample();
+        assert_eq!(c.row(0), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(c.row(1), vec![(3, 3.0)]);
+        assert_eq!(c.row(2), vec![(0, 4.0), (1, 5.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate coordinate")]
+    fn rejects_duplicates() {
+        Coo::new(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn rejects_out_of_bounds() {
+        Coo::new(2, 2, vec![(0, 5, 1.0)]);
+    }
+
+    #[test]
+    fn storage_words() {
+        assert_eq!(sample().storage_words(), 15);
+    }
+}

@@ -1,0 +1,169 @@
+//! Compressed Column Storage (CCS) — the transpose of CRS (paper §II.A.6).
+//!
+//! Column-order access is trivial here; *row*-order access pays the linear
+//! scan. CCS exists in the eval as the "store it in both orders" strawman
+//! the paper argues is impractical for large datasets.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Csc {
+    rows: usize,
+    cols: usize,
+    pub col_ptr: Vec<u32>, // len cols+1
+    pub row_idx: Vec<u32>, // len nnz, sorted within each column
+    pub vals: Vec<f32>,
+    r_ptr: Region,
+    r_idx: Region,
+    r_val: Region,
+}
+
+impl Csc {
+    pub fn from_coo(c: &Coo) -> Csc {
+        let mut space = AddressSpace::default();
+        Self::from_coo_with_space(c, &mut space)
+    }
+
+    pub fn from_coo_with_space(c: &Coo, space: &mut AddressSpace) -> Csc {
+        let (rows, cols) = c.shape();
+        // reuse the CSR transpose machinery: CSC of M == CSR of Mᵀ
+        let csr_t = Csr::from_coo(c).transpose();
+        let nnz = csr_t.nnz();
+        Csc {
+            rows,
+            cols,
+            col_ptr: csr_t.row_ptr.clone(),
+            row_idx: csr_t.col_idx.clone(),
+            vals: csr_t.vals.clone(),
+            r_ptr: space.alloc(cols + 1, 4),
+            r_idx: space.alloc(nnz, 4),
+            r_val: space.alloc(nnz, 4),
+        }
+    }
+
+    /// Column `j` as (row indices, vals) — the cheap direction.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let lo = self.col_ptr[j] as usize;
+        let hi = self.col_ptr[j + 1] as usize;
+        (&self.row_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Mirror of CRS locate: pointer + linear scan of the *column*.
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        sink.touch(self.r_ptr.at(j), Site::Ptr);
+        let lo = self.col_ptr[j] as usize;
+        let hi = self.col_ptr[j + 1] as usize;
+        let ti = i as u32;
+        for k in lo..hi {
+            sink.touch(self.r_idx.at(k), Site::Idx);
+            let r = self.row_idx[k];
+            if r == ti {
+                sink.touch(self.r_val.at(k), Site::Val);
+                return Some(self.vals[k]);
+            }
+            if r > ti {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Sequential read of one whole column (the ideal Fig-3 comparator):
+    /// pointer + every (idx, val) pair in the column.
+    pub fn read_col(&self, j: usize, sink: &mut impl AccessSink) -> usize {
+        sink.touch(self.r_ptr.at(j), Site::Ptr);
+        let lo = self.col_ptr[j] as usize;
+        let hi = self.col_ptr[j + 1] as usize;
+        for k in lo..hi {
+            sink.touch(self.r_idx.at(k), Site::Idx);
+            sink.touch(self.r_val.at(k), Site::Val);
+        }
+        hi - lo
+    }
+}
+
+impl SparseMatrix for Csc {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Csc
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+    fn storage_words(&self) -> usize {
+        (self.cols + 1) + 2 * self.nnz()
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz());
+        for j in 0..self.cols {
+            let (rs, vs) = self.col(j);
+            for (&r, &v) in rs.iter().zip(vs) {
+                entries.push((r, j as u32, v));
+            }
+        }
+        Coo::new(self.rows, self.cols, entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Csc {
+        Csc::from_coo(&Coo::new(
+            3,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn structure() {
+        let m = sample();
+        assert_eq!(m.col_ptr, vec![0, 2, 3, 4, 5]);
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[1.0f32, 4.0][..]));
+    }
+
+    #[test]
+    fn locate_matches_csr_values() {
+        let m = sample();
+        assert_eq!(m.get(0, 2), Some(2.0));
+        assert_eq!(m.get(2, 1), Some(5.0));
+        assert_eq!(m.get(1, 1), None);
+    }
+
+    #[test]
+    fn column_read_is_sequential_and_cheap() {
+        let m = sample();
+        let mut s = CountSink::default();
+        let n = m.read_col(0, &mut s);
+        assert_eq!(n, 2);
+        assert_eq!(s.total, 1 + 2 * 2); // ptr + 2*(idx+val)
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        let back = Csc::from_coo(&m.to_coo());
+        assert_eq!(back.col_ptr, m.col_ptr);
+        assert_eq!(back.row_idx, m.row_idx);
+        assert_eq!(back.vals, m.vals);
+    }
+}

@@ -1,0 +1,353 @@
+//! Compressed Row Storage (CRS/CSR) — the base format the paper augments.
+//!
+//! Random access to `B[i][j]` is: one access to the row pointer, then a
+//! linear scan of the row's column indices until `j` is found or passed
+//! (paper Table I: ≈ ½·N·D accesses on average).
+//!
+//! The paper deliberately uses linear (not binary) search: "CRS may not
+//! benefit in practice from binary search due to poor caching behavior"
+//! (§III footnote 2). We implement linear scan to match, and ship binary
+//! search as an ablation (`locate_binary`) so the claim itself is testable
+//! under the cache simulator.
+
+use super::coo::Coo;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    pub row_ptr: Vec<u32>, // len rows+1
+    pub col_idx: Vec<u32>, // len nnz, sorted within each row
+    pub vals: Vec<f32>,    // len nnz
+    r_ptr: Region,
+    r_idx: Region,
+    r_val: Region,
+}
+
+impl Csr {
+    pub fn from_coo(c: &Coo) -> Csr {
+        let mut space = AddressSpace::default();
+        Self::from_coo_with_space(c, &mut space)
+    }
+
+    pub fn from_coo_with_space(c: &Coo, space: &mut AddressSpace) -> Csr {
+        let (rows, cols) = c.shape();
+        let nnz = c.nnz();
+        let mut row_ptr = vec![0u32; rows + 1];
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for &(r, cidx, v) in &c.entries {
+            row_ptr[r as usize + 1] += 1;
+            col_idx.push(cidx);
+            vals.push(v);
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+            r_ptr: space.alloc(rows + 1, 4),
+            r_idx: space.alloc(nnz, 4),
+            r_val: space.alloc(nnz, 4),
+        }
+    }
+
+    /// Build directly from parts (used by generators to skip COO).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Csr {
+        assert_eq!(row_ptr.len(), rows + 1);
+        assert_eq!(col_idx.len(), vals.len());
+        assert_eq!(*row_ptr.last().unwrap() as usize, col_idx.len());
+        debug_assert!((0..rows).all(|i| {
+            let (lo, hi) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+            col_idx[lo..hi].windows(2).all(|w| w[0] < w[1])
+                && col_idx[lo..hi].iter().all(|&c| (c as usize) < cols)
+        }));
+        let mut space = AddressSpace::default();
+        let nnz = col_idx.len();
+        Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+            r_ptr: space.alloc(rows + 1, 4),
+            r_idx: space.alloc(nnz, 4),
+            r_val: space.alloc(nnz, 4),
+        }
+    }
+
+    /// Row `i` as (cols, vals) slices — the zero-cost row-order access that
+    /// CRS is built for (identical in CRS and InCRS, §V.B).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Paper cost model: 1 access for the row pointer, then one access per
+    /// scanned column index, plus one for the value on a hit.
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        sink.touch(self.r_ptr.at(i), Site::Ptr);
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        let tj = j as u32;
+        for k in lo..hi {
+            sink.touch(self.r_idx.at(k), Site::Idx);
+            let c = self.col_idx[k];
+            if c == tj {
+                sink.touch(self.r_val.at(k), Site::Val);
+                return Some(self.vals[k]);
+            }
+            if c > tj {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Ablation: binary search over the row (footnote 2 of the paper).
+    pub fn locate_binary(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        sink.touch(self.r_ptr.at(i), Site::Ptr);
+        let mut lo = self.row_ptr[i] as usize;
+        let mut hi = self.row_ptr[i + 1] as usize;
+        let tj = j as u32;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            sink.touch(self.r_idx.at(mid), Site::Idx);
+            match self.col_idx[mid].cmp(&tj) {
+                std::cmp::Ordering::Equal => {
+                    sink.touch(self.r_val.at(mid), Site::Val);
+                    return Some(self.vals[mid]);
+                }
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+            }
+        }
+        None
+    }
+
+    pub fn ptr_region(&self) -> Region {
+        self.r_ptr
+    }
+    pub fn idx_region(&self) -> Region {
+        self.r_idx
+    }
+    pub fn val_region(&self) -> Region {
+        self.r_val
+    }
+
+    /// Transpose (rows of the result = columns of self), used to build
+    /// column streams for A×Aᵀ and the CCS comparison.
+    pub fn transpose(&self) -> Csr {
+        let mut cnt = vec![0u32; self.cols + 1];
+        for &c in &self.col_idx {
+            cnt[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            cnt[i + 1] += cnt[i];
+        }
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![0.0f32; self.nnz()];
+        let mut cursor = cnt.clone();
+        for i in 0..self.rows {
+            let (cs, vs) = self.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let k = cursor[c as usize] as usize;
+                col_idx[k] = i as u32;
+                vals[k] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr::from_parts(self.cols, self.rows, cnt, col_idx, vals)
+    }
+
+    /// Average non-zeros per row (the quantity Table II keys on).
+    pub fn nnz_row_stats(&self) -> (usize, f64, usize) {
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for i in 0..self.rows {
+            let n = self.row_nnz(i);
+            min = min.min(n);
+            max = max.max(n);
+        }
+        (
+            if self.rows == 0 { 0 } else { min },
+            self.nnz() as f64 / self.rows.max(1) as f64,
+            max,
+        )
+    }
+}
+
+impl SparseMatrix for Csr {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+    fn storage_words(&self) -> usize {
+        (self.rows + 1) + 2 * self.nnz()
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            let (cs, vs) = self.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                entries.push((i as u32, c, v));
+            }
+        }
+        Coo::new(self.rows, self.cols, entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Csr {
+        // [1 0 2 0]
+        // [0 0 0 3]
+        // [4 5 0 0]
+        Csr::from_coo(&Coo::new(
+            3,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn structure() {
+        let m = sample();
+        assert_eq!(m.row_ptr, vec![0, 2, 3, 5]);
+        assert_eq!(m.col_idx, vec![0, 2, 3, 0, 1]);
+        assert_eq!(m.row(2), (&[0u32, 1][..], &[4.0f32, 5.0][..]));
+    }
+
+    #[test]
+    fn locate_all_cells() {
+        let m = sample();
+        let dense = Dense4x3();
+        for i in 0..3 {
+            for j in 0..4 {
+                let want = dense[i][j];
+                let got = m.get(i, j).unwrap_or(0.0);
+                assert_eq!(got, want, "({i},{j})");
+            }
+        }
+    }
+
+    #[allow(non_snake_case)]
+    fn Dense4x3() -> [[f32; 4]; 3] {
+        [
+            [1.0, 0.0, 2.0, 0.0],
+            [0.0, 0.0, 0.0, 3.0],
+            [4.0, 5.0, 0.0, 0.0],
+        ]
+    }
+
+    #[test]
+    fn locate_costs_match_scan_position() {
+        let m = sample();
+        // (2,1): ptr + scan idx{0,1} + val = 4 accesses
+        let mut s = CountSink::default();
+        m.locate(2, 1, &mut s);
+        assert_eq!(s.total, 4);
+        assert_eq!(s.site(Site::Ptr), 1);
+        assert_eq!(s.site(Site::Idx), 2);
+        assert_eq!(s.site(Site::Val), 1);
+        // miss with early exit: (0,1) scans idx 0 (c=0 < 1) then idx 2
+        let mut s = CountSink::default();
+        assert_eq!(m.locate(0, 1, &mut s), None);
+        assert_eq!(s.total, 3); // ptr + 2 idx
+    }
+
+    #[test]
+    fn binary_locate_agrees_with_linear() {
+        let m = sample();
+        let mut sink = CountSink::default();
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(
+                    m.locate(i, j, &mut sink),
+                    m.locate_binary(i, j, &mut sink),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.shape(), (4, 3));
+        assert_eq!(t.get(3, 1), Some(3.0));
+        assert_eq!(t.get(1, 2), Some(5.0));
+        let tt = t.transpose();
+        assert_eq!(tt.row_ptr, m.row_ptr);
+        assert_eq!(tt.col_idx, m.col_idx);
+        assert_eq!(tt.vals, m.vals);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        let back = Csr::from_coo(&m.to_coo());
+        assert_eq!(back.row_ptr, m.row_ptr);
+        assert_eq!(back.col_idx, m.col_idx);
+        assert_eq!(back.vals, m.vals);
+    }
+
+    #[test]
+    fn stats() {
+        let m = sample();
+        let (min, avg, max) = m.nnz_row_stats();
+        assert_eq!((min, max), (1, 2));
+        assert!((avg - 5.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.storage_words(), 4 + 10);
+    }
+
+    #[test]
+    fn empty_rows() {
+        let m = Csr::from_coo(&Coo::new(3, 3, vec![(1, 1, 7.0)]));
+        assert_eq!(m.row_nnz(0), 0);
+        assert_eq!(m.row_nnz(2), 0);
+        assert_eq!(m.get(0, 0), None);
+        assert_eq!(m.get(1, 1), Some(7.0));
+        let mut s = CountSink::default();
+        assert_eq!(m.locate(0, 0, &mut s), None);
+        assert_eq!(s.total, 1); // empty row: ptr only
+    }
+}

@@ -1,0 +1,138 @@
+//! Dense row-major storage — the baseline in which one arbitrary element
+//! costs exactly one memory access (paper §II.B).
+
+use super::coo::Coo;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Dense {
+    rows: usize,
+    cols: usize,
+    pub data: Vec<f32>,
+    region: Region,
+}
+
+impl Dense {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Dense {
+        let mut space = AddressSpace::default();
+        Self::with_space(rows, cols, data, &mut space)
+    }
+
+    pub fn with_space(
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+        space: &mut AddressSpace,
+    ) -> Dense {
+        assert_eq!(data.len(), rows * cols);
+        Dense {
+            rows,
+            cols,
+            data,
+            region: space.alloc(rows * cols, 4),
+        }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Dense {
+        Dense::new(rows, cols, vec![0.0; rows * cols])
+    }
+
+    pub fn from_coo(c: &Coo) -> Dense {
+        let (rows, cols) = c.shape();
+        Dense::new(rows, cols, c.to_dense())
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        let k = i * self.cols + j;
+        sink.touch(self.region.at(k), Site::Dense);
+        Some(self.data[k])
+    }
+
+    /// Max |a - b| against another dense matrix (test/verification helper).
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius error ||a-b|| / max(||b||, eps).
+    pub fn rel_fro_err(&self, want: &Dense) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&want.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num.sqrt()) / den.sqrt().max(1e-30)
+    }
+}
+
+impl SparseMatrix for Dense {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Dense
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+    fn storage_words(&self) -> usize {
+        self.rows * self.cols
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        Coo::from_dense(self.rows, self.cols, &self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    #[test]
+    fn single_access_per_locate() {
+        let d = Dense::new(2, 3, vec![1.0, 0.0, 2.0, 3.0, 4.0, 0.0]);
+        let mut s = CountSink::default();
+        assert_eq!(d.locate(1, 1, &mut s), Some(4.0));
+        assert_eq!(s.total, 1);
+        // zeros are still "found" in dense storage
+        let mut s2 = CountSink::default();
+        assert_eq!(d.locate(0, 1, &mut s2), Some(0.0));
+        assert_eq!(s2.total, 1);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let d = Dense::new(2, 2, vec![0.0, 1.5, -2.0, 0.0]);
+        let back = Dense::from_coo(&d.to_coo());
+        assert_eq!(d.data, back.data);
+        assert_eq!(d.nnz(), 2);
+    }
+
+    #[test]
+    fn diff_helpers() {
+        let a = Dense::new(1, 2, vec![1.0, 2.0]);
+        let b = Dense::new(1, 2, vec![1.0, 2.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(a.rel_fro_err(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,171 @@
+//! ELLPACK (paper §II.A.1): two `rows × width` matrices holding padded
+//! non-zero values and their column indices, where `width` is the maximum
+//! row population. Random access scans the target row's slots — Table I
+//! groups it with CRS/LiL at ≈ ½·N·D accesses.
+
+use super::coo::Coo;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+const PAD: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+pub struct Ellpack {
+    rows: usize,
+    cols: usize,
+    pub width: usize,
+    /// rows × width, row-major, PAD-filled tail per row, sorted per row.
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    nnz: usize,
+    r_idx: Region,
+    r_val: Region,
+}
+
+impl Ellpack {
+    pub fn from_coo(c: &Coo) -> Ellpack {
+        let mut space = AddressSpace::default();
+        Self::from_coo_with_space(c, &mut space)
+    }
+
+    pub fn from_coo_with_space(c: &Coo, space: &mut AddressSpace) -> Ellpack {
+        let (rows, cols) = c.shape();
+        let mut per_row: Vec<usize> = vec![0; rows];
+        for &(r, _, _) in &c.entries {
+            per_row[r as usize] += 1;
+        }
+        let width = per_row.iter().copied().max().unwrap_or(0);
+        let mut col_idx = vec![PAD; rows * width];
+        let mut vals = vec![0.0f32; rows * width];
+        let mut cursor = vec![0usize; rows];
+        for &(r, cc, v) in &c.entries {
+            let r = r as usize;
+            let k = r * width + cursor[r];
+            col_idx[k] = cc;
+            vals[k] = v;
+            cursor[r] += 1;
+        }
+        Ellpack {
+            rows,
+            cols,
+            width,
+            col_idx,
+            vals,
+            nnz: c.nnz(),
+            r_idx: space.alloc(rows * width, 4),
+            r_val: space.alloc(rows * width, 4),
+        }
+    }
+
+    /// Scan the row's slots in order; PAD or an index past `j` ends a miss.
+    /// (The row base is computed, not loaded — ELLPACK has no pointer
+    /// vector, which is exactly why Table I charges it only the scan.)
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        let tj = j as u32;
+        let base = i * self.width;
+        for s in 0..self.width {
+            sink.touch(self.r_idx.at(base + s), Site::Idx);
+            let c = self.col_idx[base + s];
+            if c == tj {
+                sink.touch(self.r_val.at(base + s), Site::Val);
+                return Some(self.vals[base + s]);
+            }
+            if c > tj {
+                // PAD == u32::MAX also lands here
+                return None;
+            }
+        }
+        None
+    }
+}
+
+impl SparseMatrix for Ellpack {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Ellpack
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn storage_words(&self) -> usize {
+        2 * self.rows * self.width
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz);
+        for i in 0..self.rows {
+            for s in 0..self.width {
+                let k = i * self.width + s;
+                if self.col_idx[k] != PAD {
+                    entries.push((i as u32, self.col_idx[k], self.vals[k]));
+                }
+            }
+        }
+        Coo::new(self.rows, self.cols, entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Ellpack {
+        Ellpack::from_coo(&Coo::new(
+            3,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn width_is_max_row_population() {
+        let m = sample();
+        assert_eq!(m.width, 2);
+        assert_eq!(m.storage_words(), 2 * 3 * 2);
+    }
+
+    #[test]
+    fn locate_values() {
+        let m = sample();
+        assert_eq!(m.get(0, 2), Some(2.0));
+        assert_eq!(m.get(1, 3), Some(3.0));
+        assert_eq!(m.get(1, 0), None);
+        assert_eq!(m.get(2, 3), None);
+    }
+
+    #[test]
+    fn padding_terminates_scan() {
+        let m = sample();
+        // row 1 has 1 real slot + 1 pad; probing col 0 (< 3) stops at slot 0
+        let mut s = CountSink::default();
+        assert_eq!(m.locate(1, 0, &mut s), None);
+        assert_eq!(s.total, 1);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        let back = Ellpack::from_coo(&m.to_coo());
+        assert_eq!(back.col_idx, m.col_idx);
+        assert_eq!(back.vals, m.vals);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Ellpack::from_coo(&Coo::new(2, 2, vec![]));
+        assert_eq!(m.width, 0);
+        assert_eq!(m.get(1, 1), None);
+    }
+}

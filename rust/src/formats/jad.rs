@@ -1,0 +1,219 @@
+//! Jagged Diagonal (JAD, paper §II.A.5): rows are sorted by descending
+//! population; storage interleaves "the first non-zero of every row, then
+//! the second non-zero of every row, ...". `jad_ptr[d]` points at the start
+//! of jagged diagonal `d`.
+//!
+//! Random access to `(i, j)`: find the row's sorted position, then step
+//! through diagonals — each step needs `jad_ptr[d]` *and* the column index,
+//! which is why Table I charges JAD ≈ N·D (twice the CRS scan).
+
+use super::coo::Coo;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Jad {
+    rows: usize,
+    cols: usize,
+    /// perm[p] = original row stored at sorted position p.
+    pub perm: Vec<u32>,
+    /// inv_perm[original row] = sorted position.
+    pub inv_perm: Vec<u32>,
+    /// jad_ptr[d] = offset of diagonal d; len = max_row_nnz + 1.
+    pub jad_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    r_perm: Region,
+    r_jp: Region,
+    r_idx: Region,
+    r_val: Region,
+}
+
+impl Jad {
+    pub fn from_coo(c: &Coo) -> Jad {
+        let mut space = AddressSpace::default();
+        Self::from_coo_with_space(c, &mut space)
+    }
+
+    pub fn from_coo_with_space(c: &Coo, space: &mut AddressSpace) -> Jad {
+        let (rows, cols) = c.shape();
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); rows];
+        for &(r, cc, v) in &c.entries {
+            per_row[r as usize].push((cc, v));
+        }
+        // sort rows by descending population (stable: ties keep row order)
+        let mut perm: Vec<u32> = (0..rows as u32).collect();
+        perm.sort_by_key(|&r| std::cmp::Reverse(per_row[r as usize].len()));
+        let mut inv_perm = vec![0u32; rows];
+        for (p, &r) in perm.iter().enumerate() {
+            inv_perm[r as usize] = p as u32;
+        }
+        let max_nnz = per_row.iter().map(Vec::len).max().unwrap_or(0);
+        let mut jad_ptr = Vec::with_capacity(max_nnz + 1);
+        let mut col_idx = Vec::with_capacity(c.nnz());
+        let mut vals = Vec::with_capacity(c.nnz());
+        jad_ptr.push(0);
+        for d in 0..max_nnz {
+            for &r in &perm {
+                if let Some(&(cc, v)) = per_row[r as usize].get(d) {
+                    col_idx.push(cc);
+                    vals.push(v);
+                } else {
+                    break; // rows sorted by population: rest are shorter
+                }
+            }
+            jad_ptr.push(col_idx.len() as u32);
+        }
+        Jad {
+            rows,
+            cols,
+            perm,
+            inv_perm,
+            jad_ptr,
+            col_idx,
+            vals,
+            r_perm: space.alloc(rows, 4),
+            r_jp: space.alloc(max_nnz + 1, 4),
+            r_idx: space.alloc(c.nnz(), 4),
+            r_val: space.alloc(c.nnz(), 4),
+        }
+    }
+
+    /// Number of rows that have a d-th non-zero (diagonal d length).
+    fn diag_len(&self, d: usize) -> usize {
+        (self.jad_ptr[d + 1] - self.jad_ptr[d]) as usize
+    }
+
+    /// Per the paper's cost model: 1 access to map the row (perm lookup),
+    /// then per diagonal 1 access to `jad_ptr` + 1 to the column index —
+    /// "unlike CRS, the NZs of a row are not stored sequentially; locate
+    /// each one of them using jadPtr".
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        sink.touch(self.r_perm.at(i), Site::Aux);
+        let p = self.inv_perm[i] as usize;
+        let tj = j as u32;
+        let ndiag = self.jad_ptr.len() - 1;
+        for d in 0..ndiag {
+            sink.touch(self.r_jp.at(d), Site::JadPtr);
+            if p >= self.diag_len(d) {
+                return None; // row exhausted
+            }
+            let k = self.jad_ptr[d] as usize + p;
+            sink.touch(self.r_idx.at(k), Site::Idx);
+            let c = self.col_idx[k];
+            if c == tj {
+                sink.touch(self.r_val.at(k), Site::Val);
+                return Some(self.vals[k]);
+            }
+            if c > tj {
+                return None; // row columns ascend across diagonals
+            }
+        }
+        None
+    }
+}
+
+impl SparseMatrix for Jad {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Jad
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+    fn storage_words(&self) -> usize {
+        self.rows + self.jad_ptr.len() + 2 * self.nnz()
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz());
+        let ndiag = self.jad_ptr.len() - 1;
+        for d in 0..ndiag {
+            for p in 0..self.diag_len(d) {
+                let k = self.jad_ptr[d] as usize + p;
+                entries.push((self.perm[p], self.col_idx[k], self.vals[k]));
+            }
+        }
+        Coo::new(self.rows, self.cols, entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Jad {
+        // row populations: r0=2, r1=1, r2=2 -> perm [0,2,1] (stable desc)
+        Jad::from_coo(&Coo::new(
+            3,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn permutation_sorts_by_population() {
+        let m = sample();
+        assert_eq!(m.perm, vec![0, 2, 1]);
+        assert_eq!(m.inv_perm, vec![0, 2, 1]);
+        // diagonal 0 = first nz of rows [0,2,1] = cols [0,0,3]
+        assert_eq!(&m.col_idx[..3], &[0, 0, 3]);
+        // diagonal 1 = second nz of rows [0,2] = cols [2,1]
+        assert_eq!(&m.col_idx[3..], &[2, 1]);
+        assert_eq!(m.jad_ptr, vec![0, 3, 5]);
+    }
+
+    #[test]
+    fn locate_values() {
+        let m = sample();
+        for (i, j, v) in [(0, 0, 1.0), (0, 2, 2.0), (1, 3, 3.0), (2, 0, 4.0), (2, 1, 5.0)] {
+            assert_eq!(m.get(i, j), Some(v), "({i},{j})");
+        }
+        assert_eq!(m.get(0, 1), None);
+        assert_eq!(m.get(1, 0), None);
+        assert_eq!(m.get(2, 3), None);
+    }
+
+    #[test]
+    fn per_step_cost_is_twice_crs() {
+        let m = sample();
+        // (2,1): perm + d0(jad_ptr+idx) + d1(jad_ptr+idx) + val = 6
+        let mut s = CountSink::default();
+        assert_eq!(m.locate(2, 1, &mut s), Some(5.0));
+        assert_eq!(s.total, 6);
+        assert_eq!(s.site(Site::JadPtr), 2);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        let rt = Jad::from_coo(&m.to_coo());
+        assert_eq!(rt.col_idx, m.col_idx);
+        assert_eq!(rt.vals, m.vals);
+        assert_eq!(rt.perm, m.perm);
+    }
+
+    #[test]
+    fn empty_and_uniform() {
+        let e = Jad::from_coo(&Coo::new(2, 2, vec![]));
+        assert_eq!(e.get(0, 0), None);
+        let u = Jad::from_coo(&Coo::new(
+            2,
+            2,
+            vec![(0, 0, 1.0), (0, 1, 2.0), (1, 0, 3.0), (1, 1, 4.0)],
+        ));
+        assert_eq!(u.get(1, 1), Some(4.0));
+    }
+}

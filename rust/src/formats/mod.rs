@@ -1,0 +1,37 @@
+//! Sparse-matrix storage formats (paper §II) with memory-access accounting.
+//!
+//! Every format in the paper's Table I is implemented, plus the paper's
+//! contribution, [`incrs::InCrs`]. All formats share:
+//!
+//! * a canonical interchange form ([`coo::Coo`]) for any↔any conversion,
+//! * a simulated address-space layout, so random accesses produce *address
+//!   streams* the cache simulator can replay (Fig 3), and
+//! * `locate(i, j, sink)` random access that reports every word it touches
+//!   to an [`traits::AccessSink`] (Table I/II access counting).
+
+pub mod convert;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod ell;
+pub mod incrs;
+pub mod jad;
+pub mod lil;
+pub mod sll;
+pub mod traits;
+
+pub use convert::{convert, from_coo, parse_kind, ALL_KINDS};
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use ell::Ellpack;
+pub use incrs::{InCrs, InCrsParams};
+pub use jad::Jad;
+pub use lil::Lil;
+pub use sll::Sll;
+pub use traits::{
+    AccessSink, AddressSpace, CountSink, FormatKind, NullSink, Region, Site,
+    SparseMatrix,
+};

@@ -1,0 +1,129 @@
+//! Single Linear List (SLL, paper §II.A.3/4): all non-zeros stored
+//! sequentially as (row, col, val) records in one array — like COO but as an
+//! array-of-structs instead of three parallel arrays. Same Table I cost
+//! (≈ ½·M·N·D: no pointer, scan everything before the target) but a
+//! different cache footprint, which is why both exist in the eval.
+
+use super::coo::Coo;
+use super::traits::{
+    AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
+};
+
+#[derive(Clone, Debug)]
+pub struct Sll {
+    rows: usize,
+    cols: usize,
+    /// Row-major sorted (row, col, val) records.
+    pub records: Vec<(u32, u32, f32)>,
+    r_rec: Region,
+}
+
+impl Sll {
+    pub fn from_coo(c: &Coo) -> Sll {
+        let mut space = AddressSpace::default();
+        Self::from_coo_with_space(c, &mut space)
+    }
+
+    pub fn from_coo_with_space(c: &Coo, space: &mut AddressSpace) -> Sll {
+        let (rows, cols) = c.shape();
+        Sll {
+            rows,
+            cols,
+            records: c.entries.clone(),
+            // one record = row u32 + col u32 + val f32 = 12 bytes
+            r_rec: space.alloc(c.nnz(), 12),
+        }
+    }
+
+    /// Linear scan of the record array; one access per scanned record, plus
+    /// the value read (within the same record — counted separately so the
+    /// per-site split stays comparable with COO).
+    pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
+        let (ti, tj) = (i as u32, j as u32);
+        for (k, &(r, c, v)) in self.records.iter().enumerate() {
+            sink.touch(self.r_rec.at(k), Site::Entry);
+            if r > ti || (r == ti && c > tj) {
+                return None;
+            }
+            if r == ti && c == tj {
+                sink.touch(self.r_rec.at(k) + 8, Site::Val);
+                return Some(v);
+            }
+        }
+        None
+    }
+}
+
+impl SparseMatrix for Sll {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Sll
+    }
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn nnz(&self) -> usize {
+        self.records.len()
+    }
+    fn storage_words(&self) -> usize {
+        3 * self.records.len()
+    }
+    fn locate_dyn(&self, i: usize, j: usize, mut sink: &mut dyn AccessSink) -> Option<f32> {
+        self.locate(i, j, &mut sink)
+    }
+    fn to_coo(&self) -> Coo {
+        Coo::new(self.rows, self.cols, self.records.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::traits::CountSink;
+
+    fn sample() -> Sll {
+        Sll::from_coo(&Coo::new(
+            3,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+            ],
+        ))
+    }
+
+    #[test]
+    fn locate_values() {
+        let m = sample();
+        assert_eq!(m.get(1, 3), Some(3.0));
+        assert_eq!(m.get(1, 2), None);
+    }
+
+    #[test]
+    fn scan_cost_is_position() {
+        let m = sample();
+        let mut s = CountSink::default();
+        m.locate(2, 0, &mut s); // 4th record + value
+        assert_eq!(s.total, 5);
+        let mut s = CountSink::default();
+        m.locate(0, 0, &mut s);
+        assert_eq!(s.total, 2);
+    }
+
+    #[test]
+    fn early_exit_on_passed_coordinate() {
+        let m = sample();
+        let mut s = CountSink::default();
+        assert_eq!(m.locate(0, 3, &mut s), None);
+        // scans (0,0),(0,2),(1,3): third record exceeds (0,3)
+        assert_eq!(s.total, 3);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        assert_eq!(Sll::from_coo(&m.to_coo()).records, m.records);
+    }
+}

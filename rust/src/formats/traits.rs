@@ -1,0 +1,225 @@
+//! Core abstractions: memory-access accounting and the sparse-matrix trait.
+//!
+//! The paper's Table I/II/Fig 3 all measure *memory accesses to locate
+//! elements*. We make that a first-class concept: every format lays its
+//! arrays out in a virtual address space, and every `locate(i, j)` reports
+//! each word it touches to an [`AccessSink`]. A counting sink reproduces the
+//! paper's access-count analytics; the cache-simulator sink replays the same
+//! address stream through the gem5-parameter hierarchy (Fig 3).
+
+use super::coo::Coo;
+
+/// Which data structure a memory access touched. Doubles as the "PC" proxy
+/// for the stride prefetcher (distinct access sites train distinct streams,
+/// like gem5's PC-indexed stride table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Site {
+    /// Row/column pointer vector (CRS/CCS/LiL heads, ELLPACK row base).
+    Ptr = 0,
+    /// Column- (or row-) index vector entries.
+    Idx = 1,
+    /// Non-zero value entries.
+    Val = 2,
+    /// InCRS counter-vector words.
+    Counter = 3,
+    /// JAD's jagged-diagonal pointer vector.
+    JadPtr = 4,
+    /// COO/SLL entry records.
+    Entry = 5,
+    /// Permutation / auxiliary metadata.
+    Aux = 6,
+    /// Dense array elements.
+    Dense = 7,
+}
+
+pub const NUM_SITES: usize = 8;
+
+/// Receives every simulated memory access. Monomorphized into the format
+/// hot loops — implementations must keep `touch` tiny and `#[inline]`.
+pub trait AccessSink {
+    fn touch(&mut self, addr: u64, site: Site);
+}
+
+/// Blanket impl so generic code can also run over `&mut dyn AccessSink`.
+impl AccessSink for &mut (dyn AccessSink + '_) {
+    #[inline]
+    fn touch(&mut self, addr: u64, site: Site) {
+        (**self).touch(addr, site)
+    }
+}
+
+/// Sink that discards accesses (pure value lookups).
+#[derive(Default, Debug)]
+pub struct NullSink;
+
+impl AccessSink for NullSink {
+    #[inline]
+    fn touch(&mut self, _addr: u64, _site: Site) {}
+}
+
+/// Counting sink: total + per-site access counts (Table I/II analytics).
+#[derive(Default, Debug, Clone)]
+pub struct CountSink {
+    pub total: u64,
+    pub by_site: [u64; NUM_SITES],
+}
+
+impl CountSink {
+    pub fn site(&self, s: Site) -> u64 {
+        self.by_site[s as usize]
+    }
+}
+
+impl AccessSink for CountSink {
+    #[inline]
+    fn touch(&mut self, _addr: u64, site: Site) {
+        self.total += 1;
+        self.by_site[site as usize] += 1;
+    }
+}
+
+/// A contiguous array in the simulated address space.
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    pub base: u64,
+    pub elem_bytes: u64,
+}
+
+impl Region {
+    #[inline]
+    pub fn at(&self, i: usize) -> u64 {
+        self.base + i as u64 * self.elem_bytes
+    }
+}
+
+/// Bump allocator for simulated array placement. Each array starts on a
+/// fresh 4 KiB page (realistic malloc behavior, and it keeps arrays from
+/// sharing cache lines, which would flatter hit rates).
+#[derive(Debug)]
+pub struct AddressSpace {
+    next: u64,
+}
+
+impl Default for AddressSpace {
+    fn default() -> Self {
+        // Leave page 0 unused so address 0 never appears (useful as a
+        // sentinel in the prefetcher).
+        AddressSpace { next: 4096 }
+    }
+}
+
+impl AddressSpace {
+    pub fn alloc(&mut self, elems: usize, elem_bytes: u64) -> Region {
+        let base = self.next;
+        let len = elems as u64 * elem_bytes;
+        self.next = (base + len + 4095) & !4095;
+        Region { base, elem_bytes }
+    }
+
+    pub fn bytes_used(&self) -> u64 {
+        self.next
+    }
+}
+
+/// Identifies the concrete storage format (Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FormatKind {
+    Dense,
+    Csr,
+    Csc,
+    Coo,
+    Sll,
+    Ellpack,
+    Lil,
+    Jad,
+    InCrs,
+}
+
+impl FormatKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Dense => "dense",
+            FormatKind::Csr => "CRS",
+            FormatKind::Csc => "CCS",
+            FormatKind::Coo => "COO",
+            FormatKind::Sll => "SLL",
+            FormatKind::Ellpack => "ELLPACK",
+            FormatKind::Lil => "LiL",
+            FormatKind::Jad => "JAD",
+            FormatKind::InCrs => "InCRS",
+        }
+    }
+}
+
+/// Object-safe surface shared by all formats: metadata, storage accounting,
+/// polymorphic random access, and conversion back to canonical COO.
+pub trait SparseMatrix {
+    fn kind(&self) -> FormatKind;
+    fn shape(&self) -> (usize, usize);
+    fn nnz(&self) -> usize;
+    /// Storage in machine words (the paper counts one word per stored value,
+    /// index, pointer, or counter-vector — Table II "storage ratio").
+    fn storage_words(&self) -> usize;
+    /// Random access with memory-access accounting (dyn-sink variant; the
+    /// hot paths use the concrete formats' generic `locate`).
+    fn locate_dyn(&self, i: usize, j: usize, sink: &mut dyn AccessSink) -> Option<f32>;
+    fn to_coo(&self) -> Coo;
+
+    fn rows(&self) -> usize {
+        self.shape().0
+    }
+    fn cols(&self) -> usize {
+        self.shape().1
+    }
+    /// Density D = nnz / (rows*cols).
+    fn density(&self) -> f64 {
+        let (m, n) = self.shape();
+        self.nnz() as f64 / (m as f64 * n as f64)
+    }
+    /// Plain value lookup without accounting.
+    fn get(&self, i: usize, j: usize) -> Option<f32> {
+        let mut sink = NullSink;
+        self.locate_dyn(i, j, &mut sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_space_page_aligns() {
+        let mut a = AddressSpace::default();
+        let r1 = a.alloc(10, 4);
+        let r2 = a.alloc(3, 8);
+        assert_eq!(r1.base % 4096, 0);
+        assert_eq!(r2.base % 4096, 0);
+        assert!(r2.base >= r1.at(10));
+        assert_ne!(r1.base, 0, "page 0 must stay unused");
+    }
+
+    #[test]
+    fn region_addressing() {
+        let r = Region { base: 4096, elem_bytes: 4 };
+        assert_eq!(r.at(0), 4096);
+        assert_eq!(r.at(3), 4108);
+    }
+
+    #[test]
+    fn count_sink_counts_by_site() {
+        let mut s = CountSink::default();
+        s.touch(0, Site::Ptr);
+        s.touch(4, Site::Idx);
+        s.touch(8, Site::Idx);
+        assert_eq!(s.total, 3);
+        assert_eq!(s.site(Site::Idx), 2);
+        assert_eq!(s.site(Site::Val), 0);
+    }
+
+    #[test]
+    fn format_names() {
+        assert_eq!(FormatKind::InCrs.name(), "InCRS");
+        assert_eq!(FormatKind::Csr.name(), "CRS");
+    }
+}

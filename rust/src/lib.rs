@@ -1,0 +1,39 @@
+//! # spmm-accel
+//!
+//! Production-grade reproduction of *"Sparse Matrix to Matrix
+//! Multiplication: A Representation and Architecture for Acceleration"*
+//! (Golnari & Malik, 2019) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper contributes (1) **InCRS**, a CRS variant with per-section
+//! counter-vectors that makes column-order access to a row-stored sparse
+//! matrix cheap, and (2) a **synchronized systolic mesh** for SpMM that
+//! shares operand streams along rows/columns of a comparator+MAC mesh.
+//!
+//! Crate layout (see DESIGN.md for the full inventory):
+//!
+//! * [`formats`] — all Table-I sparse formats + [`formats::InCrs`], with
+//!   memory-access accounting on random access.
+//! * [`datasets`] — the paper's nine datasets as deterministic synthetic
+//!   matrices (+ MatrixMarket loader).
+//! * [`access`] — random-access and column-order-read drivers (Tables I/II).
+//! * [`cachesim`] — gem5-parameter two-level cache hierarchy + stride
+//!   prefetcher driven by the formats' address streams (Fig 3).
+//! * [`arch`] — cycle-accurate simulators: the proposed synchronized mesh
+//!   (paper Algorithm 2), FPIC (Algorithm 1), conventional systolic MM
+//!   (Figs 4/5, Table V).
+//! * [`spmm`] — CPU SpMM algorithms + 32×32 blocking/planning for the
+//!   accelerator dispatch path.
+//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels.
+//! * [`coordinator`] — job scheduler/router/batching server (L3).
+//! * [`eval`] — drivers that regenerate every table and figure.
+
+pub mod access;
+pub mod arch;
+pub mod cachesim;
+pub mod coordinator;
+pub mod datasets;
+pub mod eval;
+pub mod formats;
+pub mod runtime;
+pub mod spmm;
+pub mod util;

@@ -1,0 +1,234 @@
+//! `spmm-accel` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   exp        run a paper experiment (table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|all)
+//!   gen        generate a synthetic dataset and write MatrixMarket
+//!   convert    convert a MatrixMarket file between sparse formats (reports storage)
+//!   locate     measure random-access cost of every format on a dataset
+//!   spmm       run one SpMM job through the coordinator (PJRT or CPU backend)
+//!   serve      start the batching server and drive a synthetic workload
+//!   info       print artifact/runtime info
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spmm_accel::coordinator::{EngineKind, JobOptions, Server, ServerConfig, SpmmJob};
+use spmm_accel::datasets;
+use spmm_accel::eval::{run_experiment, ExpOptions};
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::runtime::Manifest;
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions, String> {
+    Ok(ExpOptions {
+        seed: args.get_or("seed", 42u64)?,
+        scale: args.get_or("scale", 1.0f64)?,
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> Result<(), String> {
+    match cmd {
+        "exp" => {
+            let id = args
+                .str_opt("id")
+                .or_else(|| args.positional.get(1).map(String::as_str))
+                .ok_or("usage: spmm-accel exp --id <table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|all> [--scale F] [--seed N] [--save DIR]")?;
+            let opts = exp_options(args)?;
+            let results = run_experiment(id, opts)?;
+            for r in &results {
+                r.print();
+                if let Some(dir) = args.str_opt("save") {
+                    let p = r
+                        .save(std::path::Path::new(dir))
+                        .map_err(|e| e.to_string())?;
+                    eprintln!("saved {}", p.display());
+                }
+            }
+            Ok(())
+        }
+        "gen" => {
+            let name = args
+                .str_opt("dataset")
+                .ok_or("usage: spmm-accel gen --dataset <name> --out <file.mtx> [--seed N]")?;
+            let out = args.str_opt("out").ok_or("missing --out")?;
+            let seed = args.get_or("seed", 42u64)?;
+            let m = datasets::load(name, None, seed)?;
+            datasets::mtx::write(&m.to_coo(), std::path::Path::new(out))?;
+            println!(
+                "wrote {}: {}x{} nnz={} D={:.3}%",
+                out,
+                m.rows(),
+                m.cols(),
+                m.nnz(),
+                m.density() * 100.0
+            );
+            Ok(())
+        }
+        "convert" => {
+            let input = args.str_opt("in").ok_or("usage: spmm-accel convert --in <file.mtx> --to <format> [--out <file.mtx>]")?;
+            let to = spmm_accel::formats::parse_kind(args.str_or("to", "incrs"))?;
+            let coo = datasets::mtx::read(std::path::Path::new(input))?;
+            let m = spmm_accel::formats::from_coo(to, &coo)?;
+            println!(
+                "{}: {}x{} nnz={} storage={} words ({}b/nz)",
+                m.kind().name(),
+                m.rows(),
+                m.cols(),
+                m.nnz(),
+                m.storage_words(),
+                m.storage_words() * 4 / m.nnz().max(1)
+            );
+            if let Some(out) = args.str_opt("out") {
+                datasets::mtx::write(&m.to_coo(), std::path::Path::new(out))?;
+            }
+            Ok(())
+        }
+        "locate" => {
+            let opts = exp_options(args)?;
+            let r = spmm_accel::eval::table1::run(opts);
+            r.print();
+            Ok(())
+        }
+        "spmm" => {
+            let seed = args.get_or("seed", 42u64)?;
+            let rows = args.get_or("rows", 256usize)?;
+            let cols = args.get_or("cols", 256usize)?;
+            let density = args.get_or("density", 0.05f64)?;
+            let backend = args.str_or("backend", "pjrt");
+            let engine = match backend {
+                "pjrt" => EngineKind::Pjrt,
+                "cpu" => EngineKind::Cpu,
+                other => return Err(format!("unknown backend {other:?}")),
+            };
+            let a = Arc::new(datasets::uniform(rows, cols, density, seed));
+            let b = Arc::new(datasets::uniform(cols, rows, density, seed + 1));
+            let server = Server::start(ServerConfig {
+                workers: 1,
+                engine,
+                ..Default::default()
+            });
+            let res = server
+                .submit(
+                    SpmmJob::new(0, a, b)
+                        .with_opts(JobOptions { verify: true, keep_result: false }),
+                )
+                .recv()
+                .map_err(|e| e.to_string())?;
+            let out = res.result?;
+            println!(
+                "backend={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
+                out.backend, out.report.dispatches, out.report.real_pairs, out.wall, out.max_err
+            );
+            server.shutdown();
+            Ok(())
+        }
+        "serve" => {
+            let workers = args.get_or("workers", 2usize)?;
+            let jobs = args.get_or("jobs", 16usize)?;
+            let backend = args.str_or("backend", "cpu");
+            let engine = if backend == "pjrt" { EngineKind::Pjrt } else { EngineKind::Cpu };
+            let server = Server::start(ServerConfig {
+                workers,
+                queue_depth: 8,
+                engine,
+                geometry: Geometry::default(),
+                artifacts_dir: Manifest::default_dir(),
+            });
+            let a = Arc::new(datasets::uniform(256, 256, 0.03, 1));
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..jobs as u64)
+                .map(|i| {
+                    server.submit(
+                        SpmmJob::new(i, a.clone(), a.clone())
+                            .with_opts(JobOptions { verify: false, keep_result: false }),
+                    )
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().map_err(|e| e.to_string())?.result?;
+            }
+            let snap = server.metrics.snapshot();
+            println!(
+                "{} jobs on {} workers ({backend}) in {:?}: p50={}us p99={}us dispatches={}",
+                snap.jobs_completed,
+                workers,
+                t0.elapsed(),
+                snap.p50_us,
+                snap.p99_us,
+                snap.dispatches
+            );
+            server.shutdown();
+            Ok(())
+        }
+        "trace" => {
+            // export the column-order access trace of a dataset for gem5
+            let name = args.str_or("dataset", "docword");
+            let out = args.str_opt("out").ok_or("usage: spmm-accel trace --dataset <name> --format <crs|incrs> --out <file> [--cols N]")?;
+            let fmt = args.str_or("format", "incrs");
+            let seed = args.get_or("seed", 42u64)?;
+            let m = datasets::load(name, None, seed)?;
+            let col_limit = args.get::<usize>("cols")?;
+            let mut t = spmm_accel::cachesim::TraceSink::new();
+            match fmt {
+                "crs" => {
+                    spmm_accel::access::read_columns_csr(&m, col_limit, &mut t);
+                }
+                "incrs" => {
+                    let incrs = spmm_accel::formats::InCrs::from_csr(&m)?;
+                    spmm_accel::access::read_columns_incrs(&incrs, col_limit, &mut t);
+                }
+                other => return Err(format!("unknown format {other:?} (crs|incrs)")),
+            }
+            let f = std::fs::File::create(out).map_err(|e| e.to_string())?;
+            let mut w = std::io::BufWriter::new(f);
+            t.export(&mut w).map_err(|e| e.to_string())?;
+            println!("wrote {} accesses ({fmt}, {name}) to {out}", t.len());
+            Ok(())
+        }
+        "info" => {
+            let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+            match Manifest::load(&dir) {
+                Ok(m) => {
+                    println!(
+                        "artifacts at {:?}: block={} pairs={} slots={} dense_dim={}",
+                        dir, m.block, m.pairs, m.slots, m.dense_dim
+                    );
+                    for (name, e) in &m.artifacts {
+                        println!("  {name}: {:?} ({} args)", e.file.file_name().unwrap(), e.args.len());
+                    }
+                }
+                Err(e) => println!("no artifacts: {e}"),
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "spmm-accel — InCRS + synchronized systolic SpMM (Golnari & Malik 2019)\n\
+                 \n\
+                 usage: spmm-accel <exp|gen|convert|locate|spmm|serve|info> [flags]\n\
+                 \n\
+                 examples:\n\
+                 \u{20}  spmm-accel exp --id table2\n\
+                 \u{20}  spmm-accel exp --id fig5 --scale 0.25\n\
+                 \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
+                 \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --backend pjrt\n\
+                 \u{20}  spmm-accel serve --workers 4 --jobs 32"
+            );
+            Ok(())
+        }
+    }
+}

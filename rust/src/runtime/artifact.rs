@@ -1,0 +1,214 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` recording the dispatch
+//! geometry (block/pairs/slots/dense_dim) and each artifact's operand
+//! shapes. We parse and *assert* against it at load time so the planner and
+//! the compiled HLO can never drift apart silently.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::spmm::plan::Geometry;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub pairs: usize,
+    pub slots: usize,
+    pub dense_dim: usize,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn geometry(&self) -> Geometry {
+        Geometry {
+            block: self.block,
+            pairs: self.pairs,
+            slots: self.slots,
+        }
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{path:?}: {e} (run `make artifacts` first)"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let get = |k: &str| -> Result<usize, String> {
+            j.at(&[k])?
+                .as_usize()
+                .ok_or_else(|| format!("manifest key {k} not a number"))
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in j
+            .at(&["artifacts"])?
+            .as_obj()
+            .ok_or("artifacts not an object")?
+        {
+            let file = entry
+                .at(&["file"])?
+                .as_str()
+                .ok_or("file not a string")?;
+            let mut args = Vec::new();
+            for a in entry
+                .at(&["args"])?
+                .as_arr()
+                .ok_or("args not an array")?
+            {
+                let shape = a
+                    .at(&["shape"])?
+                    .as_arr()
+                    .ok_or("shape not an array")?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or("bad dim".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let dtype = a
+                    .at(&["dtype"])?
+                    .as_str()
+                    .ok_or("dtype not a string")?
+                    .to_string();
+                args.push(ArgSpec { shape, dtype });
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: dir.join(file),
+                    args,
+                },
+            );
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            block: get("block")?,
+            pairs: get("pairs")?,
+            slots: get("slots")?,
+            dense_dim: get("dense_dim")?,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check the geometry against each artifact's declared shapes.
+    fn validate(&self) -> Result<(), String> {
+        if let Some(e) = self.artifacts.get("spmm_block") {
+            let want = [
+                vec![self.pairs],
+                vec![self.pairs, self.block, self.block],
+                vec![self.pairs, self.block, self.block],
+            ];
+            if e.args.len() != 3 {
+                return Err(format!("spmm_block: {} args, want 3", e.args.len()));
+            }
+            for (a, w) in e.args.iter().zip(&want) {
+                if &a.shape != w {
+                    return Err(format!(
+                        "spmm_block arg shape {:?} != geometry {:?}",
+                        a.shape, w
+                    ));
+                }
+            }
+            if e.args[0].dtype != "int32" {
+                return Err(format!("seg dtype {} != int32", e.args[0].dtype));
+            }
+        }
+        if let Some(e) = self.artifacts.get("dense_mm") {
+            for a in &e.args {
+                if a.shape != vec![self.dense_dim, self.dense_dim] {
+                    return Err(format!(
+                        "dense_mm arg shape {:?} != [{0:?}, {0:?}]",
+                        a.shape
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Standard artifact directory resolution: `$SPMM_ARTIFACTS`, else
+    /// `./artifacts` relative to the current dir, else next to the exe.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("SPMM_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "block": 32, "pairs": 128, "slots": 64, "dense_dim": 256,
+      "artifacts": {
+        "spmm_block": {
+          "file": "spmm_block.hlo.txt",
+          "args": [
+            {"shape": [128], "dtype": "int32"},
+            {"shape": [128, 32, 32], "dtype": "float32"},
+            {"shape": [128, 32, 32], "dtype": "float32"}
+          ],
+          "hlo_bytes": 1
+        },
+        "dense_mm": {
+          "file": "dense_mm.hlo.txt",
+          "args": [
+            {"shape": [256, 256], "dtype": "float32"},
+            {"shape": [256, 256], "dtype": "float32"}
+          ],
+          "hlo_bytes": 1
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.geometry(), Geometry { block: 32, pairs: 128, slots: 64 });
+        assert_eq!(m.artifacts["spmm_block"].args[1].shape, vec![128, 32, 32]);
+        assert!(m.artifacts["spmm_block"].file.ends_with("spmm_block.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_geometry_drift() {
+        let bad = SAMPLE.replace("\"pairs\": 128", "\"pairs\": 64");
+        let err = Manifest::parse(Path::new("/tmp/x"), &bad).unwrap_err();
+        assert!(err.contains("spmm_block"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_seg_dtype() {
+        let bad = SAMPLE.replace("\"dtype\": \"int32\"", "\"dtype\": \"float32\"");
+        assert!(Manifest::parse(Path::new("/tmp/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // when `make artifacts` has run, the shipped manifest must parse
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.block, 32);
+            assert!(m.artifacts.contains_key("spmm_block"));
+        }
+    }
+}

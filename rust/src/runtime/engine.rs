@@ -1,0 +1,110 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once per process
+//! on the CPU PJRT client, execute from the L3 hot path.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos), computations
+//! are lowered with `return_tuple=True` so results unwrap with
+//! `to_tuple1()`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::Manifest;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact. One-time cost at
+    /// process start; execution afterwards is Python-free.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", entry.file))?,
+            )
+            .with_context(|| format!("parse HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            client,
+            exes,
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True: unwrap the 1-tuple
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Execute `spmm_block`: P sorted tile pairs -> T slot tiles
+    /// (`slots × block × block` f32, flattened).
+    pub fn spmm_block(&self, seg: &[i32], a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (p, bl, t) = (
+            self.manifest.pairs,
+            self.manifest.block,
+            self.manifest.slots,
+        );
+        anyhow::ensure!(seg.len() == p, "seg len {} != {p}", seg.len());
+        anyhow::ensure!(a.len() == p * bl * bl, "a len {}", a.len());
+        anyhow::ensure!(b.len() == p * bl * bl, "b len {}", b.len());
+        let dims = [p as i64, bl as i64, bl as i64];
+        let seg_l = xla::Literal::vec1(seg);
+        let a_l = xla::Literal::vec1(a).reshape(&dims)?;
+        let b_l = xla::Literal::vec1(b).reshape(&dims)?;
+        let out = self.run("spmm_block", &[seg_l, a_l, b_l])?;
+        let v = out.to_vec::<f32>()?;
+        anyhow::ensure!(v.len() == t * bl * bl, "output len {}", v.len());
+        Ok(v)
+    }
+
+    /// Execute `spmm_pairs`: P tile pairs -> P product tiles.
+    pub fn spmm_pairs(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (p, bl) = (self.manifest.pairs, self.manifest.block);
+        anyhow::ensure!(a.len() == p * bl * bl && b.len() == p * bl * bl);
+        let dims = [p as i64, bl as i64, bl as i64];
+        let a_l = xla::Literal::vec1(a).reshape(&dims)?;
+        let b_l = xla::Literal::vec1(b).reshape(&dims)?;
+        let out = self.run("spmm_pairs", &[a_l, b_l])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute `dense_mm`: D×D × D×D -> D×D.
+    pub fn dense_mm(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let d = self.manifest.dense_dim;
+        anyhow::ensure!(x.len() == d * d && y.len() == d * d);
+        let dims = [d as i64, d as i64];
+        let x_l = xla::Literal::vec1(x).reshape(&dims)?;
+        let y_l = xla::Literal::vec1(y).reshape(&dims)?;
+        let out = self.run("dense_mm", &[x_l, y_l])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` and executes them from the Rust hot path. Python never
+//! runs at serve time — the build-time contract is enforced through
+//! [`artifact::Manifest`].
+
+pub mod artifact;
+pub mod engine;
+pub mod numeric;
+
+pub use artifact::Manifest;
+pub use engine::Engine;
+pub use numeric::{Backend, ExecReport, NumericEngine};

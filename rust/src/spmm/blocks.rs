@@ -1,0 +1,107 @@
+//! 32×32 blocking of CSR matrices — the block-granular mirror of the
+//! paper's comparator mesh for the TPU path (DESIGN.md §Hardware-Adaptation).
+//!
+//! A sparse matrix becomes a sorted list of non-empty `block × block` dense
+//! tiles keyed by block coordinates. The planner intersects two block grids
+//! along K exactly like the mesh's comparators intersect index streams,
+//! at R=32 (= block) granularity.
+
+use std::collections::BTreeMap;
+
+use crate::formats::csr::Csr;
+use crate::formats::traits::SparseMatrix;
+
+/// A blocked matrix: non-empty tiles as dense row-major `block²` buffers.
+#[derive(Clone, Debug)]
+pub struct BlockGrid {
+    pub block: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    /// (block_row, block_col) -> dense tile, sorted by key (row-major).
+    pub tiles: BTreeMap<(u32, u32), Vec<f32>>,
+}
+
+impl BlockGrid {
+    /// Tile count (the "useful computation" density at block granularity).
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Fraction of the block grid that is non-empty.
+    pub fn block_density(&self) -> f64 {
+        self.n_tiles() as f64 / (self.grid_rows * self.grid_cols).max(1) as f64
+    }
+}
+
+/// Blockize a CSR matrix. Ragged edges are zero-padded inside the tile.
+pub fn blockize(m: &Csr, block: usize) -> BlockGrid {
+    let (rows, cols) = m.shape();
+    let grid_rows = (rows + block - 1) / block;
+    let grid_cols = (cols + block - 1) / block;
+    let mut tiles: BTreeMap<(u32, u32), Vec<f32>> = BTreeMap::new();
+    for i in 0..rows {
+        let bi = (i / block) as u32;
+        let ri = i % block;
+        let (cs, vs) = m.row(i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            let bj = (c as usize / block) as u32;
+            let cj = c as usize % block;
+            tiles
+                .entry((bi, bj))
+                .or_insert_with(|| vec![0.0f32; block * block])[ri * block + cj] = v;
+        }
+    }
+    BlockGrid {
+        block,
+        rows,
+        cols,
+        grid_rows,
+        grid_cols,
+        tiles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::coo::Coo;
+
+    #[test]
+    fn tiles_cover_all_nonzeros() {
+        let m = uniform(37, 53, 0.1, 1);
+        let g = blockize(&m, 16);
+        assert_eq!(g.grid_rows, 3);
+        assert_eq!(g.grid_cols, 4);
+        let total: usize = g
+            .tiles
+            .values()
+            .map(|t| t.iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        assert_eq!(total, m.nnz());
+    }
+
+    #[test]
+    fn tile_contents_match_source() {
+        let m = Csr::from_coo(&Coo::new(
+            5,
+            5,
+            vec![(0, 0, 1.0), (1, 3, 2.0), (4, 4, 3.0)],
+        ));
+        let g = blockize(&m, 2);
+        assert_eq!(g.tiles[&(0, 0)][0], 1.0); // (0,0) within tile (0,0)
+        assert_eq!(g.tiles[&(0, 1)][1 * 2 + 1], 2.0); // (1,3) -> tile (0,1) cell (1,1)
+        assert_eq!(g.tiles[&(2, 2)][0], 3.0); // (4,4) -> tile (2,2) cell (0,0)
+        assert_eq!(g.n_tiles(), 3);
+    }
+
+    #[test]
+    fn empty_blocks_are_absent() {
+        let m = uniform(64, 64, 0.001, 2);
+        let g = blockize(&m, 32);
+        assert!(g.n_tiles() <= m.nnz().max(1));
+        assert!(g.block_density() <= 1.0);
+    }
+}

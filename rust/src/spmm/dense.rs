@@ -1,0 +1,89 @@
+//! Dense reference multiply — the numeric oracle every other SpMM path
+//! (Gustavson, inner-product, mesh functional sim, PJRT block kernel) is
+//! checked against.
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::traits::SparseMatrix;
+
+/// C = A × B via row-expansion of the CSR operands (exact, simple).
+pub fn multiply(a: &Csr, b: &Csr) -> Dense {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    let (m, n) = (a.rows(), b.cols());
+    let mut c = Dense::zeros(m, n);
+    for i in 0..m {
+        let (a_cols, a_vals) = a.row(i);
+        for (&k, &av) in a_cols.iter().zip(a_vals) {
+            let (b_cols, b_vals) = b.row(k as usize);
+            for (&j, &bv) in b_cols.iter().zip(b_vals) {
+                *c.at_mut(i, j as usize) += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Dense × dense (used by the conventional-MM numeric twin tests).
+pub fn multiply_dense(a: &Dense, b: &Dense) -> Dense {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2);
+    let mut c = Dense::zeros(m, n);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.at(i, kk);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                *c.at_mut(i, j) += av * b.at(kk, j);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::coo::Coo;
+
+    #[test]
+    fn hand_example() {
+        // [1 2] [5 6]   [19 22]
+        // [3 4]×[7 8] = [43 50]
+        let a = Csr::from_coo(&Coo::new(
+            2,
+            2,
+            vec![(0, 0, 1.0), (0, 1, 2.0), (1, 0, 3.0), (1, 1, 4.0)],
+        ));
+        let b = Csr::from_coo(&Coo::new(
+            2,
+            2,
+            vec![(0, 0, 5.0), (0, 1, 6.0), (1, 0, 7.0), (1, 1, 8.0)],
+        ));
+        let c = multiply(&a, &b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn csr_and_dense_paths_agree() {
+        let a = uniform(9, 14, 0.4, 1);
+        let b = uniform(14, 7, 0.4, 2);
+        let c1 = multiply(&a, &b);
+        let c2 = multiply_dense(
+            &crate::formats::dense::Dense::from_coo(&a.to_coo()),
+            &crate::formats::dense::Dense::from_coo(&b.to_coo()),
+        );
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_check() {
+        let a = uniform(2, 3, 0.5, 1);
+        let b = uniform(4, 2, 0.5, 2);
+        multiply(&a, &b);
+    }
+}

@@ -1,0 +1,91 @@
+//! Gustavson row-based SpMM (CRS × CRS → CRS) — the standard CPU algorithm
+//! when *both* operands are row-ordered. This is the baseline the paper's
+//! introduction contrasts with: it needs no column-order access at all, but
+//! it only exists because B is re-traversed per A-row; the accelerator path
+//! (and the paper's inner-product form) needs B by column.
+
+use crate::formats::csr::Csr;
+use crate::formats::traits::SparseMatrix;
+
+/// C = A × B with a sparse accumulator per output row.
+pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    let (m, n) = (a.rows(), b.cols());
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    row_ptr.push(0u32);
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+
+    // dense accumulator + touched list (classic Gustavson workspace)
+    let mut acc = vec![0.0f32; n];
+    let mut touched: Vec<u32> = Vec::new();
+
+    for i in 0..m {
+        let (a_cols, a_vals) = a.row(i);
+        for (&k, &av) in a_cols.iter().zip(a_vals) {
+            let (b_cols, b_vals) = b.row(k as usize);
+            for (&j, &bv) in b_cols.iter().zip(b_vals) {
+                if acc[j as usize] == 0.0 {
+                    touched.push(j);
+                }
+                acc[j as usize] += av * bv;
+            }
+        }
+        touched.sort_unstable();
+        for &j in &touched {
+            let v = acc[j as usize];
+            // numerical cancellation can produce exact zeros; keep them out
+            // of the sparse result to maintain the nnz invariant
+            if v != 0.0 {
+                col_idx.push(j);
+                vals.push(v);
+            }
+            acc[j as usize] = 0.0;
+        }
+        touched.clear();
+        row_ptr.push(col_idx.len() as u32);
+    }
+    Csr::from_parts(m, n, row_ptr, col_idx, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::dense::Dense;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    #[test]
+    fn matches_dense_reference() {
+        for seed in 0..5 {
+            let a = uniform(20, 30, 0.15, seed);
+            let b = uniform(30, 25, 0.2, seed + 50);
+            let c = multiply(&a, &b);
+            let want = dense_ref(&a, &b);
+            let got = Dense::from_coo(&c.to_coo());
+            assert!(got.max_abs_diff(&want) < 1e-4, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn result_rows_sorted_unique() {
+        let a = uniform(15, 40, 0.2, 9);
+        let b = uniform(40, 18, 0.2, 10);
+        let c = multiply(&a, &b);
+        for i in 0..15 {
+            let (cols, _) = c.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_operands() {
+        let a = uniform(5, 8, 0.0, 1);
+        let b = uniform(8, 6, 0.5, 2);
+        let c = multiply(&a, &b);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.shape(), (5, 6));
+    }
+}

@@ -1,0 +1,19 @@
+//! SpMM algorithms and the accelerator dispatch planner.
+//!
+//! * [`dense`] — the numeric oracle (row-expansion reference multiply).
+//! * [`gustavson`] — row-order CRS×CRS (the CPU baseline that *avoids*
+//!   column access).
+//! * [`inner`] — inner-product SpMM with column-order `locate` access to B
+//!   (the access pattern Tables I/II and Fig 3 measure).
+//! * [`blocks`]/[`plan`] — 32×32 blocking and sorted tile-pair dispatch
+//!   planning for the AOT Pallas kernel (the TPU re-expression of the
+//!   paper's comparator mesh, DESIGN.md §Hardware-Adaptation).
+
+pub mod blocks;
+pub mod dense;
+pub mod gustavson;
+pub mod inner;
+pub mod plan;
+
+pub use blocks::{blockize, BlockGrid};
+pub use plan::{plan, Dispatch, Geometry, Plan};

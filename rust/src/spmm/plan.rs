@@ -1,0 +1,290 @@
+//! Execution planner: blocked operands → sorted tile-pair dispatches for
+//! the AOT-compiled Pallas kernel (`spmm_block`).
+//!
+//! This is the Rust production twin of `python/compile/blocking.py` (the
+//! numpy reference used by pytest): block pairs sorted by output tile so
+//! the kernel's VMEM revisit-accumulation applies, chunked into fixed
+//! `PAIRS`-sized dispatches with ≤ `SLOTS` distinct output tiles each,
+//! zero-padded with the last real slot id.
+
+use super::blocks::{blockize, BlockGrid};
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::traits::SparseMatrix;
+
+/// Dispatch geometry — must equal the artifact manifest's values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    pub block: usize,
+    pub pairs: usize,
+    pub slots: usize,
+}
+
+impl Default for Geometry {
+    /// The shipped artifacts' geometry (python/compile/model.py).
+    fn default() -> Self {
+        Geometry {
+            block: 32,
+            pairs: 128,
+            slots: 64,
+        }
+    }
+}
+
+/// One accelerator call: `pairs` tile pairs, ≤ `slots` output tiles.
+#[derive(Clone, Debug)]
+pub struct Dispatch {
+    /// int32[pairs], sorted; padding repeats the last real id.
+    pub seg: Vec<i32>,
+    /// f32[pairs × block × block], flattened.
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub n_real: usize,
+    /// local slot -> output block coordinate.
+    pub slot_map: Vec<(u32, u32)>,
+}
+
+/// A full SpMM job plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub geom: Geometry,
+    pub out_rows: usize,
+    pub out_cols: usize,
+    pub dispatches: Vec<Dispatch>,
+    /// Total real (unpadded) tile-pair MACs worth of work.
+    pub total_pairs: usize,
+}
+
+/// Build the plan for C = A × B.
+pub fn plan(a: &Csr, b: &Csr, geom: Geometry) -> Plan {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    let ga = blockize(a, geom.block);
+    let gb = blockize(b, geom.block);
+    plan_grids(&ga, &gb, geom, a.rows(), b.cols())
+}
+
+fn plan_grids(ga: &BlockGrid, gb: &BlockGrid, geom: Geometry, m: usize, n: usize) -> Plan {
+    // index B's tiles by K-block for the intersection
+    let mut b_by_k: Vec<Vec<(u32, &Vec<f32>)>> = vec![Vec::new(); gb.grid_rows];
+    for (&(bk, bj), tile) in &gb.tiles {
+        b_by_k[bk as usize].push((bj, tile));
+    }
+
+    // flat sorted pair list grouped by output tile: BTreeMap iterates
+    // (bi,bk) in row-major order, so per out-tile K-order is preserved
+    let mut by_out: std::collections::BTreeMap<(u32, u32), Vec<(&Vec<f32>, &Vec<f32>)>> =
+        std::collections::BTreeMap::new();
+    for (&(bi, bk), a_tile) in &ga.tiles {
+        for &(bj, b_tile) in &b_by_k[bk as usize] {
+            by_out.entry((bi, bj)).or_default().push((a_tile, b_tile));
+        }
+    }
+
+    let tile_elems = geom.block * geom.block;
+    let mut dispatches = Vec::new();
+    let mut total_pairs = 0usize;
+
+    let mut cur = Dispatch {
+        seg: Vec::with_capacity(geom.pairs),
+        a: Vec::with_capacity(geom.pairs * tile_elems),
+        b: Vec::with_capacity(geom.pairs * tile_elems),
+        n_real: 0,
+        slot_map: Vec::new(),
+    };
+    let flush =
+        |cur: &mut Dispatch, out: &mut Vec<Dispatch>, geom: Geometry, tile_elems: usize| {
+            if cur.seg.is_empty() {
+                return;
+            }
+            cur.n_real = cur.seg.len();
+            let last = *cur.seg.last().unwrap();
+            while cur.seg.len() < geom.pairs {
+                cur.seg.push(last);
+                cur.a.extend(std::iter::repeat(0.0).take(tile_elems));
+                cur.b.extend(std::iter::repeat(0.0).take(tile_elems));
+            }
+            out.push(std::mem::replace(
+                cur,
+                Dispatch {
+                    seg: Vec::with_capacity(geom.pairs),
+                    a: Vec::with_capacity(geom.pairs * tile_elems),
+                    b: Vec::with_capacity(geom.pairs * tile_elems),
+                    n_real: 0,
+                    slot_map: Vec::new(),
+                },
+            ));
+        };
+
+    for (out_coord, pairs) in &by_out {
+        for (a_tile, b_tile) in pairs {
+            total_pairs += 1;
+            // open a new slot if this output tile isn't current
+            let need_new_slot = cur.slot_map.last() != Some(out_coord);
+            if (need_new_slot && cur.slot_map.len() == geom.slots)
+                || cur.seg.len() == geom.pairs
+            {
+                flush(&mut cur, &mut dispatches, geom, tile_elems);
+            }
+            if cur.slot_map.last() != Some(out_coord) {
+                cur.slot_map.push(*out_coord);
+            }
+            cur.seg.push(cur.slot_map.len() as i32 - 1);
+            cur.a.extend_from_slice(a_tile);
+            cur.b.extend_from_slice(b_tile);
+        }
+    }
+    flush(&mut cur, &mut dispatches, geom, tile_elems);
+
+    Plan {
+        geom,
+        out_rows: m,
+        out_cols: n,
+        dispatches,
+        total_pairs,
+    }
+}
+
+impl Plan {
+    /// Execute the plan with `exec(dispatch) -> slot tiles (slots×block²
+    /// flattened)` and scatter-accumulate into dense C. `exec` is the PJRT
+    /// engine in production and a CPU loop in tests.
+    pub fn execute<E, Err>(&self, mut exec: E) -> Result<Dense, Err>
+    where
+        E: FnMut(&Dispatch) -> Result<Vec<f32>, Err>,
+    {
+        let bsz = self.geom.block;
+        let grid_cols = (self.out_cols + bsz - 1) / bsz;
+        let padded_rows = ((self.out_rows + bsz - 1) / bsz) * bsz;
+        let mut c = Dense::zeros(padded_rows, grid_cols * bsz);
+        for d in &self.dispatches {
+            let tiles = exec(d)?;
+            debug_assert_eq!(tiles.len(), self.geom.slots * bsz * bsz);
+            for (slot, &(bi, bj)) in d.slot_map.iter().enumerate() {
+                let tile = &tiles[slot * bsz * bsz..(slot + 1) * bsz * bsz];
+                for r in 0..bsz {
+                    let ci = bi as usize * bsz + r;
+                    for cc in 0..bsz {
+                        *c.at_mut(ci, bj as usize * bsz + cc) += tile[r * bsz + cc];
+                    }
+                }
+            }
+        }
+        // crop padding
+        let mut out = Dense::zeros(self.out_rows, self.out_cols);
+        for i in 0..self.out_rows {
+            for j in 0..self.out_cols {
+                *out.at_mut(i, j) = c.at(i, j);
+            }
+        }
+        Ok(out)
+    }
+
+    /// CPU reference executor (the same math the Pallas kernel does) — used
+    /// by tests and as the no-artifact fallback engine.
+    pub fn execute_cpu(&self) -> Dense {
+        let bsz = self.geom.block;
+        let slots = self.geom.slots;
+        let r: Result<Dense, std::convert::Infallible> = self.execute(|d| {
+            let mut out = vec![0.0f32; slots * bsz * bsz];
+            for p in 0..d.n_real {
+                let slot = d.seg[p] as usize;
+                let at = &d.a[p * bsz * bsz..(p + 1) * bsz * bsz];
+                let bt = &d.b[p * bsz * bsz..(p + 1) * bsz * bsz];
+                let ot = &mut out[slot * bsz * bsz..(slot + 1) * bsz * bsz];
+                for i in 0..bsz {
+                    for k in 0..bsz {
+                        let av = at[i * bsz + k];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for j in 0..bsz {
+                            ot[i * bsz + j] += av * bt[k * bsz + j];
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        });
+        r.unwrap() // Infallible
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    fn small_geom() -> Geometry {
+        Geometry { block: 8, pairs: 6, slots: 3 }
+    }
+
+    #[test]
+    fn dispatches_respect_geometry() {
+        let a = uniform(32, 48, 0.2, 1);
+        let b = uniform(48, 40, 0.2, 2);
+        let p = plan(&a, &b, small_geom());
+        assert!(!p.dispatches.is_empty());
+        for d in &p.dispatches {
+            assert_eq!(d.seg.len(), 6);
+            assert_eq!(d.a.len(), 6 * 64);
+            assert!(d.slot_map.len() <= 3);
+            assert!(d.n_real >= 1 && d.n_real <= 6);
+            // sorted + grouped segments
+            for w in d.seg.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            // padding repeats the last real id
+            for k in d.n_real..6 {
+                assert_eq!(d.seg[k], d.seg[d.n_real - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_execution_matches_dense_reference() {
+        for seed in 0..4 {
+            let a = uniform(33, 47, 0.15, seed);
+            let b = uniform(47, 29, 0.18, seed + 9);
+            let p = plan(&a, &b, small_geom());
+            let got = p.execute_cpu();
+            let want = dense_ref(&a, &b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "seed {seed}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn group_split_across_dispatches_accumulates() {
+        // one output tile needing more pairs than P
+        let a = uniform(8, 128, 0.9, 3); // 1×16 blocks at block=8
+        let b = uniform(128, 8, 0.9, 4);
+        let p = plan(&a, &b, Geometry { block: 8, pairs: 3, slots: 2 });
+        assert!(p.dispatches.len() >= 3);
+        let got = p.execute_cpu();
+        let want = dense_ref(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn disjoint_structure_plans_nothing() {
+        use crate::formats::coo::Coo;
+        use crate::formats::csr::Csr;
+        let a = Csr::from_coo(&Coo::new(16, 16, vec![(0, 0, 1.0)]));
+        let b = Csr::from_coo(&Coo::new(16, 16, vec![(15, 15, 1.0)]));
+        let p = plan(&a, &b, Geometry { block: 8, pairs: 4, slots: 2 });
+        assert_eq!(p.total_pairs, 0);
+        assert!(p.dispatches.is_empty());
+        let c = p.execute_cpu();
+        assert!(c.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn default_geometry_matches_manifest_constants() {
+        let g = Geometry::default();
+        assert_eq!((g.block, g.pairs, g.slots), (32, 128, 64));
+    }
+}

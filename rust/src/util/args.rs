@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §2).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments,
+//! with typed getters that report usable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.entry(stripped.to_string()).or_default().push(v);
+                } else {
+                    out.flags.entry(stripped.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list, e.g. `--sizes 16,32,64`.
+    pub fn list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.parse::<T>().map_err(|e| format!("--{key} {p:?}: {e}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // note: a bare word after a flag is taken as that flag's value, so
+        // positionals must precede flags or follow `--key=value` forms
+        let a = parse(&["run", "extra", "--n", "64", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get::<usize>("n").unwrap(), Some(64));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--out=path/x.json", "--k=3"]);
+        assert_eq!(a.str_opt("out"), Some("path/x.json"));
+        assert_eq!(a.get_or::<u32>("k", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn repeated_takes_last_value() {
+        let a = parse(&["--n", "1", "--n", "2"]);
+        assert_eq!(a.get::<usize>("n").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse(&["--n", "abc"]);
+        let err = a.get::<usize>("n").unwrap_err();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn list_parse() {
+        let a = parse(&["--sizes", "16,32,64"]);
+        assert_eq!(a.list::<usize>("sizes").unwrap(), Some(vec![16, 32, 64]));
+        assert_eq!(a.list::<usize>("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.has("dry-run"));
+        assert_eq!(a.str_opt("dry-run"), Some(""));
+    }
+}

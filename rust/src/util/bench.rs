@@ -1,0 +1,86 @@
+//! Minimal benchmarking support (criterion is unavailable offline —
+//! DESIGN.md §2): warmup + N timed iterations, median/mean/min reporting,
+//! and a black-box to stop the optimizer from deleting work.
+
+use std::time::{Duration, Instant};
+
+/// Prevent dead-code elimination of a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// items/second at the median iteration time.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` runs) and report timing stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        iters,
+        median: times[iters / 2],
+        mean,
+        min: times[0],
+    }
+}
+
+/// Print one bench line in a stable, grep-able format.
+pub fn report(name: &str, r: BenchResult, items_per_iter: f64, unit: &str) {
+    println!(
+        "bench {name:<44} median {:>12?}  mean {:>12?}  {:>14.3e} {unit}/s",
+        r.median,
+        r.mean,
+        r.throughput(items_per_iter)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut n = 0u64;
+        let r = bench(2, 5, || {
+            n += 1;
+            black_box(n);
+        });
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            iters: 1,
+            median: Duration::from_millis(100),
+            mean: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+        };
+        assert!((r.throughput(1000.0) - 10_000.0).abs() < 1e-6);
+    }
+}

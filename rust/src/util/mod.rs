@@ -1,0 +1,19 @@
+//! Offline-friendly utilities: deterministic RNG, minimal JSON, CLI args,
+//! a mini property-testing harness, and table rendering.
+//!
+//! These exist because the build environment resolves crates from a vendored
+//! registry that contains only the `xla` crate's dependency closure
+//! (DESIGN.md §2) — so rand/serde/clap/proptest are replaced by ~600 lines
+//! of focused std-only code.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod tables;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use tables::Table;

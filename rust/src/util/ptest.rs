@@ -1,0 +1,121 @@
+//! Mini property-testing harness (proptest is unavailable offline —
+//! DESIGN.md §2).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it re-generates the failing input, attempts the registered
+//! shrink steps, and panics with the smallest reproducer plus the replay
+//! seed. Deliberately tiny: inputs are generated from a [`Rng`] so every
+//! failure is replayable from the printed case seed alone.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics on first failure
+/// after shrinking, printing the case seed for replay.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_shrink(seed, cases, &mut gen, |_| Vec::new(), &mut prop)
+}
+
+/// Like [`check`], with a `shrink` hook that proposes smaller variants of a
+/// failing input (tried breadth-first, greedily, up to 1000 steps).
+pub fn check_shrink<T, G, S, P>(seed: u64, cases: usize, gen: &mut G, shrink: S, prop: &mut P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut best = input;
+            let mut best_msg = first_msg;
+            let mut budget = 1000usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, case_seed {case_seed:#x}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            1,
+            50,
+            |r| r.below(100),
+            |&x| {
+                n += 1;
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            2,
+            100,
+            |r| r.below(1000),
+            |&x| if x < 990 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_smaller_reproducer() {
+        let caught = std::panic::catch_unwind(|| {
+            check_shrink(
+                3,
+                100,
+                &mut |r| r.below(1000) + 500,
+                |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+                &mut |&x| if x < 100 { Ok(()) } else { Err("big".into()) },
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving from >=500 lands exactly at the boundary region
+        assert!(msg.contains("input: 1") || msg.contains("input: 10"), "{msg}");
+    }
+}

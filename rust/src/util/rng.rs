@@ -1,0 +1,221 @@
+//! Deterministic PRNG (xoshiro256**) — every dataset, test, and benchmark in
+//! this repo is reproducible from a seed; no OS entropy anywhere.
+
+/// xoshiro256** by Blackman & Vigna (public domain reference implementation).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via splitmix64 so that small/consecutive seeds give unrelated
+    /// streams.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (bound > 0).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box-Muller (one value; fine for non-hot paths).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct values from `[0, n)`, sorted ascending.
+    ///
+    /// Uses a bitmap-rejection strategy (O(k) expected when k << n, Floyd
+    /// fallback when dense) — this is the dataset-generator hot loop.
+    pub fn sample_sorted(&mut self, n: usize, k: usize, scratch: &mut Vec<u64>) -> Vec<u32> {
+        assert!(k <= n, "sample {k} from {n}");
+        if k * 2 >= n {
+            // dense: shuffle a full index vector prefix
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            for i in 0..k {
+                let j = i + self.usize_below(n - i);
+                all.swap(i, j);
+            }
+            let mut out = all[..k].to_vec();
+            out.sort_unstable();
+            return out;
+        }
+        let words = (n + 63) / 64;
+        scratch.clear();
+        scratch.resize(words, 0);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let v = self.usize_below(n);
+            let (w, b) = (v / 64, v % 64);
+            if scratch[w] >> b & 1 == 0 {
+                scratch[w] |= 1 << b;
+                out.push(v as u32);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn below_roughly_uniform() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 8];
+        for _ in 0..80_000 {
+            counts[r.below(8) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).abs() < 800, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_sorted_distinct_and_sorted() {
+        let mut r = Rng::new(5);
+        let mut scratch = Vec::new();
+        for &(n, k) in &[(100usize, 5usize), (100, 60), (1000, 999), (10, 10), (1, 1)] {
+            let s = r.sample_sorted(n, k, &mut scratch);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted: {s:?}");
+            }
+            assert!(s.iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn sample_sorted_zero() {
+        let mut r = Rng::new(5);
+        let mut scratch = Vec::new();
+        assert!(r.sample_sorted(10, 0, &mut scratch).is_empty());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,144 @@
+//! Aligned table printer — every experiment driver reports its results as a
+//! paper-style table through this.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with engineering-style precision (3 significant-ish digits).
+pub fn sig(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    if a >= 1e6 {
+        format!("{:.3e}", x)
+    } else if a >= 100.0 {
+        format!("{:.0}", x)
+    } else if a >= 10.0 {
+        format!("{:.1}", x)
+    } else if a >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.3}", x)
+    }
+}
+
+/// Human-readable large integer (e.g. 12_345_678 -> "12.3M").
+pub fn human(x: u64) -> String {
+    let x = x as f64;
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{}", x as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn sig_formats() {
+        assert_eq!(sig(0.0), "0");
+        assert_eq!(sig(3.14159), "3.14");
+        assert_eq!(sig(42.123), "42.1");
+        assert_eq!(sig(1234.6), "1235");
+        assert_eq!(sig(0.001234), "0.001");
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(999), "999");
+        assert_eq!(human(12_345), "12.3k");
+        assert_eq!(human(12_345_678), "12.35M");
+        assert_eq!(human(2_500_000_000), "2.50G");
+    }
+}

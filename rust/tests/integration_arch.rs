@@ -1,0 +1,150 @@
+//! Integration: the three architecture simulators against each other and
+//! against the numeric oracle, at mesh scales beyond the unit tests.
+
+use spmm_accel::arch::conventional::{cycles as conv_cycles, ConvMmConfig};
+use spmm_accel::arch::fpic::{simulate as fpic_simulate, Fidelity, FpicConfig};
+use spmm_accel::arch::sync_mesh::{cycle_model, multiply_functional, SyncMeshConfig};
+use spmm_accel::datasets::spec::{ColumnDist, DatasetSpec, NnzRow};
+use spmm_accel::datasets::synth::{generate, uniform};
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::spmm::dense::multiply as dense_ref;
+
+#[test]
+fn functional_mesh_equals_oracle_at_16x16() {
+    let a = uniform(40, 96, 0.15, 1);
+    let b = uniform(96, 35, 0.12, 2);
+    let b_t = b.transpose();
+    let (c, stats) = multiply_functional(&a, &b_t, SyncMeshConfig { mesh: 16, round: 32 });
+    let want = dense_ref(&a, &b);
+    assert!(c.max_abs_diff(&want) < 1e-3, "{}", c.max_abs_diff(&want));
+    // cycle model must agree exactly
+    let m = cycle_model(&a, &b_t, SyncMeshConfig { mesh: 16, round: 32 });
+    assert_eq!(stats.cycles, m.cycles);
+    assert_eq!(stats.macs, m.macs);
+}
+
+#[test]
+fn functional_mesh_handles_non_divisible_dims() {
+    // ragged tiles: 13 rows, 11 cols on an 8x8 mesh
+    let a = uniform(13, 50, 0.3, 3);
+    let b = uniform(50, 11, 0.3, 4);
+    let b_t = b.transpose();
+    let (c, _) = multiply_functional(&a, &b_t, SyncMeshConfig { mesh: 8, round: 16 });
+    assert!(c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+}
+
+#[test]
+fn fpic_exact_equals_oracle_and_maxnode_tracks_it() {
+    let a = uniform(48, 300, 0.06, 5);
+    let (exact, c) = fpic_simulate(
+        &a,
+        &a,
+        FpicConfig {
+            units: 1,
+            fidelity: Fidelity::Exact,
+            ..FpicConfig::default()
+        },
+    );
+    let a_t = a.transpose();
+    let want = dense_ref(&a, &a_t);
+    assert!(c.unwrap().max_abs_diff(&want) < 1e-3);
+    let (fast, _) = fpic_simulate(&a, &a, FpicConfig::default());
+    let rel = (exact.cycles as f64 - fast.cycles as f64).abs() / exact.cycles as f64;
+    assert!(rel < 0.15, "exact {} vs fast {}", exact.cycles, fast.cycles);
+}
+
+#[test]
+fn round_size_tradeoff_on_sync_mesh() {
+    // paper §IV.B.b: larger R -> less synchronization (fewer, longer
+    // rounds); with uniform data the cycle count is non-increasing in R
+    let a = uniform(128, 512, 0.05, 6);
+    let mut prev = u64::MAX;
+    for r in [8usize, 16, 32, 64] {
+        let s = cycle_model(&a, &a, SyncMeshConfig { mesh: 16, round: r });
+        assert!(
+            s.cycles <= prev + prev / 10,
+            "R={r}: {} vs prev {prev}",
+            s.cycles
+        );
+        prev = s.cycles;
+    }
+}
+
+#[test]
+fn fig5_shape_at_reduced_scale() {
+    // one banded sparse + one dense dataset through all four designs
+    let banded = DatasetSpec {
+        name: "banded",
+        rows: 2_000,
+        cols: 2_000,
+        stated_density: 0.002,
+        nnz_row: NnzRow { min: 1, avg: 4.0, max: 16 },
+        dist: ColumnDist::Banded(256),
+    };
+    let a_sparse = generate(&banded, 7);
+    let a_dense = uniform(600, 2_000, 0.14, 8);
+
+    for (name, a) in [("banded-sparse", &a_sparse), ("dense", &a_dense)] {
+        let sync = cycle_model(a, a, SyncMeshConfig { mesh: 64, round: 32 });
+        let (fp, _) = fpic_simulate(
+            a,
+            a,
+            FpicConfig { units: 8, ..FpicConfig::default() },
+        );
+        let conv = conv_cycles(a.rows(), a.rows(), a.cols(), ConvMmConfig { mesh: 96 });
+        // the headline: sync mesh is fastest on both ends of the density range
+        assert!(
+            fp.cycles > sync.cycles,
+            "{name}: FPIC {} !> sync {}",
+            fp.cycles,
+            sync.cycles
+        );
+        assert!(
+            conv.cycles > sync.cycles,
+            "{name}: conv {} !> sync {}",
+            conv.cycles,
+            sync.cycles
+        );
+    }
+
+    // crossover: conventional MM is *relatively* better on dense data
+    let sync_d = cycle_model(&a_dense, &a_dense, SyncMeshConfig { mesh: 64, round: 32 });
+    let conv_d = conv_cycles(600, 600, 2_000, ConvMmConfig { mesh: 96 });
+    let sync_s = cycle_model(&a_sparse, &a_sparse, SyncMeshConfig { mesh: 64, round: 32 });
+    let conv_s = conv_cycles(2_000, 2_000, 2_000, ConvMmConfig { mesh: 96 });
+    let ratio_dense = conv_d.cycles as f64 / sync_d.cycles as f64;
+    let ratio_sparse = conv_s.cycles as f64 / sync_s.cycles as f64;
+    assert!(
+        ratio_sparse > ratio_dense,
+        "conv should fall behind on sparse: {ratio_sparse} !> {ratio_dense}"
+    );
+}
+
+#[test]
+fn utilization_accounting_is_consistent() {
+    let a = uniform(64, 256, 0.1, 9);
+    let s = cycle_model(&a, &a, SyncMeshConfig { mesh: 16, round: 32 });
+    let macs_direct = spmm_accel::arch::useful_macs(&a, &a);
+    assert_eq!(s.macs, macs_direct);
+    let u = s.utilization(16);
+    assert!(u > 0.0 && u < 1.0, "{u}");
+}
+
+#[test]
+fn fpic_bandwidth_ablation_matters_on_heavy_rows() {
+    // with 1400-nz rows the duplicate-fetch bound dominates merges
+    let a = uniform(64, 10_000, 0.14, 10);
+    let (with_bw, _) = fpic_simulate(&a, &a, FpicConfig::default());
+    let (no_bw, _) = fpic_simulate(
+        &a,
+        &a,
+        FpicConfig { model_bandwidth: false, ..FpicConfig::default() },
+    );
+    assert!(
+        with_bw.cycles > 2 * no_bw.cycles,
+        "bandwidth bound should dominate: {} vs {}",
+        with_bw.cycles,
+        no_bw.cycles
+    );
+    assert!(with_bw.fill_bound_tiles > 0);
+}

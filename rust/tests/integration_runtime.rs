@@ -1,0 +1,116 @@
+//! Integration: the PJRT runtime executing the AOT-compiled Pallas kernels
+//! against the CPU oracle — the proof that L1 (Pallas), L2 (JAX graph) and
+//! L3 (Rust planner/runtime) compose.
+//!
+//! Requires `make artifacts`. Tests are skipped (not failed) when the
+//! artifact directory is absent so `cargo test` works pre-build, but CI and
+//! the Makefile always build artifacts first.
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::dense::Dense;
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::runtime::{Manifest, NumericEngine};
+use spmm_accel::spmm::dense::multiply as dense_ref;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_spmm_matches_oracle_across_densities() {
+    let dir = require_artifacts!();
+    let eng = NumericEngine::pjrt(&dir).expect("engine");
+    for (density, seed) in [(0.01, 1u64), (0.05, 2), (0.2, 3)] {
+        let a = uniform(100, 150, density, seed);
+        let b = uniform(150, 90, density, seed + 10);
+        let (c, report) = eng.spmm(&a, &b).expect("spmm");
+        let want = dense_ref(&a, &b);
+        let err = c.max_abs_diff(&want);
+        assert!(err < 1e-3, "density {density}: err {err}");
+        if a.nnz() > 0 && b.nnz() > 0 {
+            assert!(report.dispatches >= 1);
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_cpu_backends_agree_exactly_in_structure() {
+    let dir = require_artifacts!();
+    let pjrt = NumericEngine::pjrt(&dir).expect("engine");
+    let cpu = NumericEngine::cpu(pjrt.geometry());
+    let a = uniform(64, 128, 0.08, 5);
+    let b = uniform(128, 64, 0.08, 6);
+    let (c1, r1) = pjrt.spmm(&a, &b).unwrap();
+    let (c2, r2) = cpu.spmm(&a, &b).unwrap();
+    assert_eq!(r1.dispatches, r2.dispatches);
+    assert_eq!(r1.real_pairs, r2.real_pairs);
+    assert!(c1.max_abs_diff(&c2) < 1e-4);
+}
+
+#[test]
+fn pjrt_empty_and_tiny_jobs() {
+    let dir = require_artifacts!();
+    let eng = NumericEngine::pjrt(&dir).expect("engine");
+    // structurally empty product
+    let a = uniform(40, 40, 0.0, 1);
+    let (c, report) = eng.spmm(&a, &a).unwrap();
+    assert!(c.data.iter().all(|&v| v == 0.0));
+    assert_eq!(report.dispatches, 0);
+    // single-element matrices (padded up to one 32-block)
+    let one = spmm_accel::formats::Csr::from_coo(&spmm_accel::formats::Coo::new(
+        1,
+        1,
+        vec![(0, 0, 3.0)],
+    ));
+    let (c, _) = eng.spmm(&one, &one).unwrap();
+    assert!((c.at(0, 0) - 9.0).abs() < 1e-5);
+}
+
+#[test]
+fn dense_mm_artifact_matches_cpu() {
+    let dir = require_artifacts!();
+    let eng = NumericEngine::pjrt(&dir).expect("engine");
+    let d = 256; // manifest dense_dim
+    let mut rng = spmm_accel::util::rng::Rng::new(3);
+    let x = Dense::new(d, d, (0..d * d).map(|_| rng.f32() - 0.5).collect());
+    let y = Dense::new(d, d, (0..d * d).map(|_| rng.f32() - 0.5).collect());
+    let got = eng.dense_mm(&x, &y).unwrap();
+    let want = spmm_accel::spmm::dense::multiply_dense(&x, &y);
+    // 256-term f32 dot products: allow accumulation-order slack
+    assert!(got.max_abs_diff(&want) < 1e-2, "{}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn manifest_geometry_drives_the_planner() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.block, 32);
+    assert_eq!(m.pairs, 128);
+    assert_eq!(m.slots, 64);
+    let eng = NumericEngine::pjrt(&dir).unwrap();
+    assert_eq!(eng.geometry().block, m.block);
+}
+
+#[test]
+fn rectangular_and_unaligned_shapes() {
+    let dir = require_artifacts!();
+    let eng = NumericEngine::pjrt(&dir).expect("engine");
+    let a = uniform(33, 130, 0.1, 7);
+    let b = uniform(130, 61, 0.1, 8);
+    let (c, _) = eng.spmm(&a, &b).unwrap();
+    assert_eq!(c.shape(), (33, 61));
+    assert!(c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+}

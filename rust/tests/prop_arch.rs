@@ -1,0 +1,171 @@
+//! Property tests over the architecture simulators and the dispatch
+//! planner: functional correctness of Algorithm 2, model agreement, and
+//! exactly-once plan coverage.
+
+use spmm_accel::arch::fpic::{simulate as fpic_simulate, Fidelity, FpicConfig};
+use spmm_accel::arch::sync_mesh::{cycle_model, multiply_functional, SyncMeshConfig};
+use spmm_accel::coordinator::split_batches;
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::formats::Csr;
+use spmm_accel::spmm::dense::multiply as dense_ref;
+use spmm_accel::spmm::plan::{plan, Geometry};
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+fn arb_pair(rng: &mut Rng) -> (Csr, Csr) {
+    let m = 1 + rng.usize_below(30);
+    let k = 1 + rng.usize_below(60);
+    let n = 1 + rng.usize_below(25);
+    let da = rng.f64() * 0.4;
+    let db = rng.f64() * 0.4;
+    (
+        uniform(m, k, da, rng.next_u64()),
+        uniform(k, n, db, rng.next_u64()),
+    )
+}
+
+#[test]
+fn prop_sync_mesh_computes_spmm() {
+    check(0xA0, 20, arb_pair, |(a, b)| {
+        let b_t = b.transpose();
+        let mesh = 4;
+        let (c, _) = multiply_functional(a, &b_t, SyncMeshConfig { mesh, round: 8 });
+        let want = dense_ref(a, b);
+        let diff = c.max_abs_diff(&want);
+        if diff > 1e-3 {
+            return Err(format!("max diff {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cycle_model_matches_functional_sim() {
+    check(0xA1, 15, arb_pair, |(a, b)| {
+        let b_t = b.transpose();
+        for (mesh, round) in [(2usize, 8usize), (4, 16), (8, 32)] {
+            let cfg = SyncMeshConfig { mesh, round };
+            let (_, f) = multiply_functional(a, &b_t, cfg);
+            let m = cycle_model(a, &b_t, cfg);
+            if f.cycles != m.cycles {
+                return Err(format!(
+                    "mesh {mesh} round {round}: functional {} != model {}",
+                    f.cycles, m.cycles
+                ));
+            }
+            if f.macs != m.macs {
+                return Err(format!("macs {} != {}", f.macs, m.macs));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fpic_exact_computes_spmm() {
+    check(0xA2, 15, arb_pair, |(a, b)| {
+        let b_t = b.transpose();
+        let (_, c) = fpic_simulate(
+            a,
+            &b_t,
+            FpicConfig {
+                units: 1,
+                fidelity: Fidelity::Exact,
+                ..FpicConfig::default()
+            },
+        );
+        let diff = c.unwrap().max_abs_diff(&dense_ref(a, b));
+        if diff > 1e-3 {
+            return Err(format!("max diff {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_covers_every_block_pair_exactly_once() {
+    check(0xA3, 25, arb_pair, |(a, b)| {
+        let geom = Geometry { block: 8, pairs: 5, slots: 3 };
+        let p = plan(a, b, geom);
+        // real pairs across dispatches == total_pairs
+        let counted: usize = p.dispatches.iter().map(|d| d.n_real).sum();
+        if counted != p.total_pairs {
+            return Err(format!("{counted} != {}", p.total_pairs));
+        }
+        // executing the plan on CPU equals the oracle (coverage + no dup)
+        let got = p.execute_cpu();
+        let want = dense_ref(a, b);
+        let diff = got.max_abs_diff(&want);
+        if diff > 1e-3 {
+            return Err(format!("exec diff {diff}"));
+        }
+        // geometry invariants
+        for d in &p.dispatches {
+            if d.seg.len() != geom.pairs || d.slot_map.len() > geom.slots {
+                return Err("dispatch geometry violated".into());
+            }
+            if d.seg.windows(2).any(|w| w[0] > w[1]) {
+                return Err("segments not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_insensitive_to_geometry() {
+    // any (pairs, slots) chunking computes the same product
+    check(0xA4, 15, arb_pair, |(a, b)| {
+        let want = dense_ref(a, b);
+        for (pairs, slots) in [(2usize, 1usize), (7, 2), (16, 16), (64, 4)] {
+            let p = plan(a, b, Geometry { block: 16, pairs, slots });
+            let got = p.execute_cpu();
+            let diff = got.max_abs_diff(&want);
+            if diff > 1e-3 {
+                return Err(format!("P={pairs} T={slots}: diff {diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batches_partition_any_plan() {
+    check(
+        0xA5,
+        200,
+        |rng| (rng.usize_below(500), 1 + rng.usize_below(16)),
+        |&(n, w)| {
+            let b = split_batches(n, w);
+            let total: usize = b.iter().map(|x| x.len()).sum();
+            if total != n {
+                return Err(format!("covered {total} of {n}"));
+            }
+            for pair in b.windows(2) {
+                if pair[0].end != pair[1].start {
+                    return Err("gap or overlap".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mesh_size_speedup_is_monotone_in_work() {
+    // a bigger mesh never increases cycle count (same round size)
+    check(0xA6, 10, arb_pair, |(a, b)| {
+        let b_t = b.transpose();
+        let mut prev = u64::MAX;
+        for mesh in [2usize, 4, 8, 16] {
+            let s = cycle_model(a, &b_t, SyncMeshConfig { mesh, round: 16 });
+            // allow the fill-skew term to add mesh cycles for tiny inputs
+            if s.cycles > prev.saturating_add(16 * 16) {
+                return Err(format!("mesh {mesh}: {} > prev {prev}", s.cycles));
+            }
+            prev = s.cycles;
+        }
+        Ok(())
+    });
+}

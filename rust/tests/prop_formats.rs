@@ -1,0 +1,173 @@
+//! Property tests (custom `util::ptest` harness — proptest is unavailable
+//! offline) over the format layer's invariants.
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::formats::convert::{from_coo, ALL_KINDS};
+use spmm_accel::formats::incrs::{InCrs, InCrsParams};
+use spmm_accel::formats::traits::{CountSink, SparseMatrix};
+use spmm_accel::formats::{Coo, Csr};
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+/// Random COO matrix with random shape/density.
+fn arb_coo(rng: &mut Rng) -> Coo {
+    let rows = 1 + rng.usize_below(40);
+    let cols = 1 + rng.usize_below(600);
+    let density = rng.f64() * 0.3;
+    uniform(rows, cols, density, rng.next_u64()).to_coo()
+}
+
+#[test]
+fn prop_every_format_roundtrips_coo() {
+    check(0xF0, 40, arb_coo, |coo| {
+        for kind in ALL_KINDS {
+            let m = from_coo(kind, coo).map_err(|e| format!("{kind:?}: {e}"))?;
+            if m.to_coo().entries != coo.entries {
+                return Err(format!("{kind:?} round-trip mismatch"));
+            }
+            if m.nnz() != coo.nnz() {
+                return Err(format!("{kind:?} nnz {} != {}", m.nnz(), coo.nnz()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_locate_agrees_across_all_formats() {
+    check(0xF1, 25, arb_coo, |coo| {
+        let mats: Vec<_> = ALL_KINDS
+            .iter()
+            .map(|&k| from_coo(k, coo).unwrap())
+            .collect();
+        let (rows, cols) = coo.shape();
+        let mut rng = Rng::new(coo.nnz() as u64 + 1);
+        for _ in 0..60 {
+            let i = rng.usize_below(rows);
+            let j = rng.usize_below(cols);
+            let want = coo.get(i, j);
+            for m in &mats {
+                let got = m.get(i, j).filter(|&v| v != 0.0);
+                if got != want {
+                    return Err(format!(
+                        "{:?} ({i},{j}): {got:?} != {want:?}",
+                        m.kind()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incrs_counters_are_prefix_sums() {
+    check(0xF2, 40, arb_coo, |coo| {
+        let csr = Csr::from_coo(coo);
+        let params = InCrsParams { section: 64, block: 8 };
+        let incrs = InCrs::from_csr_params(&csr, params).map_err(|e| e)?;
+        let spr = (coo.shape().1 + 63) / 64;
+        for i in 0..coo.shape().0 {
+            let (cs, _) = csr.row(i);
+            for s in 0..spr {
+                let word = incrs.counters[i * spr + s];
+                let prefix = (word & 0xFFFF) as usize;
+                let want_prefix = cs.iter().filter(|&&c| (c as usize) < s * 64).count();
+                if prefix != want_prefix {
+                    return Err(format!(
+                        "row {i} section {s}: prefix {prefix} != {want_prefix}"
+                    ));
+                }
+                // block counts sum to the section population
+                let bits = params.bits_per_block();
+                let mask = (1u64 << bits) - 1;
+                let in_section: u64 = (0..8)
+                    .map(|b| (word >> (16 + b * bits)) & mask)
+                    .sum();
+                let want_in = cs
+                    .iter()
+                    .filter(|&&c| (c as usize) >= s * 64 && (c as usize) < (s + 1) * 64)
+                    .count() as u64;
+                if in_section != want_in {
+                    return Err(format!(
+                        "row {i} section {s}: counts {in_section} != {want_in}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incrs_never_costs_more_than_csr_plus_constant() {
+    check(0xF3, 30, arb_coo, |coo| {
+        let csr = Csr::from_coo(coo);
+        let incrs = match InCrs::from_csr(&csr) {
+            Ok(x) => x,
+            Err(e) => return Err(e),
+        };
+        let (rows, cols) = coo.shape();
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let i = rng.usize_below(rows);
+            let j = rng.usize_below(cols);
+            let mut c1 = CountSink::default();
+            let v1 = csr.locate(i, j, &mut c1);
+            let mut c2 = CountSink::default();
+            let v2 = incrs.locate(i, j, &mut c2);
+            if v1 != v2 {
+                return Err(format!("value mismatch at ({i},{j})"));
+            }
+            // InCRS adds the counter read but skips most of the scan; it can
+            // never exceed CRS by more than the one counter access
+            if c2.total > c1.total + 1 {
+                return Err(format!(
+                    "({i},{j}): InCRS {} > CRS {} + 1",
+                    c2.total, c1.total
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_storage_words_ordering() {
+    // dense >= ELLPACK >= CRS for typical sparse matrices; InCRS adds only
+    // counter words over CRS
+    check(0xF4, 30, arb_coo, |coo| {
+        let (rows, cols) = coo.shape();
+        if coo.nnz() == 0 {
+            return Ok(());
+        }
+        let dense = from_coo(spmm_accel::formats::FormatKind::Dense, coo).unwrap();
+        let csr = from_coo(spmm_accel::formats::FormatKind::Csr, coo).unwrap();
+        let incrs = from_coo(spmm_accel::formats::FormatKind::InCrs, coo).unwrap();
+        if dense.storage_words() != rows * cols {
+            return Err("dense storage wrong".into());
+        }
+        let spr = (cols + 255) / 256;
+        if incrs.storage_words() != csr.storage_words() + rows * spr {
+            return Err(format!(
+                "InCRS {} != CRS {} + counters {}",
+                incrs.storage_words(),
+                csr.storage_words(),
+                rows * spr
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_is_involution() {
+    check(0xF5, 40, arb_coo, |coo| {
+        let csr = Csr::from_coo(coo);
+        let tt = csr.transpose().transpose();
+        if tt.row_ptr != csr.row_ptr || tt.col_idx != csr.col_idx || tt.vals != csr.vals {
+            return Err("transpose twice != identity".into());
+        }
+        Ok(())
+    });
+}
