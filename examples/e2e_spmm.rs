@@ -28,7 +28,7 @@ use spmm_accel::arch::{
 };
 use spmm_accel::cachesim::{compare, HierarchyConfig};
 use spmm_accel::coordinator::{
-    route, EngineKind, JobOptions, RoutingPolicy, Server, ServerConfig, SpmmJob,
+    route, JobOptions, RoutingPolicy, Server, ServerConfig, SpmmJob,
 };
 use spmm_accel::datasets::spec::table2_by_name;
 use spmm_accel::datasets::synth::generate;
@@ -75,8 +75,11 @@ fn main() {
     let artifacts = Manifest::default_dir().join("manifest.json").exists();
     let r = route(&b, true, artifacts, &RoutingPolicy::default());
     println!(
-        "[2] route: access={:?} engine={:?} (est. MA ratio {})",
-        r.access, r.engine, sig(r.estimated_ma_ratio)
+        "[2] route: access={:?} kernel={}/{} (est. MA ratio {})",
+        r.access,
+        r.kernel.0.name(),
+        r.kernel.1.name(),
+        sig(r.estimated_ma_ratio)
     );
 
     // ---- 3. representation (contribution 1) -------------------------------
@@ -129,13 +132,13 @@ fn main() {
     );
 
     // ---- 5 & 6. numerics through the serving stack ------------------------
-    let engine_kind = if artifacts { EngineKind::Pjrt } else { EngineKind::Cpu };
     let server = Server::start(ServerConfig {
         workers: 2,
         queue_depth: 8,
-        engine: engine_kind,
+        prefer_pjrt: artifacts,
         geometry: Geometry::default(),
         artifacts_dir: Manifest::default_dir(),
+        ..Default::default()
     });
     let a = Arc::new(a);
     let b = Arc::new(b);
@@ -147,6 +150,7 @@ fn main() {
                 SpmmJob::new(i, a.clone(), b.clone()).with_opts(JobOptions {
                     verify: i == 0, // verify the first job against the oracle
                     keep_result: false,
+                    kernel: None,
                 }),
             )
         })

@@ -8,9 +8,9 @@
 
 use spmm_accel::access::locate::measure;
 use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
 use spmm_accel::formats::incrs::InCrs;
-use spmm_accel::formats::traits::{CountSink, SparseMatrix};
-use spmm_accel::runtime::NumericEngine;
+use spmm_accel::formats::traits::{CountSink, FormatKind, SparseMatrix};
 use spmm_accel::spmm::plan::Geometry;
 
 fn main() {
@@ -53,19 +53,35 @@ fn main() {
         sink.site(spmm_accel::formats::Site::Counter)
     );
 
-    // 5. SpMM through the accelerator dispatch path (32x32 block pairs).
-    //    Use `NumericEngine::pjrt(Path::new("artifacts"))` after
-    //    `make artifacts` to run the AOT Pallas kernel instead.
-    let engine = NumericEngine::cpu(Geometry::default());
+    // 5. SpMM through the kernel registry: resolve the accelerator-plan
+    //    kernel (32x32 block pairs; PJRT-backed with `--features pjrt` and
+    //    `make artifacts`, its CPU twin otherwise).
+    let registry = Registry::with_default_kernels(Geometry::default(), 4);
+    let block = registry
+        .resolve(FormatKind::Csr, Algorithm::Block)
+        .expect("block kernel registered");
     let a = uniform(96, 200, 0.1, 1);
-    let (c, report) = engine.spmm(&a, &b).expect("spmm");
+    let out = block.run(&a, &b).expect("spmm");
     let oracle = spmm_accel::spmm::dense::multiply(&a, &b);
     println!(
-        "C = A x B: {}x{}, {} dispatches, {} real tile pairs, max err {:.2e}",
-        c.shape().0,
-        c.shape().1,
-        report.dispatches,
-        report.real_pairs,
-        c.max_abs_diff(&oracle)
+        "C = A x B via {}: {}x{}, {} dispatches, {} real tile pairs, max err {:.2e}",
+        block.name(),
+        out.c.shape().0,
+        out.c.shape().1,
+        out.stats.dispatches,
+        out.stats.real_pairs,
+        out.c.max_abs_diff(&oracle)
+    );
+
+    // 6. or let the registry pick by cost hint (Gustavson / inner-InCRS /
+    //    tiled / block, whichever estimates cheapest for these operands)
+    let auto = registry.select(&a, &b).expect("non-empty registry");
+    let out = auto.run(&a, &b).expect("spmm");
+    println!(
+        "auto-selected kernel: {} ({}/{}), max err {:.2e}",
+        auto.name(),
+        auto.format().name(),
+        auto.algorithm().name(),
+        out.c.max_abs_diff(&oracle)
     );
 }

@@ -8,9 +8,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use spmm_accel::coordinator::{
-    EngineKind, JobOptions, Server, ServerConfig, SpmmJob,
+    JobOptions, KernelSpec, Server, ServerConfig, SpmmJob,
 };
 use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::Algorithm;
 use spmm_accel::runtime::Manifest;
 use spmm_accel::spmm::plan::Geometry;
 use spmm_accel::util::args::Args;
@@ -22,16 +23,21 @@ fn main() {
     let jobs_per_client = args.get_or("jobs-per-client", 10usize).unwrap();
     let backend = args.str_or("backend", "cpu").to_string();
 
-    let engine = if backend == "pjrt" {
-        EngineKind::Pjrt
-    } else {
-        EngineKind::Cpu
+    // jobs resolve through the kernel registry: the block (accelerator
+    // plan) kernel by default, PJRT-backed when artifacts are available;
+    // KernelSpec::for_algorithm maps each algorithm to the B-format its
+    // kernel is registered under (shared with the `spmm-accel` CLI)
+    let kernel = match args.str_or("kernel", "block") {
+        "auto" => KernelSpec::Auto,
+        name => KernelSpec::for_algorithm(Algorithm::parse(name).expect("--kernel")),
     };
     let server = Arc::new(Server::start(ServerConfig {
         workers,
         queue_depth: 4, // small on purpose: exercise backpressure
-        engine,
+        kernel,
+        prefer_pjrt: backend == "pjrt",
         geometry: Geometry::default(),
+        tile_workers: args.get_or("tile-workers", 1usize).unwrap(),
         artifacts_dir: Manifest::default_dir(),
     }));
 
@@ -56,7 +62,11 @@ fn main() {
                     a.clone(),
                     a,
                 )
-                .with_opts(JobOptions { verify: false, keep_result: false });
+                .with_opts(JobOptions {
+                    verify: false,
+                    keep_result: false,
+                    kernel: None,
+                });
                 // first try without blocking, then block (backpressure)
                 let rx = match server.try_submit(job) {
                     Ok(rx) => rx,
@@ -87,13 +97,16 @@ fn main() {
         total_done as f64 / wall.as_secs_f64()
     );
     println!(
-        "metrics: completed={} failed={} dispatches={} tile-pairs={} p50={}us p99={}us busy={:.1}ms",
+        "metrics: completed={} failed={} dispatches={} tile-pairs={} p50={}us p99={}us \
+         queue p50={}us p99={}us busy={:.1}ms",
         snap.jobs_completed,
         snap.jobs_failed,
         snap.dispatches,
         snap.real_pairs,
         snap.p50_us,
         snap.p99_us,
+        snap.queue_p50_us,
+        snap.queue_p99_us,
         snap.busy_ns as f64 / 1e6
     );
     match Arc::try_unwrap(server) {

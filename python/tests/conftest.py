@@ -1,8 +1,10 @@
 import os
 import sys
 
-# Make `compile` importable whether pytest runs from python/ or the repo root.
+# Make `compile` importable whether pytest runs from python/ or the repo
+# root, and the tests dir itself for the offline `_hypothesis` fallback.
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _PY_ROOT = os.path.dirname(_HERE)
-if _PY_ROOT not in sys.path:
-    sys.path.insert(0, _PY_ROOT)
+for _p in (_PY_ROOT, _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

@@ -8,7 +8,10 @@ runtime.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic sampled examples
+    from _hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref
 from compile.kernels import spmm_block as k

@@ -7,7 +7,10 @@ final product against a plain matmul oracle.
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic sampled examples
+    from _hypothesis import given, settings, strategies as st
 
 from compile import blocking
 from compile.kernels import ref

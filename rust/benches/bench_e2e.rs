@@ -1,15 +1,18 @@
-//! End-to-end numeric-path benchmarks: plan construction, CPU vs PJRT
-//! dispatch execution, and served throughput through the coordinator.
+//! End-to-end numeric-path benchmarks through the unified engine: plan
+//! construction, registered-kernel execution, serial-vs-parallel tiled
+//! execution on the synthetic 4096² dataset, and served throughput through
+//! the coordinator. Writes a machine-readable summary to
+//! `BENCH_engine.json` (override the path with `SPMM_BENCH_OUT`).
 
 use std::sync::Arc;
 
-use spmm_accel::coordinator::{
-    EngineKind, JobOptions, Server, ServerConfig, SpmmJob,
-};
+use spmm_accel::coordinator::{JobOptions, Server, ServerConfig, SpmmJob};
 use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{tiled, Registry, SpmmKernel, TiledConfig};
 use spmm_accel::runtime::{Manifest, NumericEngine};
 use spmm_accel::spmm::plan::{plan, Geometry};
 use spmm_accel::util::bench::{bench, black_box, report};
+use spmm_accel::util::json::{obj, Json};
 
 fn main() {
     println!("== bench_e2e ==");
@@ -23,42 +26,92 @@ fn main() {
     });
     let p = plan(&a, &b, geom);
     report("plan/build(256x512x256)", r, p.total_pairs as f64, "pairs");
-
-    // CPU backend execution
-    let cpu = NumericEngine::cpu(geom);
-    let r = bench(1, 3, || {
-        black_box(cpu.spmm(&a, &b).unwrap().1.real_pairs);
-    });
     let macs = p.total_pairs as f64 * (32.0 * 32.0 * 32.0);
-    report("exec/cpu_backend", r, macs, "MACs");
+
+    // every registered kernel on the medium workload (skip the oracle)
+    let reg = Registry::with_default_kernels(geom, 4);
+    for k in reg.kernels() {
+        if k.algorithm() == spmm_accel::engine::Algorithm::Dense {
+            continue;
+        }
+        let r = bench(1, 3, || {
+            black_box(k.run(&a, &b).unwrap().stats.real_pairs);
+        });
+        report(
+            &format!("exec/{}_{}", k.algorithm().name(), k.name()),
+            r,
+            macs,
+            "MACs",
+        );
+    }
 
     // PJRT backend execution (AOT Pallas kernel), if artifacts exist
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {
-        let pjrt = NumericEngine::pjrt(&dir).expect("pjrt engine");
-        let r = bench(1, 3, || {
-            black_box(pjrt.spmm(&a, &b).unwrap().1.real_pairs);
-        });
-        report("exec/pjrt_backend", r, macs, "MACs");
+        match NumericEngine::pjrt(&dir) {
+            Ok(pjrt) => {
+                let r = bench(1, 3, || {
+                    black_box(pjrt.spmm(&a, &b).unwrap().1.real_pairs);
+                });
+                report("exec/pjrt_backend", r, macs, "MACs");
+            }
+            Err(e) => println!("exec/pjrt_backend: skipped ({e})"),
+        }
     } else {
         println!("exec/pjrt_backend: skipped (run `make artifacts`)");
     }
 
-    // served throughput: 16 jobs through 4 CPU workers
-    let r = bench(0, 3, || {
+    // serial vs parallel tiled executor on the synthetic 4096² dataset
+    let big_a = uniform(4096, 4096, 0.001, 11);
+    let big_b = uniform(4096, 4096, 0.001, 12);
+    let serial_cfg = TiledConfig { block: 32, workers: 1 };
+    let par_workers = 4usize;
+    let par_cfg = TiledConfig { block: 32, workers: par_workers };
+
+    let r_serial = bench(1, 3, || {
+        black_box(tiled::execute(&big_a, &big_b, serial_cfg).unwrap().1.real_pairs);
+    });
+    let (c_serial, stats) = tiled::execute(&big_a, &big_b, serial_cfg).unwrap();
+    let big_macs = stats.real_pairs as f64 * (32.0 * 32.0 * 32.0);
+    report("tiled/serial(4096x4096 @ 0.1%)", r_serial, big_macs, "MACs");
+
+    let r_par = bench(1, 3, || {
+        black_box(tiled::execute(&big_a, &big_b, par_cfg).unwrap().1.real_pairs);
+    });
+    let (c_par, par_stats) = tiled::execute(&big_a, &big_b, par_cfg).unwrap();
+    report(
+        &format!("tiled/parallel_{par_workers}w(4096x4096 @ 0.1%)"),
+        r_par,
+        big_macs,
+        "MACs",
+    );
+
+    let bit_identical = c_serial.data == c_par.data;
+    let speedup = r_serial.median.as_secs_f64() / r_par.median.as_secs_f64();
+    println!(
+        "tiled 4096²: {} tile pairs, serial {:?} vs {}w {:?} -> speedup {speedup:.2}x, \
+         bit-identical: {bit_identical}",
+        stats.real_pairs, r_serial.median, par_stats.threads, r_par.median
+    );
+
+    // served throughput: 16 jobs through 4 CPU workers over the registry
+    let r_serve = bench(0, 3, || {
         let server = Server::start(ServerConfig {
             workers: 4,
             queue_depth: 8,
-            engine: EngineKind::Cpu,
             geometry: geom,
             artifacts_dir: dir.clone(),
+            ..Default::default()
         });
         let aj = Arc::new(uniform(128, 128, 0.08, 3));
         let rxs: Vec<_> = (0..16u64)
             .map(|i| {
                 server.submit(
-                    SpmmJob::new(i, aj.clone(), aj.clone())
-                        .with_opts(JobOptions { verify: false, keep_result: false }),
+                    SpmmJob::new(i, aj.clone(), aj.clone()).with_opts(JobOptions {
+                        verify: false,
+                        keep_result: false,
+                        kernel: None,
+                    }),
                 )
             })
             .collect();
@@ -67,5 +120,31 @@ fn main() {
         }
         server.shutdown();
     });
-    report("serve/16_jobs_4_workers", r, 16.0, "jobs");
+    report("serve/16_jobs_4_workers", r_serve, 16.0, "jobs");
+
+    // machine-readable summary
+    let out_path = std::env::var("SPMM_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".into());
+    let summary = obj([
+        ("bench", Json::from("bench_e2e/engine")),
+        (
+            "dataset",
+            Json::from("uniform 4096x4096, density 0.001, seeds 11/12"),
+        ),
+        ("block", Json::from(32usize)),
+        ("tile_pairs", Json::from(stats.real_pairs)),
+        ("serial_ms", Json::from(r_serial.median.as_secs_f64() * 1e3)),
+        ("parallel_ms", Json::from(r_par.median.as_secs_f64() * 1e3)),
+        ("workers", Json::from(par_workers)),
+        ("threads_used", Json::from(par_stats.threads)),
+        ("speedup", Json::from(speedup)),
+        ("bit_identical", Json::Bool(bit_identical)),
+        (
+            "serve_16_jobs_4_workers_ms",
+            Json::from(r_serve.median.as_secs_f64() * 1e3),
+        ),
+    ]);
+    match std::fs::write(&out_path, summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => println!("could not write {out_path}: {e}"),
+    }
 }

@@ -1,12 +1,13 @@
 //! SpMM job descriptors and results — the unit of work the coordinator
-//! routes, schedules, and dispatches.
+//! routes, schedules, and dispatches through the kernel registry.
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::engine::{Algorithm, ExecStats};
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
-use crate::runtime::numeric::ExecReport;
+use crate::formats::traits::FormatKind;
 
 /// What the caller wants done.
 #[derive(Clone)]
@@ -19,11 +20,14 @@ pub struct SpmmJob {
 
 #[derive(Clone, Copy, Debug)]
 pub struct JobOptions {
-    /// Cross-check the accelerator result against the CPU oracle
-    /// (test/debug traffic; adds a full reference multiply).
+    /// Cross-check the result against the CPU oracle (test/debug traffic;
+    /// adds a full reference multiply).
     pub verify: bool,
     /// Keep the dense result (large!) or return only the report.
     pub keep_result: bool,
+    /// Per-job kernel override: resolve exactly this registry key instead
+    /// of the server's configured [`super::router::KernelSpec`].
+    pub kernel: Option<(FormatKind, Algorithm)>,
 }
 
 impl Default for JobOptions {
@@ -31,6 +35,7 @@ impl Default for JobOptions {
         JobOptions {
             verify: false,
             keep_result: true,
+            kernel: None,
         }
     }
 }
@@ -45,10 +50,11 @@ pub struct JobResult {
 #[derive(Debug)]
 pub struct JobOutput {
     pub c: Option<Dense>,
-    pub report: ExecReport,
+    pub report: ExecStats,
+    /// Name of the kernel that ran the job ("cpu", "pjrt", "gustavson", …).
     pub backend: &'static str,
     pub wall: Duration,
-    /// max |accel - oracle| when `verify` was requested.
+    /// max |result - oracle| when `verify` was requested.
     pub max_err: Option<f32>,
 }
 
@@ -66,6 +72,12 @@ impl SpmmJob {
         self.opts = opts;
         self
     }
+
+    /// Builder-style per-job kernel override.
+    pub fn with_kernel(mut self, format: FormatKind, algorithm: Algorithm) -> SpmmJob {
+        self.opts.kernel = Some((format, algorithm));
+        self
+    }
 }
 
 #[cfg(test)]
@@ -79,9 +91,19 @@ mod tests {
         let j = SpmmJob::new(7, a.clone(), a).with_opts(JobOptions {
             verify: true,
             keep_result: false,
+            kernel: None,
         });
         assert_eq!(j.id, 7);
         assert!(j.opts.verify);
         assert!(!j.opts.keep_result);
+        assert!(j.opts.kernel.is_none());
+    }
+
+    #[test]
+    fn kernel_override_builder() {
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let j = SpmmJob::new(1, a.clone(), a)
+            .with_kernel(FormatKind::InCrs, Algorithm::Inner);
+        assert_eq!(j.opts.kernel, Some((FormatKind::InCrs, Algorithm::Inner)));
     }
 }

@@ -1,5 +1,6 @@
-//! Lock-free service metrics: counters and a fixed-bucket latency
-//! histogram, shared between workers and observers.
+//! Lock-free service metrics: counters plus fixed-bucket latency
+//! histograms (service time *and* queue wait), shared between workers and
+//! observers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -7,32 +8,27 @@ use std::time::Duration;
 /// Power-of-two microsecond buckets: [<1us, <2us, <4us, ... , <2^30us, rest]
 const BUCKETS: usize = 32;
 
+/// Lock-free power-of-two-bucket latency histogram.
 #[derive(Debug, Default)]
-pub struct Metrics {
-    pub jobs_submitted: AtomicU64,
-    pub jobs_completed: AtomicU64,
-    pub jobs_failed: AtomicU64,
-    pub dispatches: AtomicU64,
-    pub real_pairs: AtomicU64,
-    pub busy_ns: AtomicU64,
-    latency_us: [AtomicU64; BUCKETS],
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
 }
 
-impl Metrics {
-    pub fn new() -> Metrics {
-        Metrics::default()
-    }
-
-    pub fn observe_latency(&self, d: Duration) {
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Approximate latency quantile from the histogram (upper bucket bound).
-    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound in µs).
+    pub fn quantile_us(&self, q: f64) -> u64 {
         let counts: Vec<u64> = self
-            .latency_us
+            .buckets
             .iter()
             .map(|c| c.load(Ordering::Relaxed))
             .collect();
@@ -50,17 +46,55 @@ impl Metrics {
         }
         u64::MAX
     }
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    /// Workers that asked for PJRT but degraded to the CPU kernel.
+    pub pjrt_fallbacks: AtomicU64,
+    pub dispatches: AtomicU64,
+    pub real_pairs: AtomicU64,
+    pub busy_ns: AtomicU64,
+    /// Per-job service time (dequeue → response ready).
+    pub latency: Histogram,
+    /// Per-job queue wait (submit → dequeue) — the backpressure signal.
+    pub queue_wait: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, d: Duration) {
+        self.latency.observe(d);
+    }
+
+    pub fn observe_queue_wait(&self, d: Duration) {
+        self.queue_wait.observe(d);
+    }
+
+    /// Approximate service-latency quantile (upper bucket bound, µs).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        self.latency.quantile_us(q)
+    }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
             dispatches: self.dispatches.load(Ordering::Relaxed),
             real_pairs: self.real_pairs.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
-            p50_us: self.latency_quantile_us(0.5),
-            p99_us: self.latency_quantile_us(0.99),
+            p50_us: self.latency.quantile_us(0.5),
+            p99_us: self.latency.quantile_us(0.99),
+            queue_p50_us: self.queue_wait.quantile_us(0.5),
+            queue_p99_us: self.queue_wait.quantile_us(0.99),
         }
     }
 }
@@ -70,11 +104,14 @@ pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
     pub jobs_failed: u64,
+    pub pjrt_fallbacks: u64,
     pub dispatches: u64,
     pub real_pairs: u64,
     pub busy_ns: u64,
     pub p50_us: u64,
     pub p99_us: u64,
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
 }
 
 #[cfg(test)]
@@ -95,6 +132,17 @@ mod tests {
     }
 
     #[test]
+    fn queue_wait_is_tracked_separately() {
+        let m = Metrics::new();
+        m.observe_latency(Duration::from_micros(1_000));
+        m.observe_queue_wait(Duration::from_micros(2));
+        let s = m.snapshot();
+        assert!(s.queue_p50_us <= 4, "{s:?}");
+        assert!(s.p50_us >= 512, "{s:?}");
+        assert_eq!(m.queue_wait.count(), 1);
+    }
+
+    #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
         m.jobs_completed.fetch_add(3, Ordering::Relaxed);
@@ -108,5 +156,6 @@ mod tests {
     fn empty_histogram() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.snapshot().queue_p99_us, 0);
     }
 }

@@ -1,13 +1,14 @@
 //! L3 coordinator: the serving layer that owns process topology, routing,
 //! batching, and metrics (DESIGN.md §1).
 //!
-//! * [`job`] — SpMM job descriptors/results.
-//! * [`router`] — format strategy (InCRS or not) + engine selection, the
-//!   paper's §II/§III decision as an explicit, testable policy.
+//! * [`job`] — SpMM job descriptors/results (with per-job kernel override).
+//! * [`router`] — format strategy (InCRS or not) + kernel-key selection
+//!   over the engine registry, the paper's §II/§III decision as an
+//!   explicit, testable policy.
 //! * [`scheduler`] — dispatch batching with exactly-once coverage.
-//! * [`server`] — bounded-queue worker pool (backpressure, per-worker PJRT
-//!   engines, graceful shutdown).
-//! * [`metrics`] — lock-free counters + latency histogram.
+//! * [`server`] — bounded-queue worker pool (backpressure, per-worker
+//!   kernel registries, drain-on-shutdown).
+//! * [`metrics`] — lock-free counters + latency/queue-wait histograms.
 
 pub mod job;
 pub mod metrics;
@@ -16,7 +17,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{route, AccessStrategy, EngineKind, Route, RoutingPolicy};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
 pub use server::{Server, ServerConfig};

@@ -1,15 +1,19 @@
-//! Format/engine routing — the paper's §II decision, made explicit.
+//! Format/kernel routing — the paper's §II decision, made explicit over the
+//! engine registry's `(FormatKind, Algorithm)` key space.
 //!
 //! When an SpMM job needs column-order access to a row-stored `B`, the
 //! router decides whether to pay the one-time InCRS counter-vector build.
 //! The paper's estimate (§III.C): column access in CRS costs ≈ ½·N·D per
 //! locate vs ≈ b/2+1 in InCRS, a ratio of N·D/(b+2). InCRS pays off when
 //! that ratio clears a threshold — e.g. Table II shows Mks at only ≈3×,
-//! where the counter storage (12% extra) may not be worth it.
+//! where the counter storage (12% extra) may not be worth it. The routing
+//! result is a registry key the caller resolves through
+//! [`crate::engine::Registry`].
 
+use crate::engine::Algorithm;
 use crate::formats::csr::Csr;
 use crate::formats::incrs::InCrsParams;
-use crate::formats::traits::SparseMatrix;
+use crate::formats::traits::{FormatKind, SparseMatrix};
 
 /// How B will be accessed by the chosen algorithm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,13 +26,36 @@ pub enum AccessStrategy {
     ColumnInCrs,
 }
 
-/// Which execution backend gets the job.
+/// How the server picks the kernel for a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    /// AOT Pallas kernels via PJRT (block-sparse dispatch path).
-    Pjrt,
-    /// Pure-Rust fallback of the same plan.
-    Cpu,
+pub enum KernelSpec {
+    /// Cost-hint selection across the whole registry per job
+    /// ([`Registry::select`]).
+    Auto,
+    /// Always resolve this registry key (jobs may still override via
+    /// `JobOptions::kernel`).
+    Fixed(FormatKind, Algorithm),
+}
+
+impl Default for KernelSpec {
+    /// The accelerator dispatch path — the old `EngineKind::Cpu` default.
+    fn default() -> Self {
+        KernelSpec::Fixed(FormatKind::Csr, Algorithm::Block)
+    }
+}
+
+impl KernelSpec {
+    /// The registry key an algorithm is registered under by default
+    /// (inner-product → InCRS, the dense oracle → Dense, everything else →
+    /// CSR) — the single place the CLI and examples map `--kernel` names.
+    pub fn for_algorithm(alg: Algorithm) -> KernelSpec {
+        let fmt = match alg {
+            Algorithm::Inner => FormatKind::InCrs,
+            Algorithm::Dense => FormatKind::Dense,
+            _ => FormatKind::Csr,
+        };
+        KernelSpec::Fixed(fmt, alg)
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -36,7 +63,8 @@ pub struct RoutingPolicy {
     /// Minimum estimated MA ratio N·D/(b+2) for InCRS to pay off.
     pub incrs_min_ratio: f64,
     pub incrs_params: InCrsParams,
-    pub prefer_pjrt: bool,
+    /// Prefer the blocked accelerator kernel when it is available.
+    pub prefer_accel: bool,
 }
 
 impl Default for RoutingPolicy {
@@ -46,7 +74,7 @@ impl Default for RoutingPolicy {
             // ~2 the counter storage and build time aren't justified.
             incrs_min_ratio: 2.0,
             incrs_params: InCrsParams::default(),
-            prefer_pjrt: true,
+            prefer_accel: true,
         }
     }
 }
@@ -55,18 +83,21 @@ impl Default for RoutingPolicy {
 #[derive(Clone, Copy, Debug)]
 pub struct Route {
     pub access: AccessStrategy,
-    pub engine: EngineKind,
+    /// Registry key to resolve: `(B's format, algorithm)`.
+    pub kernel: (FormatKind, Algorithm),
     /// estimated N·D/(b+2) for B.
     pub estimated_ma_ratio: f64,
 }
 
 /// Decide how to run C = A × B given that `b` is stored row-ordered and the
 /// chosen kernel needs it by column (`needs_column_access` = the accelerator
-/// / inner-product path; Gustavson jobs pass false).
+/// / inner-product path; Gustavson jobs pass false). `accel_available` means
+/// the blocked accelerator kernel is usable (PJRT artifacts loaded, or the
+/// CPU twin is acceptable).
 pub fn route(
     b: &Csr,
     needs_column_access: bool,
-    pjrt_available: bool,
+    accel_available: bool,
     policy: &RoutingPolicy,
 ) -> Route {
     let nd = b.nnz() as f64 / b.rows().max(1) as f64; // avg nnz/row = N·D
@@ -78,14 +109,18 @@ pub fn route(
     } else {
         AccessStrategy::ColumnCrs
     };
-    let engine = if policy.prefer_pjrt && pjrt_available {
-        EngineKind::Pjrt
+    let kernel = if policy.prefer_accel && accel_available {
+        (FormatKind::Csr, Algorithm::Block)
     } else {
-        EngineKind::Cpu
+        match access {
+            AccessStrategy::RowOrder => (FormatKind::Csr, Algorithm::Gustavson),
+            AccessStrategy::ColumnCrs => (FormatKind::Csr, Algorithm::Inner),
+            AccessStrategy::ColumnInCrs => (FormatKind::InCrs, Algorithm::Inner),
+        }
     };
     Route {
         access,
-        engine,
+        kernel,
         estimated_ma_ratio: ratio,
     }
 }
@@ -94,6 +129,8 @@ pub fn route(
 mod tests {
     use super::*;
     use crate::datasets::synth::uniform;
+    use crate::engine::SpmmKernel;
+    use crate::spmm::plan::Geometry;
 
     #[test]
     fn dense_rows_choose_incrs() {
@@ -102,28 +139,59 @@ mod tests {
         let r = route(&b, true, true, &RoutingPolicy::default());
         assert_eq!(r.access, AccessStrategy::ColumnInCrs);
         assert!(r.estimated_ma_ratio > 10.0);
-        assert_eq!(r.engine, EngineKind::Pjrt);
+        assert_eq!(r.kernel, (FormatKind::Csr, Algorithm::Block));
     }
 
     #[test]
     fn sparse_rows_stay_on_crs() {
         // ~17 nnz/row -> ratio ≈ 0.5: counters don't pay off
         let b = uniform(64, 3_000, 0.0055, 2);
-        let r = route(&b, true, true, &RoutingPolicy::default());
+        let r = route(&b, true, false, &RoutingPolicy::default());
         assert_eq!(r.access, AccessStrategy::ColumnCrs);
+        assert_eq!(r.kernel, (FormatKind::Csr, Algorithm::Inner));
     }
 
     #[test]
     fn row_order_jobs_skip_the_question() {
         let b = uniform(64, 12_000, 0.04, 3);
-        let r = route(&b, false, true, &RoutingPolicy::default());
+        let r = route(&b, false, false, &RoutingPolicy::default());
         assert_eq!(r.access, AccessStrategy::RowOrder);
+        assert_eq!(r.kernel, (FormatKind::Csr, Algorithm::Gustavson));
     }
 
     #[test]
-    fn engine_falls_back_without_pjrt() {
-        let b = uniform(8, 64, 0.2, 4);
+    fn column_jobs_route_to_the_incrs_kernel_without_accel() {
+        let b = uniform(64, 12_000, 0.04, 4);
         let r = route(&b, true, false, &RoutingPolicy::default());
-        assert_eq!(r.engine, EngineKind::Cpu);
+        assert_eq!(r.kernel, (FormatKind::InCrs, Algorithm::Inner));
+    }
+
+    #[test]
+    fn routes_resolve_against_the_default_registry() {
+        let reg = crate::engine::Registry::with_default_kernels(
+            Geometry { block: 8, pairs: 16, slots: 8 },
+            1,
+        );
+        let b = uniform(64, 32, 0.2, 6);
+        for (needs_col, accel) in [(false, false), (true, false), (true, true)] {
+            let r = route(&b, needs_col, accel, &RoutingPolicy::default());
+            let k = reg.resolve(r.kernel.0, r.kernel.1).expect("kernel");
+            assert_eq!((k.format(), k.algorithm()), r.kernel);
+        }
+    }
+
+    #[test]
+    fn for_algorithm_maps_to_registered_keys() {
+        let reg = crate::engine::Registry::with_default_kernels(
+            Geometry { block: 8, pairs: 16, slots: 8 },
+            1,
+        );
+        for alg in Algorithm::ALL {
+            let KernelSpec::Fixed(f, a) = KernelSpec::for_algorithm(alg) else {
+                panic!("for_algorithm must return Fixed");
+            };
+            assert_eq!(a, alg);
+            assert!(reg.resolve(f, a).is_some(), "{f:?}/{alg:?} not registered");
+        }
     }
 }

@@ -1,11 +1,16 @@
-//! Batching SpMM server: a worker pool over bounded channels.
+//! Batching SpMM server: a worker pool over bounded channels, dispatching
+//! through the kernel registry.
 //!
 //! The L3 serving shape (DESIGN.md §1): callers `submit` jobs and get a
 //! per-job response channel; a bounded queue applies backpressure (submit
 //! blocks when `queue_depth` jobs are in flight); each worker owns its own
-//! execution engine (PJRT clients are not shared across threads) and
-//! processes whole jobs — dispatch-level parallelism inside a job uses the
-//! scheduler's batches.
+//! kernel registry (PJRT clients are not shared across threads) and
+//! processes whole jobs — parallelism *inside* a job comes from the tiled
+//! kernel's worker threads.
+//!
+//! Shutdown drains: [`Server::shutdown`] closes the submit side and joins
+//! the workers, which keep serving until the queue is empty — no in-flight
+//! job is ever dropped.
 //!
 //! Built on std threads + mpsc because the offline registry has no tokio
 //! (DESIGN.md §2); the batching/backpressure semantics are identical.
@@ -18,8 +23,8 @@ use std::time::Instant;
 
 use super::job::{JobOutput, JobResult, SpmmJob};
 use super::metrics::Metrics;
-use super::router::EngineKind;
-use crate::runtime::numeric::NumericEngine;
+use super::router::KernelSpec;
+use crate::engine::{AccelKernel, Registry, SpmmKernel};
 use crate::spmm::plan::Geometry;
 
 #[derive(Clone, Debug)]
@@ -27,9 +32,16 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Max queued jobs before `submit` blocks (backpressure).
     pub queue_depth: usize,
-    pub engine: EngineKind,
-    /// Geometry for CPU engines; PJRT engines read theirs from the manifest.
+    /// How workers pick the kernel for each job (jobs can still override
+    /// via `JobOptions::kernel`).
+    pub kernel: KernelSpec,
+    /// Try to load PJRT artifacts for the `Block` kernel; degrade to its
+    /// CPU twin (and count `pjrt_fallbacks`) when unavailable.
+    pub prefer_pjrt: bool,
+    /// Geometry for the CPU block kernel; PJRT reads its own manifest.
     pub geometry: Geometry,
+    /// Threads inside the tiled kernel (per job, per worker).
+    pub tile_workers: usize,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -38,16 +50,19 @@ impl Default for ServerConfig {
         ServerConfig {
             workers: 2,
             queue_depth: 16,
-            engine: EngineKind::Cpu,
+            kernel: KernelSpec::default(),
+            prefer_pjrt: false,
             geometry: Geometry::default(),
+            tile_workers: 1,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
         }
     }
 }
 
-enum Envelope {
-    Job(SpmmJob, SyncSender<JobResult>),
-    Shutdown,
+struct Envelope {
+    job: SpmmJob,
+    reply: SyncSender<JobResult>,
+    enqueued: Instant,
 }
 
 pub struct Server {
@@ -87,7 +102,11 @@ impl Server {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(Envelope::Job(job, rtx))
+            .send(Envelope {
+                job,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
             .expect("server shut down");
         rrx
     }
@@ -95,26 +114,48 @@ impl Server {
     /// Non-blocking submit: `Err(job)` when the queue is full.
     pub fn try_submit(&self, job: SpmmJob) -> Result<Receiver<JobResult>, SpmmJob> {
         let (rtx, rrx) = sync_channel(1);
-        match self.tx.try_send(Envelope::Job(job, rtx)) {
+        match self.tx.try_send(Envelope {
+            job,
+            reply: rtx,
+            enqueued: Instant::now(),
+        }) {
             Ok(()) => {
                 self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(rrx)
             }
-            Err(TrySendError::Full(Envelope::Job(job, _))) => Err(job),
-            Err(TrySendError::Disconnected(Envelope::Job(job, _))) => Err(job),
-            Err(_) => unreachable!("only jobs are try-sent"),
+            Err(TrySendError::Full(env)) | Err(TrySendError::Disconnected(env)) => Err(env.job),
         }
     }
 
-    /// Graceful shutdown: drains queued jobs, then joins workers.
+    /// Graceful shutdown: closes the submit side, then joins workers. The
+    /// workers keep draining the bounded queue until it is empty, so every
+    /// accepted job gets a response before shutdown returns.
     pub fn shutdown(self) {
-        for _ in &self.handles {
-            let _ = self.tx.send(Envelope::Shutdown);
-        }
-        for h in self.handles {
+        let Server { tx, handles, metrics: _ } = self;
+        drop(tx); // disconnect: workers exit once the queue is drained
+        for h in handles {
             let _ = h.join();
         }
     }
+}
+
+/// Build this worker's registry: the default CPU kernel set plus — when
+/// asked and possible — the PJRT-backed block kernel. Each worker owns its
+/// registry because PJRT clients must stay thread-local.
+fn worker_registry(cfg: &ServerConfig, metrics: &Metrics) -> Registry {
+    let mut reg = Registry::with_default_kernels(cfg.geometry, cfg.tile_workers);
+    if cfg.prefer_pjrt {
+        match AccelKernel::pjrt(&cfg.artifacts_dir) {
+            Ok(k) => {
+                reg.register(Arc::new(k));
+            }
+            Err(e) => {
+                eprintln!("worker PJRT init failed ({e}); falling back to CPU block kernel");
+                metrics.pjrt_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    reg
 }
 
 fn worker_loop(
@@ -123,19 +164,7 @@ fn worker_loop(
     rx: Arc<std::sync::Mutex<Receiver<Envelope>>>,
     metrics: Arc<Metrics>,
 ) {
-    // Each worker owns its engine; PJRT load failure degrades to CPU with
-    // an explicit failure counter rather than killing the worker.
-    let engine = match cfg.engine {
-        EngineKind::Pjrt => match NumericEngine::pjrt(&cfg.artifacts_dir) {
-            Ok(e) => e,
-            Err(e) => {
-                log::warn!("worker PJRT init failed ({e:#}); falling back to CPU");
-                metrics.jobs_failed.fetch_add(0, Ordering::Relaxed);
-                NumericEngine::cpu(cfg.geometry)
-            }
-        },
-        EngineKind::Cpu => NumericEngine::cpu(cfg.geometry),
-    };
+    let registry = worker_registry(&cfg, &metrics);
 
     loop {
         let env = {
@@ -143,10 +172,12 @@ fn worker_loop(
             guard.recv()
         };
         match env {
-            Err(_) | Ok(Envelope::Shutdown) => return,
-            Ok(Envelope::Job(job, reply)) => {
+            // disconnected + drained: shutdown
+            Err(_) => return,
+            Ok(Envelope { job, reply, enqueued }) => {
+                metrics.observe_queue_wait(enqueued.elapsed());
                 let start = Instant::now();
-                let result = run_job(&engine, &job);
+                let result = run_job(&registry, cfg.kernel, &job);
                 let wall = start.elapsed();
                 metrics.busy_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
                 metrics.observe_latency(wall);
@@ -173,7 +204,8 @@ fn worker_loop(
     }
 }
 
-fn run_job(engine: &NumericEngine, job: &SpmmJob) -> Result<JobOutput, String> {
+/// Resolve the kernel for `job` (per-job override > server spec) and run it.
+fn run_job(registry: &Registry, spec: KernelSpec, job: &SpmmJob) -> Result<JobOutput, String> {
     use crate::formats::traits::SparseMatrix;
     if job.a.cols() != job.b.rows() {
         return Err(format!(
@@ -182,18 +214,34 @@ fn run_job(engine: &NumericEngine, job: &SpmmJob) -> Result<JobOutput, String> {
             job.b.shape()
         ));
     }
+    let kernel: Arc<dyn SpmmKernel> = match job.opts.kernel {
+        Some((f, alg)) => registry
+            .resolve(f, alg)
+            .ok_or_else(|| format!("no kernel registered for {}/{}", f.name(), alg.name()))?,
+        None => match spec {
+            KernelSpec::Fixed(f, alg) => registry
+                .resolve(f, alg)
+                .ok_or_else(|| format!("no kernel registered for {}/{}", f.name(), alg.name()))?,
+            KernelSpec::Auto => registry
+                .select(&job.a, &job.b)
+                .ok_or_else(|| "empty kernel registry".to_string())?,
+        },
+    };
     let start = Instant::now();
-    let (c, report) = engine.spmm(&job.a, &job.b).map_err(|e| format!("{e:#}"))?;
+    // prepare_shared: CSR-consuming kernels share the job's Arc (no per-job
+    // O(nnz) copy of B); conversion kernels build their representation
+    let prepared = kernel.prepare_shared(&job.b)?;
+    let out = kernel.execute(&job.a, &prepared)?;
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(&job.a, &job.b);
-        Some(c.max_abs_diff(&oracle))
+        Some(out.c.max_abs_diff(&oracle))
     } else {
         None
     };
     Ok(JobOutput {
-        c: job.opts.keep_result.then_some(c),
-        report,
-        backend: engine.backend_name(),
+        c: job.opts.keep_result.then_some(out.c),
+        report: out.stats,
+        backend: kernel.name(),
         wall: start.elapsed(),
         max_err,
     })
@@ -204,12 +252,13 @@ mod tests {
     use super::*;
     use crate::coordinator::job::JobOptions;
     use crate::datasets::synth::uniform;
+    use crate::engine::Algorithm;
+    use crate::formats::traits::FormatKind;
 
     fn cpu_server(workers: usize, depth: usize) -> Server {
         Server::start(ServerConfig {
             workers,
             queue_depth: depth,
-            engine: EngineKind::Cpu,
             geometry: Geometry { block: 8, pairs: 16, slots: 8 },
             ..Default::default()
         })
@@ -220,9 +269,11 @@ mod tests {
         let s = cpu_server(2, 8);
         let a = Arc::new(uniform(24, 32, 0.2, 1));
         let b = Arc::new(uniform(32, 20, 0.2, 2));
-        let rx = s.submit(
-            SpmmJob::new(1, a, b).with_opts(JobOptions { verify: true, keep_result: true }),
-        );
+        let rx = s.submit(SpmmJob::new(1, a, b).with_opts(JobOptions {
+            verify: true,
+            keep_result: true,
+            kernel: None,
+        }));
         let res = rx.recv().unwrap();
         let out = res.result.unwrap();
         assert!(out.max_err.unwrap() < 1e-3);
@@ -230,6 +281,7 @@ mod tests {
         assert_eq!(out.backend, "cpu");
         let snap = s.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 1);
+        assert!(snap.queue_p50_us > 0);
         s.shutdown();
     }
 
@@ -279,12 +331,76 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_drains() {
-        let s = cpu_server(2, 8);
-        let a = Arc::new(uniform(8, 8, 0.5, 6));
-        let rx = s.submit(SpmmJob::new(1, a.clone(), a));
+    fn shutdown_drains_every_accepted_job() {
+        // single worker + deep queue: most jobs are still queued when
+        // shutdown is called; all must be answered anyway
+        let s = cpu_server(1, 16);
+        let a = Arc::new(uniform(48, 48, 0.3, 6));
+        let rxs: Vec<_> = (0..10)
+            .map(|i| s.submit(SpmmJob::new(i, a.clone(), a.clone())))
+            .collect();
         s.shutdown();
-        // response was delivered before shutdown completed
-        assert!(rx.try_recv().is_ok());
+        for rx in rxs {
+            // every response was delivered before shutdown returned
+            assert!(rx.try_recv().unwrap().result.is_ok());
+        }
+    }
+
+    #[test]
+    fn per_job_kernel_override() {
+        let s = cpu_server(1, 4);
+        let a = Arc::new(uniform(20, 30, 0.2, 7));
+        let b = Arc::new(uniform(30, 24, 0.2, 8));
+        for (f, alg, name) in [
+            (FormatKind::Csr, Algorithm::Gustavson, "gustavson"),
+            (FormatKind::InCrs, Algorithm::Inner, "inner-incrs"),
+            (FormatKind::Csr, Algorithm::Tiled, "tiled"),
+        ] {
+            let rx = s.submit(
+                SpmmJob::new(1, a.clone(), b.clone())
+                    .with_opts(JobOptions { verify: true, ..Default::default() })
+                    .with_kernel(f, alg),
+            );
+            let out = rx.recv().unwrap().result.unwrap();
+            assert_eq!(out.backend, name);
+            assert!(out.max_err.unwrap() < 1e-3, "{name}");
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn unregistered_kernel_is_a_job_error_not_a_crash() {
+        let s = cpu_server(1, 2);
+        let a = Arc::new(uniform(8, 8, 0.5, 9));
+        let rx = s.submit(
+            SpmmJob::new(1, a.clone(), a.clone()).with_kernel(FormatKind::Jad, Algorithm::Inner),
+        );
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("no kernel registered"), "{err}");
+        // the worker survives and serves the next job
+        let ok = s.submit(SpmmJob::new(2, a.clone(), a)).recv().unwrap();
+        assert!(ok.result.is_ok());
+        s.shutdown();
+    }
+
+    #[test]
+    fn auto_selection_serves_jobs() {
+        let s = Server::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+            kernel: KernelSpec::Auto,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            ..Default::default()
+        });
+        let a = Arc::new(uniform(32, 48, 0.1, 10));
+        let b = Arc::new(uniform(48, 40, 0.1, 11));
+        let rx = s.submit(SpmmJob::new(1, a, b).with_opts(JobOptions {
+            verify: true,
+            ..Default::default()
+        }));
+        let out = rx.recv().unwrap().result.unwrap();
+        assert!(out.max_err.unwrap() < 1e-3);
+        assert_ne!(out.backend, "dense"); // auto never picks the oracle
+        s.shutdown();
     }
 }

@@ -1,0 +1,121 @@
+//! Accelerator adapter: `runtime::NumericEngine` (the sorted tile-pair plan
+//! executed by the AOT Pallas kernel over PJRT, or its bit-equivalent CPU
+//! twin) behind the [`SpmmKernel`] contract.
+//!
+//! This is the kernel the serving layer runs by default — identical math to
+//! the old `EngineKind::{Cpu,Pjrt}` paths, now interchangeable with every
+//! other registered kernel.
+
+use std::path::Path;
+
+use crate::formats::csr::Csr;
+use crate::formats::traits::{FormatKind, SparseMatrix};
+use crate::runtime::numeric::NumericEngine;
+use crate::spmm::plan::Geometry;
+
+use super::kernel::{
+    wrong_operand, Algorithm, CostHint, EngineOutput, PreparedB, SpmmKernel,
+};
+
+// NOTE on `SpmmKernel: Send + Sync` and the `pjrt` feature: each server
+// worker builds its own AccelKernel (PJRT clients stay thread-local by
+// construction), but the trait bound still requires the type to be
+// Send + Sync. The default (CPU) build trivially is. When the vendored
+// `xla` bindings land, check `PjRtClient`'s auto traits: if it is !Sync,
+// wrap `NumericEngine`'s Pjrt backend in a `Mutex` (uncontended in the
+// per-worker setup) before enabling the feature.
+pub struct AccelKernel {
+    engine: NumericEngine,
+}
+
+impl AccelKernel {
+    /// CPU plan executor at `geom` (always available).
+    pub fn cpu(geom: Geometry) -> AccelKernel {
+        AccelKernel { engine: NumericEngine::cpu(geom) }
+    }
+
+    /// PJRT-backed executor from an artifact directory. Errors when the
+    /// artifacts are missing or the crate was built without the `pjrt`
+    /// feature.
+    pub fn pjrt(artifacts_dir: &Path) -> Result<AccelKernel, String> {
+        Ok(AccelKernel { engine: NumericEngine::pjrt(artifacts_dir)? })
+    }
+
+    /// Wrap an existing engine (workers build their own so PJRT clients are
+    /// never shared across threads).
+    pub fn from_engine(engine: NumericEngine) -> AccelKernel {
+        AccelKernel { engine }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.engine.geometry()
+    }
+}
+
+impl SpmmKernel for AccelKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Block
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        // "cpu" / "pjrt" — the backend identity callers log and assert on
+        self.engine.backend_name()
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // the plan issues full block³ MACs per pair, padding included;
+        // tile-pair estimate shared with TiledKernel (engine::kernel)
+        let block = self.engine.geometry().block;
+        let pairs = super::kernel::expected_tile_pairs(a, b, block);
+        CostHint {
+            flops: pairs * (block * block * block) as f64,
+            prepare_words: (a.nnz() + b.nnz()) as f64,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+        Ok(PreparedB::Csr(std::sync::Arc::new(b.clone())))
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+        let bc = match b {
+            PreparedB::Csr(m) => m,
+            other => return Err(wrong_operand(self, other)),
+        };
+        if a.cols() != bc.rows() {
+            return Err(format!(
+                "dimension mismatch: A is {:?}, B is {:?}",
+                a.shape(),
+                bc.shape()
+            ));
+        }
+        let (c, stats) = self.engine.spmm(a, bc)?;
+        Ok(EngineOutput { c, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    #[test]
+    fn cpu_accel_kernel_matches_oracle() {
+        let k = AccelKernel::cpu(Geometry { block: 8, pairs: 16, slots: 8 });
+        assert_eq!(k.name(), "cpu");
+        assert_eq!(k.algorithm(), Algorithm::Block);
+        let a = uniform(30, 40, 0.2, 1);
+        let b = uniform(40, 22, 0.2, 2);
+        let out = k.run(&a, &b).unwrap();
+        assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+        assert!(out.stats.dispatches > 0);
+        assert!(out.stats.real_pairs <= out.stats.padded_pairs);
+    }
+
+    #[test]
+    fn pjrt_constructor_fails_cleanly_without_feature_or_artifacts() {
+        let missing = std::path::Path::new("/nonexistent/artifacts");
+        let err = AccelKernel::pjrt(missing).err().expect("must not succeed");
+        assert!(!err.is_empty());
+    }
+}

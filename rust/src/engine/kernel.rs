@@ -1,0 +1,213 @@
+//! The `SpmmKernel` trait: the single execution contract every SpMM path in
+//! this crate implements — CPU algorithms, the tiled parallel executor, and
+//! the accelerator (plan/PJRT) adapter alike.
+//!
+//! A kernel is identified by the `(FormatKind, Algorithm)` pair it serves:
+//! which representation of `B` it consumes and which compute organization it
+//! uses. Execution is split into `prepare` (one-time representation build,
+//! e.g. the InCRS counter vectors — cacheable across jobs that share `B`)
+//! and `execute` (the multiply itself). `cost_hint` lets the registry and
+//! router choose among kernels without running them.
+
+use std::sync::Arc;
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::incrs::InCrs;
+use crate::formats::traits::FormatKind;
+
+/// Compute organization of a kernel (the paper's §II algorithm axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Algorithm {
+    /// Row-expansion reference multiply — the numeric oracle.
+    Dense,
+    /// Row-order CRS×CRS with a sparse accumulator (CPU baseline).
+    Gustavson,
+    /// Inner-product SpMM reading `B` column-wise through `locate`.
+    Inner,
+    /// Multi-threaded 32×32 tile-pair executor (`engine::tiled`).
+    Tiled,
+    /// Accelerator dispatch path: sorted tile-pair plan executed by the
+    /// PJRT Pallas kernel, or its bit-equivalent CPU twin.
+    Block,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 5] = [
+        Algorithm::Dense,
+        Algorithm::Gustavson,
+        Algorithm::Inner,
+        Algorithm::Tiled,
+        Algorithm::Block,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Dense => "dense",
+            Algorithm::Gustavson => "gustavson",
+            Algorithm::Inner => "inner",
+            Algorithm::Tiled => "tiled",
+            Algorithm::Block => "block",
+        }
+    }
+
+    /// Parse a CLI/spelled-out algorithm name.
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" | "oracle" => Algorithm::Dense,
+            "gustavson" | "row" => Algorithm::Gustavson,
+            "inner" => Algorithm::Inner,
+            "tiled" => Algorithm::Tiled,
+            "block" | "accel" => Algorithm::Block,
+            other => return Err(format!("unknown algorithm {other:?}")),
+        })
+    }
+}
+
+/// Execution accounting for one SpMM run, shared by every kernel. Scalar
+/// kernels report one "dispatch" and count scalar MACs as pairs; blocked
+/// kernels report tile-pair counts exactly as the old `ExecReport` did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Accelerator calls (Block), tile tasks (Tiled), or 1 (scalar kernels).
+    pub dispatches: u64,
+    /// Real (unpadded) units of useful work: tile pairs or scalar MACs.
+    pub real_pairs: u64,
+    /// Units issued including padding (Block path only; else == real_pairs).
+    pub padded_pairs: u64,
+    /// MACs issued including padding.
+    pub macs_issued: u64,
+    /// Worker threads that executed the job (1 for serial kernels).
+    pub threads: usize,
+}
+
+/// A kernel's result: the dense product plus its accounting.
+#[derive(Debug)]
+pub struct EngineOutput {
+    pub c: Dense,
+    pub stats: ExecStats,
+}
+
+/// Rough cost estimate used for kernel selection — same spirit as the
+/// router's N·D/(b+2) estimate (§III.C): cheap to compute, monotone in the
+/// real cost, not a cycle count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostHint {
+    /// Estimated multiply-side work (scalar-MAC-equivalents).
+    pub flops: f64,
+    /// One-time operand preparation cost in words touched (format builds).
+    pub prepare_words: f64,
+}
+
+impl CostHint {
+    pub fn total(&self) -> f64 {
+        self.flops + self.prepare_words
+    }
+}
+
+/// `B` converted into the representation a kernel consumes. Built by
+/// `SpmmKernel::prepare`; callers may cache it across jobs sharing `B`.
+#[derive(Clone, Debug)]
+pub enum PreparedB {
+    Csr(Arc<Csr>),
+    InCrs(Arc<InCrs>),
+    Dense(Arc<Dense>),
+}
+
+impl PreparedB {
+    pub fn format(&self) -> FormatKind {
+        match self {
+            PreparedB::Csr(_) => FormatKind::Csr,
+            PreparedB::InCrs(_) => FormatKind::InCrs,
+            PreparedB::Dense(_) => FormatKind::Dense,
+        }
+    }
+}
+
+/// The unified execution contract. Object-safe; kernels are registered as
+/// `Arc<dyn SpmmKernel>` in an [`crate::engine::Registry`] and shared across
+/// server workers (hence `Send + Sync`).
+pub trait SpmmKernel: Send + Sync {
+    /// Compute organization this kernel implements.
+    fn algorithm(&self) -> Algorithm;
+    /// Representation of `B` this kernel consumes (the registry key's
+    /// format half).
+    fn format(&self) -> FormatKind;
+    /// Stable display name ("cpu"/"pjrt" for the accel adapter, else the
+    /// algorithm name).
+    fn name(&self) -> &'static str;
+    /// Estimate the cost of running this kernel on `A × B` without running
+    /// it (used by [`crate::engine::Registry::select`]).
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint;
+    /// Build this kernel's representation of `B` (cacheable).
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String>;
+    /// Like [`SpmmKernel::prepare`], but sharing the caller's `Arc` when
+    /// the kernel consumes CSR as-is — the serving hot path calls this so
+    /// per-job preparation is O(1) for CSR-consuming kernels instead of an
+    /// O(nnz) copy. Conversion kernels fall back to [`SpmmKernel::prepare`].
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, String> {
+        if self.format() == FormatKind::Csr {
+            Ok(PreparedB::Csr(Arc::clone(b)))
+        } else {
+            self.prepare(b)
+        }
+    }
+    /// Run `C = A × B` on a prepared operand.
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String>;
+
+    /// Convenience: prepare + execute in one call.
+    fn run(&self, a: &Csr, b: &Csr) -> Result<EngineOutput, String> {
+        let prepared = self.prepare(b)?;
+        self.execute(a, &prepared)
+    }
+}
+
+/// Expected non-empty tile count of `m` blocked at `block`, from per-tile
+/// Poisson occupancy.
+pub fn expected_tiles(m: &Csr, block: usize) -> f64 {
+    use crate::formats::traits::SparseMatrix;
+    let bsz = block as f64;
+    let cells = (m.rows() as f64 / bsz).ceil() * (m.cols() as f64 / bsz).ceil();
+    let lambda = m.nnz() as f64 / cells.max(1.0);
+    cells * (1.0 - (-lambda).exp())
+}
+
+/// Expected tile-pair count for `A × B` blocked at `block` — the shared
+/// estimate behind the tiled and accelerator kernels' cost hints (keep
+/// them in sync when fitting constants from serve metrics).
+pub fn expected_tile_pairs(a: &Csr, b: &Csr, block: usize) -> f64 {
+    use crate::formats::traits::SparseMatrix;
+    let gk = (a.cols() as f64 / block as f64).ceil().max(1.0);
+    expected_tiles(a, block) * expected_tiles(b, block) / gk
+}
+
+/// Standard operand-mismatch error for `execute` implementations.
+pub fn wrong_operand(kernel: &dyn SpmmKernel, got: &PreparedB) -> String {
+    format!(
+        "kernel {}/{} expects B prepared as {:?}, got {:?}",
+        kernel.algorithm().name(),
+        kernel.name(),
+        kernel.format(),
+        got.format()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for alg in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(alg.name()).unwrap(), alg);
+        }
+        assert_eq!(Algorithm::parse("ACCEL").unwrap(), Algorithm::Block);
+        assert!(Algorithm::parse("nope").is_err());
+    }
+
+    #[test]
+    fn cost_hint_totals() {
+        let h = CostHint { flops: 10.0, prepare_words: 5.0 };
+        assert_eq!(h.total(), 15.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! CPU kernels: the three existing SpMM algorithms (`spmm::{dense,
+//! gustavson, inner}`) plus the multi-threaded tiled executor, each wrapped
+//! behind [`SpmmKernel`] so the registry can dispatch them interchangeably.
+//!
+//! Cost hints follow the paper's access-count models (§II/§III): Gustavson
+//! pays `nnz(A)·N·D_B` streaming work; inner-product pays one `locate` per
+//! (A-nonzero, B-column) pair — ≈ ½·N·D per locate in CRS vs ≈ b/2+1 in
+//! InCRS; the dense oracle pays the full m·k·n.
+
+use std::sync::Arc;
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::incrs::{InCrs, InCrsParams};
+use crate::formats::traits::{FormatKind, NullSink, SparseMatrix};
+use crate::spmm;
+
+use super::kernel::{
+    wrong_operand, Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+};
+use super::tiled::{self, TiledConfig};
+
+fn scalar_stats(macs: u64) -> ExecStats {
+    ExecStats {
+        dispatches: 1,
+        real_pairs: macs,
+        padded_pairs: macs,
+        macs_issued: macs,
+        threads: 1,
+    }
+}
+
+/// Average nonzeros per row of `m` (the paper's N·D).
+fn nd(m: &Csr) -> f64 {
+    m.nnz() as f64 / m.rows().max(1) as f64
+}
+
+// ---------------------------------------------------------------- dense
+
+/// The numeric oracle: `B` densified, row-expansion multiply. Never fast,
+/// always exact — registered so every other kernel can be checked against
+/// the same dispatch surface it runs behind.
+pub struct DenseOracleKernel;
+
+impl SpmmKernel for DenseOracleKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Dense
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Dense
+    }
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        CostHint {
+            flops: a.rows() as f64 * a.cols() as f64 * b.cols() as f64,
+            prepare_words: b.rows() as f64 * b.cols() as f64,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+        Ok(PreparedB::Dense(Arc::new(Dense::from_coo(&b.to_coo()))))
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+        let bd = match b {
+            PreparedB::Dense(d) => d,
+            other => return Err(wrong_operand(self, other)),
+        };
+        if a.cols() != bd.rows() {
+            return Err(format!(
+                "dimension mismatch: A is {:?}, B is {:?}",
+                a.shape(),
+                bd.shape()
+            ));
+        }
+        let (m, n) = (a.rows(), bd.cols());
+        let mut c = Dense::zeros(m, n);
+        let mut macs = 0u64;
+        for i in 0..m {
+            let (cols, vals) = a.row(i);
+            for (&k, &av) in cols.iter().zip(vals) {
+                for j in 0..n {
+                    *c.at_mut(i, j) += av * bd.at(k as usize, j);
+                }
+                macs += n as u64;
+            }
+        }
+        Ok(EngineOutput { c, stats: scalar_stats(macs) })
+    }
+}
+
+// ------------------------------------------------------------- gustavson
+
+/// Row-order CRS×CRS (the CPU baseline that avoids column access).
+pub struct GustavsonKernel;
+
+impl SpmmKernel for GustavsonKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Gustavson
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        "gustavson"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // each A-nonzero streams one B-row: nnz(A) · N·D_B MACs expected
+        CostHint {
+            flops: a.nnz() as f64 * nd(b),
+            prepare_words: 0.0,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+        Ok(PreparedB::Csr(Arc::new(b.clone())))
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+        let bc = match b {
+            PreparedB::Csr(m) => m,
+            other => return Err(wrong_operand(self, other)),
+        };
+        if a.cols() != bc.rows() {
+            return Err(format!(
+                "dimension mismatch: A is {:?}, B is {:?}",
+                a.shape(),
+                bc.shape()
+            ));
+        }
+        let (c_sparse, macs) = spmm::gustavson::multiply_counted(a, bc);
+        let c = Dense::from_coo(&c_sparse.to_coo());
+        Ok(EngineOutput { c, stats: scalar_stats(macs) })
+    }
+}
+
+// ----------------------------------------------------------------- inner
+
+/// Inner-product SpMM reading `B` column-wise through `locate`, in either
+/// plain CRS (the paper's baseline) or InCRS (the paper's proposal) —
+/// registered once per format so the registry key distinguishes them.
+pub struct InnerKernel {
+    format: FormatKind,
+    params: InCrsParams,
+}
+
+impl InnerKernel {
+    pub fn csr() -> InnerKernel {
+        InnerKernel {
+            format: FormatKind::Csr,
+            params: InCrsParams::default(),
+        }
+    }
+    pub fn incrs(params: InCrsParams) -> InnerKernel {
+        InnerKernel {
+            format: FormatKind::InCrs,
+            params,
+        }
+    }
+}
+
+impl SpmmKernel for InnerKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Inner
+    }
+    fn format(&self) -> FormatKind {
+        self.format
+    }
+    fn name(&self) -> &'static str {
+        match self.format {
+            FormatKind::InCrs => "inner-incrs",
+            _ => "inner-crs",
+        }
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // one locate per (A-nonzero, B-column): §III.C access models
+        let locates = a.nnz() as f64 * b.cols() as f64;
+        match self.format {
+            FormatKind::InCrs => CostHint {
+                flops: locates * (self.params.block as f64 / 2.0 + 1.0),
+                prepare_words: b.nnz() as f64 + b.rows() as f64,
+            },
+            _ => CostHint {
+                flops: locates * (nd(b) / 2.0).max(1.0),
+                prepare_words: 0.0,
+            },
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+        match self.format {
+            FormatKind::InCrs => Ok(PreparedB::InCrs(Arc::new(InCrs::from_csr_params(
+                b,
+                self.params,
+            )?))),
+            _ => Ok(PreparedB::Csr(Arc::new(b.clone()))),
+        }
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+        let mut sink = NullSink;
+        let (c, b_shape) = match (self.format, b) {
+            (FormatKind::InCrs, PreparedB::InCrs(m)) => (
+                (a.cols() == m.rows()).then(|| spmm::inner::multiply_b_incrs(a, m, &mut sink)),
+                m.shape(),
+            ),
+            (FormatKind::Csr, PreparedB::Csr(m)) => (
+                (a.cols() == m.rows()).then(|| spmm::inner::multiply_b_csr(a, m, &mut sink)),
+                m.shape(),
+            ),
+            (_, other) => return Err(wrong_operand(self, other)),
+        };
+        let c = c.ok_or_else(|| {
+            format!("dimension mismatch: A is {:?}, B is {b_shape:?}", a.shape())
+        })?;
+        let macs = a.nnz() as u64 * c.cols() as u64;
+        Ok(EngineOutput { c, stats: scalar_stats(macs) })
+    }
+}
+
+// ----------------------------------------------------------------- tiled
+
+/// The multi-threaded tiled executor behind the kernel contract (see
+/// [`super::tiled`]): any registered caller gets parallel execution for
+/// free by resolving `(Csr, Tiled)`.
+pub struct TiledKernel {
+    pub cfg: TiledConfig,
+}
+
+impl TiledKernel {
+    pub fn new(cfg: TiledConfig) -> TiledKernel {
+        TiledKernel { cfg }
+    }
+}
+
+impl SpmmKernel for TiledKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Tiled
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // expected tile-pair count from shared per-tile occupancy; total
+        // work, NOT wall time — hints must stay unit-consistent across
+        // kernels for Registry::select
+        let bsz = self.cfg.block as f64;
+        let pairs = super::kernel::expected_tile_pairs(a, b, self.cfg.block);
+        let a_tiles = super::kernel::expected_tiles(a, self.cfg.block).max(1.0);
+        // per pair: scan the A tile (bsz²) + MAC rows for its nonzeros
+        let per_pair = bsz * bsz + (a.nnz() as f64 / a_tiles) * bsz;
+        CostHint {
+            flops: pairs * per_pair,
+            prepare_words: (a.nnz() + b.nnz()) as f64,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+        // blockization of B happens inside execute (it is keyed to A's
+        // geometry too); the prepared operand stays canonical
+        Ok(PreparedB::Csr(Arc::new(b.clone())))
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+        let bc = match b {
+            PreparedB::Csr(m) => m,
+            other => return Err(wrong_operand(self, other)),
+        };
+        let (c, stats) = tiled::execute(a, bc, self.cfg)?;
+        Ok(EngineOutput { c, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    fn kernels() -> Vec<Box<dyn SpmmKernel>> {
+        vec![
+            Box::new(DenseOracleKernel),
+            Box::new(GustavsonKernel),
+            Box::new(InnerKernel::csr()),
+            Box::new(InnerKernel::incrs(InCrsParams::default())),
+            Box::new(TiledKernel::new(TiledConfig { block: 16, workers: 2 })),
+        ]
+    }
+
+    #[test]
+    fn every_kernel_matches_the_oracle() {
+        let a = uniform(26, 40, 0.2, 1);
+        let b = uniform(40, 31, 0.2, 2);
+        let want = dense_ref(&a, &b);
+        for k in kernels() {
+            let out = k.run(&a, &b).unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            assert!(
+                out.c.max_abs_diff(&want) < 1e-3,
+                "{} diverges from oracle",
+                k.name()
+            );
+            assert!(out.stats.dispatches >= 1, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn prepare_shared_shares_the_csr_arc() {
+        let b = Arc::new(uniform(12, 12, 0.3, 1));
+        match GustavsonKernel.prepare_shared(&b).unwrap() {
+            PreparedB::Csr(shared) => assert!(Arc::ptr_eq(&shared, &b)),
+            other => panic!("unexpected prepared operand {other:?}"),
+        }
+        // conversion kernels still build their own representation
+        match InnerKernel::incrs(InCrsParams::default()).prepare_shared(&b).unwrap() {
+            PreparedB::InCrs(_) => {}
+            other => panic!("unexpected prepared operand {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kernels_reject_mismatched_prepared_operands() {
+        let a = uniform(8, 8, 0.5, 1);
+        let wrong = PreparedB::Dense(Arc::new(Dense::zeros(8, 8)));
+        let err = GustavsonKernel.execute(&a, &wrong).unwrap_err();
+        assert!(err.contains("expects B prepared"), "{err}");
+    }
+
+    #[test]
+    fn kernels_reject_dimension_mismatch() {
+        let a = uniform(6, 7, 0.5, 1);
+        let b = uniform(9, 6, 0.5, 2);
+        for k in kernels() {
+            let err = k.run(&a, &b).unwrap_err();
+            assert!(err.contains("dimension mismatch"), "{}: {err}", k.name());
+        }
+    }
+
+    #[test]
+    fn cost_hints_rank_oracle_last_on_sparse_inputs() {
+        let a = uniform(200, 400, 0.01, 3);
+        let b = uniform(400, 300, 0.01, 4);
+        let dense_cost = DenseOracleKernel.cost_hint(&a, &b).total();
+        let gust_cost = GustavsonKernel.cost_hint(&a, &b).total();
+        assert!(gust_cost < dense_cost);
+    }
+}

@@ -1,0 +1,63 @@
+//! Unified SpMM execution engine: one kernel contract, one registry, one
+//! parallel executor — the dispatch layer every consumer (coordinator, CLI,
+//! eval drivers, benches) routes through.
+//!
+//! # Why this layer exists
+//!
+//! The paper's speedups come from pairing the right *representation* (InCRS
+//! instead of CRS) with the right *compute organization* (the comparator
+//! mesh instead of FPIC/conventional MM). Those are two independent axes,
+//! and a serving system needs to pick per job: Gustavson for row-order
+//! traffic, inner-product over InCRS when column access dominates, the
+//! blocked accelerator path when the MXU is available. This module makes
+//! the axes explicit:
+//!
+//! * [`Algorithm`] — the compute organization (dense oracle, Gustavson,
+//!   inner-product, tiled, accelerator block plan);
+//! * [`kernel::SpmmKernel`] — the execution contract: `cost_hint` (choose
+//!   without running), `prepare` (build B's representation once, cacheable),
+//!   `execute` (the multiply);
+//! * [`Registry`] — `(FormatKind, Algorithm)` → kernel resolution plus
+//!   cost-hint-based selection ([`Registry::select`]);
+//! * [`tiled`] — a multi-threaded tile-pair executor (std threads over
+//!   `blocks::BlockGrid` intersections, per-worker scratch, deterministic
+//!   K-ordered reduction → bit-identical results at any worker count);
+//! * [`accel::AccelKernel`] — `runtime::NumericEngine` (PJRT or its CPU
+//!   twin) adapted onto the same contract.
+//!
+//! # Registering a new backend
+//!
+//! ```ignore
+//! struct MyGpuKernel { /* queue, streams, ... */ }
+//! impl SpmmKernel for MyGpuKernel {
+//!     fn algorithm(&self) -> Algorithm { Algorithm::Block }
+//!     fn format(&self) -> FormatKind { FormatKind::Csr }
+//!     fn name(&self) -> &'static str { "my-gpu" }
+//!     fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint { /* estimate */ }
+//!     fn prepare(&self, b: &Csr) -> Result<PreparedB, String> { /* upload */ }
+//!     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> { /* run */ }
+//! }
+//! let mut reg = Registry::with_default_kernels(geom, workers);
+//! reg.register(Arc::new(MyGpuKernel { ... }));
+//! // the coordinator, CLI (`spmm-accel kernels`), property tests, and
+//! // benches now dispatch to it via (Csr, Block)
+//! ```
+//!
+//! The coordinator's `Server` resolves kernels per worker (so non-`Sync`
+//! device handles like PJRT clients stay worker-local) and per job (fixed
+//! key, per-job override, or `Auto` cost-hint selection) — see
+//! `coordinator::server`.
+
+pub mod accel;
+pub mod kernel;
+pub mod kernels;
+pub mod registry;
+pub mod tiled;
+
+pub use accel::AccelKernel;
+pub use kernel::{
+    Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+};
+pub use kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
+pub use registry::{KernelKey, Registry};
+pub use tiled::TiledConfig;

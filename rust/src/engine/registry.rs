@@ -1,0 +1,190 @@
+//! Kernel registry: `(FormatKind, Algorithm)` → [`SpmmKernel`], the single
+//! dispatch surface every execution consumer (coordinator, CLI, eval
+//! drivers, benches) resolves through.
+//!
+//! Registering a new backend is one call: implement [`SpmmKernel`] and
+//! `registry.register(Arc::new(MyKernel))` — the server, router, property
+//! tests, and `spmm-accel kernels` pick it up with no further wiring.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::formats::csr::Csr;
+use crate::formats::incrs::InCrsParams;
+use crate::formats::traits::FormatKind;
+use crate::spmm::plan::Geometry;
+
+use super::accel::AccelKernel;
+use super::kernel::{Algorithm, SpmmKernel};
+use super::kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
+use super::tiled::TiledConfig;
+
+/// The registry key: which representation of `B` the kernel consumes and
+/// which compute organization it applies.
+pub type KernelKey = (FormatKind, Algorithm);
+
+#[derive(Default)]
+pub struct Registry {
+    map: BTreeMap<KernelKey, Arc<dyn SpmmKernel>>,
+}
+
+impl Registry {
+    /// Empty registry (register kernels explicitly).
+    pub fn new() -> Registry {
+        Registry { map: BTreeMap::new() }
+    }
+
+    /// The standard CPU kernel set: dense oracle, Gustavson, inner-product
+    /// over CRS and InCRS, the `tile_workers`-threaded tiled executor, and
+    /// the CPU accelerator-plan twin at `geom`.
+    pub fn with_default_kernels(geom: Geometry, tile_workers: usize) -> Registry {
+        let mut r = Registry::new();
+        r.register(Arc::new(DenseOracleKernel));
+        r.register(Arc::new(GustavsonKernel));
+        r.register(Arc::new(InnerKernel::csr()));
+        r.register(Arc::new(InnerKernel::incrs(InCrsParams::default())));
+        r.register(Arc::new(TiledKernel::new(TiledConfig {
+            block: geom.block,
+            workers: tile_workers.max(1),
+        })));
+        r.register(Arc::new(AccelKernel::cpu(geom)));
+        r
+    }
+
+    /// Register (or replace) the kernel under its own `(format, algorithm)`
+    /// key. Returns the key it was registered under.
+    pub fn register(&mut self, kernel: Arc<dyn SpmmKernel>) -> KernelKey {
+        let key = (kernel.format(), kernel.algorithm());
+        self.map.insert(key, kernel);
+        key
+    }
+
+    /// Exact lookup.
+    pub fn resolve(&self, format: FormatKind, algorithm: Algorithm) -> Option<Arc<dyn SpmmKernel>> {
+        self.map.get(&(format, algorithm)).cloned()
+    }
+
+    /// First kernel implementing `algorithm`, any format (key order).
+    pub fn resolve_algorithm(&self, algorithm: Algorithm) -> Option<Arc<dyn SpmmKernel>> {
+        self.map
+            .iter()
+            .find(|((_, alg), _)| *alg == algorithm)
+            .map(|(_, k)| Arc::clone(k))
+    }
+
+    /// Pick the cheapest kernel for `A × B` by cost hint, excluding the
+    /// dense oracle (it exists for verification, not serving). Returns the
+    /// oracle only when nothing else is registered.
+    pub fn select(&self, a: &Csr, b: &Csr) -> Option<Arc<dyn SpmmKernel>> {
+        let best = self
+            .map
+            .values()
+            .filter(|k| k.algorithm() != Algorithm::Dense)
+            .min_by(|x, y| {
+                x.cost_hint(a, b)
+                    .total()
+                    .total_cmp(&y.cost_hint(a, b).total())
+            });
+        best.cloned()
+            .or_else(|| self.resolve_algorithm(Algorithm::Dense))
+    }
+
+    /// Registered keys, sorted.
+    pub fn keys(&self) -> Vec<KernelKey> {
+        self.map.keys().copied().collect()
+    }
+
+    /// Iterate registered kernels in key order.
+    pub fn kernels(&self) -> impl Iterator<Item = &Arc<dyn SpmmKernel>> {
+        self.map.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list()
+            .entries(self.map.keys().map(|(fmt, alg)| {
+                format!("{}/{}", fmt.name(), alg.name())
+            }))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    fn default_registry() -> Registry {
+        Registry::with_default_kernels(Geometry { block: 16, pairs: 32, slots: 16 }, 2)
+    }
+
+    #[test]
+    fn default_kernels_cover_three_formats_and_algorithms() {
+        let r = default_registry();
+        let keys = r.keys();
+        let formats: std::collections::BTreeSet<_> = keys.iter().map(|k| k.0).collect();
+        let algos: std::collections::BTreeSet<_> = keys.iter().map(|k| k.1).collect();
+        assert!(formats.len() >= 3, "{keys:?}");
+        assert!(algos.len() >= 4, "{keys:?}");
+        assert!(r.resolve(FormatKind::Csr, Algorithm::Gustavson).is_some());
+        assert!(r.resolve(FormatKind::InCrs, Algorithm::Inner).is_some());
+        assert!(r.resolve(FormatKind::Dense, Algorithm::Dense).is_some());
+        assert!(r.resolve(FormatKind::Csr, Algorithm::Block).is_some());
+    }
+
+    #[test]
+    fn every_registered_kernel_agrees_with_the_oracle() {
+        let r = default_registry();
+        let a = uniform(22, 37, 0.2, 5);
+        let b = uniform(37, 29, 0.2, 6);
+        let want = dense_ref(&a, &b);
+        for k in r.kernels() {
+            let out = k.run(&a, &b).unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            assert!(
+                out.c.max_abs_diff(&want) < 1e-3,
+                "{}/{} diverges",
+                k.format().name(),
+                k.algorithm().name()
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_misses_cleanly() {
+        let r = Registry::new();
+        assert!(r.is_empty());
+        assert!(r.resolve(FormatKind::Csr, Algorithm::Gustavson).is_none());
+        assert!(r.select(&uniform(4, 4, 0.5, 1), &uniform(4, 4, 0.5, 2)).is_none());
+    }
+
+    #[test]
+    fn select_avoids_the_oracle_and_scales_with_sparsity() {
+        let r = default_registry();
+        let a = uniform(64, 128, 0.02, 7);
+        let b = uniform(128, 64, 0.02, 8);
+        let k = r.select(&a, &b).unwrap();
+        assert_ne!(k.algorithm(), Algorithm::Dense);
+        // and the selected kernel actually works
+        let out = k.run(&a, &b).unwrap();
+        assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn register_replaces_same_key() {
+        let mut r = Registry::new();
+        let k1 = r.register(Arc::new(GustavsonKernel));
+        let k2 = r.register(Arc::new(GustavsonKernel));
+        assert_eq!(k1, k2);
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -1,0 +1,240 @@
+//! Multi-threaded tiled SpMM executor — parallel execution over the
+//! `blocks::BlockGrid` tile pairs with deterministic reduction order.
+//!
+//! The work decomposition mirrors the paper's mesh: both operands are
+//! blocked at `block × block` granularity and A/B tiles are intersected
+//! along K (the comparator step). The unit of scheduling is one *output*
+//! tile together with its K-ordered pair list, so
+//!
+//! * no two workers ever write the same output cell (no locks, no atomics),
+//! * each output tile is accumulated by exactly one worker in ascending K
+//!   order — the reduction order is fixed, so results are **bit-identical**
+//!   for any worker count, and
+//! * each worker fills one preallocated scratch buffer for all of its tiles
+//!   (per-worker scratch reuse; no per-tile allocation in the hot loop).
+//!
+//! Load balance: output tiles carry very different pair counts, so the
+//! contiguous partition is weighted by pairs rather than by tile count.
+
+use std::collections::BTreeMap;
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::traits::SparseMatrix;
+use crate::spmm::blocks::blockize;
+
+use super::kernel::ExecStats;
+
+/// Tiled executor configuration: tile size and worker count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TiledConfig {
+    pub block: usize,
+    /// 1 = serial (same code path, same reduction order).
+    pub workers: usize,
+}
+
+impl Default for TiledConfig {
+    fn default() -> Self {
+        TiledConfig { block: 32, workers: 1 }
+    }
+}
+
+/// Split task indices `0..n` into at most `workers` contiguous chunks with
+/// nearly equal total `weight` (greedy prefix cuts at the ideal boundaries).
+fn partition_by_weight(weights: &[usize], workers: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    if n == 0 || workers == 0 {
+        return Vec::new();
+    }
+    let w = workers.min(n);
+    let total: usize = weights.iter().sum();
+    let mut bounds = Vec::with_capacity(w);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (i, &wt) in weights.iter().enumerate() {
+        acc += wt;
+        // cut when this chunk reached its proportional share of the total
+        // weight, always leaving at least one task for the final chunk
+        let chunks_done = bounds.len();
+        let target = (total * (chunks_done + 1) + w - 1) / w;
+        if acc >= target && chunks_done < w - 1 && i + 1 < n {
+            bounds.push((start, i + 1));
+            start = i + 1;
+        }
+    }
+    bounds.push((start, n));
+    bounds
+}
+
+/// C = A × B through the blocked tile-pair decomposition, executed by
+/// `cfg.workers` std threads. Returns the dense product and its accounting.
+pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats), String> {
+    if a.cols() != b.rows() {
+        return Err(format!(
+            "dimension mismatch: A is {:?}, B is {:?}",
+            a.shape(),
+            b.shape()
+        ));
+    }
+    let bsz = cfg.block;
+    let (m, n) = (a.rows(), b.cols());
+    let ga = blockize(a, bsz);
+    let gb = blockize(b, bsz);
+
+    // index B tiles by K-block for the intersection
+    let mut b_by_k: Vec<Vec<(u32, &Vec<f32>)>> = vec![Vec::new(); gb.grid_rows];
+    for (&(bk, bj), tile) in &gb.tiles {
+        b_by_k[bk as usize].push((bj, tile));
+    }
+
+    // one task per output tile; BTreeMap iteration keeps the per-tile pair
+    // list in ascending K order (the deterministic reduction order)
+    let mut by_out: BTreeMap<(u32, u32), Vec<(&Vec<f32>, &Vec<f32>)>> = BTreeMap::new();
+    for (&(bi, bk), a_tile) in &ga.tiles {
+        for &(bj, b_tile) in &b_by_k[bk as usize] {
+            by_out.entry((bi, bj)).or_default().push((a_tile, b_tile));
+        }
+    }
+    let tasks: Vec<((u32, u32), Vec<(&Vec<f32>, &Vec<f32>)>)> = by_out.into_iter().collect();
+    let total_pairs: usize = tasks.iter().map(|(_, p)| p.len()).sum();
+
+    let weights: Vec<usize> = tasks.iter().map(|(_, p)| p.len()).collect();
+    let bounds = partition_by_weight(&weights, cfg.workers.max(1));
+
+    // each worker owns one scratch buffer covering all of its output tiles
+    let buffers: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(lo, hi)| {
+                let chunk = &tasks[lo..hi];
+                s.spawn(move || {
+                    let mut scratch = vec![0.0f32; chunk.len() * bsz * bsz];
+                    for (t, (_, pairs)) in chunk.iter().enumerate() {
+                        let acc = &mut scratch[t * bsz * bsz..(t + 1) * bsz * bsz];
+                        for (a_tile, b_tile) in pairs {
+                            mac_tile(acc, a_tile, b_tile, bsz);
+                        }
+                    }
+                    scratch
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("tile worker panicked"))
+            .collect()
+    });
+
+    // scatter: every output tile is written exactly once (crop ragged edges)
+    let mut c = Dense::zeros(m, n);
+    for (&(lo, hi), buf) in bounds.iter().zip(&buffers) {
+        for (t, &((bi, bj), _)) in tasks[lo..hi].iter().enumerate() {
+            let tile = &buf[t * bsz * bsz..(t + 1) * bsz * bsz];
+            let r0 = bi as usize * bsz;
+            let c0 = bj as usize * bsz;
+            let r_lim = bsz.min(m - r0);
+            let c_lim = bsz.min(n - c0);
+            for r in 0..r_lim {
+                for cc in 0..c_lim {
+                    *c.at_mut(r0 + r, c0 + cc) = tile[r * bsz + cc];
+                }
+            }
+        }
+    }
+
+    let stats = ExecStats {
+        dispatches: tasks.len() as u64,
+        real_pairs: total_pairs as u64,
+        padded_pairs: total_pairs as u64,
+        macs_issued: total_pairs as u64 * (bsz * bsz * bsz) as u64,
+        threads: bounds.len().max(1),
+    };
+    Ok((c, stats))
+}
+
+/// acc += a_tile × b_tile (dense `bsz²` row-major tiles, zero-skip on A).
+#[inline]
+fn mac_tile(acc: &mut [f32], a_tile: &[f32], b_tile: &[f32], bsz: usize) {
+    for i in 0..bsz {
+        for k in 0..bsz {
+            let av = a_tile[i * bsz + k];
+            if av == 0.0 {
+                continue;
+            }
+            let row = &b_tile[k * bsz..(k + 1) * bsz];
+            let out = &mut acc[i * bsz..(i + 1) * bsz];
+            for j in 0..bsz {
+                out[j] += av * row[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::spmm::dense::multiply as dense_ref;
+
+    #[test]
+    fn matches_dense_reference() {
+        for seed in 0..3 {
+            let a = uniform(45, 70, 0.15, seed);
+            let b = uniform(70, 38, 0.18, seed + 7);
+            let (c, stats) = execute(&a, &b, TiledConfig { block: 16, workers: 3 }).unwrap();
+            let want = dense_ref(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-3, "seed {seed}");
+            assert!(stats.real_pairs > 0);
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let a = uniform(64, 96, 0.2, 11);
+        let b = uniform(96, 80, 0.2, 12);
+        let (c1, s1) = execute(&a, &b, TiledConfig { block: 16, workers: 1 }).unwrap();
+        for workers in [2, 3, 4, 7] {
+            let (cw, sw) = execute(&a, &b, TiledConfig { block: 16, workers }).unwrap();
+            assert_eq!(c1.data, cw.data, "workers={workers} not bit-identical");
+            assert_eq!(s1.real_pairs, sw.real_pairs);
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let a = uniform(8, 9, 0.5, 1);
+        let b = uniform(10, 8, 0.5, 2);
+        assert!(execute(&a, &b, TiledConfig::default()).is_err());
+    }
+
+    #[test]
+    fn empty_operands() {
+        let a = uniform(20, 30, 0.0, 1);
+        let b = uniform(30, 20, 0.3, 2);
+        let (c, stats) = execute(&a, &b, TiledConfig { block: 8, workers: 4 }).unwrap();
+        assert!(c.data.iter().all(|&v| v == 0.0));
+        assert_eq!(stats.real_pairs, 0);
+        assert_eq!(stats.dispatches, 0);
+    }
+
+    #[test]
+    fn weighted_partition_covers_exactly_once() {
+        for (weights, workers) in [
+            (vec![1usize; 10], 3usize),
+            (vec![100, 1, 1, 1, 1, 1], 3),
+            (vec![5], 4),
+            (vec![2, 2, 2, 2], 4),
+        ] {
+            let b = partition_by_weight(&weights, workers);
+            assert!(!b.is_empty());
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, weights.len());
+            for pair in b.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0);
+            }
+            assert!(b.len() <= workers.min(weights.len()));
+            assert!(b.iter().all(|&(lo, hi)| hi > lo), "{b:?}");
+        }
+        assert!(partition_by_weight(&[], 4).is_empty());
+    }
+}

@@ -1,0 +1,131 @@
+//! `engines` experiment: every registered kernel on the same workload —
+//! measured wall time, work accounting, and max error vs the dense oracle.
+//!
+//! This is the eval-side consumer of the unified execution layer: it walks
+//! `engine::Registry` rather than naming algorithms, so a newly registered
+//! backend shows up in the report (and in `spmm-accel exp --id engines`)
+//! with no further wiring. The serial-vs-parallel tiled rows double as a
+//! quick sanity check of the executor's scaling.
+
+use std::time::Instant;
+
+use super::report::{ExpOptions, ExpResult};
+use crate::datasets::synth::uniform;
+use crate::engine::{
+    Algorithm, EngineOutput, Registry, SpmmKernel, TiledConfig, TiledKernel,
+};
+use crate::spmm::plan::Geometry;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{sig, Table};
+
+pub fn run(opts: ExpOptions) -> ExpResult {
+    let n = opts.scaled(768);
+    let a = uniform(n, n, 0.02, opts.seed);
+    let b = uniform(n, n, 0.02, opts.seed + 1);
+    let oracle = crate::spmm::dense::multiply(&a, &b);
+
+    let reg = Registry::with_default_kernels(Geometry::default(), 1);
+    // a second tiled entry at 4 workers would collide on the registry key,
+    // so benchmark it out-of-band below
+    let tiled4 = TiledKernel::new(TiledConfig { block: 32, workers: 4 });
+
+    let mut table = Table::new(
+        &format!("Engines — registered kernels on uniform {n}x{n} @ 2% (seed {})", opts.seed),
+        &["kernel", "format", "algorithm", "wall ms", "dispatches", "real pairs", "max err"],
+    );
+    let mut rows = Vec::new();
+    let mut run_one = |name: &str, fmt: &str, alg: &str, out: Result<EngineOutput, String>, wall_ms: f64| {
+        match out {
+            Ok(o) => {
+                let err = o.c.max_abs_diff(&oracle);
+                table.row(vec![
+                    name.into(),
+                    fmt.into(),
+                    alg.into(),
+                    sig(wall_ms),
+                    o.stats.dispatches.to_string(),
+                    o.stats.real_pairs.to_string(),
+                    format!("{err:.2e}"),
+                ]);
+                rows.push(obj([
+                    ("kernel", Json::from(name)),
+                    ("format", Json::from(fmt)),
+                    ("algorithm", Json::from(alg)),
+                    ("wall_ms", Json::from(wall_ms)),
+                    ("dispatches", Json::from(o.stats.dispatches)),
+                    ("real_pairs", Json::from(o.stats.real_pairs)),
+                    ("max_err", Json::from(err as f64)),
+                ]));
+            }
+            Err(e) => {
+                table.row(vec![
+                    name.into(),
+                    fmt.into(),
+                    alg.into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("error: {e}"),
+                ]);
+            }
+        }
+    };
+
+    // the dense oracle is the reference itself; skip it to keep the run fast
+    let kernels: Vec<_> = reg
+        .kernels()
+        .filter(|k| k.algorithm() != Algorithm::Dense)
+        .cloned()
+        .collect();
+    for k in &kernels {
+        let t = Instant::now();
+        let out = k.run(&a, &b);
+        let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        run_one(k.name(), k.format().name(), k.algorithm().name(), out, wall_ms);
+    }
+    {
+        let t = Instant::now();
+        let out = tiled4.run(&a, &b);
+        let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        run_one("tiled-4w", "CRS", "tiled", out, wall_ms);
+    }
+    drop(run_one);
+    let keys: Vec<Json> = reg
+        .keys()
+        .iter()
+        .map(|(f, alg)| Json::from(format!("{}/{}", f.name(), alg.name())))
+        .collect();
+
+    ExpResult {
+        id: "engines",
+        table,
+        json: obj([
+            ("n", Json::from(n)),
+            ("density", Json::from(0.02)),
+            ("seed", Json::from(opts.seed)),
+            ("registered", Json::Arr(keys)),
+            ("runs", Json::Arr(rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engines_experiment_runs_scaled_down() {
+        let r = run(ExpOptions { seed: 7, scale: 0.1 });
+        assert_eq!(r.id, "engines");
+        assert!(r.table.rows.len() >= 5, "rows: {}", r.table.rows.len());
+        // every run row must agree with the oracle
+        for row in &r.table.rows {
+            let err_cell = row.last().unwrap();
+            assert!(!err_cell.starts_with("error"), "{row:?}");
+        }
+        let runs = r.json.at(&["runs"]).unwrap().as_arr().unwrap();
+        for run in runs {
+            assert!(run.at(&["max_err"]).unwrap().as_f64().unwrap() < 1e-3);
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! `paper_tables` bench both dispatch through [`run_experiment`].
 
 pub mod ablations;
+pub mod engines;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -14,9 +15,10 @@ pub mod table2;
 
 pub use report::{ExpOptions, ExpResult};
 
-/// All experiment ids, in paper order.
-pub const ALL_EXPERIMENTS: [&str; 7] = [
-    "table1", "table2", "fig3", "table4", "fig4a", "fig4b", "fig5",
+/// All experiment ids: the paper's tables/figures in paper order, then the
+/// repo's own `engines` kernel comparison.
+pub const ALL_EXPERIMENTS: [&str; 8] = [
+    "table1", "table2", "fig3", "table4", "fig4a", "fig4b", "fig5", "engines",
 ];
 // table5 is parameter accounting, printed alongside fig5
 
@@ -31,6 +33,7 @@ pub fn run_experiment(id: &str, opts: ExpOptions) -> Result<Vec<ExpResult>, Stri
         "fig4a" => vec![fig4::run_a(opts)],
         "fig4b" => vec![fig4::run_b(opts)],
         "fig5" => vec![fig5::run_table5(), fig5::run(opts)],
+        "engines" => vec![engines::run(opts)],
         "ablations" => ablations::run_all(opts),
         "all" => {
             let mut out = Vec::new();

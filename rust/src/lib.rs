@@ -9,7 +9,26 @@
 //! matrix cheap, and (2) a **synchronized systolic mesh** for SpMM that
 //! shares operand streams along rows/columns of a comparator+MAC mesh.
 //!
-//! Crate layout (see DESIGN.md for the full inventory):
+//! ## Execution model
+//!
+//! All numeric SpMM execution flows through one dispatch layer, the
+//! [`engine`] module: a [`engine::SpmmKernel`] trait (prepare / execute /
+//! cost-hint) and a [`engine::Registry`] keyed by `(FormatKind,
+//! Algorithm)`. The CPU algorithms in [`spmm`], the multi-threaded tiled
+//! executor ([`engine::tiled`]), and the accelerator plan path
+//! ([`runtime`], PJRT or its CPU twin) are all registered kernels; the
+//! [`coordinator`] server, the CLI, the eval drivers, and the benches
+//! resolve them through the registry. Adding a backend = implementing the
+//! trait + one `register` call (see [`engine`] docs).
+//!
+//! ```ignore
+//! let reg = Registry::with_default_kernels(Geometry::default(), 4);
+//! let k = reg.resolve(FormatKind::InCrs, Algorithm::Inner).unwrap();
+//! let out = k.run(&a, &b)?;           // prepare (InCRS build) + execute
+//! // or: reg.select(&a, &b)           // cost-hint auto-selection
+//! ```
+//!
+//! ## Crate layout
 //!
 //! * [`formats`] — all Table-I sparse formats + [`formats::InCrs`], with
 //!   memory-access accounting on random access.
@@ -21,17 +40,32 @@
 //! * [`arch`] — cycle-accurate simulators: the proposed synchronized mesh
 //!   (paper Algorithm 2), FPIC (Algorithm 1), conventional systolic MM
 //!   (Figs 4/5, Table V).
-//! * [`spmm`] — CPU SpMM algorithms + 32×32 blocking/planning for the
+//! * [`spmm`] — CPU SpMM algorithm bodies + 32×32 blocking/planning for the
 //!   accelerator dispatch path.
-//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels.
-//! * [`coordinator`] — job scheduler/router/batching server (L3).
-//! * [`eval`] — drivers that regenerate every table and figure.
+//! * [`engine`] — **the unified execution layer**: kernel trait, registry,
+//!   multi-threaded tiled executor, accelerator adapter.
+//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels
+//!   (feature `pjrt`; CPU twin otherwise).
+//! * [`coordinator`] — job router/scheduler/batching server (L3) over the
+//!   kernel registry.
+//! * [`eval`] — drivers that regenerate every table and figure, plus the
+//!   `engines` kernel-comparison experiment.
+//!
+//! ## Features
+//!
+//! * `pjrt` — enables the PJRT runtime (`runtime::engine`). Off by
+//!   default so the crate builds and tests green in offline environments;
+//!   every PJRT-dependent test skips itself with a message when the
+//!   feature or the artifacts are absent. **Enabling it requires first
+//!   adding the vendored `xla` bindings** (see the feature comment in
+//!   Cargo.toml) — without them `--features pjrt` does not compile.
 
 pub mod access;
 pub mod arch;
 pub mod cachesim;
 pub mod coordinator;
 pub mod datasets;
+pub mod engine;
 pub mod eval;
 pub mod formats;
 pub mod runtime;

@@ -1,19 +1,21 @@
 //! `spmm-accel` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   exp        run a paper experiment (table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|all)
+//!   exp        run a paper experiment (table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|engines|all)
 //!   gen        generate a synthetic dataset and write MatrixMarket
 //!   convert    convert a MatrixMarket file between sparse formats (reports storage)
 //!   locate     measure random-access cost of every format on a dataset
-//!   spmm       run one SpMM job through the coordinator (PJRT or CPU backend)
+//!   spmm       run one SpMM job through the coordinator (any registered kernel)
 //!   serve      start the batching server and drive a synthetic workload
+//!   kernels    list the registered (format, algorithm) kernels + cost hints
 //!   info       print artifact/runtime info
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use spmm_accel::coordinator::{EngineKind, JobOptions, Server, ServerConfig, SpmmJob};
+use spmm_accel::coordinator::{JobOptions, KernelSpec, Server, ServerConfig, SpmmJob};
 use spmm_accel::datasets;
+use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
 use spmm_accel::eval::{run_experiment, ExpOptions};
 use spmm_accel::formats::traits::SparseMatrix;
 use spmm_accel::runtime::Manifest;
@@ -38,6 +40,28 @@ fn exp_options(args: &Args) -> Result<ExpOptions, String> {
         seed: args.get_or("seed", 42u64)?,
         scale: args.get_or("scale", 1.0f64)?,
     })
+}
+
+/// `--kernel <auto|algorithm>` + `--format <fmt>` + legacy `--backend
+/// <pjrt|cpu>` → the server's kernel spec and PJRT preference.
+fn parse_kernel_spec(args: &Args) -> Result<(KernelSpec, bool), String> {
+    let prefer_pjrt = match args.str_or("backend", "cpu") {
+        "pjrt" => true,
+        "cpu" => false,
+        other => return Err(format!("unknown backend {other:?} (pjrt|cpu)")),
+    };
+    let spec = match args.str_or("kernel", "block") {
+        "auto" => KernelSpec::Auto,
+        name => {
+            let alg = Algorithm::parse(name)?;
+            match args.str_opt("format") {
+                // explicit --format overrides the registry's default key
+                Some(f) => KernelSpec::Fixed(spmm_accel::formats::parse_kind(f)?, alg),
+                None => KernelSpec::for_algorithm(alg),
+            }
+        }
+    };
+    Ok((spec, prefer_pjrt))
 }
 
 fn run(cmd: &str, args: &Args) -> Result<(), String> {
@@ -108,23 +132,20 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let rows = args.get_or("rows", 256usize)?;
             let cols = args.get_or("cols", 256usize)?;
             let density = args.get_or("density", 0.05f64)?;
-            let backend = args.str_or("backend", "pjrt");
-            let engine = match backend {
-                "pjrt" => EngineKind::Pjrt,
-                "cpu" => EngineKind::Cpu,
-                other => return Err(format!("unknown backend {other:?}")),
-            };
+            let (kernel, prefer_pjrt) = parse_kernel_spec(args)?;
             let a = Arc::new(datasets::uniform(rows, cols, density, seed));
             let b = Arc::new(datasets::uniform(cols, rows, density, seed + 1));
             let server = Server::start(ServerConfig {
                 workers: 1,
-                engine,
+                kernel,
+                prefer_pjrt,
+                tile_workers: args.get_or("tile-workers", 4usize)?,
                 ..Default::default()
             });
             let res = server
                 .submit(
                     SpmmJob::new(0, a, b)
-                        .with_opts(JobOptions { verify: true, keep_result: false }),
+                        .with_opts(JobOptions { verify: true, keep_result: false, kernel: None }),
                 )
                 .recv()
                 .map_err(|e| e.to_string())?;
@@ -139,13 +160,14 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         "serve" => {
             let workers = args.get_or("workers", 2usize)?;
             let jobs = args.get_or("jobs", 16usize)?;
-            let backend = args.str_or("backend", "cpu");
-            let engine = if backend == "pjrt" { EngineKind::Pjrt } else { EngineKind::Cpu };
+            let (kernel, prefer_pjrt) = parse_kernel_spec(args)?;
             let server = Server::start(ServerConfig {
                 workers,
                 queue_depth: 8,
-                engine,
+                kernel,
+                prefer_pjrt,
                 geometry: Geometry::default(),
+                tile_workers: args.get_or("tile-workers", 1usize)?,
                 artifacts_dir: Manifest::default_dir(),
             });
             let a = Arc::new(datasets::uniform(256, 256, 0.03, 1));
@@ -154,7 +176,11 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 .map(|i| {
                     server.submit(
                         SpmmJob::new(i, a.clone(), a.clone())
-                            .with_opts(JobOptions { verify: false, keep_result: false }),
+                            .with_opts(JobOptions {
+                                verify: false,
+                                keep_result: false,
+                                kernel: None,
+                            }),
                     )
                 })
                 .collect();
@@ -163,15 +189,41 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             }
             let snap = server.metrics.snapshot();
             println!(
-                "{} jobs on {} workers ({backend}) in {:?}: p50={}us p99={}us dispatches={}",
+                "{} jobs on {} workers ({kernel:?}) in {:?}: p50={}us p99={}us \
+                 queue p50={}us dispatches={}",
                 snap.jobs_completed,
                 workers,
                 t0.elapsed(),
                 snap.p50_us,
                 snap.p99_us,
+                snap.queue_p50_us,
                 snap.dispatches
             );
             server.shutdown();
+            Ok(())
+        }
+        "kernels" => {
+            let geom = Geometry::default();
+            let reg = Registry::with_default_kernels(
+                geom,
+                args.get_or("tile-workers", 4usize)?,
+            );
+            let a = datasets::uniform(256, 512, 0.05, 1);
+            let b = datasets::uniform(512, 256, 0.05, 2);
+            println!("registered kernels (cost hints on 256x512x256 @ 5%):");
+            for k in reg.kernels() {
+                let h = k.cost_hint(&a, &b);
+                println!(
+                    "  ({:>7}, {:>9}) {:<12} flops~{:.3e} prepare~{:.3e}",
+                    k.format().name(),
+                    k.algorithm().name(),
+                    k.name(),
+                    h.flops,
+                    h.prepare_words
+                );
+            }
+            let sel = reg.select(&a, &b).expect("non-empty registry");
+            println!("auto-select would pick: {}", sel.name());
             Ok(())
         }
         "trace" => {
@@ -219,14 +271,16 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             println!(
                 "spmm-accel — InCRS + synchronized systolic SpMM (Golnari & Malik 2019)\n\
                  \n\
-                 usage: spmm-accel <exp|gen|convert|locate|spmm|serve|info> [flags]\n\
+                 usage: spmm-accel <exp|gen|convert|locate|spmm|serve|kernels|info> [flags]\n\
                  \n\
                  examples:\n\
                  \u{20}  spmm-accel exp --id table2\n\
-                 \u{20}  spmm-accel exp --id fig5 --scale 0.25\n\
+                 \u{20}  spmm-accel exp --id engines --scale 0.5\n\
                  \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
-                 \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --backend pjrt\n\
-                 \u{20}  spmm-accel serve --workers 4 --jobs 32"
+                 \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
+                 \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
+                 \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto\n\
+                 \u{20}  spmm-accel kernels"
             );
             Ok(())
         }

@@ -1,17 +1,20 @@
 //! PJRT execution engine: load HLO-text artifacts, compile once per process
 //! on the CPU PJRT client, execute from the L3 hot path.
 //!
-//! Follows /opt/xla-example/load_hlo: HLO *text* is the interchange format
-//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos), computations
-//! are lowered with `return_tuple=True` so results unwrap with
-//! `to_tuple1()`.
+//! Only compiled with `--features pjrt` (requires the vendored `xla`
+//! bindings — see Cargo.toml). Follows /opt/xla-example/load_hlo: HLO
+//! *text* is the interchange format (xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos), computations are lowered with `return_tuple=True` so
+//! results unwrap with `to_tuple1()`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use super::artifact::Manifest;
+
+fn err<E: std::fmt::Display>(ctx: &str) -> impl FnOnce(E) -> String + '_ {
+    move |e| format!("{ctx}: {e}")
+}
 
 pub struct Engine {
     client: xla::PjRtClient,
@@ -22,22 +25,21 @@ pub struct Engine {
 impl Engine {
     /// Load the manifest and compile every artifact. One-time cost at
     /// process start; execution afterwards is Python-free.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+    pub fn load(dir: &Path) -> Result<Engine, String> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(err("create PJRT CPU client"))?;
         let mut exes = BTreeMap::new();
         for (name, entry) in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(
-                entry
-                    .file
-                    .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", entry.file))?,
-            )
-            .with_context(|| format!("parse HLO text for {name}"))?;
+            let path = entry
+                .file
+                .to_str()
+                .ok_or_else(|| format!("non-utf8 path {:?}", entry.file))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| format!("parse HLO text for {name}: {e}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .with_context(|| format!("compile {name}"))?;
+                .map_err(|e| format!("compile {name}: {e}"))?;
             exes.insert(name.clone(), exe);
         }
         Ok(Engine {
@@ -55,56 +57,69 @@ impl Engine {
         self.exes.keys().map(|s| s.as_str()).collect()
     }
 
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal, String> {
         let exe = self
             .exes
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            .ok_or_else(|| format!("unknown artifact {name:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(err("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(err("sync result"))?;
         // lowered with return_tuple=True: unwrap the 1-tuple
-        Ok(result.to_tuple1()?)
+        result.to_tuple1().map_err(err("unwrap 1-tuple"))
     }
 
     /// Execute `spmm_block`: P sorted tile pairs -> T slot tiles
     /// (`slots × block × block` f32, flattened).
-    pub fn spmm_block(&self, seg: &[i32], a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    pub fn spmm_block(&self, seg: &[i32], a: &[f32], b: &[f32]) -> Result<Vec<f32>, String> {
         let (p, bl, t) = (
             self.manifest.pairs,
             self.manifest.block,
             self.manifest.slots,
         );
-        anyhow::ensure!(seg.len() == p, "seg len {} != {p}", seg.len());
-        anyhow::ensure!(a.len() == p * bl * bl, "a len {}", a.len());
-        anyhow::ensure!(b.len() == p * bl * bl, "b len {}", b.len());
+        if seg.len() != p {
+            return Err(format!("seg len {} != {p}", seg.len()));
+        }
+        if a.len() != p * bl * bl || b.len() != p * bl * bl {
+            return Err(format!("operand lens {} / {}", a.len(), b.len()));
+        }
         let dims = [p as i64, bl as i64, bl as i64];
         let seg_l = xla::Literal::vec1(seg);
-        let a_l = xla::Literal::vec1(a).reshape(&dims)?;
-        let b_l = xla::Literal::vec1(b).reshape(&dims)?;
+        let a_l = xla::Literal::vec1(a).reshape(&dims).map_err(err("reshape a"))?;
+        let b_l = xla::Literal::vec1(b).reshape(&dims).map_err(err("reshape b"))?;
         let out = self.run("spmm_block", &[seg_l, a_l, b_l])?;
-        let v = out.to_vec::<f32>()?;
-        anyhow::ensure!(v.len() == t * bl * bl, "output len {}", v.len());
+        let v = out.to_vec::<f32>().map_err(err("read result"))?;
+        if v.len() != t * bl * bl {
+            return Err(format!("output len {}", v.len()));
+        }
         Ok(v)
     }
 
     /// Execute `spmm_pairs`: P tile pairs -> P product tiles.
-    pub fn spmm_pairs(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    pub fn spmm_pairs(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>, String> {
         let (p, bl) = (self.manifest.pairs, self.manifest.block);
-        anyhow::ensure!(a.len() == p * bl * bl && b.len() == p * bl * bl);
+        if a.len() != p * bl * bl || b.len() != p * bl * bl {
+            return Err(format!("operand lens {} / {}", a.len(), b.len()));
+        }
         let dims = [p as i64, bl as i64, bl as i64];
-        let a_l = xla::Literal::vec1(a).reshape(&dims)?;
-        let b_l = xla::Literal::vec1(b).reshape(&dims)?;
+        let a_l = xla::Literal::vec1(a).reshape(&dims).map_err(err("reshape a"))?;
+        let b_l = xla::Literal::vec1(b).reshape(&dims).map_err(err("reshape b"))?;
         let out = self.run("spmm_pairs", &[a_l, b_l])?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().map_err(err("read result"))
     }
 
     /// Execute `dense_mm`: D×D × D×D -> D×D.
-    pub fn dense_mm(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    pub fn dense_mm(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>, String> {
         let d = self.manifest.dense_dim;
-        anyhow::ensure!(x.len() == d * d && y.len() == d * d);
+        if x.len() != d * d || y.len() != d * d {
+            return Err(format!("operand lens {} / {}", x.len(), y.len()));
+        }
         let dims = [d as i64, d as i64];
-        let x_l = xla::Literal::vec1(x).reshape(&dims)?;
-        let y_l = xla::Literal::vec1(y).reshape(&dims)?;
+        let x_l = xla::Literal::vec1(x).reshape(&dims).map_err(err("reshape x"))?;
+        let y_l = xla::Literal::vec1(y).reshape(&dims).map_err(err("reshape y"))?;
         let out = self.run("dense_mm", &[x_l, y_l])?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().map_err(err("read result"))
     }
 }

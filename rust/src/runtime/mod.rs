@@ -2,11 +2,22 @@
 //! `make artifacts` and executes them from the Rust hot path. Python never
 //! runs at serve time — the build-time contract is enforced through
 //! [`artifact::Manifest`].
+//!
+//! The PJRT path itself is feature-gated (`--features pjrt`, requires the
+//! vendored `xla` bindings); the default build ships only the CPU twin of
+//! the plan executor, which runs the same math. Either way, execution is
+//! reached through the kernel registry via [`crate::engine::AccelKernel`].
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod numeric;
 
 pub use artifact::Manifest;
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use numeric::{Backend, ExecReport, NumericEngine};
+pub use numeric::{Backend, NumericEngine};
+
+/// Execution accounting (kept as a re-export for older call sites; the
+/// canonical type lives with the kernel contract).
+pub use crate::engine::ExecStats as ExecReport;

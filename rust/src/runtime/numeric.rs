@@ -4,12 +4,17 @@
 //! work) → PJRT `spmm_block` dispatches (the MXU-side MAC work) → scattered
 //! dense product. Cross-checked against `spmm::dense` by the integration
 //! tests: this is the proof that all three layers compose.
+//!
+//! The PJRT backend is feature-gated (`pjrt`, see Cargo.toml): without it,
+//! [`NumericEngine::pjrt`] returns an error and callers fall back to the
+//! CPU plan executor, which runs the identical math. Registered in the
+//! kernel registry via [`crate::engine::AccelKernel`].
 
 use std::path::Path;
 
-use anyhow::Result;
-
+#[cfg(feature = "pjrt")]
 use super::engine::Engine;
+use crate::engine::ExecStats;
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
 use crate::formats::traits::SparseMatrix;
@@ -18,7 +23,8 @@ use crate::spmm::plan::{plan, Geometry, Plan};
 /// Execution backend selector (the CPU fallback keeps every code path
 /// testable without artifacts and serves as the ablation baseline).
 pub enum Backend {
-    /// AOT Pallas kernels on the PJRT CPU client.
+    /// AOT Pallas kernels on the PJRT CPU client (`--features pjrt`).
+    #[cfg(feature = "pjrt")]
     Pjrt(Box<Engine>),
     /// Pure-Rust execution of the same plan (identical math).
     Cpu(Geometry),
@@ -28,22 +34,24 @@ pub struct NumericEngine {
     backend: Backend,
 }
 
-/// Execution report for one SpMM job.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ExecReport {
-    pub dispatches: u64,
-    pub real_pairs: u64,
-    pub padded_pairs: u64,
-    /// MXU MACs issued (pairs × block³), including padding.
-    pub macs_issued: u64,
-}
-
 impl NumericEngine {
-    /// PJRT-backed engine from an artifact directory.
-    pub fn pjrt(dir: &Path) -> Result<NumericEngine> {
-        Ok(NumericEngine {
-            backend: Backend::Pjrt(Box::new(Engine::load(dir)?)),
-        })
+    /// PJRT-backed engine from an artifact directory. Errors when the
+    /// crate was built without the `pjrt` feature or the artifacts are
+    /// missing/invalid.
+    pub fn pjrt(dir: &Path) -> Result<NumericEngine, String> {
+        #[cfg(feature = "pjrt")]
+        {
+            Ok(NumericEngine {
+                backend: Backend::Pjrt(Box::new(Engine::load(dir)?)),
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Err(format!(
+                "built without the `pjrt` feature: cannot load artifacts from {dir:?} \
+                 (rebuild with `--features pjrt` and the vendored xla dependency)"
+            ))
+        }
     }
 
     /// CPU fallback with explicit geometry.
@@ -55,6 +63,7 @@ impl NumericEngine {
 
     pub fn geometry(&self) -> Geometry {
         match &self.backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.manifest.geometry(),
             Backend::Cpu(g) => *g,
         }
@@ -62,41 +71,51 @@ impl NumericEngine {
 
     pub fn backend_name(&self) -> &'static str {
         match &self.backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
             Backend::Cpu(_) => "cpu",
         }
     }
 
     /// C = A × B with full values.
-    pub fn spmm(&self, a: &Csr, b: &Csr) -> Result<(Dense, ExecReport)> {
+    pub fn spmm(&self, a: &Csr, b: &Csr) -> Result<(Dense, ExecStats), String> {
         let p = plan(a, b, self.geometry());
         self.execute_plan(&p)
     }
 
     /// Execute a prebuilt plan (the coordinator pre-plans jobs off-thread).
-    pub fn execute_plan(&self, p: &Plan) -> Result<(Dense, ExecReport)> {
+    pub fn execute_plan(&self, p: &Plan) -> Result<(Dense, ExecStats), String> {
         let geom = self.geometry();
-        let report = ExecReport {
+        let stats = ExecStats {
             dispatches: p.dispatches.len() as u64,
             real_pairs: p.total_pairs as u64,
             padded_pairs: (p.dispatches.len() * geom.pairs) as u64,
             macs_issued: (p.dispatches.len() * geom.pairs) as u64
                 * (geom.block * geom.block * geom.block) as u64,
+            threads: 1,
         };
         let c = match &self.backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => p.execute(|d| e.spmm_block(&d.seg, &d.a, &d.b))?,
             Backend::Cpu(_) => p.execute_cpu(),
         };
-        Ok((c, report))
+        Ok((c, stats))
     }
 
     /// Dense matmul via the `dense_mm` artifact (conventional-MM numeric
     /// twin). Operands must be `dense_dim × dense_dim`.
-    pub fn dense_mm(&self, x: &Dense, y: &Dense) -> Result<Dense> {
+    pub fn dense_mm(&self, x: &Dense, y: &Dense) -> Result<Dense, String> {
         match &self.backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => {
                 let d = e.manifest.dense_dim;
-                anyhow::ensure!(x.shape() == (d, d) && y.shape() == (d, d));
+                if x.shape() != (d, d) || y.shape() != (d, d) {
+                    return Err(format!(
+                        "dense_mm operands must be {d}x{d}, got {:?} and {:?}",
+                        x.shape(),
+                        y.shape()
+                    ));
+                }
                 let out = e.dense_mm(&x.data, &y.data)?;
                 Ok(Dense::new(d, d, out))
             }
@@ -116,22 +135,26 @@ mod tests {
         let eng = NumericEngine::cpu(Geometry { block: 8, pairs: 16, slots: 8 });
         let a = uniform(30, 40, 0.2, 1);
         let b = uniform(40, 22, 0.2, 2);
-        let (c, report) = eng.spmm(&a, &b).unwrap();
+        let (c, stats) = eng.spmm(&a, &b).unwrap();
         let want = dense_ref(&a, &b);
         assert!(c.max_abs_diff(&want) < 1e-3);
-        assert!(report.dispatches > 0);
-        assert!(report.real_pairs <= report.padded_pairs);
+        assert!(stats.dispatches > 0);
+        assert!(stats.real_pairs <= stats.padded_pairs);
     }
 
     #[test]
     fn report_padding_accounting() {
         let eng = NumericEngine::cpu(Geometry { block: 8, pairs: 64, slots: 32 });
         let a = uniform(16, 16, 0.3, 3);
-        let (_, report) = eng.spmm(&a, &a.transpose()).unwrap();
-        assert_eq!(report.padded_pairs % 64, 0);
-        assert_eq!(
-            report.macs_issued,
-            report.padded_pairs * (8 * 8 * 8) as u64
-        );
+        let (_, stats) = eng.spmm(&a, &a.transpose()).unwrap();
+        assert_eq!(stats.padded_pairs % 64, 0);
+        assert_eq!(stats.macs_issued, stats.padded_pairs * (8 * 8 * 8) as u64);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_is_a_clean_error_without_the_feature() {
+        let err = NumericEngine::pjrt(Path::new("/tmp/nope")).unwrap_err();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -9,8 +9,17 @@ use crate::formats::traits::SparseMatrix;
 
 /// C = A × B with a sparse accumulator per output row.
 pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    multiply_counted(a, b).0
+}
+
+/// Like [`multiply`], also returning the scalar MAC count performed — the
+/// count falls out of the traversal the multiply already does, so callers
+/// that want accounting (the engine's Gustavson kernel) don't pay a second
+/// pass over A.
+pub fn multiply_counted(a: &Csr, b: &Csr) -> (Csr, u64) {
     assert_eq!(a.cols(), b.rows(), "inner dimensions");
     let (m, n) = (a.rows(), b.cols());
+    let mut macs = 0u64;
     let mut row_ptr = Vec::with_capacity(m + 1);
     row_ptr.push(0u32);
     let mut col_idx: Vec<u32> = Vec::new();
@@ -24,6 +33,7 @@ pub fn multiply(a: &Csr, b: &Csr) -> Csr {
         let (a_cols, a_vals) = a.row(i);
         for (&k, &av) in a_cols.iter().zip(a_vals) {
             let (b_cols, b_vals) = b.row(k as usize);
+            macs += b_cols.len() as u64;
             for (&j, &bv) in b_cols.iter().zip(b_vals) {
                 if acc[j as usize] == 0.0 {
                     touched.push(j);
@@ -45,7 +55,7 @@ pub fn multiply(a: &Csr, b: &Csr) -> Csr {
         touched.clear();
         row_ptr.push(col_idx.len() as u32);
     }
-    Csr::from_parts(m, n, row_ptr, col_idx, vals)
+    (Csr::from_parts(m, n, row_ptr, col_idx, vals), macs)
 }
 
 #[cfg(test)]

@@ -1,4 +1,6 @@
-//! SpMM algorithms and the accelerator dispatch planner.
+//! SpMM algorithm bodies and the accelerator dispatch planner. Callers
+//! should normally go through [`crate::engine`] (the kernel registry),
+//! which wraps these behind the unified `SpmmKernel` contract.
 //!
 //! * [`dense`] — the numeric oracle (row-expansion reference multiply).
 //! * [`gustavson`] — row-order CRS×CRS (the CPU baseline that *avoids*

@@ -1,42 +1,48 @@
 //! Integration: the batching server under realistic mixed traffic,
 //! including PJRT-backed workers when artifacts are present, failure
-//! injection, and router/scheduler composition.
+//! injection, per-job kernel overrides, and router/registry composition.
 
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
-    route, AccessStrategy, EngineKind, JobOptions, RoutingPolicy, Server,
+    route, AccessStrategy, JobOptions, KernelSpec, RoutingPolicy, Server,
     ServerConfig, SpmmJob,
 };
 use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::Algorithm;
+use spmm_accel::formats::traits::FormatKind;
 use spmm_accel::runtime::Manifest;
 use spmm_accel::spmm::plan::Geometry;
 
 fn has_artifacts() -> bool {
-    Manifest::default_dir().join("manifest.json").exists()
+    cfg!(feature = "pjrt") && Manifest::default_dir().join("manifest.json").exists()
 }
 
-fn server(engine: EngineKind, workers: usize) -> Server {
+fn server(kernel: KernelSpec, prefer_pjrt: bool, workers: usize) -> Server {
     Server::start(ServerConfig {
         workers,
         queue_depth: 8,
-        engine,
+        kernel,
+        prefer_pjrt,
         geometry: Geometry { block: 16, pairs: 32, slots: 16 },
+        tile_workers: 2,
         artifacts_dir: Manifest::default_dir(),
     })
 }
 
 #[test]
 fn mixed_size_traffic_on_cpu_workers() {
-    let s = server(EngineKind::Cpu, 3);
+    let s = server(KernelSpec::default(), false, 3);
     let mut rxs = Vec::new();
     for i in 0..12u64 {
         let n = 16 + (i as usize % 4) * 24;
         let a = Arc::new(uniform(n, n + 8, 0.15, i));
         let b = Arc::new(uniform(n + 8, n, 0.15, i + 100));
-        rxs.push(s.submit(
-            SpmmJob::new(i, a, b).with_opts(JobOptions { verify: true, keep_result: false }),
-        ));
+        rxs.push(s.submit(SpmmJob::new(i, a, b).with_opts(JobOptions {
+            verify: true,
+            keep_result: false,
+            kernel: None,
+        })));
     }
     for rx in rxs {
         let out = rx.recv().unwrap().result.unwrap();
@@ -52,18 +58,21 @@ fn mixed_size_traffic_on_cpu_workers() {
 #[test]
 fn pjrt_workers_serve_verified_jobs() {
     if !has_artifacts() {
-        eprintln!("skipping: no artifacts");
+        eprintln!("skipping: no artifacts (or built without --features pjrt)");
         return;
     }
-    let s = server(EngineKind::Pjrt, 2);
+    let s = server(KernelSpec::default(), true, 2);
     let a = Arc::new(uniform(80, 100, 0.1, 1));
     let b = Arc::new(uniform(100, 70, 0.1, 2));
     let mut rxs = Vec::new();
     for i in 0..6u64 {
-        rxs.push(s.submit(
-            SpmmJob::new(i, a.clone(), b.clone())
-                .with_opts(JobOptions { verify: true, keep_result: false }),
-        ));
+        rxs.push(s.submit(SpmmJob::new(i, a.clone(), b.clone()).with_opts(
+            JobOptions {
+                verify: true,
+                keep_result: false,
+                kernel: None,
+            },
+        )));
     }
     for rx in rxs {
         let out = rx.recv().unwrap().result.unwrap();
@@ -75,7 +84,7 @@ fn pjrt_workers_serve_verified_jobs() {
 
 #[test]
 fn failure_injection_bad_dimensions_dont_poison_workers() {
-    let s = server(EngineKind::Cpu, 2);
+    let s = server(KernelSpec::default(), false, 2);
     let good_a = Arc::new(uniform(24, 24, 0.2, 3));
     let bad_b = Arc::new(uniform(17, 24, 0.2, 4)); // inner mismatch
     // interleave good and bad jobs
@@ -109,11 +118,71 @@ fn router_strategy_matches_table2_datasets() {
     let docword = uniform(128, 12_000, 0.04, 1);
     let r = route(&docword, true, false, &policy);
     assert_eq!(r.access, AccessStrategy::ColumnInCrs);
+    assert_eq!(r.kernel, (FormatKind::InCrs, Algorithm::Inner));
     assert!(r.estimated_ma_ratio > 10.0);
     // near-empty B: plain CRS column scans are fine
     let sparse = uniform(128, 2_000, 0.002, 2);
     let r2 = route(&sparse, true, false, &policy);
     assert_eq!(r2.access, AccessStrategy::ColumnCrs);
+    assert_eq!(r2.kernel, (FormatKind::Csr, Algorithm::Inner));
+}
+
+#[test]
+fn mixed_kernel_traffic_through_one_server() {
+    // one server, four different kernels chosen per job — the registry
+    // dispatch the old EngineKind enum couldn't express
+    let s = server(KernelSpec::default(), false, 2);
+    let a = Arc::new(uniform(40, 56, 0.15, 5));
+    let b = Arc::new(uniform(56, 44, 0.15, 6));
+    let kernels = [
+        (FormatKind::Csr, Algorithm::Block, "cpu"),
+        (FormatKind::Csr, Algorithm::Gustavson, "gustavson"),
+        (FormatKind::InCrs, Algorithm::Inner, "inner-incrs"),
+        (FormatKind::Csr, Algorithm::Tiled, "tiled"),
+    ];
+    let rxs: Vec<_> = kernels
+        .iter()
+        .enumerate()
+        .map(|(i, &(f, alg, _))| {
+            s.submit(
+                SpmmJob::new(i as u64, a.clone(), b.clone())
+                    .with_opts(JobOptions {
+                        verify: true,
+                        keep_result: false,
+                        kernel: None,
+                    })
+                    .with_kernel(f, alg),
+            )
+        })
+        .collect();
+    for (rx, &(_, _, name)) in rxs.into_iter().zip(&kernels) {
+        let out = rx.recv().unwrap().result.unwrap();
+        assert_eq!(out.backend, name);
+        assert!(out.max_err.unwrap() < 1e-3, "{name}");
+    }
+    s.shutdown();
+}
+
+#[test]
+fn auto_spec_serves_mixed_shapes() {
+    let s = server(KernelSpec::Auto, false, 2);
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let n = 24 + (i as usize % 3) * 16;
+        let a = Arc::new(uniform(n, n, 0.1 + 0.05 * (i % 2) as f64, i + 40));
+        let b = Arc::new(uniform(n, n, 0.1, i + 60));
+        rxs.push(s.submit(SpmmJob::new(i, a, b).with_opts(JobOptions {
+            verify: true,
+            keep_result: false,
+            kernel: None,
+        })));
+    }
+    for rx in rxs {
+        let out = rx.recv().unwrap().result.unwrap();
+        assert!(out.max_err.unwrap() < 1e-3);
+        assert_ne!(out.backend, "dense");
+    }
+    s.shutdown();
 }
 
 #[test]
@@ -121,14 +190,17 @@ fn throughput_scales_with_workers() {
     // wall-clock assertions are flaky in CI; assert work conservation
     // instead: N workers complete the same batch, each job exactly once.
     for workers in [1usize, 4] {
-        let s = server(EngineKind::Cpu, workers);
+        let s = server(KernelSpec::default(), false, workers);
         let a = Arc::new(uniform(48, 48, 0.2, 9));
         let rxs: Vec<_> = (0..16u64)
             .map(|i| {
-                s.submit(
-                    SpmmJob::new(i, a.clone(), a.clone())
-                        .with_opts(JobOptions { verify: false, keep_result: false }),
-                )
+                s.submit(SpmmJob::new(i, a.clone(), a.clone()).with_opts(
+                    JobOptions {
+                        verify: false,
+                        keep_result: false,
+                        kernel: None,
+                    },
+                ))
             })
             .collect();
         let mut ids: Vec<u64> = rxs

@@ -1,0 +1,137 @@
+//! Property tests for the unified execution layer (via `util::ptest`):
+//!
+//! 1. every format in `formats::ALL_KINDS` round-trips through canonical
+//!    COO on random matrices (entries, shape, nnz preserved), and
+//! 2. every kernel registered in the default registry agrees with the
+//!    `spmm::dense` oracle on random matrix products.
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{Algorithm, Registry, SpmmKernel, TiledConfig, TiledKernel};
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::formats::{from_coo, Coo, ALL_KINDS};
+use spmm_accel::spmm::dense::multiply as dense_ref;
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+/// Random COO with dimensions in [1, 40] and any density in [0, 0.5].
+fn gen_coo(rng: &mut Rng) -> Coo {
+    let rows = rng.usize_below(40) + 1;
+    let cols = rng.usize_below(40) + 1;
+    let density = rng.f64() * 0.5;
+    let mut entries = Vec::new();
+    for i in 0..rows {
+        for j in 0..cols {
+            if rng.f64() < density {
+                // non-zero values only: formats drop exact zeros
+                entries.push((i as u32, j as u32, rng.f32() + 0.25));
+            }
+        }
+    }
+    Coo::new(rows, cols, entries)
+}
+
+#[test]
+fn every_format_roundtrips_through_coo_on_random_matrices() {
+    check(0xF0A7, 40, gen_coo, |coo| {
+        for kind in ALL_KINDS {
+            let m = from_coo(kind, coo)
+                .map_err(|e| format!("{kind:?} build failed: {e}"))?;
+            if m.kind() != kind {
+                return Err(format!("{kind:?} reports kind {:?}", m.kind()));
+            }
+            if m.shape() != coo.shape() || m.nnz() != coo.nnz() {
+                return Err(format!(
+                    "{kind:?} lost metadata: {:?}/{} vs {:?}/{}",
+                    m.shape(),
+                    m.nnz(),
+                    coo.shape(),
+                    coo.nnz()
+                ));
+            }
+            let back = m.to_coo();
+            if back.entries != coo.entries {
+                return Err(format!(
+                    "{kind:?} round-trip changed entries ({} vs {})",
+                    back.entries.len(),
+                    coo.entries.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random compatible (A, B) pair for SpMM.
+fn gen_pair(rng: &mut Rng) -> (spmm_accel::formats::Csr, spmm_accel::formats::Csr) {
+    let m = rng.usize_below(48) + 4;
+    let k = rng.usize_below(48) + 4;
+    let n = rng.usize_below(48) + 4;
+    let da = 0.05 + rng.f64() * 0.3;
+    let db = 0.05 + rng.f64() * 0.3;
+    let seed = rng.next_u64();
+    (uniform(m, k, da, seed), uniform(k, n, db, seed ^ 0xDEAD))
+}
+
+#[test]
+fn every_registered_kernel_agrees_with_the_dense_oracle() {
+    let registry = Registry::with_default_kernels(
+        Geometry { block: 16, pairs: 32, slots: 16 },
+        2,
+    );
+    assert!(registry.len() >= 5, "default registry too small: {registry:?}");
+    check(0xBEEF, 15, gen_pair, |(a, b)| {
+        let want = dense_ref(a, b);
+        for kernel in registry.kernels() {
+            let out = kernel
+                .run(a, b)
+                .map_err(|e| format!("{} failed: {e}", kernel.name()))?;
+            let diff = out.c.max_abs_diff(&want);
+            if diff >= 1e-3 {
+                return Err(format!(
+                    "kernel {}/{} diverges from oracle by {diff}",
+                    kernel.format().name(),
+                    kernel.algorithm().name()
+                ));
+            }
+            if out.c.shape() != want.shape() {
+                return Err(format!("{} wrong shape", kernel.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_tiled_kernel_is_bit_identical_to_serial_on_random_inputs() {
+    let serial = TiledKernel::new(TiledConfig { block: 16, workers: 1 });
+    let parallel = TiledKernel::new(TiledConfig { block: 16, workers: 4 });
+    check(0x71AD, 12, gen_pair, |(a, b)| {
+        let c1 = serial.run(a, b).map_err(|e| e.to_string())?;
+        let c4 = parallel.run(a, b).map_err(|e| e.to_string())?;
+        if c1.c.data != c4.c.data {
+            return Err("parallel tiled result differs bitwise from serial".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn registry_resolves_the_contracted_kernels() {
+    use spmm_accel::formats::traits::FormatKind;
+    let registry = Registry::with_default_kernels(Geometry::default(), 1);
+    // the acceptance surface: ≥3 algorithms over ≥3 formats
+    for (f, alg) in [
+        (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::Inner),
+        (FormatKind::InCrs, Algorithm::Inner),
+        (FormatKind::Dense, Algorithm::Dense),
+        (FormatKind::Csr, Algorithm::Tiled),
+        (FormatKind::Csr, Algorithm::Block),
+    ] {
+        assert!(
+            registry.resolve(f, alg).is_some(),
+            "missing kernel for {f:?}/{alg:?}"
+        );
+    }
+}
