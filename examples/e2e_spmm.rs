@@ -28,7 +28,7 @@ use spmm_accel::arch::{
 };
 use spmm_accel::cachesim::{compare, HierarchyConfig};
 use spmm_accel::coordinator::{
-    route, JobOptions, RoutingPolicy, Server, ServerConfig, SpmmJob,
+    route, JobHandle, RoutingPolicy, Server, ServerConfig,
 };
 use spmm_accel::datasets::spec::table2_by_name;
 use spmm_accel::datasets::synth::generate;
@@ -140,27 +140,27 @@ fn main() {
         artifacts_dir: Manifest::default_dir(),
         ..Default::default()
     });
+    let client = server.client();
     let a = Arc::new(a);
     let b = Arc::new(b);
     let n_jobs = 8u64;
     let t_serve = Instant::now();
-    let rxs: Vec<_> = (0..n_jobs)
-        .map(|i| {
-            server.submit(
-                SpmmJob::new(i, a.clone(), b.clone()).with_opts(JobOptions {
-                    verify: i == 0, // verify the first job against the oracle
-                    keep_result: false,
-                    kernel: None,
-                }),
-            )
-        })
-        .collect();
+    // all jobs share B -> one PreparedB build amortizes across the batch
+    let batch = (0..n_jobs).map(|i| {
+        client
+            .job(a.clone(), b.clone())
+            .id(i)
+            .verify(i == 0) // verify the first job against the oracle
+            .keep_result(false)
+            .build()
+    });
+    let handles = client.submit_many(batch);
     let mut max_err = 0.0f32;
     let mut dispatches = 0u64;
     let mut pairs = 0u64;
     let mut backend = "";
-    for rx in rxs {
-        let out = rx.recv().expect("response").result.expect("job ok");
+    for res in JobHandle::batch_wait_all(handles) {
+        let out = res.expect("job ok");
         if let Some(e) = out.max_err {
             max_err = max_err.max(e);
         }
@@ -178,12 +178,16 @@ fn main() {
         max_err
     );
     println!(
-        "[6] serving: {:?} wall, p50 {} us, p99 {} us, throughput {:.1} jobs/s",
+        "[6] serving: {:?} wall, p50 {} us, p99 {} us, throughput {:.1} jobs/s, \
+         {} PreparedB builds for {n_jobs} jobs ({} coalesced)",
         serve_wall,
         snap.p50_us,
         snap.p99_us,
-        n_jobs as f64 / serve_wall.as_secs_f64()
+        n_jobs as f64 / serve_wall.as_secs_f64(),
+        snap.prepare_builds,
+        snap.coalesced_jobs
     );
+    drop(client);
     server.shutdown();
 
     assert!(max_err < 1e-2, "numeric verification failed: {max_err}");

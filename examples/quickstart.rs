@@ -1,16 +1,20 @@
 //! Quickstart: the public API in one minute.
 //!
 //! Build a sparse matrix, convert it to the paper's InCRS format, compare
-//! random-access cost against CRS, and multiply through the accelerator
-//! dispatch path (CPU fallback so it runs without artifacts).
+//! random-access cost against CRS, multiply through the registry's
+//! cost-hint auto-selection, then serve the same multiply through the
+//! `SpmmClient` API (CPU fallback so it runs without artifacts).
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::sync::Arc;
+
 use spmm_accel::access::locate::measure;
+use spmm_accel::coordinator::{Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
-use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
+use spmm_accel::engine::{Registry, SpmmKernel};
 use spmm_accel::formats::incrs::InCrs;
-use spmm_accel::formats::traits::{CountSink, FormatKind, SparseMatrix};
+use spmm_accel::formats::traits::{CountSink, SparseMatrix};
 use spmm_accel::spmm::plan::Geometry;
 
 fn main() {
@@ -53,35 +57,44 @@ fn main() {
         sink.site(spmm_accel::formats::Site::Counter)
     );
 
-    // 5. SpMM through the kernel registry: resolve the accelerator-plan
-    //    kernel (32x32 block pairs; PJRT-backed with `--features pjrt` and
-    //    `make artifacts`, its CPU twin otherwise).
+    // 5. SpMM through the kernel registry's cost-hint auto-selection:
+    //    `Registry::select` estimates every registered kernel (Gustavson /
+    //    inner-InCRS / tiled / accelerator block plan) and runs the
+    //    cheapest — no hardcoded kernel key.
     let registry = Registry::with_default_kernels(Geometry::default(), 4);
-    let block = registry
-        .resolve(FormatKind::Csr, Algorithm::Block)
-        .expect("block kernel registered");
     let a = uniform(96, 200, 0.1, 1);
-    let out = block.run(&a, &b).expect("spmm");
-    let oracle = spmm_accel::spmm::dense::multiply(&a, &b);
-    println!(
-        "C = A x B via {}: {}x{}, {} dispatches, {} real tile pairs, max err {:.2e}",
-        block.name(),
-        out.c.shape().0,
-        out.c.shape().1,
-        out.stats.dispatches,
-        out.stats.real_pairs,
-        out.c.max_abs_diff(&oracle)
-    );
-
-    // 6. or let the registry pick by cost hint (Gustavson / inner-InCRS /
-    //    tiled / block, whichever estimates cheapest for these operands)
     let auto = registry.select(&a, &b).expect("non-empty registry");
     let out = auto.run(&a, &b).expect("spmm");
+    let oracle = spmm_accel::spmm::dense::multiply(&a, &b);
     println!(
-        "auto-selected kernel: {} ({}/{}), max err {:.2e}",
+        "C = A x B via auto-selected {} ({}/{}): {}x{}, {} dispatches, max err {:.2e}",
         auto.name(),
         auto.format().name(),
         auto.algorithm().name(),
+        out.c.shape().0,
+        out.c.shape().1,
+        out.stats.dispatches,
         out.c.max_abs_diff(&oracle)
     );
+
+    // 6. the same multiply as serving traffic: a batching server, the
+    //    SpmmClient front door, typed errors, and a JobHandle future
+    let server = Server::start(ServerConfig::default());
+    let client = server.client();
+    let out = client
+        .job(Arc::new(a), Arc::new(b))
+        .verify(true)
+        .submit()
+        .expect("accepted")
+        .wait()
+        .expect("job ok");
+    println!(
+        "served via {}: wall {:?}, max err {:.2e} ({} PreparedB builds)",
+        out.backend,
+        out.wall,
+        out.max_err.unwrap(),
+        client.metrics().prepare_builds
+    );
+    drop(client);
+    server.shutdown();
 }

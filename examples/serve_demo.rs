@@ -1,14 +1,21 @@
-//! Serving demo: the batching coordinator under concurrent load, with
-//! backpressure and live metrics — the L3 "accelerator service" shape.
+//! Serving demo: the batching coordinator under concurrent load through
+//! the `SpmmClient` API — backpressure, typed errors, B-sharing micro-batch
+//! coalescing, and live metrics: the L3 "accelerator service" shape.
+//!
+//! Each client thread holds its own `SpmmClient` clone and replays a
+//! serving-shaped workload: many multiplies against a small set of shared
+//! `B` operands (the paper's amortization case). Fast-path `try_submit`
+//! falls back to the blocking `submit` on `JobError::QueueFull`.
 //!
 //! Run: `cargo run --release --example serve_demo -- \
-//!         --workers 4 --clients 3 --jobs-per-client 10 [--backend pjrt]`
+//!         --workers 4 --clients 3 --jobs-per-client 10 \
+//!         [--backend pjrt] [--no-coalesce]`
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use spmm_accel::coordinator::{
-    JobOptions, KernelSpec, Server, ServerConfig, SpmmJob,
+    CoalesceConfig, JobError, KernelSpec, Server, ServerConfig,
 };
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::Algorithm;
@@ -31,7 +38,11 @@ fn main() {
         "auto" => KernelSpec::Auto,
         name => KernelSpec::for_algorithm(Algorithm::parse(name).expect("--kernel")),
     };
-    let server = Arc::new(Server::start(ServerConfig {
+    let coalesce = CoalesceConfig {
+        enabled: !args.has("no-coalesce"),
+        ..Default::default()
+    };
+    let server = Server::start(ServerConfig {
         workers,
         queue_depth: 4, // small on purpose: exercise backpressure
         kernel,
@@ -39,61 +50,65 @@ fn main() {
         geometry: Geometry::default(),
         tile_workers: args.get_or("tile-workers", 1usize).unwrap(),
         artifacts_dir: Manifest::default_dir(),
-    }));
+        coalesce,
+    });
+
+    // a small pool of shared B operands: serving traffic reuses operands,
+    // which is exactly what the coalescer amortizes prepare across
+    let shared_b: Vec<Arc<_>> = (0..3u64)
+        .map(|s| Arc::new(uniform(128, 96, 0.08, 500 + s)))
+        .collect();
 
     println!(
-        "server: {workers} workers ({backend}), {clients} clients x {jobs_per_client} jobs, queue depth 4"
+        "server: {workers} workers ({backend}), {clients} clients x {jobs_per_client} jobs, \
+         queue depth 4, coalescing {}",
+        if coalesce.enabled { "on" } else { "off" }
     );
     let t0 = Instant::now();
 
-    // client threads submit mixed-size jobs; small queue forces blocking
-    // submits (backpressure) under burst
+    // client threads submit mixed-size jobs; the small queue forces the
+    // try_submit fast path to degrade into blocking submits (backpressure)
     let mut handles = Vec::new();
     for cid in 0..clients {
-        let server = Arc::clone(&server);
+        let client = server.client();
+        let shared_b = shared_b.clone();
         handles.push(std::thread::spawn(move || {
-            let mut rejected = 0u64;
+            let mut backpressured = 0u64;
             let mut done = 0u64;
             for j in 0..jobs_per_client {
-                let n = 64 + (j % 3) * 64;
-                let a = Arc::new(uniform(n, n, 0.08, (cid * 1000 + j) as u64));
-                let job = SpmmJob::new(
-                    (cid * jobs_per_client + j) as u64,
-                    a.clone(),
-                    a,
-                )
-                .with_opts(JobOptions {
-                    verify: false,
-                    keep_result: false,
-                    kernel: None,
-                });
+                let n = 64 + (j % 3) * 32;
+                let a = Arc::new(uniform(n, 128, 0.08, (cid * 1000 + j) as u64));
+                let b = Arc::clone(&shared_b[j % shared_b.len()]);
+                let job = client.job(a, b).keep_result(false).build();
                 // first try without blocking, then block (backpressure)
-                let rx = match server.try_submit(job) {
-                    Ok(rx) => rx,
-                    Err(job) => {
-                        rejected += 1;
-                        server.submit(job)
+                let handle = match client.try_submit(job.clone()) {
+                    Ok(h) => h,
+                    Err(JobError::QueueFull) => {
+                        backpressured += 1;
+                        client.submit(job).expect("server alive")
                     }
+                    Err(e) => panic!("submit failed: {e}"),
                 };
-                let res = rx.recv().expect("response");
-                assert!(res.result.is_ok(), "{:?}", res.result.err());
+                let out = handle.wait().expect("job ok");
+                assert!(out.c.is_none(), "keep_result(false) drops the matrix");
                 done += 1;
             }
-            (done, rejected)
+            (done, backpressured)
         }));
     }
 
     let mut total_done = 0;
-    let mut total_rejected = 0;
+    let mut total_backpressured = 0;
     for h in handles {
         let (d, r) = h.join().unwrap();
         total_done += d;
-        total_rejected += r;
+        total_backpressured += r;
     }
     let wall = t0.elapsed();
     let snap = server.metrics.snapshot();
     println!(
-        "done: {total_done} jobs in {wall:?} ({:.1} jobs/s), {total_rejected} fast-path rejections (backpressure)",
+        "done: {total_done} jobs in {wall:?} ({:.1} jobs/s), {total_backpressured} fast-path \
+         rejections (backpressure)",
         total_done as f64 / wall.as_secs_f64()
     );
     println!(
@@ -109,8 +124,14 @@ fn main() {
         snap.queue_p99_us,
         snap.busy_ns as f64 / 1e6
     );
-    match Arc::try_unwrap(server) {
-        Ok(s) => s.shutdown(),
-        Err(_) => unreachable!("all clients joined"),
-    }
+    println!(
+        "coalescing: {} PreparedB builds for {} jobs ({} cache hits, {} coalesced jobs \
+         in {} sharing groups)",
+        snap.prepare_builds,
+        snap.jobs_completed,
+        snap.prepare_cache_hits,
+        snap.coalesced_jobs,
+        snap.coalesced_batches
+    );
+    server.shutdown();
 }

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use spmm_accel::coordinator::{JobOptions, Server, ServerConfig, SpmmJob};
+use spmm_accel::coordinator::{JobHandle, Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::{tiled, Registry, SpmmKernel, TiledConfig};
 use spmm_accel::runtime::{Manifest, NumericEngine};
@@ -94,7 +94,7 @@ fn main() {
         stats.real_pairs, r_serial.median, par_stats.threads, r_par.median
     );
 
-    // served throughput: 16 jobs through 4 CPU workers over the registry
+    // served throughput: 16 jobs through 4 CPU workers via the client API
     let r_serve = bench(0, 3, || {
         let server = Server::start(ServerConfig {
             workers: 4,
@@ -103,21 +103,15 @@ fn main() {
             artifacts_dir: dir.clone(),
             ..Default::default()
         });
+        let client = server.client();
         let aj = Arc::new(uniform(128, 128, 0.08, 3));
-        let rxs: Vec<_> = (0..16u64)
-            .map(|i| {
-                server.submit(
-                    SpmmJob::new(i, aj.clone(), aj.clone()).with_opts(JobOptions {
-                        verify: false,
-                        keep_result: false,
-                        kernel: None,
-                    }),
-                )
-            })
-            .collect();
-        for rx in rxs {
-            black_box(rx.recv().unwrap().result.unwrap().report.real_pairs);
+        let jobs = (0..16u64)
+            .map(|i| client.job(aj.clone(), aj.clone()).id(i).keep_result(false).build());
+        let handles = client.submit_many(jobs);
+        for res in JobHandle::batch_wait_all(handles) {
+            black_box(res.unwrap().report.real_pairs);
         }
+        drop(client);
         server.shutdown();
     });
     report("serve/16_jobs_4_workers", r_serve, 16.0, "jobs");

@@ -1,0 +1,132 @@
+//! Serve-path throughput benchmark: N jobs sharing one `B` operand pumped
+//! through `SpmmClient::submit_many`, with B-sharing micro-batch coalescing
+//! on vs off. The prepare-heavy inner-InCRS kernel makes the amortization
+//! visible: coalescing builds `PreparedB` once per worker (then the LRU
+//! serves it), the uncoalesced path builds it once per job.
+//!
+//! Writes a machine-readable summary to `BENCH_serve.json` (override the
+//! path with `SPMM_BENCH_SERVE_OUT`).
+//!
+//! Run: `cargo bench --bench bench_serve`
+
+use std::sync::Arc;
+
+use spmm_accel::coordinator::{
+    CoalesceConfig, JobHandle, KernelSpec, MetricsSnapshot, Server, ServerConfig,
+};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::Algorithm;
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::traits::FormatKind;
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::bench::{bench, black_box, report, BenchResult};
+use spmm_accel::util::json::{obj, Json};
+
+const JOBS: usize = 32;
+const WORKERS: usize = 4;
+
+fn serve_batch(coalesce: bool, a_set: &[Arc<Csr>], b: &Arc<Csr>) -> MetricsSnapshot {
+    let server = Server::start(ServerConfig {
+        workers: WORKERS,
+        queue_depth: 32,
+        // inner-product over InCRS: prepare builds the counter vectors,
+        // the cost the paper (and the coalescer) amortizes
+        kernel: KernelSpec::Fixed(FormatKind::InCrs, Algorithm::Inner),
+        geometry: Geometry::default(),
+        coalesce: CoalesceConfig { enabled: coalesce, ..Default::default() },
+        ..Default::default()
+    });
+    let client = server.client();
+    let jobs = a_set
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            client
+                .job(Arc::clone(a), Arc::clone(b))
+                .id(i as u64)
+                .keep_result(false)
+                .build()
+        })
+        .collect::<Vec<_>>();
+    let handles = client.submit_many(jobs);
+    for res in JobHandle::batch_wait_all(handles) {
+        black_box(res.expect("job ok").report.real_pairs);
+    }
+    let snap = client.metrics();
+    drop(client);
+    server.shutdown();
+    snap
+}
+
+fn run_case(coalesce: bool, a_set: &[Arc<Csr>], b: &Arc<Csr>) -> (BenchResult, MetricsSnapshot) {
+    let r = bench(1, 3, || {
+        black_box(serve_batch(coalesce, a_set, b).jobs_completed);
+    });
+    let snap = serve_batch(coalesce, a_set, b);
+    (r, snap)
+}
+
+fn main() {
+    println!("== bench_serve ==");
+    // one shared B (docword-ish: wide, moderately dense rows — the InCRS
+    // counter build is a real cost), many distinct As; sized so the whole
+    // on/off comparison stays a CI-friendly smoke
+    let b = Arc::new(uniform(256, 512, 0.05, 99));
+    let a_set: Vec<Arc<Csr>> = (0..JOBS as u64)
+        .map(|i| Arc::new(uniform(48, 256, 0.08, i)))
+        .collect();
+
+    let (r_on, snap_on) = run_case(true, &a_set, &b);
+    report(
+        &format!("serve/{JOBS}_jobs_shared_b_coalesce_on"),
+        r_on,
+        JOBS as f64,
+        "jobs",
+    );
+    let (r_off, snap_off) = run_case(false, &a_set, &b);
+    report(
+        &format!("serve/{JOBS}_jobs_shared_b_coalesce_off"),
+        r_off,
+        JOBS as f64,
+        "jobs",
+    );
+
+    let speedup = r_off.median.as_secs_f64() / r_on.median.as_secs_f64();
+    println!(
+        "coalescing on:  {} PreparedB builds for {} jobs ({} cache hits, {} coalesced)",
+        snap_on.prepare_builds, snap_on.jobs_completed, snap_on.prepare_cache_hits,
+        snap_on.coalesced_jobs
+    );
+    println!(
+        "coalescing off: {} PreparedB builds for {} jobs",
+        snap_off.prepare_builds, snap_off.jobs_completed
+    );
+    println!("serve speedup from coalescing: {speedup:.2}x");
+
+    let out_path =
+        std::env::var("SPMM_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let summary = obj([
+        ("bench", Json::from("bench_serve/coalescing")),
+        (
+            "workload",
+            Json::from(format!(
+                "{JOBS} jobs sharing one B (256x512 @ 5%), A 48x256 @ 8%, \
+                 {WORKERS} workers, inner-incrs kernel"
+            )),
+        ),
+        ("jobs", Json::from(JOBS)),
+        ("workers", Json::from(WORKERS)),
+        ("coalesce_on_ms", Json::from(r_on.median.as_secs_f64() * 1e3)),
+        ("coalesce_off_ms", Json::from(r_off.median.as_secs_f64() * 1e3)),
+        ("speedup", Json::from(speedup)),
+        ("builds_on", Json::from(snap_on.prepare_builds)),
+        ("builds_off", Json::from(snap_off.prepare_builds)),
+        ("cache_hits_on", Json::from(snap_on.prepare_cache_hits)),
+        ("coalesced_jobs_on", Json::from(snap_on.coalesced_jobs)),
+        ("coalesced_batches_on", Json::from(snap_on.coalesced_batches)),
+    ]);
+    match std::fs::write(&out_path, summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => println!("could not write {out_path}: {e}"),
+    }
+}

@@ -1,0 +1,404 @@
+//! The public serving API: [`SpmmClient`] handles, [`JobBuilder`]
+//! construction, and [`JobHandle`] futures.
+//!
+//! A client is a cheap, cloneable, `Send` handle onto a running
+//! [`super::server::Server`] (`server.client()`). Submission returns a
+//! [`JobHandle`] — a one-shot future over the job's reply channel with
+//! blocking (`wait`), bounded (`wait_timeout`), and non-blocking
+//! (`try_poll`) completion, plus [`JobHandle::batch_wait_all`] for fleets.
+//! Errors are typed [`JobError`]s end to end; nothing here returns a
+//! stringly error.
+//!
+//! Throughput callers use [`SpmmClient::submit_many`] / [`SpmmClient::stream`]:
+//! jobs are submitted back-to-back (blocking under backpressure), which
+//! lands jobs sharing a `B` operand adjacently in the queue — exactly what
+//! the server's micro-batch coalescer needs to build each `PreparedB` once
+//! and reuse it across the batch.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::error::JobError;
+use super::job::{JobOptions, JobOutput, JobResult, SpmmJob};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::server::{Envelope, JobEnvelope};
+use crate::engine::Algorithm;
+use crate::formats::csr::Csr;
+use crate::formats::traits::FormatKind;
+
+/// Cloneable, thread-safe handle for submitting SpMM jobs to a server.
+#[derive(Clone)]
+pub struct SpmmClient {
+    tx: SyncSender<Envelope>,
+    metrics: Arc<Metrics>,
+    closed: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl SpmmClient {
+    pub(crate) fn new(
+        tx: SyncSender<Envelope>,
+        metrics: Arc<Metrics>,
+        closed: Arc<AtomicBool>,
+        next_id: Arc<AtomicU64>,
+    ) -> SpmmClient {
+        SpmmClient { tx, metrics, closed, next_id }
+    }
+
+    /// Start building a job for `C = A × B`. IDs are assigned from the
+    /// server-wide counter unless overridden with [`JobBuilder::id`].
+    pub fn job(&self, a: Arc<Csr>, b: Arc<Csr>) -> JobBuilder<'_> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        JobBuilder {
+            client: self,
+            job: SpmmJob::new(id, a, b),
+        }
+    }
+
+    /// A point-in-time copy of the server's service metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Submit a job; blocks when the bounded queue is full (backpressure).
+    pub fn submit(&self, job: SpmmJob) -> Result<JobHandle, JobError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(JobError::Shutdown);
+        }
+        let id = job.id;
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Envelope::Job(JobEnvelope {
+                job,
+                reply: rtx,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| JobError::Shutdown)?;
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(JobHandle::new(id, rrx))
+    }
+
+    /// Non-blocking submit: [`JobError::QueueFull`] when the bounded queue
+    /// is at capacity (`SpmmJob` is cheap to clone — two `Arc`s — so keep
+    /// a copy if you intend to retry).
+    pub fn try_submit(&self, job: SpmmJob) -> Result<JobHandle, JobError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(JobError::Shutdown);
+        }
+        let id = job.id;
+        let (rtx, rrx) = sync_channel(1);
+        match self.tx.try_send(Envelope::Job(JobEnvelope {
+            job,
+            reply: rtx,
+            enqueued: Instant::now(),
+        })) {
+            Ok(()) => {
+                self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(JobHandle::new(id, rrx))
+            }
+            Err(TrySendError::Full(_)) => Err(JobError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(JobError::Shutdown),
+        }
+    }
+
+    /// Submit a batch back-to-back (blocking under backpressure) and
+    /// return one handle per job, in submission order. Jobs sharing a `B`
+    /// operand land adjacently in the queue, so the server coalesces their
+    /// `prepare` into one `PreparedB` build.
+    ///
+    /// Never loses accepted work: if a submission fails mid-batch (e.g.
+    /// the server shuts down), that job's handle resolves to the submit
+    /// error while the handles of already-accepted jobs stay live.
+    pub fn submit_many(&self, jobs: impl IntoIterator<Item = SpmmJob>) -> Vec<JobHandle> {
+        jobs.into_iter()
+            .map(|j| {
+                let id = j.id;
+                self.submit(j).unwrap_or_else(|e| JobHandle::failed(id, e))
+            })
+            .collect()
+    }
+
+    /// Submit a batch and iterate its results in submission order — the
+    /// simplest way to pump a stream of multiplies through the server.
+    pub fn stream(&self, jobs: impl IntoIterator<Item = SpmmJob>) -> JobStream {
+        JobStream {
+            handles: self.submit_many(jobs).into_iter(),
+        }
+    }
+}
+
+/// Fluent construction of an [`SpmmJob`] — replaces hand-rolling
+/// `SpmmJob`/`JobOptions` literals at call sites.
+pub struct JobBuilder<'c> {
+    client: &'c SpmmClient,
+    job: SpmmJob,
+}
+
+impl JobBuilder<'_> {
+    /// Override the auto-assigned job id.
+    pub fn id(mut self, id: u64) -> Self {
+        self.job.id = id;
+        self
+    }
+
+    /// Cross-check the result against the CPU oracle (adds a full
+    /// reference multiply — test/debug traffic only).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.job.opts.verify = on;
+        self
+    }
+
+    /// Keep the dense result (large!) or return only the report.
+    pub fn keep_result(mut self, on: bool) -> Self {
+        self.job.opts.keep_result = on;
+        self
+    }
+
+    /// Pin this job to one registry key instead of the server's
+    /// [`super::router::KernelSpec`].
+    pub fn kernel(mut self, format: FormatKind, algorithm: Algorithm) -> Self {
+        self.job.opts.kernel = Some((format, algorithm));
+        self
+    }
+
+    /// Replace all options at once (escape hatch for stored configs).
+    pub fn opts(mut self, opts: JobOptions) -> Self {
+        self.job.opts = opts;
+        self
+    }
+
+    /// The described job, without submitting it (for `submit_many`).
+    pub fn build(self) -> SpmmJob {
+        self.job
+    }
+
+    /// Submit; blocks when the queue is full (backpressure).
+    pub fn submit(self) -> Result<JobHandle, JobError> {
+        let JobBuilder { client, job } = self;
+        client.submit(job)
+    }
+
+    /// Non-blocking submit ([`JobError::QueueFull`] at capacity).
+    pub fn try_submit(self) -> Result<JobHandle, JobError> {
+        let JobBuilder { client, job } = self;
+        client.try_submit(job)
+    }
+}
+
+/// A one-shot future for a submitted job. Exactly one completion call
+/// observes the result; after `try_poll`/`wait_timeout` return `Some`,
+/// the handle is spent.
+pub struct JobHandle {
+    id: u64,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    fn new(id: u64, rx: Receiver<JobResult>) -> JobHandle {
+        JobHandle { id, rx }
+    }
+
+    /// A handle that is already resolved to `err` — used by `submit_many`
+    /// so a mid-batch submission failure never drops sibling handles.
+    fn failed(id: u64, err: JobError) -> JobHandle {
+        let (tx, rx) = sync_channel(1);
+        let _ = tx.send(JobResult { id, result: Err(err) });
+        JobHandle { id, rx }
+    }
+
+    /// The submitted job's id (results carry it too, for correlation).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job completes. A reply channel lost to server
+    /// shutdown reports [`JobError::Shutdown`].
+    pub fn wait(self) -> Result<JobOutput, JobError> {
+        match self.rx.recv() {
+            Ok(r) => r.result,
+            Err(_) => Err(JobError::Shutdown),
+        }
+    }
+
+    /// Block for at most `timeout`. `None` = still running (the handle
+    /// stays live); `Some(result)` spends the handle.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<JobOutput, JobError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r.result),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(JobError::Shutdown)),
+        }
+    }
+
+    /// Non-blocking completion check. `None` = still running; `Some`
+    /// spends the handle.
+    pub fn try_poll(&mut self) -> Option<Result<JobOutput, JobError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r.result),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(JobError::Shutdown)),
+        }
+    }
+
+    /// Wait for a whole fleet, preserving input order.
+    pub fn batch_wait_all(
+        handles: impl IntoIterator<Item = JobHandle>,
+    ) -> Vec<Result<JobOutput, JobError>> {
+        handles.into_iter().map(JobHandle::wait).collect()
+    }
+
+    /// Legacy escape hatch: the raw reply channel (`Receiver<JobResult>`),
+    /// as the pre-client `Server::submit` returned. Kept for one release.
+    pub fn into_receiver(self) -> Receiver<JobResult> {
+        self.rx
+    }
+}
+
+/// Iterator over a submitted batch's results, in submission order.
+pub struct JobStream {
+    handles: std::vec::IntoIter<JobHandle>,
+}
+
+impl JobStream {
+    /// Jobs still pending in the stream.
+    pub fn remaining(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Iterator for JobStream {
+    type Item = (u64, Result<JobOutput, JobError>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let h = self.handles.next()?;
+        Some((h.id(), h.wait()))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.handles.size_hint()
+    }
+}
+
+impl ExactSizeIterator for JobStream {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::datasets::synth::uniform;
+    use crate::spmm::plan::Geometry;
+
+    fn small_server(workers: usize, depth: usize) -> Server {
+        Server::start(ServerConfig {
+            workers,
+            queue_depth: depth,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn builder_submit_wait_roundtrip() {
+        let s = small_server(2, 8);
+        let client = s.client();
+        let a = Arc::new(uniform(20, 28, 0.2, 1));
+        let b = Arc::new(uniform(28, 16, 0.2, 2));
+        let out = client
+            .job(a, b)
+            .verify(true)
+            .keep_result(true)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(out.max_err.unwrap() < 1e-3);
+        assert!(out.c.is_some());
+        assert_eq!(client.metrics().jobs_completed, 1);
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn builder_ids_are_unique_and_overridable() {
+        let s = small_server(1, 4);
+        let client = s.client();
+        let a = Arc::new(uniform(8, 8, 0.5, 3));
+        let j0 = client.job(a.clone(), a.clone()).build();
+        let j1 = client.job(a.clone(), a.clone()).build();
+        assert_ne!(j0.id, j1.id);
+        let j9 = client.job(a.clone(), a.clone()).id(99).build();
+        assert_eq!(j9.id, 99);
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn try_poll_and_wait_timeout() {
+        let s = small_server(1, 4);
+        let client = s.client();
+        let a = Arc::new(uniform(24, 24, 0.3, 4));
+        let mut h = client.job(a.clone(), a).submit().unwrap();
+        // poll until done (worker is running; must complete eventually)
+        let result = loop {
+            if let Some(r) = h.try_poll() {
+                break r;
+            }
+            match h.wait_timeout(Duration::from_millis(50)) {
+                Some(r) => break r,
+                None => continue,
+            }
+        };
+        assert!(result.is_ok());
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn stream_yields_in_submission_order() {
+        let s = small_server(2, 8);
+        let client = s.client();
+        let a = Arc::new(uniform(16, 16, 0.3, 5));
+        let jobs: Vec<SpmmJob> = (0..6)
+            .map(|i| client.job(a.clone(), a.clone()).id(i).build())
+            .collect();
+        let stream = client.stream(jobs);
+        assert_eq!(stream.len(), 6);
+        let ids: Vec<u64> = stream.map(|(id, r)| {
+            assert!(r.is_ok());
+            id
+        }).collect();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn try_submit_reports_queue_full() {
+        let s = small_server(1, 1);
+        let client = s.client();
+        let a = Arc::new(uniform(64, 64, 0.4, 6));
+        let mut handles = Vec::new();
+        let mut saw_full = false;
+        for i in 0..30 {
+            let job = client.job(a.clone(), a.clone()).id(i).build();
+            match client.try_submit(job) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    assert_eq!(e, JobError::QueueFull);
+                    assert!(e.is_transient());
+                    saw_full = true;
+                }
+            }
+        }
+        assert!(saw_full, "queue never filled");
+        for r in JobHandle::batch_wait_all(handles) {
+            assert!(r.is_ok());
+        }
+        drop(client);
+        s.shutdown();
+    }
+}

@@ -1,0 +1,135 @@
+//! Typed job errors — the serving layer's failure surface.
+//!
+//! Everything a submitted job can die of is one of five variants; callers
+//! match instead of scraping strings. Engine-side failures
+//! ([`crate::engine::EngineError`]) lift losslessly via `From`, and the
+//! coordinator adds the two failure modes only it can observe: a full
+//! bounded queue and a server that shut down before (or while) the job ran.
+
+use std::fmt;
+
+use crate::engine::{Algorithm, EngineError};
+use crate::formats::traits::FormatKind;
+
+/// Why a job failed. Implements [`std::error::Error`]; `Display` keeps the
+/// established phrasing ("dimension mismatch…", "no kernel registered…")
+/// so logs stay greppable across the API migration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// `try_submit` found the bounded queue at capacity (backpressure).
+    /// Transient: resubmit later or fall back to the blocking `submit`.
+    QueueFull,
+    /// No kernel registered under the requested `(format, algorithm)` key;
+    /// `None`/`None` means the worker's registry is empty.
+    KernelUnavailable {
+        format: Option<FormatKind>,
+        algorithm: Option<Algorithm>,
+    },
+    /// Inner dimensions do not agree: `A` is `a`, `B` is `b`.
+    ShapeMismatch {
+        a: (usize, usize),
+        b: (usize, usize),
+    },
+    /// The kernel's prepare or execute step failed.
+    ExecFailed(String),
+    /// The server shut down before the job could complete (or the reply
+    /// channel was lost). Accepted-but-unserved jobs drain with this.
+    Shutdown,
+}
+
+impl JobError {
+    /// Transient conditions worth retrying (against this or another
+    /// server); the other variants are deterministic job defects.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, JobError::QueueFull | JobError::Shutdown)
+    }
+}
+
+impl From<EngineError> for JobError {
+    fn from(e: EngineError) -> JobError {
+        match e {
+            EngineError::KernelUnavailable { format, algorithm } => {
+                JobError::KernelUnavailable { format, algorithm }
+            }
+            EngineError::ShapeMismatch { a, b } => JobError::ShapeMismatch { a, b },
+            EngineError::ExecFailed(msg) => JobError::ExecFailed(msg),
+        }
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::QueueFull => write!(w, "queue full (backpressure)"),
+            JobError::KernelUnavailable {
+                format: Some(f),
+                algorithm: Some(alg),
+            } => write!(w, "no kernel registered for {}/{}", f.name(), alg.name()),
+            JobError::KernelUnavailable { .. } => write!(w, "empty kernel registry"),
+            JobError::ShapeMismatch { a, b } => {
+                write!(w, "dimension mismatch: A is {a:?}, B is {b:?}")
+            }
+            JobError::ExecFailed(msg) => write!(w, "execution failed: {msg}"),
+            JobError::Shutdown => write!(w, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Legacy bridge so `?` keeps working in `Result<_, String>` contexts (the
+/// CLI) without reintroducing `.map_err(|e| e.to_string())` round-trips.
+impl From<JobError> for String {
+    fn from(e: JobError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_errors_lift_losslessly() {
+        let e = EngineError::ShapeMismatch { a: (3, 4), b: (5, 3) };
+        assert_eq!(
+            JobError::from(e),
+            JobError::ShapeMismatch { a: (3, 4), b: (5, 3) }
+        );
+        let e = EngineError::KernelUnavailable {
+            format: Some(FormatKind::Jad),
+            algorithm: Some(Algorithm::Inner),
+        };
+        assert!(matches!(
+            JobError::from(e),
+            JobError::KernelUnavailable { format: Some(FormatKind::Jad), .. }
+        ));
+        assert_eq!(
+            JobError::from(EngineError::ExecFailed("x".into())),
+            JobError::ExecFailed("x".into())
+        );
+    }
+
+    #[test]
+    fn transience_classification() {
+        assert!(JobError::QueueFull.is_transient());
+        assert!(JobError::Shutdown.is_transient());
+        assert!(!JobError::ShapeMismatch { a: (1, 1), b: (2, 2) }.is_transient());
+        assert!(!JobError::ExecFailed("x".into()).is_transient());
+    }
+
+    #[test]
+    fn display_phrasing_is_stable() {
+        assert!(JobError::ShapeMismatch { a: (4, 5), b: (7, 4) }
+            .to_string()
+            .contains("dimension mismatch"));
+        assert!(JobError::KernelUnavailable {
+            format: Some(FormatKind::Csr),
+            algorithm: Some(Algorithm::Block),
+        }
+        .to_string()
+        .contains("no kernel registered"));
+        let s: String = JobError::Shutdown.into();
+        assert_eq!(s, "server shut down");
+    }
+}

@@ -4,6 +4,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::error::JobError;
 use crate::engine::{Algorithm, ExecStats};
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
@@ -40,11 +41,12 @@ impl Default for JobOptions {
     }
 }
 
-/// Outcome of one job.
+/// Outcome of one job. Errors are typed ([`JobError`]) — match on the
+/// variant, don't scrape the message.
 #[derive(Debug)]
 pub struct JobResult {
     pub id: u64,
-    pub result: Result<JobOutput, String>,
+    pub result: Result<JobOutput, JobError>,
 }
 
 #[derive(Debug)]

@@ -58,6 +58,20 @@ pub struct Metrics {
     pub dispatches: AtomicU64,
     pub real_pairs: AtomicU64,
     pub busy_ns: AtomicU64,
+    /// Times a worker actually ran `SpmmKernel::prepare` for a job's `B`
+    /// (cache misses). With B-sharing coalescing this stays well below
+    /// `jobs_completed`; without it the two march together.
+    pub prepare_builds: AtomicU64,
+    /// Micro-batch groups whose `PreparedB` came from the cross-batch LRU
+    /// cache instead of a fresh build.
+    pub prepare_cache_hits: AtomicU64,
+    /// Sharing groups (one per distinct `B`+kernel within a micro-batch)
+    /// in which ≥ 2 jobs shared one `PreparedB`. A micro-batch holding two
+    /// shared-B groups counts twice.
+    pub coalesced_batches: AtomicU64,
+    /// Jobs beyond the first in each sharing group — multiplies that rode
+    /// on a batch-mate's prepare (the paper's amortization, measured).
+    pub coalesced_jobs: AtomicU64,
     /// Per-job service time (dequeue → response ready).
     pub latency: Histogram,
     /// Per-job queue wait (submit → dequeue) — the backpressure signal.
@@ -91,6 +105,10 @@ impl Metrics {
             dispatches: self.dispatches.load(Ordering::Relaxed),
             real_pairs: self.real_pairs.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            prepare_builds: self.prepare_builds.load(Ordering::Relaxed),
+            prepare_cache_hits: self.prepare_cache_hits.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            coalesced_jobs: self.coalesced_jobs.load(Ordering::Relaxed),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             queue_p50_us: self.queue_wait.quantile_us(0.5),
@@ -108,6 +126,10 @@ pub struct MetricsSnapshot {
     pub dispatches: u64,
     pub real_pairs: u64,
     pub busy_ns: u64,
+    pub prepare_builds: u64,
+    pub prepare_cache_hits: u64,
+    pub coalesced_batches: u64,
+    pub coalesced_jobs: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub queue_p50_us: u64,

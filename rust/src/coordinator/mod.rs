@@ -1,23 +1,37 @@
 //! L3 coordinator: the serving layer that owns process topology, routing,
 //! batching, and metrics (DESIGN.md §1).
 //!
+//! * [`client`] — **the public serving API**: [`SpmmClient`] handles,
+//!   [`JobBuilder`] construction, [`JobHandle`] futures
+//!   (`wait`/`wait_timeout`/`try_poll`/`batch_wait_all`), and batch entry
+//!   points (`submit_many`/`stream`).
+//! * [`error`] — typed [`JobError`] (queue full, kernel unavailable, shape
+//!   mismatch, exec failure, shutdown); engine errors lift via `From`.
 //! * [`job`] — SpMM job descriptors/results (with per-job kernel override).
 //! * [`router`] — format strategy (InCRS or not) + kernel-key selection
 //!   over the engine registry, the paper's §II/§III decision as an
 //!   explicit, testable policy.
 //! * [`scheduler`] — dispatch batching with exactly-once coverage.
 //! * [`server`] — bounded-queue worker pool (backpressure, per-worker
-//!   kernel registries, drain-on-shutdown).
-//! * [`metrics`] — lock-free counters + latency/queue-wait histograms.
+//!   kernel registries, drain-on-shutdown) with B-sharing micro-batch
+//!   coalescing: jobs with bit-identical `B` share one
+//!   `SpmmKernel::prepare`, LRU-cached across batches.
+//! * [`metrics`] — lock-free counters + latency/queue-wait histograms +
+//!   coalescing stats (`prepare_builds`, `prepare_cache_hits`,
+//!   `coalesced_jobs`).
 
+pub mod client;
+pub mod error;
 pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use client::{JobBuilder, JobHandle, JobStream, SpmmClient};
+pub use error::JobError;
 pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
-pub use server::{Server, ServerConfig};
+pub use server::{CoalesceConfig, Server, ServerConfig};

@@ -1,36 +1,73 @@
 //! Batching SpMM server: a worker pool over bounded channels, dispatching
-//! through the kernel registry.
+//! through the kernel registry with B-sharing micro-batch coalescing.
 //!
-//! The L3 serving shape (DESIGN.md §1): callers `submit` jobs and get a
-//! per-job response channel; a bounded queue applies backpressure (submit
-//! blocks when `queue_depth` jobs are in flight); each worker owns its own
-//! kernel registry (PJRT clients are not shared across threads) and
-//! processes whole jobs — parallelism *inside* a job comes from the tiled
-//! kernel's worker threads.
+//! The L3 serving shape (DESIGN.md §1): callers talk to the server through
+//! an [`SpmmClient`] handle (`server.client()`); a bounded queue applies
+//! backpressure (blocking submits stall when `queue_depth` jobs are in
+//! flight); each worker owns its own kernel registry (PJRT clients are not
+//! shared across threads) and drains the queue in micro-batches bounded to
+//! the current shared-`B` run (so unrelated bursts still fan out across
+//! workers). Within a batch, jobs resolving to the same kernel share one
+//! [`SpmmKernel::prepare`]: conversion kernels (InCRS, Dense) are keyed by
+//! a content fingerprint of `B` — bit-identical operands share even across
+//! `Arc`s and, via a bounded per-worker LRU, across batches — while
+//! CSR-consuming kernels group by `Arc` identity and skip hashing
+//! entirely (their prepare is already an O(1) `Arc` share). This is the
+//! paper's amortization — one representation build, many multiplies —
+//! applied at the serving layer.
 //!
-//! Shutdown drains: [`Server::shutdown`] closes the submit side and joins
-//! the workers, which keep serving until the queue is empty — no in-flight
-//! job is ever dropped.
+//! Shutdown drains: [`Server::shutdown`] marks the server closed, sends one
+//! stop pill per worker, and joins them. Pills queue *behind* every
+//! accepted job, so no in-flight job is ever dropped; jobs racing past the
+//! closed flag are answered with [`JobError::Shutdown`].
 //!
 //! Built on std threads + mpsc because the offline registry has no tokio
 //! (DESIGN.md §2); the batching/backpressure semantics are identical.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::client::SpmmClient;
+use super::error::JobError;
 use super::job::{JobOutput, JobResult, SpmmJob};
 use super::metrics::Metrics;
 use super::router::KernelSpec;
-use crate::engine::{AccelKernel, Registry, SpmmKernel};
+use crate::engine::{
+    AccelKernel, EngineError, FingerprintMemo, PreparedCache, PreparedKey, Registry,
+    SpmmKernel,
+};
 use crate::spmm::plan::Geometry;
+
+/// Micro-batch coalescing policy (per worker).
+#[derive(Clone, Copy, Debug)]
+pub struct CoalesceConfig {
+    /// Drain queued jobs into micro-batches and share `PreparedB` among
+    /// jobs with bit-identical `B`. Off = the PR 1 one-job-at-a-time path.
+    pub enabled: bool,
+    /// Max jobs drained into one micro-batch.
+    pub max_batch: usize,
+    /// `PreparedB` LRU entries kept across batches, per worker
+    /// (0 disables the cross-batch cache; in-batch sharing still applies).
+    pub cache_capacity: usize,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig {
+            enabled: true,
+            max_batch: 16,
+            cache_capacity: 8,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub workers: usize,
-    /// Max queued jobs before `submit` blocks (backpressure).
+    /// Max queued jobs before blocking submits stall (backpressure).
     pub queue_depth: usize,
     /// How workers pick the kernel for each job (jobs can still override
     /// via `JobOptions::kernel`).
@@ -43,6 +80,8 @@ pub struct ServerConfig {
     /// Threads inside the tiled kernel (per job, per worker).
     pub tile_workers: usize,
     pub artifacts_dir: std::path::PathBuf,
+    /// B-sharing micro-batch coalescing (see [`CoalesceConfig`]).
+    pub coalesce: CoalesceConfig,
 }
 
 impl Default for ServerConfig {
@@ -55,19 +94,32 @@ impl Default for ServerConfig {
             geometry: Geometry::default(),
             tile_workers: 1,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
+            coalesce: CoalesceConfig::default(),
         }
     }
 }
 
-struct Envelope {
-    job: SpmmJob,
-    reply: SyncSender<JobResult>,
-    enqueued: Instant,
+/// What travels down the queue: a job with its reply channel, or a stop
+/// pill (one per worker, sent by [`Server::shutdown`] behind all accepted
+/// jobs).
+pub(crate) enum Envelope {
+    Job(JobEnvelope),
+    Stop,
+}
+
+pub(crate) struct JobEnvelope {
+    pub(crate) job: SpmmJob,
+    pub(crate) reply: SyncSender<JobResult>,
+    pub(crate) enqueued: Instant,
 }
 
 pub struct Server {
     tx: SyncSender<Envelope>,
+    rx: Arc<Mutex<Receiver<Envelope>>>,
     handles: Vec<JoinHandle<()>>,
+    closed: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+    workers: usize,
     pub metrics: Arc<Metrics>,
 }
 
@@ -75,7 +127,7 @@ impl Server {
     pub fn start(cfg: ServerConfig) -> Server {
         assert!(cfg.workers > 0, "need at least one worker");
         let (tx, rx) = sync_channel::<Envelope>(cfg.queue_depth);
-        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::new();
         for wid in 0..cfg.workers {
@@ -91,51 +143,115 @@ impl Server {
         }
         Server {
             tx,
+            rx,
             handles,
+            closed: Arc::new(AtomicBool::new(false)),
+            next_id: Arc::new(AtomicU64::new(0)),
+            workers: cfg.workers,
             metrics,
         }
     }
 
-    /// Submit a job; blocks when the queue is full (backpressure). Returns
-    /// the response channel.
-    pub fn submit(&self, job: SpmmJob) -> Receiver<JobResult> {
-        let (rtx, rrx) = sync_channel(1);
-        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Envelope {
-                job,
-                reply: rtx,
-                enqueued: Instant::now(),
-            })
-            .expect("server shut down");
-        rrx
+    /// A cheap, cloneable, `Send` handle for submitting work — the public
+    /// serving API ([`SpmmClient`], `JobBuilder`, `JobHandle`). Any number
+    /// of client threads may hold one.
+    pub fn client(&self) -> SpmmClient {
+        SpmmClient::new(
+            self.tx.clone(),
+            Arc::clone(&self.metrics),
+            Arc::clone(&self.closed),
+            Arc::clone(&self.next_id),
+        )
     }
 
-    /// Non-blocking submit: `Err(job)` when the queue is full.
+    /// Legacy blocking submit — a thin shim over [`Server::client`], kept
+    /// for one release. Prefer `server.client().submit(job)?.wait()`.
+    /// Panics if the server already shut down (the client returns
+    /// [`JobError::Shutdown`] instead).
+    pub fn submit(&self, job: SpmmJob) -> Receiver<JobResult> {
+        self.client()
+            .submit(job)
+            .map(|h| h.into_receiver())
+            .expect("server shut down")
+    }
+
+    /// Legacy non-blocking submit — a thin shim over [`Server::client`]:
+    /// `Err(job)` hands the job back when the queue is full. Prefer
+    /// `client.try_submit(job)`, which reports [`JobError::QueueFull`].
     pub fn try_submit(&self, job: SpmmJob) -> Result<Receiver<JobResult>, SpmmJob> {
-        let (rtx, rrx) = sync_channel(1);
-        match self.tx.try_send(Envelope {
-            job,
-            reply: rtx,
-            enqueued: Instant::now(),
-        }) {
-            Ok(()) => {
-                self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(rrx)
-            }
-            Err(TrySendError::Full(env)) | Err(TrySendError::Disconnected(env)) => Err(env.job),
+        match self.client().try_submit(job.clone()) {
+            Ok(h) => Ok(h.into_receiver()),
+            Err(_) => Err(job),
         }
     }
 
-    /// Graceful shutdown: closes the submit side, then joins workers. The
-    /// workers keep draining the bounded queue until it is empty, so every
-    /// accepted job gets a response before shutdown returns.
+    /// Graceful shutdown: marks the server closed, queues one stop pill
+    /// per worker *behind* every accepted job, joins the workers, then
+    /// answers any straggler jobs (races against the closed flag) with
+    /// [`JobError::Shutdown`]. Every accepted job gets exactly one reply
+    /// (result, drained error, or reply-channel disconnect), and jobs are
+    /// counted completed/failed best-effort across the final race window.
     pub fn shutdown(self) {
-        let Server { tx, handles, metrics: _ } = self;
-        drop(tx); // disconnect: workers exit once the queue is drained
+        let Server { tx, rx, handles, closed, next_id: _, workers, metrics } = self;
+        closed.store(true, Ordering::Release);
+        for _ in 0..workers {
+            // try_send + liveness check instead of a blocking send: if
+            // every worker has died (e.g. a kernel panicked) while the
+            // queue is full, a blocking send would never complete
+            loop {
+                match try_send_stop(&tx) {
+                    PillSend::Sent | PillSend::Disconnected => break,
+                    PillSend::Full => {
+                        if handles.iter().all(|h| h.is_finished()) {
+                            break; // nobody left to drain or consume pills
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+        drop(tx);
         for h in handles {
             let _ = h.join();
         }
+        // stragglers that raced past the closed flag: answer + count,
+        // don't strand (keeps submitted == completed + failed). Two drain
+        // passes with a settle window catch a blocking send completing
+        // just as the first pass reads Empty; a send landing after the
+        // final pass still resolves (reply channel disconnects when `rx`
+        // drops below -> the waiting JobHandle sees Shutdown) but is not
+        // counted in jobs_failed — the invariant is best-effort across
+        // that last race window.
+        if let Ok(guard) = rx.lock() {
+            for pass in 0..2 {
+                while let Ok(env) = guard.try_recv() {
+                    if let Envelope::Job(je) = env {
+                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = je.reply.send(JobResult {
+                            id: je.job.id,
+                            result: Err(JobError::Shutdown),
+                        });
+                    }
+                }
+                if pass == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
+enum PillSend {
+    Sent,
+    Full,
+    Disconnected,
+}
+
+fn try_send_stop(tx: &SyncSender<Envelope>) -> PillSend {
+    match tx.try_send(Envelope::Stop) {
+        Ok(()) => PillSend::Sent,
+        Err(TrySendError::Full(_)) => PillSend::Full,
+        Err(TrySendError::Disconnected(_)) => PillSend::Disconnected,
     }
 }
 
@@ -161,77 +277,237 @@ fn worker_registry(cfg: &ServerConfig, metrics: &Metrics) -> Registry {
 fn worker_loop(
     _wid: usize,
     cfg: ServerConfig,
-    rx: Arc<std::sync::Mutex<Receiver<Envelope>>>,
+    rx: Arc<Mutex<Receiver<Envelope>>>,
     metrics: Arc<Metrics>,
 ) {
     let registry = worker_registry(&cfg, &metrics);
+    let cap = if cfg.coalesce.enabled {
+        cfg.coalesce.cache_capacity
+    } else {
+        0
+    };
+    let mut cache = PreparedCache::new(cap);
+    // content fingerprints memoized by Arc identity across batches (the
+    // memo pins each Arc, so pointers can't be recycled under it)
+    let mut fp_memo = FingerprintMemo::new(cap);
 
     loop {
-        let env = {
-            let guard = rx.lock().expect("queue lock");
-            guard.recv()
-        };
-        match env {
-            // disconnected + drained: shutdown
-            Err(_) => return,
-            Ok(Envelope { job, reply, enqueued }) => {
-                metrics.observe_queue_wait(enqueued.elapsed());
-                let start = Instant::now();
-                let result = run_job(&registry, cfg.kernel, &job);
-                let wall = start.elapsed();
-                metrics.busy_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
-                metrics.observe_latency(wall);
-                match &result {
-                    Ok(out) => {
-                        metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                        metrics
-                            .dispatches
-                            .fetch_add(out.report.dispatches, Ordering::Relaxed);
-                        metrics
-                            .real_pairs
-                            .fetch_add(out.report.real_pairs, Ordering::Relaxed);
-                    }
-                    Err(_) => {
-                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        let mut batch: Vec<JobEnvelope> = Vec::new();
+        let mut saw_stop = false;
+        {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            match guard.recv() {
+                // disconnected + drained: shutdown
+                Err(_) => return,
+                Ok(Envelope::Stop) => return,
+                Ok(Envelope::Job(je)) => batch.push(je),
+            }
+            if cfg.coalesce.enabled {
+                // opportunistic drain, bounded to the shared-B run: keep
+                // pulling queued jobs only while they share the first
+                // job's B operand (Arc identity), so a burst of unrelated
+                // jobs still fans out across the other workers. The first
+                // non-matching job ends the run but rides along (it is
+                // already popped; its own group executes in this batch).
+                while batch.len() < cfg.coalesce.max_batch.max(1) {
+                    match guard.try_recv() {
+                        Ok(Envelope::Job(je)) => {
+                            let same_b = Arc::ptr_eq(&je.job.b, &batch[0].job.b);
+                            batch.push(je);
+                            if !same_b {
+                                break;
+                            }
+                        }
+                        // our pill: finish this batch first, then exit
+                        Ok(Envelope::Stop) => {
+                            saw_stop = true;
+                            break;
+                        }
+                        Err(_) => break,
                     }
                 }
-                let _ = reply.send(JobResult {
-                    id: job.id,
-                    result,
-                });
             }
+        } // queue unlocked while the batch executes
+        run_batch(&registry, &cfg, &mut cache, &mut fp_memo, batch, &metrics);
+        if saw_stop {
+            return;
         }
     }
 }
 
-/// Resolve the kernel for `job` (per-job override > server spec) and run it.
-fn run_job(registry: &Registry, spec: KernelSpec, job: &SpmmJob) -> Result<JobOutput, String> {
-    use crate::formats::traits::SparseMatrix;
-    if job.a.cols() != job.b.rows() {
-        return Err(format!(
-            "dimension mismatch: A is {:?}, B is {:?}",
-            job.a.shape(),
-            job.b.shape()
-        ));
-    }
-    let kernel: Arc<dyn SpmmKernel> = match job.opts.kernel {
-        Some((f, alg)) => registry
-            .resolve(f, alg)
-            .ok_or_else(|| format!("no kernel registered for {}/{}", f.name(), alg.name()))?,
+/// Jobs in one micro-batch that share a `PreparedB`: same `B` content
+/// fingerprint, same resolved kernel.
+struct PrepGroup {
+    key: PreparedKey,
+    kernel: Arc<dyn SpmmKernel>,
+    envs: Vec<JobEnvelope>,
+}
+
+/// Resolve the kernel for `job` (per-job override > server spec).
+fn resolve_kernel(
+    registry: &Registry,
+    spec: KernelSpec,
+    job: &SpmmJob,
+) -> Result<Arc<dyn SpmmKernel>, EngineError> {
+    match job.opts.kernel {
+        Some((f, alg)) => registry.resolve_or_err(f, alg),
         None => match spec {
-            KernelSpec::Fixed(f, alg) => registry
-                .resolve(f, alg)
-                .ok_or_else(|| format!("no kernel registered for {}/{}", f.name(), alg.name()))?,
-            KernelSpec::Auto => registry
-                .select(&job.a, &job.b)
-                .ok_or_else(|| "empty kernel registry".to_string())?,
+            KernelSpec::Fixed(f, alg) => registry.resolve_or_err(f, alg),
+            KernelSpec::Auto => registry.select_or_err(&job.a, &job.b),
         },
-    };
+    }
+}
+
+/// Reply with a failure, keeping the metric invariants: the job counts as
+/// failed and still lands in the service-latency histogram (`batch_start`
+/// is its dequeue time).
+fn reply_err(env: JobEnvelope, err: JobError, metrics: &Metrics, batch_start: Instant) {
+    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    metrics.observe_latency(batch_start.elapsed());
+    let _ = env.reply.send(JobResult {
+        id: env.job.id,
+        result: Err(err),
+    });
+}
+
+/// Execute one micro-batch: group by (B fingerprint, kernel), prepare once
+/// per group (LRU-cached across batches), execute each job.
+fn run_batch(
+    registry: &Registry,
+    cfg: &ServerConfig,
+    cache: &mut PreparedCache,
+    fp_memo: &mut FingerprintMemo,
+    batch: Vec<JobEnvelope>,
+    metrics: &Metrics,
+) {
+    use crate::formats::traits::{FormatKind, SparseMatrix};
+
+    // service latency is dequeue -> response ready: every job in this
+    // batch was dequeued "now", so each one's latency (observed at reply
+    // time below) includes group prepare and waiting behind batch-mates
+    let batch_start = Instant::now();
+    let mut groups: Vec<PrepGroup> = Vec::new();
+
+    for env in batch {
+        metrics.observe_queue_wait(env.enqueued.elapsed());
+        let kernel = match resolve_kernel(registry, cfg.kernel, &env.job) {
+            Ok(k) => k,
+            Err(e) => {
+                reply_err(env, e.into(), metrics, batch_start);
+                continue;
+            }
+        };
+        if env.job.a.cols() != env.job.b.rows() {
+            let err = JobError::ShapeMismatch {
+                a: env.job.a.shape(),
+                b: env.job.b.shape(),
+            };
+            reply_err(env, err, metrics, batch_start);
+            continue;
+        }
+        // CSR-consuming kernels have an O(1) prepare (Arc share): group
+        // them by Arc identity and never pay an O(nnz) content hash for
+        // them. Conversion kernels (InCRS, Dense) key by content so the
+        // cross-batch cache amortizes their real prepare cost; with
+        // coalescing off (single-job batches, no cache) no hash is needed
+        // at all — exactly the PR 1 per-job path.
+        let fingerprint = if kernel.format() == FormatKind::Csr {
+            Arc::as_ptr(&env.job.b) as usize as u64
+        } else if cfg.coalesce.enabled {
+            fp_memo.get(&env.job.b)
+        } else {
+            0
+        };
+        let key = PreparedKey {
+            fingerprint,
+            format: kernel.format(),
+            algorithm: kernel.algorithm(),
+        };
+        match groups.iter_mut().find(|g| g.key == key) {
+            Some(g) => g.envs.push(env),
+            None => groups.push(PrepGroup { key, kernel, envs: vec![env] }),
+        }
+    }
+
+    for PrepGroup { key, kernel, envs } in groups {
+        let b = Arc::clone(&envs[0].job.b);
+        let t_prep = Instant::now();
+        // CSR keys are Arc identities (only unique within this batch), so
+        // they bypass the content-keyed cross-batch cache — their prepare
+        // is a free Arc share anyway
+        let (prepared, built) = if key.format == FormatKind::Csr {
+            (kernel.prepare_shared(&b), true)
+        } else {
+            let builds_before = cache.builds();
+            let p = cache.get_or_build(key, &b, |b| kernel.prepare_shared(b));
+            let built = cache.builds() > builds_before;
+            (p, built)
+        };
+        metrics
+            .busy_ns
+            .fetch_add(t_prep.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let prepared = match prepared {
+            Ok(p) => p,
+            Err(e) => {
+                let err = JobError::from(e);
+                for env in envs {
+                    reply_err(env, err.clone(), metrics, batch_start);
+                }
+                continue;
+            }
+        };
+        if built {
+            metrics.prepare_builds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.prepare_cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if envs.len() > 1 {
+            metrics.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .coalesced_jobs
+                .fetch_add(envs.len() as u64 - 1, Ordering::Relaxed);
+        }
+
+        for env in envs {
+            let start = Instant::now();
+            let result = exec_one(kernel.as_ref(), &env.job, &prepared);
+            metrics
+                .busy_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            match &result {
+                Ok(out) => {
+                    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .dispatches
+                        .fetch_add(out.report.dispatches, Ordering::Relaxed);
+                    metrics
+                        .real_pairs
+                        .fetch_add(out.report.real_pairs, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            metrics.observe_latency(batch_start.elapsed());
+            let _ = env.reply.send(JobResult {
+                id: env.job.id,
+                result,
+            });
+        }
+    }
+}
+
+/// Run one job on an already-prepared `B`.
+fn exec_one(
+    kernel: &dyn SpmmKernel,
+    job: &SpmmJob,
+    prepared: &crate::engine::PreparedB,
+) -> Result<JobOutput, JobError> {
     let start = Instant::now();
-    // prepare_shared: CSR-consuming kernels share the job's Arc (no per-job
-    // O(nnz) copy of B); conversion kernels build their representation
-    let prepared = kernel.prepare_shared(&job.b)?;
-    let out = kernel.execute(&job.a, &prepared)?;
+    let out = kernel.execute(&job.a, prepared)?;
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(&job.a, &job.b);
         Some(out.c.max_abs_diff(&oracle))
@@ -281,6 +557,7 @@ mod tests {
         assert_eq!(out.backend, "cpu");
         let snap = s.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 1);
+        assert_eq!(snap.prepare_builds, 1);
         assert!(snap.queue_p50_us > 0);
         s.shutdown();
     }
@@ -295,17 +572,23 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().result.is_ok());
         }
-        assert_eq!(s.metrics.snapshot().jobs_completed, 20);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 20);
+        // all 20 share one B: prepares amortize across micro-batches
+        assert!(snap.prepare_builds <= 20);
         s.shutdown();
     }
 
     #[test]
-    fn dimension_mismatch_fails_cleanly() {
+    fn dimension_mismatch_is_a_typed_error() {
         let s = cpu_server(1, 2);
         let a = Arc::new(uniform(4, 5, 0.5, 1));
         let b = Arc::new(uniform(7, 4, 0.5, 2));
         let res = s.submit(SpmmJob::new(9, a, b)).recv().unwrap();
-        assert!(res.result.unwrap_err().contains("dimension mismatch"));
+        assert_eq!(
+            res.result.unwrap_err(),
+            JobError::ShapeMismatch { a: (4, 5), b: (7, 4) }
+        );
         assert_eq!(s.metrics.snapshot().jobs_failed, 1);
         s.shutdown();
     }
@@ -347,6 +630,18 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let s = cpu_server(1, 2);
+        let client = s.client();
+        let a = Arc::new(uniform(8, 8, 0.5, 1));
+        s.shutdown();
+        let err = client
+            .submit(SpmmJob::new(1, a.clone(), a))
+            .expect_err("closed server must reject");
+        assert_eq!(err, JobError::Shutdown);
+    }
+
+    #[test]
     fn per_job_kernel_override() {
         let s = cpu_server(1, 4);
         let a = Arc::new(uniform(20, 30, 0.2, 7));
@@ -376,7 +671,13 @@ mod tests {
             SpmmJob::new(1, a.clone(), a.clone()).with_kernel(FormatKind::Jad, Algorithm::Inner),
         );
         let err = rx.recv().unwrap().result.unwrap_err();
-        assert!(err.contains("no kernel registered"), "{err}");
+        assert_eq!(
+            err,
+            JobError::KernelUnavailable {
+                format: Some(FormatKind::Jad),
+                algorithm: Some(Algorithm::Inner),
+            }
+        );
         // the worker survives and serves the next job
         let ok = s.submit(SpmmJob::new(2, a.clone(), a)).recv().unwrap();
         assert!(ok.result.is_ok());
@@ -401,6 +702,30 @@ mod tests {
         let out = rx.recv().unwrap().result.unwrap();
         assert!(out.max_err.unwrap() < 1e-3);
         assert_ne!(out.backend, "dense"); // auto never picks the oracle
+        s.shutdown();
+    }
+
+    #[test]
+    fn coalescing_off_prepares_per_job() {
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            kernel: KernelSpec::Fixed(FormatKind::InCrs, Algorithm::Inner),
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            coalesce: CoalesceConfig { enabled: false, ..Default::default() },
+            ..Default::default()
+        });
+        let a = Arc::new(uniform(16, 24, 0.3, 12));
+        let b = Arc::new(uniform(24, 16, 0.3, 13));
+        let rxs: Vec<_> = (0..6)
+            .map(|i| s.submit(SpmmJob::new(i, a.clone(), b.clone())))
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.prepare_builds, 6, "{snap:?}");
+        assert_eq!(snap.coalesced_jobs, 0, "{snap:?}");
         s.shutdown();
     }
 }

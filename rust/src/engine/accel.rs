@@ -13,6 +13,7 @@ use crate::formats::traits::{FormatKind, SparseMatrix};
 use crate::runtime::numeric::NumericEngine;
 use crate::spmm::plan::Geometry;
 
+use super::error::EngineError;
 use super::kernel::{
     wrong_operand, Algorithm, CostHint, EngineOutput, PreparedB, SpmmKernel,
 };
@@ -73,22 +74,21 @@ impl SpmmKernel for AccelKernel {
             prepare_words: (a.nnz() + b.nnz()) as f64,
         }
     }
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         Ok(PreparedB::Csr(std::sync::Arc::new(b.clone())))
     }
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let bc = match b {
             PreparedB::Csr(m) => m,
             other => return Err(wrong_operand(self, other)),
         };
         if a.cols() != bc.rows() {
-            return Err(format!(
-                "dimension mismatch: A is {:?}, B is {:?}",
-                a.shape(),
-                bc.shape()
-            ));
+            return Err(EngineError::ShapeMismatch {
+                a: a.shape(),
+                b: bc.shape(),
+            });
         }
-        let (c, stats) = self.engine.spmm(a, bc)?;
+        let (c, stats) = self.engine.spmm(a, bc).map_err(EngineError::ExecFailed)?;
         Ok(EngineOutput { c, stats })
     }
 }

@@ -1,0 +1,91 @@
+//! Typed execution errors for the engine layer.
+//!
+//! Every failure a kernel or the registry can produce is one of three
+//! shapes: the requested kernel does not exist, the operands do not
+//! compose, or the backend itself failed. Callers (the coordinator, the
+//! CLI, eval drivers) match on the variant instead of scraping strings;
+//! the coordinator lifts these into `coordinator::JobError` via `From`.
+
+use std::fmt;
+
+use crate::formats::traits::FormatKind;
+
+use super::kernel::Algorithm;
+
+/// What went wrong while resolving or running a kernel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// No kernel is registered under the requested key. `None`/`None`
+    /// means the registry itself is empty (auto-selection has nothing to
+    /// choose from).
+    KernelUnavailable {
+        format: Option<FormatKind>,
+        algorithm: Option<Algorithm>,
+    },
+    /// Inner dimensions do not agree: `A` is `a`, `B` is `b`.
+    ShapeMismatch {
+        a: (usize, usize),
+        b: (usize, usize),
+    },
+    /// The kernel's prepare or execute step failed (backend error,
+    /// operand prepared for a different kernel, format build failure).
+    ExecFailed(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::KernelUnavailable {
+                format: Some(f),
+                algorithm: Some(alg),
+            } => write!(w, "no kernel registered for {}/{}", f.name(), alg.name()),
+            EngineError::KernelUnavailable { .. } => write!(w, "empty kernel registry"),
+            EngineError::ShapeMismatch { a, b } => {
+                write!(w, "dimension mismatch: A is {a:?}, B is {b:?}")
+            }
+            EngineError::ExecFailed(msg) => write!(w, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Legacy bridge for `Result<_, String>` call sites (CLI, scripts) so `?`
+/// keeps working while they migrate to matching on the variants.
+impl From<EngineError> for String {
+    fn from(e: EngineError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_the_established_phrasing() {
+        let miss = EngineError::KernelUnavailable {
+            format: Some(FormatKind::Jad),
+            algorithm: Some(Algorithm::Inner),
+        };
+        assert!(miss.to_string().contains("no kernel registered"));
+        let empty = EngineError::KernelUnavailable {
+            format: None,
+            algorithm: None,
+        };
+        assert_eq!(empty.to_string(), "empty kernel registry");
+        let dims = EngineError::ShapeMismatch { a: (4, 5), b: (7, 4) };
+        assert!(dims.to_string().contains("dimension mismatch"));
+        let exec = EngineError::ExecFailed("backend died".into());
+        assert!(exec.to_string().contains("backend died"));
+    }
+
+    #[test]
+    fn implements_std_error_and_string_bridge() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(EngineError::ExecFailed("x".into()));
+        assert!(!e.to_string().is_empty());
+        let s: String = EngineError::ShapeMismatch { a: (1, 2), b: (3, 4) }.into();
+        assert!(s.contains("dimension mismatch"));
+    }
+}

@@ -16,6 +16,8 @@ use crate::formats::dense::Dense;
 use crate::formats::incrs::InCrs;
 use crate::formats::traits::FormatKind;
 
+use super::error::EngineError;
+
 /// Compute organization of a kernel (the paper's §II algorithm axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Algorithm {
@@ -140,12 +142,12 @@ pub trait SpmmKernel: Send + Sync {
     /// it (used by [`crate::engine::Registry::select`]).
     fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint;
     /// Build this kernel's representation of `B` (cacheable).
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String>;
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError>;
     /// Like [`SpmmKernel::prepare`], but sharing the caller's `Arc` when
     /// the kernel consumes CSR as-is — the serving hot path calls this so
     /// per-job preparation is O(1) for CSR-consuming kernels instead of an
     /// O(nnz) copy. Conversion kernels fall back to [`SpmmKernel::prepare`].
-    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, String> {
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
         if self.format() == FormatKind::Csr {
             Ok(PreparedB::Csr(Arc::clone(b)))
         } else {
@@ -153,10 +155,10 @@ pub trait SpmmKernel: Send + Sync {
         }
     }
     /// Run `C = A × B` on a prepared operand.
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String>;
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError>;
 
     /// Convenience: prepare + execute in one call.
-    fn run(&self, a: &Csr, b: &Csr) -> Result<EngineOutput, String> {
+    fn run(&self, a: &Csr, b: &Csr) -> Result<EngineOutput, EngineError> {
         let prepared = self.prepare(b)?;
         self.execute(a, &prepared)
     }
@@ -182,14 +184,14 @@ pub fn expected_tile_pairs(a: &Csr, b: &Csr, block: usize) -> f64 {
 }
 
 /// Standard operand-mismatch error for `execute` implementations.
-pub fn wrong_operand(kernel: &dyn SpmmKernel, got: &PreparedB) -> String {
-    format!(
+pub fn wrong_operand(kernel: &dyn SpmmKernel, got: &PreparedB) -> EngineError {
+    EngineError::ExecFailed(format!(
         "kernel {}/{} expects B prepared as {:?}, got {:?}",
         kernel.algorithm().name(),
         kernel.name(),
         kernel.format(),
         got.format()
-    )
+    ))
 }
 
 #[cfg(test)]

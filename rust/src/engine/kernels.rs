@@ -15,6 +15,7 @@ use crate::formats::incrs::{InCrs, InCrsParams};
 use crate::formats::traits::{FormatKind, NullSink, SparseMatrix};
 use crate::spmm;
 
+use super::error::EngineError;
 use super::kernel::{
     wrong_operand, Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
 };
@@ -58,20 +59,19 @@ impl SpmmKernel for DenseOracleKernel {
             prepare_words: b.rows() as f64 * b.cols() as f64,
         }
     }
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         Ok(PreparedB::Dense(Arc::new(Dense::from_coo(&b.to_coo()))))
     }
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let bd = match b {
             PreparedB::Dense(d) => d,
             other => return Err(wrong_operand(self, other)),
         };
         if a.cols() != bd.rows() {
-            return Err(format!(
-                "dimension mismatch: A is {:?}, B is {:?}",
-                a.shape(),
-                bd.shape()
-            ));
+            return Err(EngineError::ShapeMismatch {
+                a: a.shape(),
+                b: bd.shape(),
+            });
         }
         let (m, n) = (a.rows(), bd.cols());
         let mut c = Dense::zeros(m, n);
@@ -111,20 +111,19 @@ impl SpmmKernel for GustavsonKernel {
             prepare_words: 0.0,
         }
     }
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         Ok(PreparedB::Csr(Arc::new(b.clone())))
     }
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let bc = match b {
             PreparedB::Csr(m) => m,
             other => return Err(wrong_operand(self, other)),
         };
         if a.cols() != bc.rows() {
-            return Err(format!(
-                "dimension mismatch: A is {:?}, B is {:?}",
-                a.shape(),
-                bc.shape()
-            ));
+            return Err(EngineError::ShapeMismatch {
+                a: a.shape(),
+                b: bc.shape(),
+            });
         }
         let (c_sparse, macs) = spmm::gustavson::multiply_counted(a, bc);
         let c = Dense::from_coo(&c_sparse.to_coo());
@@ -184,16 +183,15 @@ impl SpmmKernel for InnerKernel {
             },
         }
     }
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         match self.format {
-            FormatKind::InCrs => Ok(PreparedB::InCrs(Arc::new(InCrs::from_csr_params(
-                b,
-                self.params,
-            )?))),
+            FormatKind::InCrs => Ok(PreparedB::InCrs(Arc::new(
+                InCrs::from_csr_params(b, self.params).map_err(EngineError::ExecFailed)?,
+            ))),
             _ => Ok(PreparedB::Csr(Arc::new(b.clone()))),
         }
     }
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let mut sink = NullSink;
         let (c, b_shape) = match (self.format, b) {
             (FormatKind::InCrs, PreparedB::InCrs(m)) => (
@@ -206,8 +204,9 @@ impl SpmmKernel for InnerKernel {
             ),
             (_, other) => return Err(wrong_operand(self, other)),
         };
-        let c = c.ok_or_else(|| {
-            format!("dimension mismatch: A is {:?}, B is {b_shape:?}", a.shape())
+        let c = c.ok_or_else(|| EngineError::ShapeMismatch {
+            a: a.shape(),
+            b: b_shape,
         })?;
         let macs = a.nnz() as u64 * c.cols() as u64;
         Ok(EngineOutput { c, stats: scalar_stats(macs) })
@@ -253,12 +252,12 @@ impl SpmmKernel for TiledKernel {
             prepare_words: (a.nnz() + b.nnz()) as f64,
         }
     }
-    fn prepare(&self, b: &Csr) -> Result<PreparedB, String> {
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         // blockization of B happens inside execute (it is keyed to A's
         // geometry too); the prepared operand stays canonical
         Ok(PreparedB::Csr(Arc::new(b.clone())))
     }
-    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> {
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let bc = match b {
             PreparedB::Csr(m) => m,
             other => return Err(wrong_operand(self, other)),
@@ -319,16 +318,20 @@ mod tests {
         let a = uniform(8, 8, 0.5, 1);
         let wrong = PreparedB::Dense(Arc::new(Dense::zeros(8, 8)));
         let err = GustavsonKernel.execute(&a, &wrong).unwrap_err();
-        assert!(err.contains("expects B prepared"), "{err}");
+        assert!(err.to_string().contains("expects B prepared"), "{err}");
     }
 
     #[test]
-    fn kernels_reject_dimension_mismatch() {
+    fn kernels_reject_dimension_mismatch_with_typed_error() {
         let a = uniform(6, 7, 0.5, 1);
         let b = uniform(9, 6, 0.5, 2);
         for k in kernels() {
             let err = k.run(&a, &b).unwrap_err();
-            assert!(err.contains("dimension mismatch"), "{}: {err}", k.name());
+            assert!(
+                matches!(err, EngineError::ShapeMismatch { a: (6, 7), b: (9, 6) }),
+                "{}: {err}",
+                k.name()
+            );
         }
     }
 

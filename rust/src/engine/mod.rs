@@ -18,7 +18,15 @@
 //!   without running), `prepare` (build B's representation once, cacheable),
 //!   `execute` (the multiply);
 //! * [`Registry`] — `(FormatKind, Algorithm)` → kernel resolution plus
-//!   cost-hint-based selection ([`Registry::select`]);
+//!   cost-hint-based selection ([`Registry::select`]); the typed variants
+//!   ([`Registry::resolve_or_err`] / [`Registry::select_or_err`]) return
+//!   [`EngineError`] for serving-path callers;
+//! * [`EngineError`] — the typed failure surface (kernel unavailable,
+//!   shape mismatch, backend failure) every kernel and registry path
+//!   reports; the coordinator lifts it into `JobError`;
+//! * [`prepared`] — content fingerprinting for `Arc<Csr>` operands and a
+//!   bounded LRU [`PreparedCache`] so jobs sharing `B` reuse one
+//!   `prepare` (the coordinator's micro-batch coalescing rides on this);
 //! * [`tiled`] — a multi-threaded tile-pair executor (std threads over
 //!   `blocks::BlockGrid` intersections, per-worker scratch, deterministic
 //!   K-ordered reduction → bit-identical results at any worker count);
@@ -34,8 +42,8 @@
 //!     fn format(&self) -> FormatKind { FormatKind::Csr }
 //!     fn name(&self) -> &'static str { "my-gpu" }
 //!     fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint { /* estimate */ }
-//!     fn prepare(&self, b: &Csr) -> Result<PreparedB, String> { /* upload */ }
-//!     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, String> { /* run */ }
+//!     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> { /* upload */ }
+//!     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> { /* run */ }
 //! }
 //! let mut reg = Registry::with_default_kernels(geom, workers);
 //! reg.register(Arc::new(MyGpuKernel { ... }));
@@ -49,15 +57,19 @@
 //! `coordinator::server`.
 
 pub mod accel;
+pub mod error;
 pub mod kernel;
 pub mod kernels;
+pub mod prepared;
 pub mod registry;
 pub mod tiled;
 
 pub use accel::AccelKernel;
+pub use error::EngineError;
 pub use kernel::{
     Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
 };
 pub use kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
+pub use prepared::{fingerprint_csr, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry};
 pub use tiled::TiledConfig;

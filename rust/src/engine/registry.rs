@@ -15,6 +15,7 @@ use crate::formats::traits::FormatKind;
 use crate::spmm::plan::Geometry;
 
 use super::accel::AccelKernel;
+use super::error::EngineError;
 use super::kernel::{Algorithm, SpmmKernel};
 use super::kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
 use super::tiled::TiledConfig;
@@ -64,6 +65,21 @@ impl Registry {
         self.map.get(&(format, algorithm)).cloned()
     }
 
+    /// Exact lookup with a typed error — the serving path's resolver
+    /// (misses become [`EngineError::KernelUnavailable`], which the
+    /// coordinator lifts into `JobError::KernelUnavailable`).
+    pub fn resolve_or_err(
+        &self,
+        format: FormatKind,
+        algorithm: Algorithm,
+    ) -> Result<Arc<dyn SpmmKernel>, EngineError> {
+        self.resolve(format, algorithm)
+            .ok_or(EngineError::KernelUnavailable {
+                format: Some(format),
+                algorithm: Some(algorithm),
+            })
+    }
+
     /// First kernel implementing `algorithm`, any format (key order).
     pub fn resolve_algorithm(&self, algorithm: Algorithm) -> Option<Arc<dyn SpmmKernel>> {
         self.map
@@ -87,6 +103,14 @@ impl Registry {
             });
         best.cloned()
             .or_else(|| self.resolve_algorithm(Algorithm::Dense))
+    }
+
+    /// [`Registry::select`] with a typed error for the empty-registry case.
+    pub fn select_or_err(&self, a: &Csr, b: &Csr) -> Result<Arc<dyn SpmmKernel>, EngineError> {
+        self.select(a, b).ok_or(EngineError::KernelUnavailable {
+            format: None,
+            algorithm: None,
+        })
     }
 
     /// Registered keys, sorted.
@@ -177,6 +201,25 @@ mod tests {
         // and the selected kernel actually works
         let out = k.run(&a, &b).unwrap();
         assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn typed_resolution_errors() {
+        let r = Registry::new();
+        assert_eq!(
+            r.resolve_or_err(FormatKind::Csr, Algorithm::Gustavson).unwrap_err(),
+            EngineError::KernelUnavailable {
+                format: Some(FormatKind::Csr),
+                algorithm: Some(Algorithm::Gustavson),
+            }
+        );
+        assert_eq!(
+            r.select_or_err(&uniform(4, 4, 0.5, 1), &uniform(4, 4, 0.5, 2))
+                .unwrap_err(),
+            EngineError::KernelUnavailable { format: None, algorithm: None }
+        );
+        let full = default_registry();
+        assert!(full.resolve_or_err(FormatKind::Csr, Algorithm::Tiled).is_ok());
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::formats::dense::Dense;
 use crate::formats::traits::SparseMatrix;
 use crate::spmm::blocks::blockize;
 
+use super::error::EngineError;
 use super::kernel::ExecStats;
 
 /// Tiled executor configuration: tile size and worker count.
@@ -68,13 +69,12 @@ fn partition_by_weight(weights: &[usize], workers: usize) -> Vec<(usize, usize)>
 
 /// C = A × B through the blocked tile-pair decomposition, executed by
 /// `cfg.workers` std threads. Returns the dense product and its accounting.
-pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats), String> {
+pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats), EngineError> {
     if a.cols() != b.rows() {
-        return Err(format!(
-            "dimension mismatch: A is {:?}, B is {:?}",
-            a.shape(),
-            b.shape()
-        ));
+        return Err(EngineError::ShapeMismatch {
+            a: a.shape(),
+            b: b.shape(),
+        });
     }
     let bsz = cfg.block;
     let (m, n) = (a.rows(), b.cols());

@@ -12,7 +12,7 @@ use std::time::Instant;
 use super::report::{ExpOptions, ExpResult};
 use crate::datasets::synth::uniform;
 use crate::engine::{
-    Algorithm, EngineOutput, Registry, SpmmKernel, TiledConfig, TiledKernel,
+    Algorithm, EngineError, EngineOutput, Registry, SpmmKernel, TiledConfig, TiledKernel,
 };
 use crate::spmm::plan::Geometry;
 use crate::util::json::{obj, Json};
@@ -34,7 +34,7 @@ pub fn run(opts: ExpOptions) -> ExpResult {
         &["kernel", "format", "algorithm", "wall ms", "dispatches", "real pairs", "max err"],
     );
     let mut rows = Vec::new();
-    let mut run_one = |name: &str, fmt: &str, alg: &str, out: Result<EngineOutput, String>, wall_ms: f64| {
+    let mut run_one = |name: &str, fmt: &str, alg: &str, out: Result<EngineOutput, EngineError>, wall_ms: f64| {
         match out {
             Ok(o) => {
                 let err = o.c.max_abs_diff(&oracle);

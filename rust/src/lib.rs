@@ -18,14 +18,39 @@
 //! executor ([`engine::tiled`]), and the accelerator plan path
 //! ([`runtime`], PJRT or its CPU twin) are all registered kernels; the
 //! [`coordinator`] server, the CLI, the eval drivers, and the benches
-//! resolve them through the registry. Adding a backend = implementing the
-//! trait + one `register` call (see [`engine`] docs).
+//! resolve them through the registry. Failures are typed
+//! ([`engine::EngineError`]) end to end. Adding a backend = implementing
+//! the trait + one `register` call (see [`engine`] docs).
 //!
 //! ```ignore
 //! let reg = Registry::with_default_kernels(Geometry::default(), 4);
 //! let k = reg.resolve(FormatKind::InCrs, Algorithm::Inner).unwrap();
 //! let out = k.run(&a, &b)?;           // prepare (InCRS build) + execute
 //! // or: reg.select(&a, &b)           // cost-hint auto-selection
+//! ```
+//!
+//! ## Serving model
+//!
+//! The [`coordinator`] wraps the engine in a batching server; callers use
+//! the typed client API ([`coordinator::SpmmClient`]): `JobBuilder`
+//! construction, `JobHandle` futures (`wait` / `wait_timeout` /
+//! `try_poll` / `batch_wait_all`), `submit_many`/`stream` batch entry
+//! points, and [`coordinator::JobError`] instead of stringly errors. The
+//! server micro-batches jobs sharing a `B` operand so
+//! `SpmmKernel::prepare` runs once per batch (content-fingerprinted for
+//! conversion kernels, with a bounded LRU keeping each `PreparedB` across
+//! batches) — the paper's "one representation build, many multiplies"
+//! amortization at the serving layer. Coalescing stats (`prepare_builds`,
+//! `prepare_cache_hits`, `coalesced_jobs`) surface in
+//! [`coordinator::MetricsSnapshot`].
+//!
+//! ```ignore
+//! let server = Server::start(ServerConfig::default());
+//! let client = server.client();
+//! let out = client.job(a, b).verify(true).submit()?.wait()?;
+//! let handles = client.submit_many(jobs);           // shared-B coalescing
+//! let results = JobHandle::batch_wait_all(handles); // submission order
+//! server.shutdown();                                // drains, never drops
 //! ```
 //!
 //! ## Crate layout

@@ -13,7 +13,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use spmm_accel::coordinator::{JobOptions, KernelSpec, Server, ServerConfig, SpmmJob};
+use spmm_accel::coordinator::{
+    CoalesceConfig, JobHandle, KernelSpec, Server, ServerConfig,
+};
 use spmm_accel::datasets;
 use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
 use spmm_accel::eval::{run_experiment, ExpOptions};
@@ -142,18 +144,18 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 tile_workers: args.get_or("tile-workers", 4usize)?,
                 ..Default::default()
             });
-            let res = server
-                .submit(
-                    SpmmJob::new(0, a, b)
-                        .with_opts(JobOptions { verify: true, keep_result: false, kernel: None }),
-                )
-                .recv()
-                .map_err(|e| e.to_string())?;
-            let out = res.result?;
+            let client = server.client();
+            let out = client
+                .job(a, b)
+                .verify(true)
+                .keep_result(false)
+                .submit()?
+                .wait()?;
             println!(
                 "backend={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
                 out.backend, out.report.dispatches, out.report.real_pairs, out.wall, out.max_err
             );
+            drop(client);
             server.shutdown();
             Ok(())
         }
@@ -161,6 +163,10 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let workers = args.get_or("workers", 2usize)?;
             let jobs = args.get_or("jobs", 16usize)?;
             let (kernel, prefer_pjrt) = parse_kernel_spec(args)?;
+            let coalesce = CoalesceConfig {
+                enabled: !args.has("no-coalesce"),
+                ..Default::default()
+            };
             let server = Server::start(ServerConfig {
                 workers,
                 queue_depth: 8,
@@ -169,25 +175,20 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 geometry: Geometry::default(),
                 tile_workers: args.get_or("tile-workers", 1usize)?,
                 artifacts_dir: Manifest::default_dir(),
+                coalesce,
             });
+            let client = server.client();
             let a = Arc::new(datasets::uniform(256, 256, 0.03, 1));
             let t0 = std::time::Instant::now();
-            let rxs: Vec<_> = (0..jobs as u64)
-                .map(|i| {
-                    server.submit(
-                        SpmmJob::new(i, a.clone(), a.clone())
-                            .with_opts(JobOptions {
-                                verify: false,
-                                keep_result: false,
-                                kernel: None,
-                            }),
-                    )
-                })
-                .collect();
-            for rx in rxs {
-                rx.recv().map_err(|e| e.to_string())?.result?;
+            // all jobs share one B: the coalescer builds PreparedB once per
+            // worker and the LRU keeps it across micro-batches
+            let batch = (0..jobs as u64)
+                .map(|i| client.job(a.clone(), a.clone()).id(i).keep_result(false).build());
+            let handles = client.submit_many(batch);
+            for res in JobHandle::batch_wait_all(handles) {
+                res?;
             }
-            let snap = server.metrics.snapshot();
+            let snap = client.metrics();
             println!(
                 "{} jobs on {} workers ({kernel:?}) in {:?}: p50={}us p99={}us \
                  queue p50={}us dispatches={}",
@@ -199,6 +200,16 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 snap.queue_p50_us,
                 snap.dispatches
             );
+            println!(
+                "coalescing({}): {} PreparedB builds for {} jobs, {} cache hits, \
+                 {} jobs rode shared prepares",
+                if coalesce.enabled { "on" } else { "off" },
+                snap.prepare_builds,
+                snap.jobs_completed,
+                snap.prepare_cache_hits,
+                snap.coalesced_jobs
+            );
+            drop(client);
             server.shutdown();
             Ok(())
         }
@@ -279,7 +290,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
-                 \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto\n\
+                 \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\
                  \u{20}  spmm-accel kernels"
             );
             Ok(())

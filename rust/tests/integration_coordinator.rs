@@ -1,15 +1,20 @@
-//! Integration: the batching server under realistic mixed traffic,
-//! including PJRT-backed workers when artifacts are present, failure
-//! injection, per-job kernel overrides, and router/registry composition.
+//! Integration: the batching server under realistic mixed traffic through
+//! the `SpmmClient` API — typed errors, B-sharing micro-batch coalescing
+//! (bit-identical to uncoalesced execution), PJRT-backed workers when
+//! artifacts are present, failure injection, per-job kernel overrides,
+//! shutdown-drain under concurrent submitters, and router/registry
+//! composition.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use spmm_accel::coordinator::{
-    route, AccessStrategy, JobOptions, KernelSpec, RoutingPolicy, Server,
-    ServerConfig, SpmmJob,
+    route, AccessStrategy, CoalesceConfig, JobError, JobHandle, JobOptions, KernelSpec,
+    RoutingPolicy, Server, ServerConfig, SpmmJob,
 };
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::Algorithm;
+use spmm_accel::formats::csr::Csr;
 use spmm_accel::formats::traits::FormatKind;
 use spmm_accel::runtime::Manifest;
 use spmm_accel::spmm::plan::Geometry;
@@ -27,32 +32,150 @@ fn server(kernel: KernelSpec, prefer_pjrt: bool, workers: usize) -> Server {
         geometry: Geometry { block: 16, pairs: 32, slots: 16 },
         tile_workers: 2,
         artifacts_dir: Manifest::default_dir(),
+        coalesce: CoalesceConfig::default(),
     })
 }
 
 #[test]
 fn mixed_size_traffic_on_cpu_workers() {
     let s = server(KernelSpec::default(), false, 3);
-    let mut rxs = Vec::new();
+    let client = s.client();
+    let mut handles = Vec::new();
     for i in 0..12u64 {
         let n = 16 + (i as usize % 4) * 24;
         let a = Arc::new(uniform(n, n + 8, 0.15, i));
         let b = Arc::new(uniform(n + 8, n, 0.15, i + 100));
-        rxs.push(s.submit(SpmmJob::new(i, a, b).with_opts(JobOptions {
-            verify: true,
-            keep_result: false,
-            kernel: None,
-        })));
+        handles.push(
+            client
+                .job(a, b)
+                .verify(true)
+                .keep_result(false)
+                .submit()
+                .unwrap(),
+        );
     }
-    for rx in rxs {
-        let out = rx.recv().unwrap().result.unwrap();
-        assert!(out.max_err.unwrap() < 1e-3);
+    for res in JobHandle::batch_wait_all(handles) {
+        assert!(res.unwrap().max_err.unwrap() < 1e-3);
     }
-    let snap = s.metrics.snapshot();
+    let snap = client.metrics();
     assert_eq!(snap.jobs_completed, 12);
     assert_eq!(snap.jobs_failed, 0);
     assert!(snap.p50_us > 0);
+    drop(client);
     s.shutdown();
+}
+
+/// Acceptance: ≥64 jobs sharing one `B` through `SpmmClient::submit_many`
+/// must (a) build `PreparedB` fewer times than there are jobs and (b)
+/// produce bit-identical outputs to per-job uncoalesced execution.
+#[test]
+fn submit_many_coalesces_shared_b_and_stays_bit_identical() {
+    const N_JOBS: usize = 64;
+    let a_set: Vec<Arc<Csr>> = (0..N_JOBS as u64)
+        .map(|i| Arc::new(uniform(24, 48, 0.15, i)))
+        .collect();
+    let b = Arc::new(uniform(48, 32, 0.2, 999));
+    // the inner-InCRS kernel has a real prepare (counter-vector build),
+    // so sharing is observable and worth something
+    let spec = KernelSpec::Fixed(FormatKind::InCrs, Algorithm::Inner);
+
+    let run = |coalesce: bool, workers: usize| {
+        let s = Server::start(ServerConfig {
+            workers,
+            queue_depth: 32,
+            kernel: spec,
+            geometry: Geometry { block: 16, pairs: 32, slots: 16 },
+            coalesce: CoalesceConfig { enabled: coalesce, ..Default::default() },
+            ..Default::default()
+        });
+        let client = s.client();
+        let jobs: Vec<SpmmJob> = a_set
+            .iter()
+            .enumerate()
+            .map(|(i, a)| client.job(Arc::clone(a), Arc::clone(&b)).id(i as u64).build())
+            .collect();
+        let handles = client.submit_many(jobs);
+        let outputs: Vec<_> = JobHandle::batch_wait_all(handles)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let snap = client.metrics();
+        drop(client);
+        s.shutdown();
+        (outputs, snap)
+    };
+
+    // reference: per-job prepare, no sharing
+    let (reference, ref_snap) = run(false, 1);
+    assert_eq!(ref_snap.prepare_builds, N_JOBS as u64, "{ref_snap:?}");
+    assert_eq!(ref_snap.coalesced_jobs, 0);
+
+    // coalesced: shared B amortizes prepare across the batch + LRU cache
+    let (outputs, snap) = run(true, 2);
+    assert_eq!(snap.jobs_completed, N_JOBS as u64);
+    assert!(
+        snap.prepare_builds < N_JOBS as u64,
+        "coalescing must build fewer PreparedB than jobs: {snap:?}"
+    );
+    assert!(
+        snap.coalesced_jobs + snap.prepare_cache_hits > 0,
+        "sharing must actually occur: {snap:?}"
+    );
+
+    // results in submission order, bitwise equal to the uncoalesced run
+    assert_eq!(outputs.len(), reference.len());
+    for (i, (got, want)) in outputs.iter().zip(&reference).enumerate() {
+        let (got_c, want_c) = (got.c.as_ref().unwrap(), want.c.as_ref().unwrap());
+        assert_eq!(got_c.data, want_c.data, "job {i} diverges from uncoalesced run");
+    }
+}
+
+#[test]
+fn shutdown_drains_with_concurrent_submitters() {
+    let s = server(KernelSpec::default(), false, 2);
+    let client = s.client();
+    let a = Arc::new(uniform(32, 32, 0.2, 1));
+    let barrier = Arc::new(std::sync::Barrier::new(4));
+    let mut threads = Vec::new();
+    for t in 0..3u64 {
+        let client = client.clone();
+        let a = Arc::clone(&a);
+        let barrier = Arc::clone(&barrier);
+        threads.push(std::thread::spawn(move || {
+            barrier.wait();
+            let mut outcomes = Vec::new();
+            for i in 0..20u64 {
+                let job = client.job(Arc::clone(&a), Arc::clone(&a)).id(t * 100 + i).build();
+                match client.submit(job) {
+                    Ok(h) => outcomes.push(h.wait()),
+                    Err(e) => {
+                        // the server closed under us — typed, not a panic
+                        assert_eq!(e, JobError::Shutdown);
+                        break;
+                    }
+                }
+            }
+            outcomes
+        }));
+    }
+    barrier.wait();
+    // let some traffic land, then close while submitters are still racing
+    std::thread::sleep(Duration::from_millis(10));
+    drop(client);
+    s.shutdown();
+    let mut completed = 0u64;
+    for t in threads {
+        for res in t.join().unwrap() {
+            match res {
+                Ok(_) => completed += 1,
+                // accepted but raced the close: drained with Shutdown,
+                // never stranded (this join alone proves no hang)
+                Err(JobError::Shutdown) => {}
+                Err(e) => panic!("unexpected job error: {e}"),
+            }
+        }
+    }
+    assert!(completed > 0, "some jobs must have completed before the close");
 }
 
 #[test]
@@ -62,52 +185,57 @@ fn pjrt_workers_serve_verified_jobs() {
         return;
     }
     let s = server(KernelSpec::default(), true, 2);
+    let client = s.client();
     let a = Arc::new(uniform(80, 100, 0.1, 1));
     let b = Arc::new(uniform(100, 70, 0.1, 2));
-    let mut rxs = Vec::new();
-    for i in 0..6u64 {
-        rxs.push(s.submit(SpmmJob::new(i, a.clone(), b.clone()).with_opts(
-            JobOptions {
-                verify: true,
-                keep_result: false,
-                kernel: None,
-            },
-        )));
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        handles.push(
+            client
+                .job(a.clone(), b.clone())
+                .verify(true)
+                .keep_result(false)
+                .submit()
+                .unwrap(),
+        );
     }
-    for rx in rxs {
-        let out = rx.recv().unwrap().result.unwrap();
+    for res in JobHandle::batch_wait_all(handles) {
+        let out = res.unwrap();
         assert_eq!(out.backend, "pjrt");
         assert!(out.max_err.unwrap() < 1e-3);
     }
+    drop(client);
     s.shutdown();
 }
 
 #[test]
 fn failure_injection_bad_dimensions_dont_poison_workers() {
     let s = server(KernelSpec::default(), false, 2);
+    let client = s.client();
     let good_a = Arc::new(uniform(24, 24, 0.2, 3));
     let bad_b = Arc::new(uniform(17, 24, 0.2, 4)); // inner mismatch
     // interleave good and bad jobs
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..10u64 {
-        let job = if i % 2 == 0 {
-            SpmmJob::new(i, good_a.clone(), good_a.clone())
-        } else {
-            SpmmJob::new(i, good_a.clone(), bad_b.clone())
-        };
-        rxs.push((i, s.submit(job)));
+        let b = if i % 2 == 0 { good_a.clone() } else { bad_b.clone() };
+        handles.push((i, client.job(good_a.clone(), b).id(i).submit().unwrap()));
     }
-    for (i, rx) in rxs {
-        let res = rx.recv().unwrap();
+    for (i, h) in handles {
+        let res = h.wait();
         if i % 2 == 0 {
-            assert!(res.result.is_ok(), "job {i}");
+            assert!(res.is_ok(), "job {i}");
         } else {
-            assert!(res.result.is_err(), "job {i}");
+            assert_eq!(
+                res.unwrap_err(),
+                JobError::ShapeMismatch { a: (24, 24), b: (17, 24) },
+                "job {i}"
+            );
         }
     }
-    let snap = s.metrics.snapshot();
+    let snap = client.metrics();
     assert_eq!(snap.jobs_completed, 5);
     assert_eq!(snap.jobs_failed, 5);
+    drop(client);
     s.shutdown();
 }
 
@@ -132,6 +260,7 @@ fn mixed_kernel_traffic_through_one_server() {
     // one server, four different kernels chosen per job — the registry
     // dispatch the old EngineKind enum couldn't express
     let s = server(KernelSpec::default(), false, 2);
+    let client = s.client();
     let a = Arc::new(uniform(40, 56, 0.15, 5));
     let b = Arc::new(uniform(56, 44, 0.15, 6));
     let kernels = [
@@ -140,48 +269,44 @@ fn mixed_kernel_traffic_through_one_server() {
         (FormatKind::InCrs, Algorithm::Inner, "inner-incrs"),
         (FormatKind::Csr, Algorithm::Tiled, "tiled"),
     ];
-    let rxs: Vec<_> = kernels
+    let handles: Vec<_> = kernels
         .iter()
-        .enumerate()
-        .map(|(i, &(f, alg, _))| {
-            s.submit(
-                SpmmJob::new(i as u64, a.clone(), b.clone())
-                    .with_opts(JobOptions {
-                        verify: true,
-                        keep_result: false,
-                        kernel: None,
-                    })
-                    .with_kernel(f, alg),
-            )
+        .map(|&(f, alg, _)| {
+            client
+                .job(a.clone(), b.clone())
+                .verify(true)
+                .keep_result(false)
+                .kernel(f, alg)
+                .submit()
+                .unwrap()
         })
         .collect();
-    for (rx, &(_, _, name)) in rxs.into_iter().zip(&kernels) {
-        let out = rx.recv().unwrap().result.unwrap();
+    for (res, &(_, _, name)) in JobHandle::batch_wait_all(handles).into_iter().zip(&kernels) {
+        let out = res.unwrap();
         assert_eq!(out.backend, name);
         assert!(out.max_err.unwrap() < 1e-3, "{name}");
     }
+    drop(client);
     s.shutdown();
 }
 
 #[test]
 fn auto_spec_serves_mixed_shapes() {
     let s = server(KernelSpec::Auto, false, 2);
-    let mut rxs = Vec::new();
+    let client = s.client();
+    let mut handles = Vec::new();
     for i in 0..6u64 {
         let n = 24 + (i as usize % 3) * 16;
         let a = Arc::new(uniform(n, n, 0.1 + 0.05 * (i % 2) as f64, i + 40));
         let b = Arc::new(uniform(n, n, 0.1, i + 60));
-        rxs.push(s.submit(SpmmJob::new(i, a, b).with_opts(JobOptions {
-            verify: true,
-            keep_result: false,
-            kernel: None,
-        })));
+        handles.push(client.job(a, b).verify(true).keep_result(false).submit().unwrap());
     }
-    for rx in rxs {
-        let out = rx.recv().unwrap().result.unwrap();
+    for res in JobHandle::batch_wait_all(handles) {
+        let out = res.unwrap();
         assert!(out.max_err.unwrap() < 1e-3);
         assert_ne!(out.backend, "dense");
     }
+    drop(client);
     s.shutdown();
 }
 
@@ -191,24 +316,37 @@ fn throughput_scales_with_workers() {
     // instead: N workers complete the same batch, each job exactly once.
     for workers in [1usize, 4] {
         let s = server(KernelSpec::default(), false, workers);
+        let client = s.client();
         let a = Arc::new(uniform(48, 48, 0.2, 9));
-        let rxs: Vec<_> = (0..16u64)
-            .map(|i| {
-                s.submit(SpmmJob::new(i, a.clone(), a.clone()).with_opts(
-                    JobOptions {
-                        verify: false,
-                        keep_result: false,
-                        kernel: None,
-                    },
-                ))
+        let jobs = (0..16u64).map(|i| {
+            client.job(a.clone(), a.clone()).id(i).keep_result(false).build()
+        });
+        let stream = client.stream(jobs);
+        let mut ids: Vec<u64> = stream
+            .map(|(id, res)| {
+                res.unwrap();
+                id
             })
-            .collect();
-        let mut ids: Vec<u64> = rxs
-            .into_iter()
-            .map(|rx| rx.recv().unwrap().id)
             .collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..16).collect::<Vec<_>>());
+        drop(client);
         s.shutdown();
     }
+}
+
+#[test]
+fn legacy_submit_shim_still_serves() {
+    // the pre-client surface stays for one release: raw Receiver<JobResult>
+    let s = server(KernelSpec::default(), false, 1);
+    let a = Arc::new(uniform(20, 20, 0.3, 21));
+    let rx = s.submit(SpmmJob::new(7, a.clone(), a).with_opts(JobOptions {
+        verify: true,
+        keep_result: false,
+        kernel: None,
+    }));
+    let res = rx.recv().unwrap();
+    assert_eq!(res.id, 7);
+    assert!(res.result.unwrap().max_err.unwrap() < 1e-3);
+    s.shutdown();
 }

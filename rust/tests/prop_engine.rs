@@ -107,8 +107,9 @@ fn parallel_tiled_kernel_is_bit_identical_to_serial_on_random_inputs() {
     let serial = TiledKernel::new(TiledConfig { block: 16, workers: 1 });
     let parallel = TiledKernel::new(TiledConfig { block: 16, workers: 4 });
     check(0x71AD, 12, gen_pair, |(a, b)| {
-        let c1 = serial.run(a, b).map_err(|e| e.to_string())?;
-        let c4 = parallel.run(a, b).map_err(|e| e.to_string())?;
+        // EngineError -> String via From, no manual round-trip
+        let c1 = serial.run(a, b)?;
+        let c4 = parallel.run(a, b)?;
         if c1.c.data != c4.c.data {
             return Err("parallel tiled result differs bitwise from serial".into());
         }
