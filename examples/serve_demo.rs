@@ -51,6 +51,7 @@ fn main() {
         tile_workers: args.get_or("tile-workers", 1usize).unwrap(),
         artifacts_dir: Manifest::default_dir(),
         coalesce,
+        ..Default::default()
     });
 
     // a small pool of shared B operands: serving traffic reuses operands,

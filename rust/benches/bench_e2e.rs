@@ -1,14 +1,15 @@
 //! End-to-end numeric-path benchmarks through the unified engine: plan
 //! construction, registered-kernel execution, serial-vs-parallel tiled
-//! execution on the synthetic 4096² dataset, and served throughput through
-//! the coordinator. Writes a machine-readable summary to
-//! `BENCH_engine.json` (override the path with `SPMM_BENCH_OUT`).
+//! execution on the synthetic 4096² dataset, a 1/2/4/8-shard row-band
+//! sweep, and served throughput through the coordinator. Writes
+//! machine-readable summaries to `BENCH_engine.json` (override with
+//! `SPMM_BENCH_OUT`) and `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`).
 
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{JobHandle, Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
-use spmm_accel::engine::{tiled, Registry, SpmmKernel, TiledConfig};
+use spmm_accel::engine::{shard, tiled, Registry, ShardConfig, SpmmKernel, TiledConfig, TiledKernel};
 use spmm_accel::runtime::{Manifest, NumericEngine};
 use spmm_accel::spmm::plan::{plan, Geometry};
 use spmm_accel::util::bench::{bench, black_box, report};
@@ -93,6 +94,74 @@ fn main() {
          bit-identical: {bit_identical}",
         stats.real_pairs, r_serial.median, par_stats.threads, r_par.median
     );
+
+    // sharded row-band sweep on the same 4096² dataset: the tiled kernel
+    // (1 internal worker, so shard workers are the only parallelism axis)
+    // at 1/2/4/8 shards, bit-checked against the 1-shard run
+    let shard_kernel = TiledKernel::new(TiledConfig { block: 32, workers: 1 });
+    let shard_prepared = shard_kernel.prepare(&big_b).unwrap();
+    let mut shard_sweep: Vec<Json> = Vec::new();
+    let mut one_shard_bits: Option<Vec<u32>> = None;
+    let mut one_shard_ms = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = ShardConfig { shards, block: 32 };
+        let r = bench(1, 3, || {
+            black_box(
+                shard::execute(&shard_kernel, &big_a, Some(&big_b), &shard_prepared, cfg)
+                    .unwrap()
+                    .stats
+                    .real_pairs,
+            );
+        });
+        let out =
+            shard::execute(&shard_kernel, &big_a, Some(&big_b), &shard_prepared, cfg).unwrap();
+        let bits = out.c.bit_pattern();
+        let bit_identical = match &one_shard_bits {
+            None => {
+                one_shard_bits = Some(bits);
+                one_shard_ms = r.median.as_secs_f64() * 1e3;
+                true
+            }
+            Some(base) => base == &bits,
+        };
+        let ms = r.median.as_secs_f64() * 1e3;
+        report(
+            &format!("shard/{}x(4096x4096 @ 0.1%)", shards),
+            r,
+            big_macs,
+            "MACs",
+        );
+        println!(
+            "shard sweep {shards}: {} bands, {:.1}ms, speedup {:.2}x, bit-identical: {bit_identical}",
+            out.shards.len(),
+            ms,
+            one_shard_ms / ms
+        );
+        shard_sweep.push(obj([
+            ("shards", Json::from(shards)),
+            ("bands", Json::from(out.shards.len())),
+            ("median_ms", Json::from(ms)),
+            ("speedup_vs_1", Json::from(one_shard_ms / ms)),
+            ("tile_pairs", Json::from(out.stats.real_pairs)),
+            ("bit_identical_to_1_shard", Json::Bool(bit_identical)),
+        ]));
+    }
+    let shard_out_path =
+        std::env::var("SPMM_BENCH_SHARD_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
+    let shard_summary = obj([
+        ("bench", Json::from("bench_e2e/shard")),
+        (
+            "dataset",
+            Json::from("uniform 4096x4096, density 0.001, seeds 11/12"),
+        ),
+        ("kernel", Json::from("tiled (1 internal worker)")),
+        ("block", Json::from(32usize)),
+        ("sweep", Json::Arr(shard_sweep)),
+    ]);
+    match std::fs::write(&shard_out_path, shard_summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {shard_out_path}"),
+        Err(e) => println!("could not write {shard_out_path}: {e}"),
+    }
 
     // served throughput: 16 jobs through 4 CPU workers via the client API
     let r_serve = bench(0, 3, || {

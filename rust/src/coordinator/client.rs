@@ -165,6 +165,14 @@ impl JobBuilder<'_> {
         self
     }
 
+    /// Execute across `n` row-band shards (`engine::shard`): channel-
+    /// connected shard workers, reduction-free merge, bit-identical to the
+    /// unsharded run. 1 (the default) keeps the single-kernel path.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.job.opts.shards = n.max(1);
+        self
+    }
+
     /// Replace all options at once (escape hatch for stored configs).
     pub fn opts(mut self, opts: JobOptions) -> Self {
         self.job.opts = opts;

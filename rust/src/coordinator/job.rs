@@ -29,6 +29,10 @@ pub struct JobOptions {
     /// Per-job kernel override: resolve exactly this registry key instead
     /// of the server's configured [`super::router::KernelSpec`].
     pub kernel: Option<(FormatKind, Algorithm)>,
+    /// Row-band shard count for this job (`engine::shard`). 1 = unsharded;
+    /// > 1 splits execution across that many channel-connected shard
+    /// workers, bit-identical to the unsharded run.
+    pub shards: usize,
 }
 
 impl Default for JobOptions {
@@ -37,6 +41,7 @@ impl Default for JobOptions {
             verify: false,
             keep_result: true,
             kernel: None,
+            shards: 1,
         }
     }
 }
@@ -58,6 +63,9 @@ pub struct JobOutput {
     pub wall: Duration,
     /// max |result - oracle| when `verify` was requested.
     pub max_err: Option<f32>,
+    /// Row-band shards the job actually executed on (1 = unsharded; the
+    /// planner may use fewer bands than requested on small matrices).
+    pub shards: usize,
 }
 
 impl SpmmJob {
@@ -80,6 +88,12 @@ impl SpmmJob {
         self.opts.kernel = Some((format, algorithm));
         self
     }
+
+    /// Builder-style row-band shard count (`engine::shard`).
+    pub fn with_shards(mut self, shards: usize) -> SpmmJob {
+        self.opts.shards = shards.max(1);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -93,12 +107,22 @@ mod tests {
         let j = SpmmJob::new(7, a.clone(), a).with_opts(JobOptions {
             verify: true,
             keep_result: false,
-            kernel: None,
+            ..Default::default()
         });
         assert_eq!(j.id, 7);
         assert!(j.opts.verify);
         assert!(!j.opts.keep_result);
         assert!(j.opts.kernel.is_none());
+        assert_eq!(j.opts.shards, 1);
+    }
+
+    #[test]
+    fn shards_builder_clamps_to_one() {
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let j = SpmmJob::new(1, a.clone(), a.clone()).with_shards(4);
+        assert_eq!(j.opts.shards, 4);
+        let j0 = SpmmJob::new(2, a.clone(), a).with_shards(0);
+        assert_eq!(j0.opts.shards, 1);
     }
 
     #[test]

@@ -72,10 +72,20 @@ pub struct Metrics {
     /// Jobs beyond the first in each sharing group — multiplies that rode
     /// on a batch-mate's prepare (the paper's amortization, measured).
     pub coalesced_jobs: AtomicU64,
+    /// Jobs that executed through the row-band shard path (`shards > 1`).
+    pub sharded_jobs: AtomicU64,
+    /// Row-band shards executed across all sharded jobs.
+    pub shards_executed: AtomicU64,
+    /// Sharded executions that failed (worker panic or band exec error).
+    pub shard_failures: AtomicU64,
     /// Per-job service time (dequeue → response ready).
     pub latency: Histogram,
     /// Per-job queue wait (submit → dequeue) — the backpressure signal.
     pub queue_wait: Histogram,
+    /// Per-shard execute wall time on the shard worker.
+    pub shard_wall: Histogram,
+    /// Per-shard queue wait (band dispatch → shard worker dequeue).
+    pub shard_queue_wait: Histogram,
 }
 
 impl Metrics {
@@ -89,6 +99,14 @@ impl Metrics {
 
     pub fn observe_queue_wait(&self, d: Duration) {
         self.queue_wait.observe(d);
+    }
+
+    pub fn observe_shard_wall(&self, d: Duration) {
+        self.shard_wall.observe(d);
+    }
+
+    pub fn observe_shard_queue_wait(&self, d: Duration) {
+        self.shard_queue_wait.observe(d);
     }
 
     /// Approximate service-latency quantile (upper bucket bound, µs).
@@ -109,10 +127,17 @@ impl Metrics {
             prepare_cache_hits: self.prepare_cache_hits.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             coalesced_jobs: self.coalesced_jobs.load(Ordering::Relaxed),
+            sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
+            shards_executed: self.shards_executed.load(Ordering::Relaxed),
+            shard_failures: self.shard_failures.load(Ordering::Relaxed),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             queue_p50_us: self.queue_wait.quantile_us(0.5),
             queue_p99_us: self.queue_wait.quantile_us(0.99),
+            shard_wall_p50_us: self.shard_wall.quantile_us(0.5),
+            shard_wall_p99_us: self.shard_wall.quantile_us(0.99),
+            shard_queue_p50_us: self.shard_queue_wait.quantile_us(0.5),
+            shard_queue_p99_us: self.shard_queue_wait.quantile_us(0.99),
         }
     }
 }
@@ -130,10 +155,17 @@ pub struct MetricsSnapshot {
     pub prepare_cache_hits: u64,
     pub coalesced_batches: u64,
     pub coalesced_jobs: u64,
+    pub sharded_jobs: u64,
+    pub shards_executed: u64,
+    pub shard_failures: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub queue_p50_us: u64,
     pub queue_p99_us: u64,
+    pub shard_wall_p50_us: u64,
+    pub shard_wall_p99_us: u64,
+    pub shard_queue_p50_us: u64,
+    pub shard_queue_p99_us: u64,
 }
 
 #[cfg(test)]
@@ -172,6 +204,22 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.jobs_completed, 3);
         assert_eq!(s.real_pairs, 100);
+    }
+
+    #[test]
+    fn shard_metrics_are_tracked() {
+        let m = Metrics::new();
+        m.sharded_jobs.fetch_add(1, Ordering::Relaxed);
+        m.shards_executed.fetch_add(4, Ordering::Relaxed);
+        m.shard_failures.fetch_add(1, Ordering::Relaxed);
+        m.observe_shard_wall(Duration::from_micros(300));
+        m.observe_shard_queue_wait(Duration::from_micros(3));
+        let s = m.snapshot();
+        assert_eq!(s.sharded_jobs, 1);
+        assert_eq!(s.shards_executed, 4);
+        assert_eq!(s.shard_failures, 1);
+        assert!(s.shard_wall_p50_us >= 256, "{s:?}");
+        assert!(s.shard_queue_p50_us <= 4, "{s:?}");
     }
 
     #[test]

@@ -15,10 +15,13 @@
 //! * [`server`] — bounded-queue worker pool (backpressure, per-worker
 //!   kernel registries, drain-on-shutdown) with B-sharing micro-batch
 //!   coalescing: jobs with bit-identical `B` share one
-//!   `SpmmKernel::prepare`, LRU-cached across batches.
+//!   `SpmmKernel::prepare`, LRU-cached across batches. Jobs asking for
+//!   `shards > 1` execute through `engine::shard`'s row-band workers
+//!   (bit-identical merge, `ExecFailed` on shard loss).
 //! * [`metrics`] — lock-free counters + latency/queue-wait histograms +
 //!   coalescing stats (`prepare_builds`, `prepare_cache_hits`,
-//!   `coalesced_jobs`).
+//!   `coalesced_jobs`) + per-shard wall/queue histograms
+//!   (`shard_wall_p50_us`, `shard_queue_p50_us`, `shards_executed`).
 
 pub mod client;
 pub mod error;
@@ -34,4 +37,4 @@ pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
-pub use server::{CoalesceConfig, Server, ServerConfig};
+pub use server::{CoalesceConfig, RegistryHook, Server, ServerConfig};

@@ -36,8 +36,8 @@ use super::job::{JobOutput, JobResult, SpmmJob};
 use super::metrics::Metrics;
 use super::router::KernelSpec;
 use crate::engine::{
-    AccelKernel, EngineError, FingerprintMemo, PreparedCache, PreparedKey, Registry,
-    SpmmKernel,
+    shard, AccelKernel, EngineError, FingerprintMemo, PreparedCache, PreparedKey,
+    Registry, SpmmKernel,
 };
 use crate::spmm::plan::Geometry;
 
@@ -64,7 +64,11 @@ impl Default for CoalesceConfig {
     }
 }
 
-#[derive(Clone, Debug)]
+/// Extends each worker's kernel registry after the defaults (and PJRT)
+/// register — custom backends, sharded wrappers, fault injection in tests.
+pub type RegistryHook = Arc<dyn Fn(&mut Registry) + Send + Sync>;
+
+#[derive(Clone)]
 pub struct ServerConfig {
     pub workers: usize,
     /// Max queued jobs before blocking submits stall (backpressure).
@@ -76,12 +80,18 @@ pub struct ServerConfig {
     /// CPU twin (and count `pjrt_fallbacks`) when unavailable.
     pub prefer_pjrt: bool,
     /// Geometry for the CPU block kernel; PJRT reads its own manifest.
+    /// Also the *requested* shard-band alignment for sharded jobs — the
+    /// shard executor rounds it up to each kernel's own `band_alignment`
+    /// (e.g. a differing PJRT manifest block), so blocked kernels stay
+    /// bit-identical under sharding regardless.
     pub geometry: Geometry,
     /// Threads inside the tiled kernel (per job, per worker).
     pub tile_workers: usize,
     pub artifacts_dir: std::path::PathBuf,
     /// B-sharing micro-batch coalescing (see [`CoalesceConfig`]).
     pub coalesce: CoalesceConfig,
+    /// Optional per-worker registry extension hook (see [`RegistryHook`]).
+    pub registry_hook: Option<RegistryHook>,
 }
 
 impl Default for ServerConfig {
@@ -95,7 +105,24 @@ impl Default for ServerConfig {
             tile_workers: 1,
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             coalesce: CoalesceConfig::default(),
+            registry_hook: None,
         }
+    }
+}
+
+impl std::fmt::Debug for ServerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerConfig")
+            .field("workers", &self.workers)
+            .field("queue_depth", &self.queue_depth)
+            .field("kernel", &self.kernel)
+            .field("prefer_pjrt", &self.prefer_pjrt)
+            .field("geometry", &self.geometry)
+            .field("tile_workers", &self.tile_workers)
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("coalesce", &self.coalesce)
+            .field("registry_hook", &self.registry_hook.as_ref().map(|_| "…"))
+            .finish()
     }
 }
 
@@ -270,6 +297,9 @@ fn worker_registry(cfg: &ServerConfig, metrics: &Metrics) -> Registry {
                 metrics.pjrt_fallbacks.fetch_add(1, Ordering::Relaxed);
             }
         }
+    }
+    if let Some(hook) = &cfg.registry_hook {
+        hook(&mut reg);
     }
     reg
 }
@@ -473,7 +503,7 @@ fn run_batch(
 
         for env in envs {
             let start = Instant::now();
-            let result = exec_one(kernel.as_ref(), &env.job, &prepared);
+            let result = exec_one(kernel.as_ref(), &env.job, &prepared, cfg, metrics);
             metrics
                 .busy_ns
                 .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -500,26 +530,61 @@ fn run_batch(
     }
 }
 
-/// Run one job on an already-prepared `B`.
+/// Run one job on an already-prepared `B` — directly, or through the
+/// row-band shard executor when the job asked for `shards > 1` (band
+/// alignment comes from the server geometry, so blocked kernels stay
+/// bit-identical; see `engine::shard`). A lost shard worker (panic)
+/// surfaces as [`JobError::ExecFailed`] and the server worker keeps
+/// serving.
 fn exec_one(
     kernel: &dyn SpmmKernel,
     job: &SpmmJob,
     prepared: &crate::engine::PreparedB,
+    cfg: &ServerConfig,
+    metrics: &Metrics,
 ) -> Result<JobOutput, JobError> {
     let start = Instant::now();
-    let out = kernel.execute(&job.a, prepared)?;
+    let shards = job.opts.shards.max(1);
+    // a kernel that is already a shard wrapper (registry_hook /
+    // Registry::shard_all) shards itself — re-sharding here would nest
+    // executors (bands × bands workers, double band slicing)
+    let (c, stats, bands) = if shards > 1 && kernel.name() != "sharded" {
+        let shard_cfg = shard::ShardConfig {
+            shards,
+            block: cfg.geometry.block,
+        };
+        let out = shard::execute(kernel, &job.a, Some(&job.b), prepared, shard_cfg)
+            .map_err(|e| {
+                metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
+                JobError::from(e)
+            })?;
+        metrics.sharded_jobs.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .shards_executed
+            .fetch_add(out.shards.len() as u64, Ordering::Relaxed);
+        for stat in &out.shards {
+            metrics.observe_shard_wall(stat.wall);
+            metrics.observe_shard_queue_wait(stat.queue);
+        }
+        let bands = out.shards.len().max(1);
+        (out.c, out.stats, bands)
+    } else {
+        let out = kernel.execute(&job.a, prepared)?;
+        (out.c, out.stats, 1)
+    };
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(&job.a, &job.b);
-        Some(out.c.max_abs_diff(&oracle))
+        Some(c.max_abs_diff(&oracle))
     } else {
         None
     };
     Ok(JobOutput {
-        c: job.opts.keep_result.then_some(out.c),
-        report: out.stats,
+        c: job.opts.keep_result.then_some(c),
+        report: stats,
         backend: kernel.name(),
         wall: start.elapsed(),
         max_err,
+        shards: bands,
     })
 }
 
@@ -548,13 +613,14 @@ mod tests {
         let rx = s.submit(SpmmJob::new(1, a, b).with_opts(JobOptions {
             verify: true,
             keep_result: true,
-            kernel: None,
+            ..Default::default()
         }));
         let res = rx.recv().unwrap();
         let out = res.result.unwrap();
         assert!(out.max_err.unwrap() < 1e-3);
         assert!(out.c.is_some());
         assert_eq!(out.backend, "cpu");
+        assert_eq!(out.shards, 1);
         let snap = s.metrics.snapshot();
         assert_eq!(snap.jobs_completed, 1);
         assert_eq!(snap.prepare_builds, 1);
@@ -702,6 +768,63 @@ mod tests {
         let out = rx.recv().unwrap().result.unwrap();
         assert!(out.max_err.unwrap() < 1e-3);
         assert_ne!(out.backend, "dense"); // auto never picks the oracle
+        s.shutdown();
+    }
+
+    #[test]
+    fn sharded_jobs_match_unsharded_bitwise_and_are_metered() {
+        let s = cpu_server(1, 8);
+        let a = Arc::new(uniform(64, 48, 0.2, 20));
+        let b = Arc::new(uniform(48, 40, 0.2, 21));
+        let run = |shards: usize| {
+            let rx = s.submit(
+                SpmmJob::new(shards as u64, a.clone(), b.clone())
+                    .with_kernel(FormatKind::Csr, Algorithm::Tiled)
+                    .with_shards(shards),
+            );
+            rx.recv().unwrap().result.unwrap()
+        };
+        let base = run(1);
+        assert_eq!(base.shards, 1);
+        let sharded = run(4);
+        assert!(sharded.shards > 1, "planner produced {} bands", sharded.shards);
+        assert_eq!(
+            base.c.as_ref().unwrap().bit_pattern(),
+            sharded.c.as_ref().unwrap().bit_pattern(),
+            "sharded result diverges bitwise"
+        );
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.sharded_jobs, 1);
+        assert_eq!(snap.shards_executed, sharded.shards as u64);
+        assert!(snap.shard_wall_p50_us > 0, "{snap:?}");
+        assert!(snap.shard_queue_p50_us > 0, "{snap:?}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn registry_hook_extends_worker_registries() {
+        let hook: RegistryHook = Arc::new(|reg: &mut Registry| {
+            reg.register(Arc::new(crate::engine::ShardedKernel::wrap(
+                reg.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap(),
+                crate::engine::ShardConfig { shards: 2, block: 8 },
+            )));
+        });
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            registry_hook: Some(hook),
+            ..Default::default()
+        });
+        let a = Arc::new(uniform(24, 24, 0.3, 22));
+        let rx = s.submit(
+            SpmmJob::new(1, a.clone(), a)
+                .with_opts(JobOptions { verify: true, ..Default::default() })
+                .with_kernel(FormatKind::Csr, Algorithm::Gustavson),
+        );
+        let out = rx.recv().unwrap().result.unwrap();
+        assert_eq!(out.backend, "sharded");
+        assert!(out.max_err.unwrap() < 1e-3);
         s.shutdown();
     }
 

@@ -74,6 +74,12 @@ impl SpmmKernel for AccelKernel {
             prepare_words: (a.nnz() + b.nnz()) as f64,
         }
     }
+    fn band_alignment(&self) -> usize {
+        // the engine's own geometry — the PJRT manifest block can differ
+        // from the server's configured geometry, and shard bands must
+        // align to the block the plan actually uses
+        self.engine.geometry().block
+    }
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         Ok(PreparedB::Csr(std::sync::Arc::new(b.clone())))
     }

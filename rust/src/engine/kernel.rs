@@ -124,6 +124,17 @@ impl PreparedB {
             PreparedB::Dense(_) => FormatKind::Dense,
         }
     }
+
+    /// Shape of the prepared operand (rows, cols) regardless of
+    /// representation — shape checks without unwrapping the variant.
+    pub fn shape(&self) -> (usize, usize) {
+        use crate::formats::traits::SparseMatrix;
+        match self {
+            PreparedB::Csr(m) => m.shape(),
+            PreparedB::InCrs(m) => m.shape(),
+            PreparedB::Dense(m) => m.shape(),
+        }
+    }
 }
 
 /// The unified execution contract. Object-safe; kernels are registered as
@@ -154,6 +165,16 @@ pub trait SpmmKernel: Send + Sync {
             self.prepare(b)
         }
     }
+    /// Row-band alignment required for sharded execution to stay
+    /// bit-identical (`engine::shard`): blocked kernels return their tile
+    /// block (band cuts inside a tile would re-blockize rows differently
+    /// and reassociate the f32 reduction); scalar kernels accept any
+    /// boundary. The shard executor rounds its band alignment up to a
+    /// multiple of this.
+    fn band_alignment(&self) -> usize {
+        1
+    }
+
     /// Run `C = A × B` on a prepared operand.
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError>;
 

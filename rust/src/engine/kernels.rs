@@ -252,6 +252,9 @@ impl SpmmKernel for TiledKernel {
             prepare_words: (a.nnz() + b.nnz()) as f64,
         }
     }
+    fn band_alignment(&self) -> usize {
+        self.cfg.block
+    }
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         // blockization of B happens inside execute (it is keyed to A's
         // geometry too); the prepared operand stays canonical

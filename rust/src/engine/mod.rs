@@ -30,6 +30,10 @@
 //! * [`tiled`] — a multi-threaded tile-pair executor (std threads over
 //!   `blocks::BlockGrid` intersections, per-worker scratch, deterministic
 //!   K-ordered reduction → bit-identical results at any worker count);
+//! * [`shard`] — contiguous row-band sharding of one job across
+//!   channel-connected shard workers with a reduction-free merge; wraps
+//!   any kernel ([`shard::ShardedKernel`]) and stays bit-identical to the
+//!   unsharded run at every shard count (see its invariants);
 //! * [`accel::AccelKernel`] — `runtime::NumericEngine` (PJRT or its CPU
 //!   twin) adapted onto the same contract.
 //!
@@ -62,6 +66,7 @@ pub mod kernel;
 pub mod kernels;
 pub mod prepared;
 pub mod registry;
+pub mod shard;
 pub mod tiled;
 
 pub use accel::AccelKernel;
@@ -72,4 +77,5 @@ pub use kernel::{
 pub use kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
 pub use prepared::{fingerprint_csr, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry};
+pub use shard::{ShardBand, ShardConfig, ShardPlan, ShardPlanner, ShardedKernel};
 pub use tiled::TiledConfig;

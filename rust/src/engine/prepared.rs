@@ -291,6 +291,81 @@ mod tests {
     }
 
     #[test]
+    fn lru_evicts_least_recently_used_not_insertion_order() {
+        let mats: Vec<Arc<Csr>> =
+            (0..3).map(|s| Arc::new(uniform(8, 8, 0.5, s + 10))).collect();
+        let (m0, m1, m2) = (&mats[0], &mats[1], &mats[2]);
+        let (k0, k1, k2) = (
+            key(fingerprint_csr(m0)),
+            key(fingerprint_csr(m1)),
+            key(fingerprint_csr(m2)),
+        );
+        let mut cache = PreparedCache::new(2);
+        cache.get_or_build(k0, m0, passthrough).unwrap(); // tick 1
+        cache.get_or_build(k1, m1, passthrough).unwrap(); // tick 2
+        // touch the OLDER entry: m0 becomes most recently used
+        cache.get_or_build(k0, m0, passthrough).unwrap(); // tick 3, hit
+        assert_eq!(cache.hits(), 1);
+        // capacity forces an eviction: m1 (LRU) must go, not m0 (oldest
+        // by insertion)
+        cache.get_or_build(k2, m2, passthrough).unwrap(); // tick 4
+        assert_eq!(cache.len(), 2);
+        let hits_before = cache.hits();
+        cache.get_or_build(k0, m0, passthrough).unwrap();
+        assert_eq!(cache.hits(), hits_before + 1, "recently-used entry was evicted");
+        let builds_before = cache.builds();
+        cache.get_or_build(k1, m1, passthrough).unwrap();
+        assert_eq!(cache.builds(), builds_before + 1, "LRU entry survived eviction");
+    }
+
+    #[test]
+    fn collision_fallback_prefers_the_matching_source() {
+        // two entries under one forced key: lookups must resolve to the
+        // entry whose source matches, in either order
+        let b1 = Arc::new(uniform(10, 10, 0.4, 21));
+        let b2 = Arc::new(uniform(10, 10, 0.4, 22));
+        let forced = key(0xC0FF_EE00);
+        let mut cache = PreparedCache::new(4);
+        cache.get_or_build(forced, &b1, passthrough).unwrap();
+        cache.get_or_build(forced, &b2, passthrough).unwrap();
+        for (src, want) in [(&b2, &b2), (&b1, &b1), (&b2, &b2)] {
+            match cache.get_or_build(forced, src, passthrough).unwrap() {
+                PreparedB::Csr(got) => assert!(Arc::ptr_eq(&got, want)),
+                other => panic!("unexpected prepared operand {other:?}"),
+            }
+        }
+        assert_eq!(cache.builds(), 2);
+        assert_eq!(cache.hits(), 3);
+        // a content clone under a third Arc still hits via bitwise compare
+        let b1_clone = Arc::new(b1.as_ref().clone());
+        match cache.get_or_build(forced, &b1_clone, passthrough).unwrap() {
+            PreparedB::Csr(got) => assert!(Arc::ptr_eq(&got, &b1)),
+            other => panic!("unexpected prepared operand {other:?}"),
+        }
+        assert_eq!(cache.builds(), 2, "content-equal operand rebuilt");
+    }
+
+    #[test]
+    fn fingerprint_memo_reuses_across_arc_clones() {
+        let src = Arc::new(uniform(16, 16, 0.3, 30));
+        let fp = fingerprint_csr(&src);
+        let mut memo = FingerprintMemo::new(4);
+        assert_eq!(memo.get(&src), fp);
+        assert_eq!(memo.len(), 1);
+        // Arc clones share the allocation: pointer hit, no new entry
+        for _ in 0..3 {
+            let clone = Arc::clone(&src);
+            assert_eq!(memo.get(&clone), fp);
+        }
+        assert_eq!(memo.len(), 1, "Arc clones must not grow the memo");
+        // a content clone under a different allocation is a fresh entry
+        // with the same (content-stable) fingerprint
+        let content_clone = Arc::new(src.as_ref().clone());
+        assert_eq!(memo.get(&content_clone), fp);
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
     fn zero_capacity_disables_caching() {
         let b = Arc::new(uniform(8, 8, 0.5, 3));
         let fp = fingerprint_csr(&b);

@@ -113,6 +113,23 @@ impl Registry {
         })
     }
 
+    /// Wrap every registered kernel in [`super::shard::ShardedKernel`] so
+    /// all traffic for every key runs row-band sharded at `cfg` —
+    /// bit-identical by the shard layer's invariants (the executor aligns
+    /// bands to each kernel's `band_alignment`). Kernels already wrapped
+    /// are left alone, so calling this twice never nests shard executors.
+    /// Mostly for soak tests and benches; the serving path prefers
+    /// per-job `JobOptions::shards`.
+    pub fn shard_all(&mut self, cfg: super::shard::ShardConfig) {
+        let kernels: Vec<Arc<dyn SpmmKernel>> = self.map.values().cloned().collect();
+        for k in kernels {
+            if k.name() == "sharded" {
+                continue;
+            }
+            self.register(Arc::new(super::shard::ShardedKernel::wrap(k, cfg)));
+        }
+    }
+
     /// Registered keys, sorted.
     pub fn keys(&self) -> Vec<KernelKey> {
         self.map.keys().copied().collect()
@@ -220,6 +237,30 @@ mod tests {
         );
         let full = default_registry();
         assert!(full.resolve_or_err(FormatKind::Csr, Algorithm::Tiled).is_ok());
+    }
+
+    #[test]
+    fn shard_all_wraps_every_key_and_stays_correct() {
+        let mut r = Registry::with_default_kernels(
+            Geometry { block: 16, pairs: 32, slots: 16 },
+            1,
+        );
+        let keys_before = r.keys();
+        r.shard_all(crate::engine::ShardConfig { shards: 2, block: 16 });
+        assert_eq!(r.keys(), keys_before, "sharding must not change the key space");
+        let a = uniform(40, 50, 0.2, 13);
+        let b = uniform(50, 30, 0.2, 14);
+        let want = dense_ref(&a, &b);
+        for k in r.kernels() {
+            assert_eq!(k.name(), "sharded");
+            let out = k.run(&a, &b).unwrap_or_else(|e| panic!("{e}"));
+            assert!(out.c.max_abs_diff(&want) < 1e-3);
+        }
+        // idempotent: a second call must not nest wrappers
+        let before = r.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
+        r.shard_all(crate::engine::ShardConfig { shards: 2, block: 16 });
+        let after = r.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
+        assert!(Arc::ptr_eq(&before, &after), "shard_all re-wrapped a sharded kernel");
     }
 
     #[test]

@@ -1,0 +1,582 @@
+//! Sharded row-band execution: one SpMM job split into contiguous row
+//! bands, run on channel-connected shard workers, merged without any
+//! cross-shard reduction — the software analogue of the paper's mesh
+//! splitting the output grid across PEs that share input bands.
+//!
+//! # Invariants
+//!
+//! * **Contiguous, block-aligned bands.** [`ShardPlanner`] cuts A's rows
+//!   into contiguous bands whose boundaries are multiples of
+//!   [`ShardConfig::block`], weighted by per-block-row tile-pair counts
+//!   ([`crate::spmm::blocks::block_row_pair_weights`]) — the same
+//!   weighted-contiguous-partition heuristic `engine::tiled` uses for its
+//!   worker chunks.
+//! * **No cross-shard reduction.** Output rows belong to exactly one band,
+//!   so [the merge](execute) is a pure row copy. Every reduction (the
+//!   K-sum per output cell) happens *inside* one shard, in the wrapped
+//!   kernel's own deterministic order.
+//! * **Bit-reproducibility.** Every registered kernel is
+//!   *row-decomposable*: executing a block-aligned row band of A produces
+//!   exactly the bits the full run produces for those rows. Scalar kernels
+//!   (dense, Gustavson, inner) reduce per output row in A-row order; the
+//!   tiled executor reduces per output tile in ascending K order; the
+//!   accelerator plan chunks dispatches within (never across) output block
+//!   rows (`spmm::plan`). Hence merged shard output == unsharded output,
+//!   bit for bit, at any shard count. The executor enforces the alignment
+//!   precondition itself: the effective band alignment is
+//!   `lcm(ShardConfig::block, kernel.band_alignment())`, so a blocked
+//!   kernel whose tile size disagrees with the requested block (e.g. a
+//!   PJRT manifest geometry) still shards bit-identically.
+//!
+//! # Topology
+//!
+//! Workers are in-process threads connected by channels — one task channel
+//! per worker, one shared reply channel — deliberately shaped like a
+//! process/host boundary (the leader serializes a band slice of A; workers
+//! share one `PreparedB`, built once via the PR-2 `PreparedCache`; note
+//! the blocked kernels keep their PR-1 contract of blockizing `B` inside
+//! `execute`, so that step still runs per band — a blocked `PreparedB`
+//! variant is named follow-up work in the ROADMAP). A shard
+//! worker that panics is detected as a lost reply + failed join and
+//! surfaces as [`EngineError::ExecFailed`] on the job, never as a poisoned
+//! server worker. Cross-process/host execution is the named next step
+//! (ROADMAP).
+
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::traits::{FormatKind, SparseMatrix};
+use crate::spmm::blocks::block_row_pair_weights;
+
+use super::error::EngineError;
+use super::kernel::{
+    Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+};
+use super::tiled::partition_by_weight;
+
+/// Sharding policy: how many row bands, and the band alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Number of row-band shards (1 = one band covering every row; the
+    /// planner may produce fewer bands than requested when A has fewer
+    /// block rows).
+    pub shards: usize,
+    /// Requested band boundary alignment. [`execute`] rounds this up to
+    /// the least common multiple with the kernel's own
+    /// [`SpmmKernel::band_alignment`], so bands never cut inside a
+    /// blocked kernel's tile even when the two disagree (e.g. a PJRT
+    /// manifest block differing from the server geometry).
+    pub block: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 1, block: 32 }
+    }
+}
+
+/// One planned row band: `rows.0 .. rows.1` of A (and of the output).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardBand {
+    pub shard: usize,
+    /// `[lo, hi)` output rows. `lo` is block-aligned; `hi` is the next
+    /// band's `lo` (or A's row count for the last band).
+    pub rows: (usize, usize),
+    /// Estimated tile pairs in this band (the partition weight).
+    pub weight: usize,
+}
+
+/// A job's shard decomposition: contiguous bands covering every row once.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub bands: Vec<ShardBand>,
+    pub rows: usize,
+}
+
+impl ShardPlan {
+    /// Total estimated tile pairs across all bands.
+    pub fn total_weight(&self) -> usize {
+        self.bands.iter().map(|b| b.weight).sum()
+    }
+}
+
+/// Cuts a job's rows into weighted contiguous row-band shards.
+pub struct ShardPlanner;
+
+impl ShardPlanner {
+    /// Plan `cfg.shards` bands over A's block rows. When `b` is available
+    /// the weights are exact per-block-row tile-pair counts; otherwise
+    /// (e.g. wrapping a kernel whose prepared operand is not CSR) the
+    /// fallback weight is A's per-block-row nnz — a coarser balance with
+    /// the identical bit-reproducibility (band cuts only move work between
+    /// shards, never reorder a reduction).
+    pub fn plan(a: &Csr, b: Option<&Csr>, cfg: ShardConfig) -> ShardPlan {
+        let block = cfg.block.max(1);
+        let rows = a.rows();
+        let grid_rows = (rows + block - 1) / block;
+        let weights: Vec<usize> = match b {
+            Some(b) => block_row_pair_weights(a, b, block),
+            None => (0..grid_rows)
+                .map(|bi| {
+                    let lo = bi * block;
+                    let hi = (lo + block).min(rows);
+                    (a.row_ptr[hi] - a.row_ptr[lo]) as usize
+                })
+                .collect(),
+        };
+        let bounds = partition_by_weight(&weights, cfg.shards.max(1));
+        let bands = bounds
+            .iter()
+            .enumerate()
+            .map(|(shard, &(blo, bhi))| ShardBand {
+                shard,
+                rows: (blo * block, (bhi * block).min(rows)),
+                weight: weights[blo..bhi].iter().sum(),
+            })
+            .collect();
+        ShardPlan { bands, rows }
+    }
+}
+
+/// Per-shard accounting, surfaced through the coordinator's shard metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardStat {
+    pub shard: usize,
+    pub rows: (usize, usize),
+    /// Task send → worker dequeue (the shard queue wait).
+    pub queue: Duration,
+    /// Kernel execute wall time on the shard worker.
+    pub wall: Duration,
+    pub stats: ExecStats,
+}
+
+/// A sharded run's result: the merged product, summed accounting, and the
+/// per-shard breakdown.
+#[derive(Debug)]
+pub struct ShardOutput {
+    pub c: Dense,
+    pub stats: ExecStats,
+    pub shards: Vec<ShardStat>,
+}
+
+fn lcm(x: usize, y: usize) -> usize {
+    fn gcd(mut a: usize, mut b: usize) -> usize {
+        while b != 0 {
+            (a, b) = (b, a % b);
+        }
+        a
+    }
+    x / gcd(x, y) * y
+}
+
+struct ShardTask {
+    shard: usize,
+    rows: (usize, usize),
+    a_band: Csr,
+    enqueued: Instant,
+}
+
+struct ShardReply {
+    shard: usize,
+    rows: (usize, usize),
+    queue: Duration,
+    wall: Duration,
+    result: Result<EngineOutput, EngineError>,
+}
+
+/// Run `C = A × B` sharded: plan row bands, execute each band's
+/// `kernel.execute` on its own channel-connected worker against the shared
+/// `prepared` operand, and stitch the band outputs back row-for-row.
+///
+/// `b` feeds the planner's weight heuristic; pass the job's CSR `B` when
+/// available (the planner falls back to the `prepared` operand's CSR, then
+/// to A-only nnz weights). A panicked shard worker yields
+/// [`EngineError::ExecFailed`] naming the lost shards; the caller's thread
+/// is never poisoned.
+pub fn execute(
+    kernel: &dyn SpmmKernel,
+    a: &Csr,
+    b: Option<&Csr>,
+    prepared: &PreparedB,
+    cfg: ShardConfig,
+) -> Result<ShardOutput, EngineError> {
+    let (b_rows, b_cols) = prepared.shape();
+    if a.cols() != b_rows {
+        return Err(EngineError::ShapeMismatch {
+            a: a.shape(),
+            b: (b_rows, b_cols),
+        });
+    }
+    let b_struct: Option<&Csr> = match (b, prepared) {
+        (Some(b), _) => Some(b),
+        (None, PreparedB::Csr(m)) => Some(m.as_ref()),
+        (None, _) => None,
+    };
+    // bands must never cut inside the kernel's own tile rows — round the
+    // requested alignment up to a common multiple (the bit-reproducibility
+    // precondition, enforced here rather than trusted from the caller)
+    let cfg = ShardConfig {
+        shards: cfg.shards,
+        block: lcm(cfg.block.max(1), kernel.band_alignment().max(1)),
+    };
+    let plan = ShardPlanner::plan(a, b_struct, cfg);
+    let (m, n) = (a.rows(), b_cols);
+    if plan.bands.is_empty() {
+        return Ok(ShardOutput {
+            c: Dense::zeros(m, n),
+            stats: ExecStats::default(),
+            shards: Vec::new(),
+        });
+    }
+
+    let n_workers = plan.bands.len();
+    let (reply_tx, reply_rx) = channel::<ShardReply>();
+    let mut replies: Vec<ShardReply> = Vec::with_capacity(n_workers);
+    let mut lost_workers = 0usize;
+
+    std::thread::scope(|s| {
+        let mut task_txs = Vec::with_capacity(n_workers);
+        let handles: Vec<_> = (0..n_workers)
+            .map(|_| {
+                let (task_tx, task_rx) = sync_channel::<ShardTask>(1);
+                task_txs.push(task_tx);
+                let reply_tx = reply_tx.clone();
+                s.spawn(move || {
+                    // today each worker serves exactly one band; the loop is
+                    // the shape a process-boundary worker would keep
+                    while let Ok(task) = task_rx.recv() {
+                        let queue = task.enqueued.elapsed();
+                        let t0 = Instant::now();
+                        let result = kernel.execute(&task.a_band, prepared);
+                        let _ = reply_tx.send(ShardReply {
+                            shard: task.shard,
+                            rows: task.rows,
+                            queue,
+                            wall: t0.elapsed(),
+                            result,
+                        });
+                    }
+                })
+            })
+            .collect();
+        drop(reply_tx);
+
+        // leader side: slice and dispatch one band per worker (across a
+        // process boundary this send is where the band would serialize)
+        for (band, task_tx) in plan.bands.iter().zip(&task_txs) {
+            let _ = task_tx.send(ShardTask {
+                shard: band.shard,
+                rows: band.rows,
+                a_band: a.row_band(band.rows.0, band.rows.1),
+                enqueued: Instant::now(),
+            });
+        }
+        drop(task_txs);
+
+        while let Ok(reply) = reply_rx.recv() {
+            replies.push(reply);
+        }
+        for h in handles {
+            if h.join().is_err() {
+                lost_workers += 1;
+            }
+        }
+    });
+
+    if replies.len() < n_workers {
+        let got: Vec<usize> = replies.iter().map(|r| r.shard).collect();
+        let missing: Vec<usize> = (0..n_workers).filter(|i| !got.contains(i)).collect();
+        return Err(EngineError::ExecFailed(format!(
+            "lost {lost_workers} shard worker(s): shard(s) {missing:?} of {n_workers} \
+             never replied (worker panicked)"
+        )));
+    }
+
+    replies.sort_by_key(|r| r.shard);
+    let mut c = Dense::zeros(m, n);
+    let mut total = ExecStats::default();
+    let mut shard_stats = Vec::with_capacity(replies.len());
+    for reply in replies {
+        let out = reply.result?;
+        let (lo, hi) = reply.rows;
+        debug_assert_eq!(out.c.shape(), (hi - lo, n));
+        // the merge: a pure row copy — no reduction crosses a shard
+        c.data[lo * n..hi * n].copy_from_slice(&out.c.data);
+        total.dispatches += out.stats.dispatches;
+        total.real_pairs += out.stats.real_pairs;
+        total.padded_pairs += out.stats.padded_pairs;
+        total.macs_issued += out.stats.macs_issued;
+        total.threads += out.stats.threads;
+        shard_stats.push(ShardStat {
+            shard: reply.shard,
+            rows: reply.rows,
+            queue: reply.queue,
+            wall: reply.wall,
+            stats: out.stats,
+        });
+    }
+    Ok(ShardOutput {
+        c,
+        stats: total,
+        shards: shard_stats,
+    })
+}
+
+/// Any [`SpmmKernel`] behind the sharded executor, itself an `SpmmKernel`:
+/// `registry.register(Arc::new(ShardedKernel::wrap(inner, cfg)))` replaces
+/// the inner kernel's `(format, algorithm)` key, so every consumer of that
+/// key — server workers, CLI, benches — transparently runs sharded.
+pub struct ShardedKernel {
+    inner: Arc<dyn SpmmKernel>,
+    cfg: ShardConfig,
+}
+
+impl ShardedKernel {
+    pub fn wrap(inner: Arc<dyn SpmmKernel>, cfg: ShardConfig) -> ShardedKernel {
+        ShardedKernel { inner, cfg }
+    }
+
+    pub fn config(&self) -> ShardConfig {
+        self.cfg
+    }
+
+    pub fn inner(&self) -> &Arc<dyn SpmmKernel> {
+        &self.inner
+    }
+}
+
+impl SpmmKernel for ShardedKernel {
+    fn algorithm(&self) -> Algorithm {
+        self.inner.algorithm()
+    }
+    fn format(&self) -> FormatKind {
+        self.inner.format()
+    }
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        self.inner.cost_hint(a, b)
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        self.inner.prepare(b)
+    }
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
+        self.inner.prepare_shared(b)
+    }
+    fn band_alignment(&self) -> usize {
+        self.inner.band_alignment()
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+        let out = execute(self.inner.as_ref(), a, None, b, self.cfg)?;
+        Ok(EngineOutput { c: out.c, stats: out.stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::engine::kernels::{GustavsonKernel, TiledKernel};
+    use crate::engine::tiled::TiledConfig;
+    use crate::engine::Registry;
+    use crate::spmm::plan::Geometry;
+
+    fn bits(c: &Dense) -> Vec<u32> {
+        c.bit_pattern()
+    }
+
+    #[test]
+    fn planner_bands_are_contiguous_aligned_and_cover_all_rows() {
+        let a = uniform(70, 90, 0.1, 1);
+        let b = uniform(90, 40, 0.1, 2);
+        for shards in [1usize, 2, 3, 5, 8, 64] {
+            let plan = ShardPlanner::plan(&a, Some(&b), ShardConfig { shards, block: 16 });
+            assert!(!plan.bands.is_empty());
+            assert!(plan.bands.len() <= shards.max(1));
+            assert_eq!(plan.bands[0].rows.0, 0, "shards={shards}");
+            assert_eq!(plan.bands.last().unwrap().rows.1, 70);
+            for w in plan.bands.windows(2) {
+                assert_eq!(w[0].rows.1, w[1].rows.0, "gap at shards={shards}");
+            }
+            for band in &plan.bands {
+                assert_eq!(band.rows.0 % 16, 0, "unaligned band start");
+                assert!(band.rows.1 > band.rows.0, "empty band");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_weights_balance_roughly() {
+        let a = uniform(128, 128, 0.2, 3);
+        let b = uniform(128, 64, 0.2, 4);
+        let plan = ShardPlanner::plan(&a, Some(&b), ShardConfig { shards: 4, block: 16 });
+        let total = plan.total_weight();
+        assert!(total > 0);
+        assert_eq!(plan.bands.len(), 4, "dense 8-block-row input must fill 4 bands");
+        // greedy prefix cuts overshoot the ideal share by at most one
+        // block row's weight
+        let max_row_w = block_row_pair_weights(&a, &b, 16)
+            .into_iter()
+            .max()
+            .unwrap();
+        for band in &plan.bands {
+            assert!(
+                band.weight <= total / plan.bands.len() + max_row_w,
+                "band dwarfs its share: {band:?} (total {total}, max row {max_row_w})"
+            );
+        }
+        assert_eq!(
+            plan.bands.iter().map(|b| b.weight).sum::<usize>(),
+            total
+        );
+    }
+
+    #[test]
+    fn sharded_gustavson_is_bit_identical_to_unsharded() {
+        let k = GustavsonKernel;
+        let a = uniform(60, 80, 0.15, 5);
+        let b = uniform(80, 44, 0.15, 6);
+        let prepared = k.prepare(&b).unwrap();
+        let want = bits(&k.execute(&a, &prepared).unwrap().c);
+        for shards in [1usize, 2, 3, 5, 8] {
+            let out = execute(&k, &a, Some(&b), &prepared, ShardConfig { shards, block: 16 })
+                .unwrap();
+            assert_eq!(bits(&out.c), want, "{shards} shards diverge");
+            assert_eq!(out.shards.len(), out.stats.threads);
+        }
+    }
+
+    #[test]
+    fn sharded_tiled_conserves_pair_counts() {
+        let k = TiledKernel::new(TiledConfig { block: 16, workers: 2 });
+        let a = uniform(96, 64, 0.2, 7);
+        let b = uniform(64, 48, 0.2, 8);
+        let prepared = k.prepare(&b).unwrap();
+        let whole = k.execute(&a, &prepared).unwrap();
+        let out = execute(&k, &a, Some(&b), &prepared, ShardConfig { shards: 4, block: 16 })
+            .unwrap();
+        assert_eq!(bits(&out.c), bits(&whole.c));
+        // bands partition the tile pairs exactly
+        assert_eq!(out.stats.real_pairs, whole.stats.real_pairs);
+        assert_eq!(out.stats.dispatches, whole.stats.dispatches);
+    }
+
+    #[test]
+    fn misaligned_request_rounds_up_to_kernel_alignment() {
+        // tiled kernel tiles at 16; ask for 8-aligned bands — the executor
+        // must round to lcm(8,16)=16, keeping bands tile-aligned and the
+        // output bit-identical
+        let k = TiledKernel::new(TiledConfig { block: 16, workers: 1 });
+        let a = uniform(80, 64, 0.2, 15);
+        let b = uniform(64, 40, 0.2, 16);
+        let prepared = k.prepare(&b).unwrap();
+        let want = bits(&k.execute(&a, &prepared).unwrap().c);
+        let out = execute(&k, &a, Some(&b), &prepared, ShardConfig { shards: 3, block: 8 })
+            .unwrap();
+        assert_eq!(bits(&out.c), want, "misaligned shard request diverged");
+        for s in &out.shards {
+            assert_eq!(s.rows.0 % 16, 0, "band start {} not tile-aligned", s.rows.0);
+        }
+        assert_eq!(lcm(8, 16), 16);
+        assert_eq!(lcm(10, 16), 80);
+        assert_eq!(lcm(1, 7), 7);
+    }
+
+    #[test]
+    fn empty_matrix_and_zero_rows() {
+        let k = GustavsonKernel;
+        let a = uniform(20, 30, 0.0, 1);
+        let b = uniform(30, 10, 0.3, 2);
+        let prepared = k.prepare(&b).unwrap();
+        let out = execute(&k, &a, Some(&b), &prepared, ShardConfig { shards: 4, block: 8 })
+            .unwrap();
+        assert!(out.c.data.iter().all(|&v| v == 0.0));
+        assert_eq!(out.c.shape(), (20, 10));
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed() {
+        let k = GustavsonKernel;
+        let a = uniform(8, 9, 0.5, 1);
+        let b = uniform(10, 8, 0.5, 2);
+        let prepared = k.prepare(&b).unwrap();
+        let err = execute(&k, &a, Some(&b), &prepared, ShardConfig::default()).unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { a: (8, 9), b: (10, 8) }));
+    }
+
+    #[test]
+    fn wrapped_kernel_registers_and_matches_inner() {
+        let mut reg = Registry::with_default_kernels(
+            Geometry { block: 16, pairs: 32, slots: 16 },
+            1,
+        );
+        let inner = reg
+            .resolve(FormatKind::Csr, Algorithm::Gustavson)
+            .unwrap();
+        let a = uniform(40, 50, 0.2, 9);
+        let b = uniform(50, 30, 0.2, 10);
+        let want = bits(&inner.run(&a, &b).unwrap().c);
+        let key = reg.register(Arc::new(ShardedKernel::wrap(
+            Arc::clone(&inner),
+            ShardConfig { shards: 3, block: 16 },
+        )));
+        assert_eq!(key, (FormatKind::Csr, Algorithm::Gustavson));
+        let sharded = reg.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
+        assert_eq!(sharded.name(), "sharded");
+        assert_eq!(bits(&sharded.run(&a, &b).unwrap().c), want);
+    }
+
+    #[test]
+    fn panicking_worker_is_an_exec_error_not_a_poisoned_caller() {
+        struct PanicKernel;
+        impl SpmmKernel for PanicKernel {
+            fn algorithm(&self) -> Algorithm {
+                Algorithm::Gustavson
+            }
+            fn format(&self) -> FormatKind {
+                FormatKind::Csr
+            }
+            fn name(&self) -> &'static str {
+                "panic-injector"
+            }
+            fn cost_hint(&self, _: &Csr, _: &Csr) -> CostHint {
+                CostHint::default()
+            }
+            fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+                Ok(PreparedB::Csr(Arc::new(b.clone())))
+            }
+            fn execute(&self, _: &Csr, _: &PreparedB) -> Result<EngineOutput, EngineError> {
+                panic!("injected shard fault");
+            }
+        }
+        let a = uniform(32, 32, 0.3, 11);
+        let prepared = PanicKernel.prepare(&a).unwrap();
+        let err = execute(
+            &PanicKernel,
+            &a,
+            None,
+            &prepared,
+            ShardConfig { shards: 2, block: 16 },
+        )
+        .unwrap_err();
+        match err {
+            EngineError::ExecFailed(msg) => {
+                assert!(msg.contains("shard"), "{msg}")
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        // the caller thread is alive and can shard again with a good kernel
+        let ok = execute(
+            &GustavsonKernel,
+            &a,
+            None,
+            &prepared,
+            ShardConfig { shards: 2, block: 16 },
+        );
+        assert!(ok.is_ok());
+    }
+}

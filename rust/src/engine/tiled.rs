@@ -42,7 +42,9 @@ impl Default for TiledConfig {
 
 /// Split task indices `0..n` into at most `workers` contiguous chunks with
 /// nearly equal total `weight` (greedy prefix cuts at the ideal boundaries).
-fn partition_by_weight(weights: &[usize], workers: usize) -> Vec<(usize, usize)> {
+/// Shared with `engine::shard`, whose planner cuts row bands over
+/// per-block-row tile-pair weights with the same heuristic.
+pub(crate) fn partition_by_weight(weights: &[usize], workers: usize) -> Vec<(usize, usize)> {
     let n = weights.len();
     if n == 0 || workers == 0 {
         return Vec::new();

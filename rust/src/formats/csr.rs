@@ -155,6 +155,28 @@ impl Csr {
         self.r_val
     }
 
+    /// Rows `lo..hi` as an owned CSR of shape `(hi-lo) × cols` — the shard
+    /// executor's row-band slice (`engine::shard`). Column structure and
+    /// value bits are copied verbatim, so a row-decomposable kernel
+    /// produces bit-identical rows on the band.
+    pub fn row_band(&self, lo: usize, hi: usize) -> Csr {
+        assert!(
+            lo <= hi && hi <= self.rows,
+            "row band {lo}..{hi} outside 0..{}",
+            self.rows
+        );
+        let p0 = self.row_ptr[lo];
+        let p1 = self.row_ptr[hi] as usize;
+        let row_ptr: Vec<u32> = self.row_ptr[lo..=hi].iter().map(|&p| p - p0).collect();
+        Csr::from_parts(
+            hi - lo,
+            self.cols,
+            row_ptr,
+            self.col_idx[p0 as usize..p1].to_vec(),
+            self.vals[p0 as usize..p1].to_vec(),
+        )
+    }
+
     /// Transpose (rows of the result = columns of self), used to build
     /// column streams for A×Aᵀ and the CCS comparison.
     pub fn transpose(&self) -> Csr {
@@ -337,6 +359,23 @@ mod tests {
         assert_eq!((min, max), (1, 2));
         assert!((avg - 5.0 / 3.0).abs() < 1e-9);
         assert_eq!(m.storage_words(), 4 + 10);
+    }
+
+    #[test]
+    fn row_band_slices_structure_and_bits() {
+        let m = sample();
+        let band = m.row_band(1, 3);
+        assert_eq!(band.shape(), (2, 4));
+        assert_eq!(band.row_ptr, vec![0, 1, 3]);
+        assert_eq!(band.row(0), (&[3u32][..], &[3.0f32][..]));
+        assert_eq!(band.row(1), (&[0u32, 1][..], &[4.0f32, 5.0][..]));
+        // full band is the identity; empty band is a 0-row matrix
+        let all = m.row_band(0, 3);
+        assert_eq!(all.row_ptr, m.row_ptr);
+        assert_eq!(all.col_idx, m.col_idx);
+        let none = m.row_band(2, 2);
+        assert_eq!(none.shape(), (0, 4));
+        assert_eq!(none.nnz(), 0);
     }
 
     #[test]

@@ -60,6 +60,14 @@ impl Dense {
         Some(self.data[k])
     }
 
+    /// The raw bit pattern of every value — the exact-compare side of the
+    /// shard layer's bit-reproducibility checks (`a.bit_pattern() ==
+    /// b.bit_pattern()` ⇔ bitwise-identical results; plain `==` on f32
+    /// would conflate 0.0/-0.0 and fail on NaN).
+    pub fn bit_pattern(&self) -> Vec<u32> {
+        self.data.iter().map(|v| v.to_bits()).collect()
+    }
+
     /// Max |a - b| against another dense matrix (test/verification helper).
     pub fn max_abs_diff(&self, other: &Dense) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));

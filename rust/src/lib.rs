@@ -42,7 +42,11 @@
 //! batches) — the paper's "one representation build, many multiplies"
 //! amortization at the serving layer. Coalescing stats (`prepare_builds`,
 //! `prepare_cache_hits`, `coalesced_jobs`) surface in
-//! [`coordinator::MetricsSnapshot`].
+//! [`coordinator::MetricsSnapshot`]. Jobs may additionally ask for
+//! **sharded row-band execution** (`JobBuilder::shards(n)` →
+//! [`engine::shard`]): contiguous bands on channel-connected shard
+//! workers sharing one `PreparedB`, merged with no cross-shard reduction
+//! — bit-identical to the unsharded run at any shard count.
 //!
 //! ```ignore
 //! let server = Server::start(ServerConfig::default());

@@ -137,6 +137,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let (kernel, prefer_pjrt) = parse_kernel_spec(args)?;
             let a = Arc::new(datasets::uniform(rows, cols, density, seed));
             let b = Arc::new(datasets::uniform(cols, rows, density, seed + 1));
+            let shards = args.get_or("shards", 1usize)?;
             let server = Server::start(ServerConfig {
                 workers: 1,
                 kernel,
@@ -149,12 +150,28 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 .job(a, b)
                 .verify(true)
                 .keep_result(false)
+                .shards(shards)
                 .submit()?
                 .wait()?;
             println!(
-                "backend={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
-                out.backend, out.report.dispatches, out.report.real_pairs, out.wall, out.max_err
+                "backend={} shards={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
+                out.backend,
+                out.shards,
+                out.report.dispatches,
+                out.report.real_pairs,
+                out.wall,
+                out.max_err
             );
+            if shards > 1 {
+                let snap = client.metrics();
+                println!(
+                    "shard metrics: {} bands, wall p50={}us p99={}us, queue p50={}us",
+                    snap.shards_executed,
+                    snap.shard_wall_p50_us,
+                    snap.shard_wall_p99_us,
+                    snap.shard_queue_p50_us
+                );
+            }
             drop(client);
             server.shutdown();
             Ok(())
@@ -176,6 +193,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 tile_workers: args.get_or("tile-workers", 1usize)?,
                 artifacts_dir: Manifest::default_dir(),
                 coalesce,
+                ..Default::default()
             });
             let client = server.client();
             let a = Arc::new(datasets::uniform(256, 256, 0.03, 1));
@@ -289,6 +307,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel exp --id engines --scale 0.5\n\
                  \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
+                 \u{20}  spmm-accel spmm --kernel tiled --shards 4   # row-band sharded execution\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\
                  \u{20}  spmm-accel kernels"

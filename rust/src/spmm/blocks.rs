@@ -63,6 +63,50 @@ pub fn blockize(m: &Csr, block: usize) -> BlockGrid {
     }
 }
 
+/// Per-block-row tile-pair counts for `A × B` at `block` granularity,
+/// computed from structure alone (no tile materialization): the weight of
+/// block row `bi` is `Σ_{bk : A has a tile at (bi, bk)} |B tiles in K-row
+/// bk|` — exactly the number of tile pairs the tiled executor schedules
+/// for that band of output rows. `engine::shard`'s planner cuts contiguous
+/// row bands with balanced totals over these weights, the same heuristic
+/// `engine::tiled` applies per output tile.
+pub fn block_row_pair_weights(a: &Csr, b: &Csr, block: usize) -> Vec<usize> {
+    let grid_rows_a = (a.rows() + block - 1) / block;
+    let grid_k = ((a.cols().max(b.rows())) + block - 1) / block;
+    let grid_cols_b = (b.cols() + block - 1) / block;
+
+    // |{bj : B has a tile at (bk, bj)}| per K block-row. Rows are visited
+    // in order, so `bk` is non-decreasing and a stamp array dedups tiles.
+    let mut b_tiles_per_k = vec![0usize; grid_k];
+    let mut stamp = vec![usize::MAX; grid_cols_b.max(1)];
+    for i in 0..b.rows() {
+        let bk = i / block;
+        let (cols, _) = b.row(i);
+        for &c in cols {
+            let bj = c as usize / block;
+            if stamp[bj] != bk {
+                stamp[bj] = bk;
+                b_tiles_per_k[bk] += 1;
+            }
+        }
+    }
+
+    let mut weights = vec![0usize; grid_rows_a];
+    let mut stamp_a = vec![usize::MAX; grid_k.max(1)];
+    for i in 0..a.rows() {
+        let bi = i / block;
+        let (cols, _) = a.row(i);
+        for &c in cols {
+            let bk = c as usize / block;
+            if stamp_a[bk] != bi {
+                stamp_a[bk] = bi;
+                weights[bi] += b_tiles_per_k[bk];
+            }
+        }
+    }
+    weights
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +147,40 @@ mod tests {
         let g = blockize(&m, 32);
         assert!(g.n_tiles() <= m.nnz().max(1));
         assert!(g.block_density() <= 1.0);
+    }
+
+    #[test]
+    fn pair_weights_match_materialized_grids() {
+        let a = uniform(70, 90, 0.08, 3);
+        let b = uniform(90, 50, 0.12, 4);
+        let block = 16;
+        let weights = block_row_pair_weights(&a, &b, block);
+        // reference: count tile pairs per A block-row from the real grids
+        let ga = blockize(&a, block);
+        let gb = blockize(&b, block);
+        let mut b_per_k = vec![0usize; gb.grid_rows];
+        for &(bk, _) in gb.tiles.keys() {
+            b_per_k[bk as usize] += 1;
+        }
+        let mut want = vec![0usize; ga.grid_rows];
+        for &(bi, bk) in ga.tiles.keys() {
+            want[bi as usize] += b_per_k[bk as usize];
+        }
+        assert_eq!(weights, want);
+        assert_eq!(
+            weights.iter().sum::<usize>(),
+            ga.tiles
+                .keys()
+                .map(|&(_, bk)| b_per_k[bk as usize])
+                .sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn pair_weights_handle_empty_operands() {
+        let a = uniform(20, 30, 0.0, 1);
+        let b = uniform(30, 20, 0.3, 2);
+        assert!(block_row_pair_weights(&a, &b, 8).iter().all(|&w| w == 0));
+        assert_eq!(block_row_pair_weights(&a, &b, 8).len(), 3);
     }
 }

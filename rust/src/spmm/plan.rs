@@ -5,7 +5,11 @@
 //! numpy reference used by pytest): block pairs sorted by output tile so
 //! the kernel's VMEM revisit-accumulation applies, chunked into fixed
 //! `PAIRS`-sized dispatches with ≤ `SLOTS` distinct output tiles each,
-//! zero-padded with the last real slot id.
+//! zero-padded with the last real slot id. Dispatches additionally never
+//! span output block rows, making the plan *row-decomposable*: the plan of
+//! a block-aligned row band equals the corresponding sub-sequence of the
+//! full plan's dispatches, so sharded execution (`engine::shard`) is
+//! bit-identical to the unsharded run.
 
 use super::blocks::{blockize, BlockGrid};
 use crate::formats::csr::Csr;
@@ -115,7 +119,19 @@ fn plan_grids(ga: &BlockGrid, gb: &BlockGrid, geom: Geometry, m: usize, n: usize
             ));
         };
 
+    let mut cur_block_row: Option<u32> = None;
     for (out_coord, pairs) in &by_out {
+        // dispatches never span output block rows: each block row's chunk
+        // boundaries depend only on its own pair sequence, so the plan for
+        // any block-aligned row band is exactly the sub-sequence of
+        // full-plan dispatches covering those rows. This row-decomposable
+        // chunking is the sharding layer's bit-reproducibility invariant
+        // (`engine::shard`): f32 accumulation association per output tile
+        // is identical whether the matrix is planned whole or in bands.
+        if cur_block_row.is_some() && cur_block_row != Some(out_coord.0) {
+            flush(&mut cur, &mut dispatches, geom, tile_elems);
+        }
+        cur_block_row = Some(out_coord.0);
         for (a_tile, b_tile) in pairs {
             total_pairs += 1;
             // open a new slot if this output tile isn't current
@@ -280,6 +296,36 @@ mod tests {
         assert!(p.dispatches.is_empty());
         let c = p.execute_cpu();
         assert!(c.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn plans_are_row_decomposable_for_block_aligned_bands() {
+        // tiny pairs/slots force mid-tile dispatch splits — the case where
+        // non-row-decomposable chunking would change f32 association
+        let a = uniform(40, 64, 0.25, 7);
+        let b = uniform(64, 48, 0.25, 8);
+        let geom = Geometry { block: 8, pairs: 3, slots: 2 };
+        let full = plan(&a, &b, geom);
+        let mut banded_dispatches = 0;
+        let mut merged = Dense::zeros(40, 48);
+        for (lo, hi) in [(0usize, 16usize), (16, 32), (32, 40)] {
+            let p = plan(&a.row_band(lo, hi), &b, geom);
+            banded_dispatches += p.dispatches.len();
+            let c = p.execute_cpu();
+            for i in 0..(hi - lo) {
+                for j in 0..48 {
+                    *merged.at_mut(lo + i, j) = c.at(i, j);
+                }
+            }
+        }
+        // band plans are exactly the full plan's dispatches, partitioned
+        assert_eq!(full.dispatches.len(), banded_dispatches);
+        let whole = full.execute_cpu();
+        assert_eq!(
+            whole.bit_pattern(),
+            merged.bit_pattern(),
+            "banded plan changed result bits"
+        );
     }
 
     #[test]

@@ -1,19 +1,22 @@
 //! Integration: the batching server under realistic mixed traffic through
 //! the `SpmmClient` API — typed errors, B-sharing micro-batch coalescing
-//! (bit-identical to uncoalesced execution), PJRT-backed workers when
-//! artifacts are present, failure injection, per-job kernel overrides,
-//! shutdown-drain under concurrent submitters, and router/registry
-//! composition.
+//! (bit-identical to uncoalesced execution), sharded row-band execution
+//! (bit-identical to unsharded, `ExecFailed` on shard-worker loss without
+//! poisoning the server), PJRT-backed workers when artifacts are present,
+//! failure injection, per-job kernel overrides, shutdown-drain under
+//! concurrent submitters, and router/registry composition.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use spmm_accel::coordinator::{
     route, AccessStrategy, CoalesceConfig, JobError, JobHandle, JobOptions, KernelSpec,
-    RoutingPolicy, Server, ServerConfig, SpmmJob,
+    RegistryHook, RoutingPolicy, Server, ServerConfig, SpmmJob,
 };
 use spmm_accel::datasets::synth::uniform;
-use spmm_accel::engine::Algorithm;
+use spmm_accel::engine::{
+    Algorithm, CostHint, EngineError, EngineOutput, PreparedB, Registry, SpmmKernel,
+};
 use spmm_accel::formats::csr::Csr;
 use spmm_accel::formats::traits::FormatKind;
 use spmm_accel::runtime::Manifest;
@@ -33,6 +36,7 @@ fn server(kernel: KernelSpec, prefer_pjrt: bool, workers: usize) -> Server {
         tile_workers: 2,
         artifacts_dir: Manifest::default_dir(),
         coalesce: CoalesceConfig::default(),
+        ..Default::default()
     })
 }
 
@@ -127,6 +131,145 @@ fn submit_many_coalesces_shared_b_and_stays_bit_identical() {
     for (i, (got, want)) in outputs.iter().zip(&reference).enumerate() {
         let (got_c, want_c) = (got.c.as_ref().unwrap(), want.c.as_ref().unwrap());
         assert_eq!(got_c.data, want_c.data, "job {i} diverges from uncoalesced run");
+    }
+}
+
+/// Sharded serving: the same job at 1 and 4 shards through a real server
+/// is bitwise identical, and the per-shard wall/queue metrics populate.
+#[test]
+fn sharded_serving_is_bit_identical_and_metered() {
+    let s = server(KernelSpec::default(), false, 2);
+    let client = s.client();
+    let a = Arc::new(uniform(96, 64, 0.15, 70));
+    let b = Arc::new(uniform(64, 56, 0.15, 71));
+    let kernels = [
+        (FormatKind::Csr, Algorithm::Tiled),
+        (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::Block),
+        (FormatKind::InCrs, Algorithm::Inner),
+    ];
+    for (f, alg) in kernels {
+        let run = |shards: usize| {
+            client
+                .job(Arc::clone(&a), Arc::clone(&b))
+                .kernel(f, alg)
+                .shards(shards)
+                .submit()
+                .unwrap()
+                .wait()
+                .unwrap()
+        };
+        let base = run(1);
+        let sharded = run(4);
+        assert!(sharded.shards > 1, "{f:?}/{alg:?}: {}", sharded.shards);
+        assert_eq!(
+            base.c.as_ref().unwrap().bit_pattern(),
+            sharded.c.as_ref().unwrap().bit_pattern(),
+            "{f:?}/{alg:?} sharded serving diverges bitwise"
+        );
+    }
+    let snap = client.metrics();
+    assert_eq!(snap.sharded_jobs, kernels.len() as u64);
+    assert!(snap.shards_executed >= 2 * kernels.len() as u64, "{snap:?}");
+    assert_eq!(snap.shard_failures, 0);
+    assert!(snap.shard_wall_p50_us > 0, "{snap:?}");
+    assert!(snap.shard_queue_p50_us > 0, "{snap:?}");
+    drop(client);
+    s.shutdown();
+}
+
+/// A kernel that always panics in `execute` — registered under an unused
+/// registry key via the server's registry hook to inject shard faults.
+struct PanicKernel;
+
+impl SpmmKernel for PanicKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Gustavson
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Ellpack
+    }
+    fn name(&self) -> &'static str {
+        "panic-injector"
+    }
+    fn cost_hint(&self, _: &Csr, _: &Csr) -> CostHint {
+        CostHint::default()
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Csr(Arc::new(b.clone())))
+    }
+    fn execute(&self, _: &Csr, _: &PreparedB) -> Result<EngineOutput, EngineError> {
+        panic!("injected shard fault");
+    }
+}
+
+/// Fault injection: a panicking shard worker yields `JobError::ExecFailed`
+/// on the handle, the server keeps serving subsequent jobs, and shutdown
+/// still drains every accepted job.
+#[test]
+fn panicking_shard_worker_fails_the_job_not_the_server() {
+    let hook: RegistryHook = Arc::new(|reg: &mut Registry| {
+        reg.register(Arc::new(PanicKernel));
+    });
+    let s = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 16,
+        geometry: Geometry { block: 16, pairs: 32, slots: 16 },
+        registry_hook: Some(hook),
+        ..Default::default()
+    });
+    let client = s.client();
+    let a = Arc::new(uniform(48, 48, 0.2, 80));
+
+    // the faulting job: its 2 shard workers both panic
+    let err = client
+        .job(Arc::clone(&a), Arc::clone(&a))
+        .kernel(FormatKind::Ellpack, Algorithm::Gustavson)
+        .shards(2)
+        .submit()
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    match &err {
+        JobError::ExecFailed(msg) => assert!(msg.contains("shard"), "{msg}"),
+        other => panic!("expected ExecFailed, got {other:?}"),
+    }
+    assert!(!err.is_transient(), "a lost shard is a job defect, not backpressure");
+
+    // the single server worker survived and serves both sharded and
+    // unsharded follow-up traffic
+    for shards in [1usize, 2] {
+        let out = client
+            .job(Arc::clone(&a), Arc::clone(&a))
+            .shards(shards)
+            .keep_result(false)
+            .submit()
+            .unwrap()
+            .wait();
+        assert!(out.is_ok(), "server poisoned after shard fault (shards={shards})");
+    }
+    let snap = client.metrics();
+    assert!(snap.shard_failures >= 1, "{snap:?}");
+    assert_eq!(snap.jobs_failed, 1, "{snap:?}");
+
+    // shutdown still drains: accepted-but-unserved jobs all get answers
+    let pending: Vec<SpmmJob> = (0..6)
+        .map(|i| {
+            client
+                .job(Arc::clone(&a), Arc::clone(&a))
+                .id(100 + i)
+                .keep_result(false)
+                .build()
+        })
+        .collect();
+    let handles = client.submit_many(pending);
+    drop(client);
+    s.shutdown();
+    for h in handles {
+        match h.wait() {
+            Ok(_) | Err(JobError::Shutdown) => {}
+            Err(e) => panic!("stranded job after shard fault: {e}"),
+        }
     }
 }
 
@@ -343,7 +486,7 @@ fn legacy_submit_shim_still_serves() {
     let rx = s.submit(SpmmJob::new(7, a.clone(), a).with_opts(JobOptions {
         verify: true,
         keep_result: false,
-        kernel: None,
+        ..Default::default()
     }));
     let res = rx.recv().unwrap();
     assert_eq!(res.id, 7);

@@ -1,0 +1,271 @@
+//! Bit-reproducibility property suite for sharded row-band execution
+//! (`engine::shard`): for random sparse A/B and EVERY kernel in the
+//! default registry, the merged shard output at shard counts {1, 2, 3, 5,
+//! 8} is bit-identical (exact bit compare on every output value) to both
+//! the 1-shard run and the unsharded `kernel.execute`, including
+//! empty-row-band and shards-greater-than-rows edge cases.
+//!
+//! Values are `f32` throughout the crate (`Dense::data`), so "exact bit
+//! compare" is `f32::to_bits` per element — any reassociation of a
+//! floating-point reduction, dropped row, or double-write shows up as a
+//! bit diff.
+
+use std::sync::Arc;
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{
+    shard, Algorithm, Registry, ShardConfig, ShardPlanner, ShardedKernel, SpmmKernel,
+};
+use spmm_accel::formats::coo::Coo;
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::dense::Dense;
+use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+/// Band alignment shared by the registry's blocked kernels (tiled, accel)
+/// and the shard planner — the bit-reproducibility precondition.
+const BLOCK: usize = 16;
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 5, 8];
+
+fn registry() -> Registry {
+    Registry::with_default_kernels(Geometry { block: BLOCK, pairs: 32, slots: 16 }, 2)
+}
+
+fn bits(c: &Dense) -> Vec<u32> {
+    c.bit_pattern()
+}
+
+/// Random compatible (A, B): enough rows for several block rows, mixed
+/// densities including very sparse (empty block rows appear naturally).
+fn gen_pair(rng: &mut Rng) -> (Csr, Csr) {
+    let m = rng.usize_below(80) + 2;
+    let k = rng.usize_below(48) + 4;
+    let n = rng.usize_below(48) + 4;
+    let da = rng.f64() * 0.3;
+    let db = 0.05 + rng.f64() * 0.3;
+    let seed = rng.next_u64();
+    (uniform(m, k, da, seed), uniform(k, n, db, seed ^ 0x5A4D))
+}
+
+/// The acceptance property: every registered kernel, every shard count,
+/// bit-identical to 1-shard and to the unsharded kernel.
+#[test]
+fn sharded_output_is_bit_identical_for_every_registered_kernel() {
+    let registry = registry();
+    assert!(registry.len() >= 5, "registry too small: {registry:?}");
+    check(0x5AAD, 10, gen_pair, |(a, b)| {
+        for kernel in registry.kernels() {
+            let name = kernel.name();
+            let prepared = kernel
+                .prepare(b)
+                .map_err(|e| format!("{name} prepare failed: {e}"))?;
+            let unsharded = kernel
+                .execute(a, &prepared)
+                .map_err(|e| format!("{name} unsharded failed: {e}"))?;
+            let want = bits(&unsharded.c);
+            let mut one_shard: Option<Vec<u32>> = None;
+            for shards in SHARD_COUNTS {
+                let cfg = ShardConfig { shards, block: BLOCK };
+                let out = shard::execute(kernel.as_ref(), a, Some(b), &prepared, cfg)
+                    .map_err(|e| format!("{name} @ {shards} shards failed: {e}"))?;
+                let got = bits(&out.c);
+                if got != want {
+                    return Err(format!(
+                        "{name} @ {shards} shards diverges bitwise from unsharded \
+                         on {:?}×{:?}",
+                        a.shape(),
+                        b.shape()
+                    ));
+                }
+                match &one_shard {
+                    None => one_shard = Some(got),
+                    Some(first) => {
+                        if &got != first {
+                            return Err(format!(
+                                "{name} @ {shards} shards diverges from 1-shard"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A matrix with a completely empty row band (rows 16..32 of 64) shards
+/// bit-identically — the empty band yields zero rows, not a skew.
+#[test]
+fn empty_row_band_edge_case() {
+    let mut entries = Vec::new();
+    let mut rng = Rng::new(42);
+    for i in 0..64u32 {
+        if (16..32).contains(&i) {
+            continue; // the dead band
+        }
+        for j in 0..48u32 {
+            if rng.f64() < 0.2 {
+                entries.push((i, j, rng.f32() + 0.25));
+            }
+        }
+    }
+    let a = Csr::from_coo(&Coo::new(64, 48, entries));
+    let b = uniform(48, 40, 0.2, 7);
+    for kernel in registry().kernels() {
+        let prepared = kernel.prepare(&b).unwrap();
+        let want = bits(&kernel.execute(&a, &prepared).unwrap().c);
+        for shards in [2usize, 4, 8] {
+            let out = shard::execute(
+                kernel.as_ref(),
+                &a,
+                Some(&b),
+                &prepared,
+                ShardConfig { shards, block: BLOCK },
+            )
+            .unwrap();
+            assert_eq!(
+                bits(&out.c),
+                want,
+                "{} with empty band @ {shards} shards",
+                kernel.name()
+            );
+        }
+    }
+}
+
+/// More shards than rows (and than block rows): the planner caps at the
+/// available block rows and the output is still exact.
+#[test]
+fn shards_exceeding_rows_edge_case() {
+    let a = uniform(3, 20, 0.5, 1);
+    let b = uniform(20, 10, 0.4, 2);
+    for kernel in registry().kernels() {
+        let prepared = kernel.prepare(&b).unwrap();
+        let want = bits(&kernel.execute(&a, &prepared).unwrap().c);
+        let out = shard::execute(
+            kernel.as_ref(),
+            &a,
+            Some(&b),
+            &prepared,
+            ShardConfig { shards: 8, block: BLOCK },
+        )
+        .unwrap();
+        assert_eq!(bits(&out.c), want, "{}", kernel.name());
+        assert_eq!(out.shards.len(), 1, "3 rows = 1 block row = 1 band");
+    }
+}
+
+/// Planner invariants on random inputs: bands are contiguous, block-
+/// aligned, cover every row exactly once, and never exceed the request.
+#[test]
+fn planner_invariants_hold_on_random_inputs() {
+    check(0x81A2, 40, gen_pair, |(a, b)| {
+        for shards in SHARD_COUNTS {
+            let plan = ShardPlanner::plan(a, Some(b), ShardConfig { shards, block: BLOCK });
+            if a.rows() == 0 {
+                continue;
+            }
+            if plan.bands.is_empty() {
+                return Err(format!("no bands for {} rows", a.rows()));
+            }
+            if plan.bands.len() > shards {
+                return Err(format!(
+                    "{} bands exceed {shards} requested",
+                    plan.bands.len()
+                ));
+            }
+            if plan.bands[0].rows.0 != 0
+                || plan.bands.last().unwrap().rows.1 != a.rows()
+            {
+                return Err("bands do not cover the row range".into());
+            }
+            for w in plan.bands.windows(2) {
+                if w[0].rows.1 != w[1].rows.0 {
+                    return Err("bands are not contiguous".into());
+                }
+            }
+            for band in &plan.bands {
+                if band.rows.0 % BLOCK != 0 {
+                    return Err(format!("band start {} unaligned", band.rows.0));
+                }
+                if band.rows.1 <= band.rows.0 {
+                    return Err("empty band".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The registry-wrapper path: `ShardedKernel` replaces its inner kernel's
+/// key and every resolution through the registry is bit-identical.
+#[test]
+fn sharded_wrapper_behind_the_registry_is_bit_identical() {
+    check(0xC0DE, 8, gen_pair, |(a, b)| {
+        let mut reg = registry();
+        let keys = reg.keys();
+        for key in keys {
+            let inner = reg.resolve(key.0, key.1).unwrap();
+            let want = bits(
+                &inner
+                    .run(a, b)
+                    .map_err(|e| format!("{} inner failed: {e}", inner.name()))?
+                    .c,
+            );
+            reg.register(Arc::new(ShardedKernel::wrap(
+                Arc::clone(&inner),
+                ShardConfig { shards: 3, block: BLOCK },
+            )));
+            let wrapped = reg.resolve(key.0, key.1).unwrap();
+            if wrapped.name() != "sharded" {
+                return Err(format!("{key:?} did not re-resolve to the wrapper"));
+            }
+            let got = bits(
+                &wrapped
+                    .run(a, b)
+                    .map_err(|e| format!("wrapped {key:?} failed: {e}"))?
+                    .c,
+            );
+            if got != want {
+                return Err(format!("wrapped {key:?} diverges bitwise"));
+            }
+            reg.register(inner); // restore for the next key
+        }
+        Ok(())
+    });
+}
+
+/// Work conservation: bands partition the work exactly for kernels whose
+/// unit counts are row-decomposable (tiled tile pairs, Gustavson MACs).
+#[test]
+fn shard_stats_conserve_work_counts() {
+    let reg = registry();
+    let a = uniform(96, 64, 0.15, 31);
+    let b = uniform(64, 52, 0.15, 32);
+    for key in [
+        (spmm_accel::formats::traits::FormatKind::Csr, Algorithm::Tiled),
+        (spmm_accel::formats::traits::FormatKind::Csr, Algorithm::Gustavson),
+    ] {
+        let kernel = reg.resolve(key.0, key.1).unwrap();
+        let prepared = kernel.prepare(&b).unwrap();
+        let whole = kernel.execute(&a, &prepared).unwrap();
+        let out = shard::execute(
+            kernel.as_ref(),
+            &a,
+            Some(&b),
+            &prepared,
+            ShardConfig { shards: 4, block: BLOCK },
+        )
+        .unwrap();
+        assert_eq!(
+            out.stats.real_pairs,
+            whole.stats.real_pairs,
+            "{:?} loses or duplicates work",
+            key
+        );
+        let per_band: u64 = out.shards.iter().map(|s| s.stats.real_pairs).sum();
+        assert_eq!(per_band, out.stats.real_pairs);
+    }
+}
