@@ -73,7 +73,14 @@ fn main() {
         let incrs = match InCrs::from_csr_params(&m, params) {
             Ok(x) => x,
             Err(e) => {
-                t2.row(vec![b.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), e]);
+                t2.row(vec![
+                    b.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    e.to_string(),
+                ]);
                 continue;
             }
         };

@@ -1,15 +1,19 @@
 //! End-to-end numeric-path benchmarks through the unified engine: plan
 //! construction, registered-kernel execution, serial-vs-parallel tiled
 //! execution on the synthetic 4096² dataset, a 1/2/4/8-shard row-band
-//! sweep, and served throughput through the coordinator. Writes
-//! machine-readable summaries to `BENCH_engine.json` (override with
-//! `SPMM_BENCH_OUT`) and `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`).
+//! sweep, a native-format ingestion sweep (conversion cost included), and
+//! served throughput through the coordinator. Writes machine-readable
+//! summaries to `BENCH_engine.json` (override with `SPMM_BENCH_OUT`),
+//! `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`), and `BENCH_format.json`
+//! (`SPMM_BENCH_FORMAT_OUT`).
 
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{JobHandle, Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::{shard, tiled, Registry, ShardConfig, SpmmKernel, TiledConfig, TiledKernel};
+use spmm_accel::formats::traits::FormatKind;
+use spmm_accel::formats::MatrixOperand;
 use spmm_accel::runtime::{Manifest, NumericEngine};
 use spmm_accel::spmm::plan::{plan, Geometry};
 use spmm_accel::util::bench::{bench, black_box, report};
@@ -161,6 +165,87 @@ fn main() {
     match std::fs::write(&shard_out_path, shard_summary.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {shard_out_path}"),
         Err(e) => println!("could not write {shard_out_path}: {e}"),
+    }
+
+    // native-format ingestion sweep: the same multiply with operands
+    // arriving in Coo / InCRS / CSR, conversion cost included — the
+    // ingestion path (MatrixOperand::to_csr) + prepare + execute, measured
+    // end to end on the tiled kernel
+    let fa = Arc::new(uniform(1024, 1024, 0.01, 21));
+    let fb = Arc::new(uniform(1024, 1024, 0.01, 22));
+    let ingest_kernel = TiledKernel::new(TiledConfig { block: 32, workers: 4 });
+    let mut format_sweep: Vec<Json> = Vec::new();
+    let mut csr_bits: Option<Vec<u32>> = None;
+    for kind in [FormatKind::Csr, FormatKind::Coo, FormatKind::InCrs] {
+        let a_native = MatrixOperand::from(Arc::clone(&fa)).convert(kind).unwrap();
+        let b_native = MatrixOperand::from(Arc::clone(&fb)).convert(kind).unwrap();
+        let r = bench(1, 3, || {
+            let a_csr = a_native.to_csr().unwrap();
+            let b_csr = b_native.to_csr().unwrap();
+            let prepared = ingest_kernel.prepare_shared(&b_csr).unwrap();
+            black_box(
+                ingest_kernel
+                    .execute(&a_csr, &prepared)
+                    .unwrap()
+                    .stats
+                    .real_pairs,
+            );
+        });
+        let out = ingest_kernel
+            .execute(
+                &a_native.to_csr().unwrap(),
+                &ingest_kernel
+                    .prepare_shared(&b_native.to_csr().unwrap())
+                    .unwrap(),
+            )
+            .unwrap();
+        let bits = out.c.bit_pattern();
+        let bit_identical = match &csr_bits {
+            None => {
+                csr_bits = Some(bits);
+                true
+            }
+            Some(base) => base == &bits,
+        };
+        let ms = r.median.as_secs_f64() * 1e3;
+        report(
+            &format!("ingest/{}(1024x1024 @ 1%)", kind.name()),
+            r,
+            out.stats.real_pairs as f64 * (32.0 * 32.0 * 32.0),
+            "MACs",
+        );
+        println!(
+            "ingest sweep {}: {:.1}ms (conversion ~{:.0}+{:.0} words), bit-identical: {bit_identical}",
+            kind.name(),
+            ms,
+            a_native.conversion_words(),
+            b_native.conversion_words(),
+        );
+        format_sweep.push(obj([
+            ("format", Json::from(kind.name())),
+            ("median_ms", Json::from(ms)),
+            (
+                "conversion_words",
+                Json::from(a_native.conversion_words() + b_native.conversion_words()),
+            ),
+            ("tile_pairs", Json::from(out.stats.real_pairs)),
+            ("bit_identical_to_csr", Json::Bool(bit_identical)),
+        ]));
+    }
+    let format_out_path = std::env::var("SPMM_BENCH_FORMAT_OUT")
+        .unwrap_or_else(|_| "BENCH_format.json".into());
+    let format_summary = obj([
+        ("bench", Json::from("bench_e2e/format")),
+        (
+            "dataset",
+            Json::from("uniform 1024x1024, density 0.01, seeds 21/22"),
+        ),
+        ("kernel", Json::from("tiled (4 workers, block 32)")),
+        ("sweep", Json::Arr(format_sweep)),
+    ]);
+    match std::fs::write(&format_out_path, format_summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {format_out_path}"),
+        Err(e) => println!("could not write {format_out_path}: {e}"),
     }
 
     // served throughput: 16 jobs through 4 CPU workers via the client API

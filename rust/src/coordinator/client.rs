@@ -2,7 +2,9 @@
 //! construction, and [`JobHandle`] futures.
 //!
 //! A client is a cheap, cloneable, `Send` handle onto a running
-//! [`super::server::Server`] (`server.client()`). Submission returns a
+//! [`super::server::Server`] (`server.client()`). Jobs ingest typed
+//! [`MatrixOperand`]s — any Table-I storage format, CSR staying zero-cost
+//! via `Arc` identity. Submission returns a
 //! [`JobHandle`] — a one-shot future over the job's reply channel with
 //! blocking (`wait`), bounded (`wait_timeout`), and non-blocking
 //! (`try_poll`) completion, plus [`JobHandle::batch_wait_all`] for fleets.
@@ -27,7 +29,7 @@ use super::job::{JobOptions, JobOutput, JobResult, SpmmJob};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::server::{Envelope, JobEnvelope};
 use crate::engine::Algorithm;
-use crate::formats::csr::Csr;
+use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::FormatKind;
 
 /// Cloneable, thread-safe handle for submitting SpMM jobs to a server.
@@ -49,13 +51,21 @@ impl SpmmClient {
         SpmmClient { tx, metrics, closed, next_id }
     }
 
-    /// Start building a job for `C = A × B`. IDs are assigned from the
-    /// server-wide counter unless overridden with [`JobBuilder::id`].
-    pub fn job(&self, a: Arc<Csr>, b: Arc<Csr>) -> JobBuilder<'_> {
+    /// Start building a job for `C = A × B`. Operands may arrive in **any**
+    /// storage format (anything `Into<MatrixOperand>`: an `Arc<Csr>` as
+    /// before — still zero-cost — or a `Coo`/`InCrs`/`Ellpack`/… handle);
+    /// the server ingests, costs, and converts as needed, bit-identically
+    /// to pre-converted submission. IDs are assigned from the server-wide
+    /// counter unless overridden with [`JobBuilder::id`].
+    pub fn job(
+        &self,
+        a: impl Into<MatrixOperand>,
+        b: impl Into<MatrixOperand>,
+    ) -> JobBuilder<'_> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         JobBuilder {
             client: self,
-            job: SpmmJob::new(id, a, b),
+            job: SpmmJob::from_operands(id, a, b),
         }
     }
 

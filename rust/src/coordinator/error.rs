@@ -9,6 +9,7 @@
 use std::fmt;
 
 use crate::engine::{Algorithm, EngineError};
+use crate::formats::error::FormatError;
 use crate::formats::traits::FormatKind;
 
 /// Why a job failed. Implements [`std::error::Error`]; `Display` keeps the
@@ -30,6 +31,9 @@ pub enum JobError {
         a: (usize, usize),
         b: (usize, usize),
     },
+    /// An operand could not be ingested/converted (formats-layer failure,
+    /// lifted losslessly — e.g. an InCRS counter overflow on conversion).
+    Format(FormatError),
     /// The kernel's prepare or execute step failed.
     ExecFailed(String),
     /// The server shut down before the job could complete (or the reply
@@ -52,8 +56,15 @@ impl From<EngineError> for JobError {
                 JobError::KernelUnavailable { format, algorithm }
             }
             EngineError::ShapeMismatch { a, b } => JobError::ShapeMismatch { a, b },
+            EngineError::Format(fe) => JobError::Format(fe),
             EngineError::ExecFailed(msg) => JobError::ExecFailed(msg),
         }
+    }
+}
+
+impl From<FormatError> for JobError {
+    fn from(e: FormatError) -> JobError {
+        JobError::Format(e)
     }
 }
 
@@ -69,6 +80,7 @@ impl fmt::Display for JobError {
             JobError::ShapeMismatch { a, b } => {
                 write!(w, "dimension mismatch: A is {a:?}, B is {b:?}")
             }
+            JobError::Format(e) => write!(w, "format error: {e}"),
             JobError::ExecFailed(msg) => write!(w, "execution failed: {msg}"),
             JobError::Shutdown => write!(w, "server shut down"),
         }
@@ -116,6 +128,17 @@ mod tests {
         assert!(JobError::Shutdown.is_transient());
         assert!(!JobError::ShapeMismatch { a: (1, 1), b: (2, 2) }.is_transient());
         assert!(!JobError::ExecFailed("x".into()).is_transient());
+        assert!(!JobError::Format(FormatError::UnknownFormat("x".into())).is_transient());
+    }
+
+    #[test]
+    fn format_errors_lift_losslessly() {
+        let fe = FormatError::UnknownFormat("nope".into());
+        assert_eq!(JobError::from(fe.clone()), JobError::Format(fe.clone()));
+        assert_eq!(
+            JobError::from(EngineError::Format(fe.clone())),
+            JobError::Format(fe)
+        );
     }
 
     #[test]

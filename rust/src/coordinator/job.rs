@@ -8,14 +8,17 @@ use super::error::JobError;
 use crate::engine::{Algorithm, ExecStats};
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
+use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::FormatKind;
 
-/// What the caller wants done.
+/// What the caller wants done. Operands are typed [`MatrixOperand`]
+/// handles — any Table-I format, submitted as it arrived; cloning a job is
+/// two `Arc` bumps.
 #[derive(Clone)]
 pub struct SpmmJob {
     pub id: u64,
-    pub a: Arc<Csr>,
-    pub b: Arc<Csr>,
+    pub a: MatrixOperand,
+    pub b: MatrixOperand,
     pub opts: JobOptions,
 }
 
@@ -69,13 +72,26 @@ pub struct JobOutput {
 }
 
 impl SpmmJob {
-    pub fn new(id: u64, a: Arc<Csr>, b: Arc<Csr>) -> SpmmJob {
+    /// The primary constructor: operands in any native format ([`Csr`],
+    /// [`crate::formats::Coo`], [`crate::formats::InCrs`], … — anything
+    /// `Into<MatrixOperand>`, owned or `Arc`-wrapped).
+    pub fn from_operands(
+        id: u64,
+        a: impl Into<MatrixOperand>,
+        b: impl Into<MatrixOperand>,
+    ) -> SpmmJob {
         SpmmJob {
             id,
-            a,
-            b,
+            a: a.into(),
+            b: b.into(),
             opts: JobOptions::default(),
         }
+    }
+
+    /// CSR-only construction — the pre-operand API, kept as a one-release
+    /// shim. Prefer [`SpmmJob::from_operands`].
+    pub fn new(id: u64, a: Arc<Csr>, b: Arc<Csr>) -> SpmmJob {
+        Self::from_operands(id, a, b)
     }
 
     pub fn with_opts(mut self, opts: JobOptions) -> SpmmJob {
@@ -100,6 +116,7 @@ impl SpmmJob {
 mod tests {
     use super::*;
     use crate::datasets::synth::uniform;
+    use crate::formats::traits::SparseMatrix;
 
     #[test]
     fn job_construction() {
@@ -131,5 +148,20 @@ mod tests {
         let j = SpmmJob::new(1, a.clone(), a)
             .with_kernel(FormatKind::InCrs, Algorithm::Inner);
         assert_eq!(j.opts.kernel, Some((FormatKind::InCrs, Algorithm::Inner)));
+    }
+
+    #[test]
+    fn operands_arrive_in_any_format() {
+        let csr = uniform(6, 6, 0.5, 2);
+        let coo = csr.to_coo();
+        let j = SpmmJob::from_operands(3, coo, Arc::new(csr));
+        assert_eq!(j.a.format(), FormatKind::Coo);
+        assert_eq!(j.b.format(), FormatKind::Csr);
+        assert_eq!(j.a.shape(), j.b.shape());
+        // the CSR shim wraps into the same typed operand
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let legacy = SpmmJob::new(1, a.clone(), a);
+        assert_eq!(legacy.a.format(), FormatKind::Csr);
+        assert!(legacy.a.same_source(&legacy.b));
     }
 }

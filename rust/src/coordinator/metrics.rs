@@ -72,6 +72,10 @@ pub struct Metrics {
     /// Jobs beyond the first in each sharing group — multiplies that rode
     /// on a batch-mate's prepare (the paper's amortization, measured).
     pub coalesced_jobs: AtomicU64,
+    /// Operand→canonical-CSR conversions performed at ingestion (non-CSR
+    /// `MatrixOperand` submissions; identity-memoized, so steady-state
+    /// traffic reusing an operand handle converts once per worker).
+    pub operand_conversions: AtomicU64,
     /// Jobs that executed through the row-band shard path (`shards > 1`).
     pub sharded_jobs: AtomicU64,
     /// Row-band shards executed across all sharded jobs.
@@ -127,6 +131,7 @@ impl Metrics {
             prepare_cache_hits: self.prepare_cache_hits.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             coalesced_jobs: self.coalesced_jobs.load(Ordering::Relaxed),
+            operand_conversions: self.operand_conversions.load(Ordering::Relaxed),
             sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
             shards_executed: self.shards_executed.load(Ordering::Relaxed),
             shard_failures: self.shard_failures.load(Ordering::Relaxed),
@@ -155,6 +160,7 @@ pub struct MetricsSnapshot {
     pub prepare_cache_hits: u64,
     pub coalesced_batches: u64,
     pub coalesced_jobs: u64,
+    pub operand_conversions: u64,
     pub sharded_jobs: u64,
     pub shards_executed: u64,
     pub shard_failures: u64,

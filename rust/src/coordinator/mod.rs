@@ -4,9 +4,12 @@
 //! * [`client`] — **the public serving API**: [`SpmmClient`] handles,
 //!   [`JobBuilder`] construction, [`JobHandle`] futures
 //!   (`wait`/`wait_timeout`/`try_poll`/`batch_wait_all`), and batch entry
-//!   points (`submit_many`/`stream`).
+//!   points (`submit_many`/`stream`). Jobs ingest typed
+//!   [`crate::formats::MatrixOperand`]s — any Table-I format, CSR staying
+//!   zero-cost.
 //! * [`error`] — typed [`JobError`] (queue full, kernel unavailable, shape
-//!   mismatch, exec failure, shutdown); engine errors lift via `From`.
+//!   mismatch, format/ingestion failure, exec failure, shutdown); engine
+//!   and formats errors lift via `From`.
 //! * [`job`] — SpMM job descriptors/results (with per-job kernel override).
 //! * [`router`] — format strategy (InCRS or not) + kernel-key selection
 //!   over the engine registry, the paper's §II/§III decision as an

@@ -7,14 +7,20 @@
 //! flight); each worker owns its own kernel registry (PJRT clients are not
 //! shared across threads) and drains the queue in micro-batches bounded to
 //! the current shared-`B` run (so unrelated bursts still fan out across
-//! workers). Within a batch, jobs resolving to the same kernel share one
-//! [`SpmmKernel::prepare`]: conversion kernels (InCRS, Dense) are keyed by
-//! a content fingerprint of `B` — bit-identical operands share even across
-//! `Arc`s and, via a bounded per-worker LRU, across batches — while
-//! CSR-consuming kernels group by `Arc` identity and skip hashing
-//! entirely (their prepare is already an O(1) `Arc` share). This is the
-//! paper's amortization — one representation build, many multiplies —
-//! applied at the serving layer.
+//! workers). Jobs ingest typed `MatrixOperand`s: workers render each
+//! operand to canonical CSR on arrival (O(1) `Arc` share for CSR,
+//! identity-memoized conversion otherwise — metered as
+//! `operand_conversions`), and auto-selection charges that conversion from
+//! the operand's *native* format (`Registry::select_native`). Within a
+//! batch, jobs resolving to the same kernel share one
+//! [`SpmmKernel::prepare`]: real-prepare kernels (InCRS counter build,
+//! densification, tiled/accel blockization) are keyed by a content
+//! fingerprint of `B` — bit-identical operands share even across `Arc`s
+//! and, via a bounded per-worker LRU, across batches — while
+//! trivial-prepare kernels group by `Arc` identity and skip hashing
+//! entirely (their prepare is an O(1) `Arc` share). This is the paper's
+//! amortization — one representation build, many multiplies — applied at
+//! the serving layer.
 //!
 //! Shutdown drains: [`Server::shutdown`] marks the server closed, sends one
 //! stop pill per worker, and joins them. Pills queue *behind* every
@@ -36,9 +42,11 @@ use super::job::{JobOutput, JobResult, SpmmJob};
 use super::metrics::Metrics;
 use super::router::KernelSpec;
 use crate::engine::{
-    shard, AccelKernel, EngineError, FingerprintMemo, PreparedCache, PreparedKey,
-    Registry, SpmmKernel,
+    shard, AccelKernel, CsrMemo, EngineError, FingerprintMemo, PreparedCache,
+    PreparedKey, Registry, SpmmKernel,
 };
+use crate::formats::csr::Csr;
+use crate::formats::operand::MatrixOperand;
 use crate::spmm::plan::Geometry;
 
 /// Micro-batch coalescing policy (per worker).
@@ -320,6 +328,9 @@ fn worker_loop(
     // content fingerprints memoized by Arc identity across batches (the
     // memo pins each Arc, so pointers can't be recycled under it)
     let mut fp_memo = FingerprintMemo::new(cap);
+    // operand→CSR ingestion conversions, memoized by source identity so
+    // steady-state non-CSR traffic converts once per worker, not per job
+    let mut csr_memo = CsrMemo::new(cap.max(4) * 2);
 
     loop {
         let mut batch: Vec<JobEnvelope> = Vec::new();
@@ -345,7 +356,7 @@ fn worker_loop(
                 while batch.len() < cfg.coalesce.max_batch.max(1) {
                     match guard.try_recv() {
                         Ok(Envelope::Job(je)) => {
-                            let same_b = Arc::ptr_eq(&je.job.b, &batch[0].job.b);
+                            let same_b = je.job.b.same_source(&batch[0].job.b);
                             batch.push(je);
                             if !same_b {
                                 break;
@@ -361,7 +372,15 @@ fn worker_loop(
                 }
             }
         } // queue unlocked while the batch executes
-        run_batch(&registry, &cfg, &mut cache, &mut fp_memo, batch, &metrics);
+        run_batch(
+            &registry,
+            &cfg,
+            &mut cache,
+            &mut fp_memo,
+            &mut csr_memo,
+            batch,
+            &metrics,
+        );
         if saw_stop {
             return;
         }
@@ -369,24 +388,34 @@ fn worker_loop(
 }
 
 /// Jobs in one micro-batch that share a `PreparedB`: same `B` content
-/// fingerprint, same resolved kernel.
+/// fingerprint, same resolved kernel. Each envelope rides with its own
+/// ingested (canonical-CSR) `A`; `b_csr`/`native` come from the group's
+/// first job.
 struct PrepGroup {
     key: PreparedKey,
     kernel: Arc<dyn SpmmKernel>,
-    envs: Vec<JobEnvelope>,
+    /// The first job's `B` as it arrived (for native-representation
+    /// adoption in `prepare_operand`).
+    native: MatrixOperand,
+    b_csr: Arc<Csr>,
+    envs: Vec<(JobEnvelope, Arc<Csr>)>,
 }
 
-/// Resolve the kernel for `job` (per-job override > server spec).
+/// Resolve the kernel for `job` (per-job override > server spec). Auto
+/// selection is operand-aware: conversion cost is charged from `B`'s
+/// native arrival format.
 fn resolve_kernel(
     registry: &Registry,
     spec: KernelSpec,
     job: &SpmmJob,
+    a: &Csr,
+    b: &Csr,
 ) -> Result<Arc<dyn SpmmKernel>, EngineError> {
     match job.opts.kernel {
         Some((f, alg)) => registry.resolve_or_err(f, alg),
         None => match spec {
             KernelSpec::Fixed(f, alg) => registry.resolve_or_err(f, alg),
-            KernelSpec::Auto => registry.select_or_err(&job.a, &job.b),
+            KernelSpec::Auto => registry.select_native_or_err(a, b, Some(&job.b)),
         },
     }
 }
@@ -403,18 +432,19 @@ fn reply_err(env: JobEnvelope, err: JobError, metrics: &Metrics, batch_start: In
     });
 }
 
-/// Execute one micro-batch: group by (B fingerprint, kernel), prepare once
-/// per group (LRU-cached across batches), execute each job.
+/// Execute one micro-batch: ingest each job's operands to canonical CSR
+/// (memoized by source identity; conversions are metered), group by (B
+/// fingerprint, kernel), prepare once per group (LRU-cached across
+/// batches), execute each job.
 fn run_batch(
     registry: &Registry,
     cfg: &ServerConfig,
     cache: &mut PreparedCache,
     fp_memo: &mut FingerprintMemo,
+    csr_memo: &mut CsrMemo,
     batch: Vec<JobEnvelope>,
     metrics: &Metrics,
 ) {
-    use crate::formats::traits::{FormatKind, SparseMatrix};
-
     // service latency is dequeue -> response ready: every job in this
     // batch was dequeued "now", so each one's latency (observed at reply
     // time below) includes group prepare and waiting behind batch-mates
@@ -423,13 +453,7 @@ fn run_batch(
 
     for env in batch {
         metrics.observe_queue_wait(env.enqueued.elapsed());
-        let kernel = match resolve_kernel(registry, cfg.kernel, &env.job) {
-            Ok(k) => k,
-            Err(e) => {
-                reply_err(env, e.into(), metrics, batch_start);
-                continue;
-            }
-        };
+        // shape check on the native operands, before any conversion
         if env.job.a.cols() != env.job.b.rows() {
             let err = JobError::ShapeMismatch {
                 a: env.job.a.shape(),
@@ -438,16 +462,47 @@ fn run_batch(
             reply_err(env, err, metrics, batch_start);
             continue;
         }
-        // CSR-consuming kernels have an O(1) prepare (Arc share): group
-        // them by Arc identity and never pay an O(nnz) content hash for
-        // them. Conversion kernels (InCRS, Dense) key by content so the
-        // cross-batch cache amortizes their real prepare cost; with
-        // coalescing off (single-job batches, no cache) no hash is needed
-        // at all — exactly the PR 1 per-job path.
-        let fingerprint = if kernel.format() == FormatKind::Csr {
-            Arc::as_ptr(&env.job.b) as usize as u64
+        // ingest: canonical CSR views of both operands (O(1) Arc share for
+        // CSR arrivals; conversion memoized by source identity otherwise)
+        let conv_before = csr_memo.conversions();
+        let t_ingest = Instant::now();
+        let ingested = match csr_memo.get(&env.job.a) {
+            Ok(a) => csr_memo.get(&env.job.b).map(|b| (a, b)),
+            Err(e) => Err(e),
+        };
+        metrics
+            .busy_ns
+            .fetch_add(t_ingest.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let converted = csr_memo.conversions() - conv_before;
+        if converted > 0 {
+            metrics
+                .operand_conversions
+                .fetch_add(converted, Ordering::Relaxed);
+        }
+        let (a_csr, b_csr) = match ingested {
+            Ok(pair) => pair,
+            Err(e) => {
+                reply_err(env, JobError::from(e), metrics, batch_start);
+                continue;
+            }
+        };
+        let kernel = match resolve_kernel(registry, cfg.kernel, &env.job, &a_csr, &b_csr) {
+            Ok(k) => k,
+            Err(e) => {
+                reply_err(env, e.into(), metrics, batch_start);
+                continue;
+            }
+        };
+        // Trivial-prepare kernels (plain-CSR consumers) have an O(1)
+        // prepare (Arc share): group them by Arc identity of the ingested
+        // CSR and never pay an O(nnz) content hash. Real-prepare kernels
+        // (InCRS build, densification, blockization) key by content so the
+        // cross-batch cache amortizes their prepare; with coalescing off
+        // (single-job batches, no cache) no hash is needed at all.
+        let fingerprint = if kernel.prepare_is_trivial() {
+            Arc::as_ptr(&b_csr) as usize as u64
         } else if cfg.coalesce.enabled {
-            fp_memo.get(&env.job.b)
+            fp_memo.get(&b_csr)
         } else {
             0
         };
@@ -457,22 +512,30 @@ fn run_batch(
             algorithm: kernel.algorithm(),
         };
         match groups.iter_mut().find(|g| g.key == key) {
-            Some(g) => g.envs.push(env),
-            None => groups.push(PrepGroup { key, kernel, envs: vec![env] }),
+            Some(g) => g.envs.push((env, a_csr)),
+            None => {
+                let native = env.job.b.clone();
+                groups.push(PrepGroup {
+                    key,
+                    kernel,
+                    native,
+                    b_csr,
+                    envs: vec![(env, a_csr)],
+                });
+            }
         }
     }
 
-    for PrepGroup { key, kernel, envs } in groups {
-        let b = Arc::clone(&envs[0].job.b);
+    for PrepGroup { key, kernel, native, b_csr, envs } in groups {
         let t_prep = Instant::now();
-        // CSR keys are Arc identities (only unique within this batch), so
-        // they bypass the content-keyed cross-batch cache — their prepare
-        // is a free Arc share anyway
-        let (prepared, built) = if key.format == FormatKind::Csr {
-            (kernel.prepare_shared(&b), true)
+        // trivial keys are Arc identities (only unique within this batch),
+        // so they bypass the content-keyed cross-batch cache — their
+        // prepare is a free Arc share anyway
+        let (prepared, built) = if kernel.prepare_is_trivial() {
+            (kernel.prepare_operand(&native, &b_csr), true)
         } else {
             let builds_before = cache.builds();
-            let p = cache.get_or_build(key, &b, |b| kernel.prepare_shared(b));
+            let p = cache.get_or_build(key, &b_csr, |b| kernel.prepare_operand(&native, b));
             let built = cache.builds() > builds_before;
             (p, built)
         };
@@ -483,7 +546,7 @@ fn run_batch(
             Ok(p) => p,
             Err(e) => {
                 let err = JobError::from(e);
-                for env in envs {
+                for (env, _) in envs {
                     reply_err(env, err.clone(), metrics, batch_start);
                 }
                 continue;
@@ -501,9 +564,10 @@ fn run_batch(
                 .fetch_add(envs.len() as u64 - 1, Ordering::Relaxed);
         }
 
-        for env in envs {
+        for (env, a_csr) in envs {
             let start = Instant::now();
-            let result = exec_one(kernel.as_ref(), &env.job, &prepared, cfg, metrics);
+            let result =
+                exec_one(kernel.as_ref(), &env.job, &a_csr, &b_csr, &prepared, cfg, metrics);
             metrics
                 .busy_ns
                 .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -539,6 +603,8 @@ fn run_batch(
 fn exec_one(
     kernel: &dyn SpmmKernel,
     job: &SpmmJob,
+    a_csr: &Arc<Csr>,
+    b_csr: &Arc<Csr>,
     prepared: &crate::engine::PreparedB,
     cfg: &ServerConfig,
     metrics: &Metrics,
@@ -553,7 +619,7 @@ fn exec_one(
             shards,
             block: cfg.geometry.block,
         };
-        let out = shard::execute(kernel, &job.a, Some(&job.b), prepared, shard_cfg)
+        let out = shard::execute(kernel, a_csr, Some(b_csr.as_ref()), prepared, shard_cfg)
             .map_err(|e| {
                 metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
                 JobError::from(e)
@@ -569,11 +635,11 @@ fn exec_one(
         let bands = out.shards.len().max(1);
         (out.c, out.stats, bands)
     } else {
-        let out = kernel.execute(&job.a, prepared)?;
+        let out = kernel.execute(a_csr, prepared)?;
         (out.c, out.stats, 1)
     };
     let max_err = if job.opts.verify {
-        let oracle = crate::spmm::dense::multiply(&job.a, &job.b);
+        let oracle = crate::spmm::dense::multiply(a_csr, b_csr);
         Some(c.max_abs_diff(&oracle))
     } else {
         None
@@ -594,7 +660,7 @@ mod tests {
     use crate::coordinator::job::JobOptions;
     use crate::datasets::synth::uniform;
     use crate::engine::Algorithm;
-    use crate::formats::traits::FormatKind;
+    use crate::formats::traits::{FormatKind, SparseMatrix};
 
     fn cpu_server(workers: usize, depth: usize) -> Server {
         Server::start(ServerConfig {
@@ -825,6 +891,58 @@ mod tests {
         let out = rx.recv().unwrap().result.unwrap();
         assert_eq!(out.backend, "sharded");
         assert!(out.max_err.unwrap() < 1e-3);
+        s.shutdown();
+    }
+
+    #[test]
+    fn non_csr_operands_serve_bit_identically_to_csr() {
+        let s = cpu_server(1, 8);
+        let client = s.client();
+        let a = Arc::new(uniform(40, 32, 0.2, 30));
+        let b = Arc::new(uniform(32, 24, 0.2, 31));
+        let a_coo = MatrixOperand::from(Arc::clone(&a))
+            .convert(FormatKind::Coo)
+            .unwrap();
+        let b_ell = MatrixOperand::from(Arc::clone(&b))
+            .convert(FormatKind::Ellpack)
+            .unwrap();
+        let want = client
+            .job(Arc::clone(&a), Arc::clone(&b))
+            .kernel(FormatKind::Csr, Algorithm::Tiled)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        let got = client
+            .job(a_coo, b_ell)
+            .kernel(FormatKind::Csr, Algorithm::Tiled)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            want.c.as_ref().unwrap().bit_pattern(),
+            got.c.as_ref().unwrap().bit_pattern(),
+            "native-format submission diverges from pre-converted CSR"
+        );
+        let snap = client.metrics();
+        assert!(snap.operand_conversions >= 2, "{snap:?}");
+        assert_eq!(snap.jobs_failed, 0);
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn operand_shape_mismatch_is_checked_before_conversion() {
+        let s = cpu_server(1, 2);
+        let client = s.client();
+        let a = uniform(4, 5, 0.5, 1).to_coo();
+        let b = uniform(7, 4, 0.5, 2).to_coo();
+        let err = client.job(a, b).submit().unwrap().wait().unwrap_err();
+        assert_eq!(err, JobError::ShapeMismatch { a: (4, 5), b: (7, 4) });
+        // nothing was converted for the doomed job
+        assert_eq!(client.metrics().operand_conversions, 0);
+        drop(client);
         s.shutdown();
     }
 

@@ -7,6 +7,7 @@
 //! other registered kernel.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::formats::csr::Csr;
 use crate::formats::traits::{FormatKind, SparseMatrix};
@@ -15,7 +16,7 @@ use crate::spmm::plan::Geometry;
 
 use super::error::EngineError;
 use super::kernel::{
-    wrong_operand, Algorithm, CostHint, EngineOutput, PreparedB, SpmmKernel,
+    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, PreparedB, SpmmKernel,
 };
 
 // NOTE on `SpmmKernel: Send + Sync` and the `pjrt` feature: each server
@@ -81,20 +82,38 @@ impl SpmmKernel for AccelKernel {
         self.engine.geometry().block
     }
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
-        Ok(PreparedB::Csr(std::sync::Arc::new(b.clone())))
+        // B is blockized HERE, once, at the engine's own geometry —
+        // execute (and every shard worker sharing this PreparedB) plans
+        // from the prebuilt grid
+        Ok(PreparedB::Blocked(Arc::new(BlockedB::build(
+            Arc::new(b.clone()),
+            self.engine.geometry().block,
+        ))))
+    }
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Blocked(Arc::new(BlockedB::build(
+            Arc::clone(b),
+            self.engine.geometry().block,
+        ))))
+    }
+    fn prepare_is_trivial(&self) -> bool {
+        false // blockization is a real O(nnz) build worth caching
     }
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
-        let bc = match b {
-            PreparedB::Csr(m) => m,
+        let bb = match b {
+            PreparedB::Blocked(bb) => bb,
             other => return Err(wrong_operand(self, other)),
         };
-        if a.cols() != bc.rows() {
+        if a.cols() != bb.grid.rows {
             return Err(EngineError::ShapeMismatch {
                 a: a.shape(),
-                b: bc.shape(),
+                b: (bb.grid.rows, bb.grid.cols),
             });
         }
-        let (c, stats) = self.engine.spmm(a, bc).map_err(EngineError::ExecFailed)?;
+        let (c, stats) = self
+            .engine
+            .spmm_blocked(a, &bb.grid)
+            .map_err(EngineError::ExecFailed)?;
         Ok(EngineOutput { c, stats })
     }
 }
@@ -116,6 +135,26 @@ mod tests {
         assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
         assert!(out.stats.dispatches > 0);
         assert!(out.stats.real_pairs <= out.stats.padded_pairs);
+    }
+
+    #[test]
+    fn prepare_blockizes_at_the_engine_geometry() {
+        let k = AccelKernel::cpu(Geometry { block: 8, pairs: 16, slots: 8 });
+        let b = uniform(40, 22, 0.2, 2);
+        let prepared = k.prepare(&b).unwrap();
+        match &prepared {
+            PreparedB::Blocked(bb) => {
+                assert_eq!(bb.block(), 8);
+                assert_eq!((bb.grid.rows, bb.grid.cols), (40, 22));
+            }
+            other => panic!("accel prepare must blockize, got {other:?}"),
+        }
+        assert!(!k.prepare_is_trivial());
+        // executing on the prebuilt grid matches the full spmm path bitwise
+        let a = uniform(30, 40, 0.2, 1);
+        let via_prepared = k.execute(&a, &prepared).unwrap();
+        let (direct, _) = k.engine.spmm(&a, &b).unwrap();
+        assert_eq!(via_prepared.c.bit_pattern(), direct.bit_pattern());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use std::fmt;
 
+use crate::formats::error::FormatError;
 use crate::formats::traits::FormatKind;
 
 use super::kernel::Algorithm;
@@ -27,8 +28,12 @@ pub enum EngineError {
         a: (usize, usize),
         b: (usize, usize),
     },
+    /// An operand could not be ingested or converted — the formats layer's
+    /// typed failure, lifted losslessly (bad InCRS geometry, counter
+    /// overflow, unknown format name).
+    Format(FormatError),
     /// The kernel's prepare or execute step failed (backend error,
-    /// operand prepared for a different kernel, format build failure).
+    /// operand prepared for a different kernel).
     ExecFailed(String),
 }
 
@@ -43,12 +48,20 @@ impl fmt::Display for EngineError {
             EngineError::ShapeMismatch { a, b } => {
                 write!(w, "dimension mismatch: A is {a:?}, B is {b:?}")
             }
+            EngineError::Format(e) => write!(w, "format error: {e}"),
             EngineError::ExecFailed(msg) => write!(w, "execution failed: {msg}"),
         }
     }
 }
 
 impl std::error::Error for EngineError {}
+
+/// Formats-layer failures lift losslessly into the engine's error surface.
+impl From<FormatError> for EngineError {
+    fn from(e: FormatError) -> EngineError {
+        EngineError::Format(e)
+    }
+}
 
 /// Legacy bridge for `Result<_, String>` call sites (CLI, scripts) so `?`
 /// keeps working while they migrate to matching on the variants.
@@ -87,5 +100,13 @@ mod tests {
         assert!(!e.to_string().is_empty());
         let s: String = EngineError::ShapeMismatch { a: (1, 2), b: (3, 4) }.into();
         assert!(s.contains("dimension mismatch"));
+    }
+
+    #[test]
+    fn format_errors_lift_losslessly() {
+        let fe = FormatError::UnknownFormat("nope".into());
+        let e = EngineError::from(fe.clone());
+        assert_eq!(e, EngineError::Format(fe));
+        assert!(e.to_string().contains("unknown format"));
     }
 }

@@ -13,8 +13,11 @@ use std::sync::Arc;
 
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
+use crate::formats::error::FormatError;
 use crate::formats::incrs::InCrs;
+use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::FormatKind;
+use crate::spmm::blocks::BlockGrid;
 
 use super::error::EngineError;
 
@@ -53,15 +56,17 @@ impl Algorithm {
         }
     }
 
-    /// Parse a CLI/spelled-out algorithm name.
-    pub fn parse(s: &str) -> Result<Algorithm, String> {
+    /// Parse a CLI/spelled-out algorithm name. The inverse of
+    /// [`Algorithm::name`]: `parse(name(a)) == a` for every variant (locked
+    /// by `algorithm_names_roundtrip`).
+    pub fn parse(s: &str) -> Result<Algorithm, FormatError> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dense" | "oracle" => Algorithm::Dense,
             "gustavson" | "row" => Algorithm::Gustavson,
             "inner" => Algorithm::Inner,
             "tiled" => Algorithm::Tiled,
             "block" | "accel" => Algorithm::Block,
-            other => return Err(format!("unknown algorithm {other:?}")),
+            other => return Err(FormatError::UnknownAlgorithm(other.into())),
         })
     }
 }
@@ -107,6 +112,35 @@ impl CostHint {
     }
 }
 
+/// `B` blockized once at a fixed tile size — the blocked kernels' prepared
+/// representation. Built in `prepare` (LRU-cached by the coordinator,
+/// shared across micro-batches and shard workers) so tiled/accel `execute`
+/// never re-blockizes `B` — closing the per-shard O(nnz(B)) re-blockization
+/// tax the ROADMAP named.
+#[derive(Debug)]
+pub struct BlockedB {
+    /// The canonical CSR the grid was built from — kept (as an `Arc`
+    /// share, not a copy) for shard planning, shape checks, and the
+    /// planner's weight heuristic.
+    pub src: Arc<Csr>,
+    /// Non-empty `block × block` dense tiles of `B`.
+    pub grid: BlockGrid,
+}
+
+impl BlockedB {
+    /// Blockize `src` at `block` (the one place B blockization happens on
+    /// the blocked kernels' path).
+    pub fn build(src: Arc<Csr>, block: usize) -> BlockedB {
+        let grid = crate::spmm::blocks::blockize(&src, block);
+        BlockedB { src, grid }
+    }
+
+    /// Tile size the grid was built at.
+    pub fn block(&self) -> usize {
+        self.grid.block
+    }
+}
+
 /// `B` converted into the representation a kernel consumes. Built by
 /// `SpmmKernel::prepare`; callers may cache it across jobs sharing `B`.
 #[derive(Clone, Debug)]
@@ -114,14 +148,32 @@ pub enum PreparedB {
     Csr(Arc<Csr>),
     InCrs(Arc<InCrs>),
     Dense(Arc<Dense>),
+    /// Blockized `B` (tiled/accel kernels): tiles + the canonical source.
+    Blocked(Arc<BlockedB>),
 }
 
 impl PreparedB {
+    /// Canonical format of the prepared operand. `Blocked` reports
+    /// [`FormatKind::Csr`] — it carries its canonical CSR source and is
+    /// produced by CSR-keyed kernels; use [`PreparedB::label`] when the
+    /// exact representation matters (error messages).
     pub fn format(&self) -> FormatKind {
         match self {
             PreparedB::Csr(_) => FormatKind::Csr,
             PreparedB::InCrs(_) => FormatKind::InCrs,
             PreparedB::Dense(_) => FormatKind::Dense,
+            PreparedB::Blocked(_) => FormatKind::Csr,
+        }
+    }
+
+    /// Human-readable representation name (distinguishes `Blocked` from
+    /// plain CSR, unlike [`PreparedB::format`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreparedB::Csr(_) => "CRS",
+            PreparedB::InCrs(_) => "InCRS",
+            PreparedB::Dense(_) => "dense",
+            PreparedB::Blocked(_) => "blocked",
         }
     }
 
@@ -133,6 +185,7 @@ impl PreparedB {
             PreparedB::Csr(m) => m.shape(),
             PreparedB::InCrs(m) => m.shape(),
             PreparedB::Dense(m) => m.shape(),
+            PreparedB::Blocked(b) => (b.grid.rows, b.grid.cols),
         }
     }
 }
@@ -159,11 +212,52 @@ pub trait SpmmKernel: Send + Sync {
     /// per-job preparation is O(1) for CSR-consuming kernels instead of an
     /// O(nnz) copy. Conversion kernels fall back to [`SpmmKernel::prepare`].
     fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
-        if self.format() == FormatKind::Csr {
+        if self.prepare_is_trivial() {
             Ok(PreparedB::Csr(Arc::clone(b)))
         } else {
             self.prepare(b)
         }
+    }
+
+    /// Whether `prepare_shared` is an O(1) `Arc` share (plain-CSR
+    /// consumers) rather than a real representation build worth caching
+    /// across jobs (InCRS counter vectors, densification, blockization).
+    /// The coordinator keys its `PreparedB` cache on this: trivial
+    /// prepares bypass the content-fingerprint cache entirely. Kernels
+    /// whose prepare does real work despite a CSR registry key (tiled,
+    /// accel) override this to `false`.
+    fn prepare_is_trivial(&self) -> bool {
+        self.format() == FormatKind::Csr
+    }
+
+    /// Prepare from a native-format operand: `native` is the operand as it
+    /// arrived, `b` its canonical CSR rendering (already converted by the
+    /// caller, memoized server-side). The default ignores the native form;
+    /// kernels that can adopt a native representation directly — the
+    /// inner-InCRS kernel consuming an InCRS operand with matching
+    /// geometry — override this to skip their rebuild.
+    fn prepare_operand(
+        &self,
+        native: &MatrixOperand,
+        b: &Arc<Csr>,
+    ) -> Result<PreparedB, EngineError> {
+        let _ = native;
+        self.prepare_shared(b)
+    }
+
+    /// One-time ingestion words this kernel charges for a `B` arriving as
+    /// `native` (`None` = canonical CSR in hand), on top of
+    /// [`SpmmKernel::cost_hint`]. The default is the canonical conversion
+    /// cost — zero when `B` already is CSR. Kernels that adopt a native
+    /// representation (see [`SpmmKernel::prepare_operand`]) override this
+    /// with a credit so `Registry::select_native` can prefer them: format
+    /// choice drives cost, and the registry now sees it. The full operand
+    /// is passed (not just its [`FormatKind`]) so adoption credits can
+    /// check the geometry they depend on.
+    fn ingest_cost(&self, b: &Csr, native: Option<&MatrixOperand>) -> f64 {
+        use crate::formats::traits::SparseMatrix;
+        let kind = native.map_or(FormatKind::Csr, MatrixOperand::format);
+        crate::formats::operand::conversion_words(kind, b.nnz(), b.rows())
     }
     /// Row-band alignment required for sharded execution to stay
     /// bit-identical (`engine::shard`): blocked kernels return their tile
@@ -207,11 +301,11 @@ pub fn expected_tile_pairs(a: &Csr, b: &Csr, block: usize) -> f64 {
 /// Standard operand-mismatch error for `execute` implementations.
 pub fn wrong_operand(kernel: &dyn SpmmKernel, got: &PreparedB) -> EngineError {
     EngineError::ExecFailed(format!(
-        "kernel {}/{} expects B prepared as {:?}, got {:?}",
+        "kernel {}/{} expects B prepared for {}, got {}",
         kernel.algorithm().name(),
         kernel.name(),
-        kernel.format(),
-        got.format()
+        kernel.format().name(),
+        got.label()
     ))
 }
 

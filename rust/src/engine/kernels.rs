@@ -12,12 +12,14 @@ use std::sync::Arc;
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
 use crate::formats::incrs::{InCrs, InCrsParams};
+use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::{FormatKind, NullSink, SparseMatrix};
 use crate::spmm;
 
 use super::error::EngineError;
 use super::kernel::{
-    wrong_operand, Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PreparedB,
+    SpmmKernel,
 };
 use super::tiled::{self, TiledConfig};
 
@@ -186,10 +188,42 @@ impl SpmmKernel for InnerKernel {
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         match self.format {
             FormatKind::InCrs => Ok(PreparedB::InCrs(Arc::new(
-                InCrs::from_csr_params(b, self.params).map_err(EngineError::ExecFailed)?,
+                InCrs::from_csr_params(b, self.params)?,
             ))),
             _ => Ok(PreparedB::Csr(Arc::new(b.clone()))),
         }
+    }
+    /// An operand already stored as InCRS with this kernel's geometry is
+    /// adopted directly — no CSR round-trip, no counter rebuild. The
+    /// adopted arrays are the deterministic function of the matrix content
+    /// and params, so the result stays bit-identical to the rebuilt path.
+    fn prepare_operand(
+        &self,
+        native: &MatrixOperand,
+        b: &Arc<Csr>,
+    ) -> Result<PreparedB, EngineError> {
+        if let (FormatKind::InCrs, MatrixOperand::InCrs(m)) = (self.format, native) {
+            if m.params == self.params {
+                return Ok(PreparedB::InCrs(Arc::clone(m)));
+            }
+        }
+        self.prepare_shared(b)
+    }
+    /// Credit the adopted-native path: an InCRS operand with **matching
+    /// geometry** skips both the CSR conversion and the counter build this
+    /// kernel's `cost_hint.prepare_words` assumes. A mismatched-params
+    /// InCRS arrival gets no credit — `prepare_operand` would refuse to
+    /// adopt it and rebuild instead.
+    fn ingest_cost(&self, b: &Csr, native: Option<&MatrixOperand>) -> f64 {
+        if self.format == FormatKind::InCrs {
+            if let Some(MatrixOperand::InCrs(m)) = native {
+                if m.params == self.params {
+                    return -(b.nnz() as f64 + b.rows() as f64);
+                }
+            }
+        }
+        let kind = native.map_or(FormatKind::Csr, MatrixOperand::format);
+        crate::formats::operand::conversion_words(kind, b.nnz(), b.rows())
     }
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
         let mut sink = NullSink;
@@ -256,16 +290,35 @@ impl SpmmKernel for TiledKernel {
         self.cfg.block
     }
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
-        // blockization of B happens inside execute (it is keyed to A's
-        // geometry too); the prepared operand stays canonical
-        Ok(PreparedB::Csr(Arc::new(b.clone())))
+        // B is blockized HERE, once — execute (and every shard worker
+        // sharing this PreparedB) consumes the prebuilt grid
+        Ok(PreparedB::Blocked(Arc::new(BlockedB::build(
+            Arc::new(b.clone()),
+            self.cfg.block,
+        ))))
+    }
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Blocked(Arc::new(BlockedB::build(
+            Arc::clone(b),
+            self.cfg.block,
+        ))))
+    }
+    fn prepare_is_trivial(&self) -> bool {
+        false // blockization is a real O(nnz) build worth caching
     }
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
-        let bc = match b {
-            PreparedB::Csr(m) => m,
+        let bb = match b {
+            PreparedB::Blocked(bb) => bb,
             other => return Err(wrong_operand(self, other)),
         };
-        let (c, stats) = tiled::execute(a, bc, self.cfg)?;
+        if bb.block() != self.cfg.block {
+            return Err(EngineError::ExecFailed(format!(
+                "B blockized at {} but the tiled kernel tiles at {}",
+                bb.block(),
+                self.cfg.block
+            )));
+        }
+        let (c, stats) = tiled::execute_blocked(a, &bb.grid, self.cfg.workers)?;
         Ok(EngineOutput { c, stats })
     }
 }
@@ -336,6 +389,62 @@ mod tests {
                 k.name()
             );
         }
+    }
+
+    #[test]
+    fn tiled_prepare_blockizes_once_and_execute_consumes_the_grid() {
+        let k = TiledKernel::new(TiledConfig { block: 16, workers: 2 });
+        let b = uniform(40, 31, 0.2, 2);
+        let prepared = k.prepare(&b).unwrap();
+        match &prepared {
+            PreparedB::Blocked(bb) => {
+                assert_eq!(bb.block(), 16);
+                assert_eq!((bb.grid.rows, bb.grid.cols), (40, 31));
+            }
+            other => panic!("tiled prepare must blockize, got {other:?}"),
+        }
+        assert!(!k.prepare_is_trivial());
+        let a = uniform(26, 40, 0.2, 1);
+        let out = k.execute(&a, &prepared).unwrap();
+        assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+        // a grid built at a different tile size is rejected, not re-blockized
+        let foreign = TiledKernel::new(TiledConfig { block: 8, workers: 1 })
+            .prepare(&b)
+            .unwrap();
+        let err = k.execute(&a, &foreign).unwrap_err();
+        assert!(err.to_string().contains("blockized at"), "{err}");
+    }
+
+    #[test]
+    fn inner_incrs_adopts_matching_native_operands() {
+        let k = InnerKernel::incrs(InCrsParams::default());
+        let b = uniform(24, 300, 0.2, 9);
+        let b_arc = Arc::new(b.clone());
+        let native = Arc::new(InCrs::from_csr(&b).unwrap());
+        let op = MatrixOperand::InCrs(Arc::clone(&native));
+        match k.prepare_operand(&op, &b_arc).unwrap() {
+            PreparedB::InCrs(adopted) => assert!(Arc::ptr_eq(&adopted, &native)),
+            other => panic!("expected adoption, got {other:?}"),
+        }
+        // mismatched geometry falls back to a rebuild
+        let other_params = InCrsParams { section: 64, block: 8 };
+        let foreign = Arc::new(InCrs::from_csr_params(&b, other_params).unwrap());
+        match k
+            .prepare_operand(&MatrixOperand::InCrs(Arc::clone(&foreign)), &b_arc)
+            .unwrap()
+        {
+            PreparedB::InCrs(built) => assert!(!Arc::ptr_eq(&built, &foreign)),
+            other => panic!("expected rebuild, got {other:?}"),
+        }
+        // and the cost model credits ONLY the adoptable path: a matching
+        // native InCRS is credited, a mismatched-params one is charged
+        // like any conversion, CSR-native is free
+        assert!(k.ingest_cost(&b, Some(&op)) < 0.0);
+        let foreign_op = MatrixOperand::InCrs(Arc::clone(&foreign));
+        assert!(k.ingest_cost(&b, Some(&foreign_op)) > 0.0);
+        assert_eq!(k.ingest_cost(&b, None), 0.0);
+        let coo_op = MatrixOperand::from(b.to_coo());
+        assert!(GustavsonKernel.ingest_cost(&b, Some(&coo_op)) > 0.0);
     }
 
     #[test]

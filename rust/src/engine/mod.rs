@@ -72,10 +72,10 @@ pub mod tiled;
 pub use accel::AccelKernel;
 pub use error::EngineError;
 pub use kernel::{
-    Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+    Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
 };
 pub use kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
-pub use prepared::{fingerprint_csr, FingerprintMemo, PreparedCache, PreparedKey};
+pub use prepared::{fingerprint_csr, CsrMemo, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry};
 pub use shard::{ShardBand, ShardConfig, ShardPlan, ShardPlanner, ShardedKernel};
 pub use tiled::TiledConfig;

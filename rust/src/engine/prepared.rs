@@ -17,6 +17,8 @@
 use std::sync::Arc;
 
 use crate::formats::csr::Csr;
+use crate::formats::error::FormatError;
+use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::{FormatKind, SparseMatrix};
 
 use super::kernel::{Algorithm, PreparedB};
@@ -89,6 +91,62 @@ impl FingerprintMemo {
             self.entries.push((Arc::clone(b), f));
         }
         f
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Bounded identity-keyed memo of operand→CSR conversions: the ingestion
+/// twin of [`FingerprintMemo`]. A non-CSR [`MatrixOperand`] submitted
+/// repeatedly (steady-state serving traffic reusing one `Arc`) pays its
+/// canonical-CSR conversion once per worker instead of once per job; CSR
+/// operands bypass the memo entirely (their `to_csr` is an `Arc` share).
+/// Entries hold an operand clone, pinning the source allocation so an
+/// identity hit can never alias a recycled pointer.
+pub struct CsrMemo {
+    cap: usize,
+    entries: Vec<(MatrixOperand, Arc<Csr>)>,
+    conversions: u64,
+}
+
+impl CsrMemo {
+    pub fn new(cap: usize) -> CsrMemo {
+        CsrMemo { cap, entries: Vec::new(), conversions: 0 }
+    }
+
+    /// The operand's canonical CSR, memoized by source identity.
+    pub fn get(&mut self, op: &MatrixOperand) -> Result<Arc<Csr>, FormatError> {
+        if let MatrixOperand::Csr(m) = op {
+            return Ok(Arc::clone(m));
+        }
+        if let Some(pos) = self.entries.iter().position(|(src, _)| src.same_source(op)) {
+            // refresh recency: a hot shared operand (B reused across jobs)
+            // must survive a stream of cold one-shot operands (per-job As)
+            let entry = self.entries.remove(pos);
+            let csr = Arc::clone(&entry.1);
+            self.entries.push(entry);
+            return Ok(csr);
+        }
+        let csr = op.to_csr()?;
+        self.conversions += 1;
+        if self.cap > 0 {
+            if self.entries.len() >= self.cap {
+                self.entries.remove(0); // least recently used is in front
+            }
+            self.entries.push((op.clone(), Arc::clone(&csr)));
+        }
+        Ok(csr)
+    }
+
+    /// Conversions actually performed (memo misses on non-CSR operands).
+    pub fn conversions(&self) -> u64 {
+        self.conversions
     }
 
     pub fn len(&self) -> usize {
@@ -391,6 +449,57 @@ mod tests {
         assert_eq!(memo.get(last), fingerprint_csr(last));
         // entries hold strong Arcs: the memoized matrix has >1 refcount
         assert!(Arc::strong_count(last) > 1);
+    }
+
+    #[test]
+    fn csr_memo_shares_csr_and_memoizes_conversions() {
+        let csr = Arc::new(uniform(12, 12, 0.4, 1));
+        let mut memo = CsrMemo::new(4);
+        // CSR passthrough: Arc share, no entry, no conversion
+        let got = memo.get(&MatrixOperand::from(Arc::clone(&csr))).unwrap();
+        assert!(Arc::ptr_eq(&got, &csr));
+        assert_eq!(memo.conversions(), 0);
+        assert!(memo.is_empty());
+        // a non-CSR operand converts once per source identity
+        let coo_op = MatrixOperand::from(Arc::new(csr.to_coo()));
+        let c1 = memo.get(&coo_op).unwrap();
+        let c2 = memo.get(&coo_op.clone()).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2), "identity hit must share the conversion");
+        assert_eq!(memo.conversions(), 1);
+        assert_eq!(memo.len(), 1);
+        assert!(same_content(&c1, &csr), "conversion changed content");
+        // a different allocation of the same content converts again
+        let other = MatrixOperand::from(Arc::new(csr.to_coo()));
+        memo.get(&other).unwrap();
+        assert_eq!(memo.conversions(), 2);
+    }
+
+    #[test]
+    fn csr_memo_bounds_itself_and_hits_refresh_recency() {
+        let mut memo = CsrMemo::new(2);
+        let ops: Vec<MatrixOperand> = (0..4)
+            .map(|s| MatrixOperand::from(Arc::new(uniform(8, 8, 0.5, s).to_coo())))
+            .collect();
+        for op in &ops {
+            memo.get(op).unwrap();
+        }
+        assert_eq!(memo.len(), 2);
+        assert_eq!(memo.conversions(), 4);
+        // most recent entry is still memoized
+        let before = memo.conversions();
+        memo.get(ops.last().unwrap()).unwrap();
+        assert_eq!(memo.conversions(), before);
+        // hot shared operand survives a stream of cold one-shot operands:
+        // touching ops[2] makes ops[3] the LRU, so inserting a new entry
+        // must evict ops[3], not ops[2]
+        memo.get(&ops[2]).unwrap();
+        let cold = MatrixOperand::from(Arc::new(uniform(8, 8, 0.5, 99).to_coo()));
+        memo.get(&cold).unwrap();
+        let before = memo.conversions();
+        memo.get(&ops[2]).unwrap();
+        assert_eq!(memo.conversions(), before, "recently-used entry was evicted");
+        memo.get(&ops[3]).unwrap();
+        assert_eq!(memo.conversions(), before + 1, "LRU entry survived eviction");
     }
 
     #[test]

@@ -90,16 +90,36 @@ impl Registry {
 
     /// Pick the cheapest kernel for `A × B` by cost hint, excluding the
     /// dense oracle (it exists for verification, not serving). Returns the
-    /// oracle only when nothing else is registered.
+    /// oracle only when nothing else is registered. Assumes `B` is already
+    /// canonical CSR — [`Registry::select_native`] is the operand-aware
+    /// variant.
     pub fn select(&self, a: &Csr, b: &Csr) -> Option<Arc<dyn SpmmKernel>> {
+        self.select_native(a, b, None)
+    }
+
+    /// Operand-aware selection: negotiate storage format and kernel
+    /// *jointly* from `B`'s native arrival form (`None` = canonical CSR).
+    /// Each kernel's cost is its [`SpmmKernel::cost_hint`] **plus** its
+    /// [`SpmmKernel::ingest_cost`] for the native operand — so non-CSR
+    /// ingestion is charged (instead of assumed free), and a kernel that
+    /// adopts the native representation directly (inner-InCRS consuming an
+    /// InCRS operand with matching geometry) is credited its skipped
+    /// prepare. `b` is `B`'s canonical CSR rendering, used only to size
+    /// the estimates.
+    pub fn select_native(
+        &self,
+        a: &Csr,
+        b: &Csr,
+        b_native: Option<&crate::formats::operand::MatrixOperand>,
+    ) -> Option<Arc<dyn SpmmKernel>> {
         let best = self
             .map
             .values()
             .filter(|k| k.algorithm() != Algorithm::Dense)
             .min_by(|x, y| {
-                x.cost_hint(a, b)
-                    .total()
-                    .total_cmp(&y.cost_hint(a, b).total())
+                let cx = x.cost_hint(a, b).total() + x.ingest_cost(b, b_native);
+                let cy = y.cost_hint(a, b).total() + y.ingest_cost(b, b_native);
+                cx.total_cmp(&cy)
             });
         best.cloned()
             .or_else(|| self.resolve_algorithm(Algorithm::Dense))
@@ -107,10 +127,22 @@ impl Registry {
 
     /// [`Registry::select`] with a typed error for the empty-registry case.
     pub fn select_or_err(&self, a: &Csr, b: &Csr) -> Result<Arc<dyn SpmmKernel>, EngineError> {
-        self.select(a, b).ok_or(EngineError::KernelUnavailable {
-            format: None,
-            algorithm: None,
-        })
+        self.select_native_or_err(a, b, None)
+    }
+
+    /// [`Registry::select_native`] with a typed error for the
+    /// empty-registry case — the serving path's auto-selection resolver.
+    pub fn select_native_or_err(
+        &self,
+        a: &Csr,
+        b: &Csr,
+        b_native: Option<&crate::formats::operand::MatrixOperand>,
+    ) -> Result<Arc<dyn SpmmKernel>, EngineError> {
+        self.select_native(a, b, b_native)
+            .ok_or(EngineError::KernelUnavailable {
+                format: None,
+                algorithm: None,
+            })
     }
 
     /// Wrap every registered kernel in [`super::shard::ShardedKernel`] so
@@ -216,6 +248,45 @@ mod tests {
         let k = r.select(&a, &b).unwrap();
         assert_ne!(k.algorithm(), Algorithm::Dense);
         // and the selected kernel actually works
+        let out = k.run(&a, &b).unwrap();
+        assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn select_native_charges_conversion_and_credits_adoption() {
+        use crate::formats::incrs::InCrs;
+        use crate::formats::operand::MatrixOperand;
+        use crate::formats::traits::SparseMatrix;
+        let r = default_registry();
+        let a = uniform(64, 128, 0.02, 7);
+        let b = uniform(128, 64, 0.02, 8);
+        // CSR-native selection is exactly the legacy select
+        let legacy = r.select(&a, &b).unwrap();
+        let native = r.select_native(&a, &b, None).unwrap();
+        assert_eq!(
+            (legacy.format(), legacy.algorithm()),
+            (native.format(), native.algorithm())
+        );
+        // an InCRS arrival with MATCHING geometry credits the adopting
+        // kernel (its adjusted cost drops vs CSR-native), while a
+        // mismatched-params arrival — which prepare_operand would refuse
+        // to adopt — is charged like any conversion
+        let incrs_kernel = r.resolve(FormatKind::InCrs, Algorithm::Inner).unwrap();
+        let matching =
+            MatrixOperand::from(InCrs::from_csr_params(&b, InCrsParams::default()).unwrap());
+        let foreign = MatrixOperand::from(
+            InCrs::from_csr_params(&b, InCrsParams { section: 64, block: 8 }).unwrap(),
+        );
+        let base = incrs_kernel.cost_hint(&a, &b).total();
+        let csr_cost = base + incrs_kernel.ingest_cost(&b, None);
+        let adopted_cost = base + incrs_kernel.ingest_cost(&b, Some(&matching));
+        let foreign_cost = base + incrs_kernel.ingest_cost(&b, Some(&foreign));
+        assert!(adopted_cost < csr_cost, "{adopted_cost} !< {csr_cost}");
+        assert!(foreign_cost > csr_cost, "{foreign_cost} !> {csr_cost}");
+        // and whatever wins for a Coo arrival still computes correctly
+        let coo_op = MatrixOperand::from(b.to_coo());
+        let k = r.select_native(&a, &b, Some(&coo_op)).unwrap();
+        assert_ne!(k.algorithm(), Algorithm::Dense);
         let out = k.run(&a, &b).unwrap();
         assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
     }

@@ -33,11 +33,10 @@
 //! Workers are in-process threads connected by channels — one task channel
 //! per worker, one shared reply channel — deliberately shaped like a
 //! process/host boundary (the leader serializes a band slice of A; workers
-//! share one `PreparedB`, built once via the PR-2 `PreparedCache`; note
-//! the blocked kernels keep their PR-1 contract of blockizing `B` inside
-//! `execute`, so that step still runs per band — a blocked `PreparedB`
-//! variant is named follow-up work in the ROADMAP). A shard
-//! worker that panics is detected as a lost reply + failed join and
+//! share one `PreparedB`, built once via the PR-2 `PreparedCache`; the
+//! blocked kernels now prepare a `PreparedB::Blocked` grid, so no shard
+//! worker re-blockizes `B` — each band consumes the one shared grid). A
+//! shard worker that panics is detected as a lost reply + failed join and
 //! surfaces as [`EngineError::ExecFailed`] on the job, never as a poisoned
 //! server worker. Cross-process/host execution is the named next step
 //! (ROADMAP).
@@ -213,6 +212,9 @@ pub fn execute(
     let b_struct: Option<&Csr> = match (b, prepared) {
         (Some(b), _) => Some(b),
         (None, PreparedB::Csr(m)) => Some(m.as_ref()),
+        // blocked operands carry their canonical CSR source: exact
+        // tile-pair weights even when wrapping a blocked kernel
+        (None, PreparedB::Blocked(bb)) => Some(bb.src.as_ref()),
         (None, _) => None,
     };
     // bands must never cut inside the kernel's own tile rows — round the
@@ -366,6 +368,23 @@ impl SpmmKernel for ShardedKernel {
     }
     fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
         self.inner.prepare_shared(b)
+    }
+    fn prepare_is_trivial(&self) -> bool {
+        self.inner.prepare_is_trivial()
+    }
+    fn prepare_operand(
+        &self,
+        native: &crate::formats::operand::MatrixOperand,
+        b: &Arc<Csr>,
+    ) -> Result<PreparedB, EngineError> {
+        self.inner.prepare_operand(native, b)
+    }
+    fn ingest_cost(
+        &self,
+        b: &Csr,
+        native: Option<&crate::formats::operand::MatrixOperand>,
+    ) -> f64 {
+        self.inner.ingest_cost(b, native)
     }
     fn band_alignment(&self) -> usize {
         self.inner.band_alignment()

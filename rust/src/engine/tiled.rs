@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
 use crate::formats::traits::SparseMatrix;
-use crate::spmm::blocks::blockize;
+use crate::spmm::blocks::{blockize, BlockGrid};
 
 use super::error::EngineError;
 use super::kernel::ExecStats;
@@ -71,6 +71,8 @@ pub(crate) fn partition_by_weight(weights: &[usize], workers: usize) -> Vec<(usi
 
 /// C = A × B through the blocked tile-pair decomposition, executed by
 /// `cfg.workers` std threads. Returns the dense product and its accounting.
+/// Convenience wrapper over [`execute_blocked`] that blockizes `B` itself —
+/// the kernel path (`TiledKernel`) blockizes once in `prepare` instead.
 pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats), EngineError> {
     if a.cols() != b.rows() {
         return Err(EngineError::ShapeMismatch {
@@ -78,10 +80,27 @@ pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats),
             b: b.shape(),
         });
     }
-    let bsz = cfg.block;
-    let (m, n) = (a.rows(), b.cols());
+    execute_blocked(a, &blockize(b, cfg.block), cfg.workers)
+}
+
+/// C = A × B where `B` arrives pre-blockized (`gb`, built once by
+/// `TiledKernel::prepare` and shared across jobs, micro-batches, and shard
+/// workers). The tile size is `gb.block`; `A` is blockized per call (it is
+/// the per-job/per-band operand).
+pub fn execute_blocked(
+    a: &Csr,
+    gb: &BlockGrid,
+    workers: usize,
+) -> Result<(Dense, ExecStats), EngineError> {
+    if a.cols() != gb.rows {
+        return Err(EngineError::ShapeMismatch {
+            a: a.shape(),
+            b: (gb.rows, gb.cols),
+        });
+    }
+    let bsz = gb.block;
+    let (m, n) = (a.rows(), gb.cols);
     let ga = blockize(a, bsz);
-    let gb = blockize(b, bsz);
 
     // index B tiles by K-block for the intersection
     let mut b_by_k: Vec<Vec<(u32, &Vec<f32>)>> = vec![Vec::new(); gb.grid_rows];
@@ -101,7 +120,7 @@ pub fn execute(a: &Csr, b: &Csr, cfg: TiledConfig) -> Result<(Dense, ExecStats),
     let total_pairs: usize = tasks.iter().map(|(_, p)| p.len()).sum();
 
     let weights: Vec<usize> = tasks.iter().map(|(_, p)| p.len()).collect();
-    let bounds = partition_by_weight(&weights, cfg.workers.max(1));
+    let bounds = partition_by_weight(&weights, workers.max(1));
 
     // each worker owns one scratch buffer covering all of its output tiles
     let buffers: Vec<Vec<f32>> = std::thread::scope(|s| {
@@ -217,6 +236,24 @@ mod tests {
         assert!(c.data.iter().all(|&v| v == 0.0));
         assert_eq!(stats.real_pairs, 0);
         assert_eq!(stats.dispatches, 0);
+    }
+
+    #[test]
+    fn prebuilt_grid_is_bit_identical_to_the_wrapper() {
+        let a = uniform(45, 70, 0.15, 3);
+        let b = uniform(70, 38, 0.18, 4);
+        let (want, ws) = execute(&a, &b, TiledConfig { block: 16, workers: 3 }).unwrap();
+        let gb = blockize(&b, 16);
+        let (got, gs) = execute_blocked(&a, &gb, 3).unwrap();
+        assert_eq!(want.data, got.data, "prebuilt grid changed bits");
+        assert_eq!(ws.real_pairs, gs.real_pairs);
+        // shape mismatch is typed on the blocked path too (A has 60
+        // columns vs the grid's 70 rows)
+        let bad = uniform(9, 60, 0.2, 5);
+        assert!(matches!(
+            execute_blocked(&bad, &gb, 2),
+            Err(EngineError::ShapeMismatch { a: (9, 60), b: (70, 38) })
+        ));
     }
 
     #[test]

@@ -6,6 +6,7 @@ use super::csc::Csc;
 use super::csr::Csr;
 use super::dense::Dense;
 use super::ell::Ellpack;
+use super::error::FormatError;
 use super::incrs::{InCrs, InCrsParams};
 use super::jad::Jad;
 use super::lil::Lil;
@@ -13,7 +14,7 @@ use super::sll::Sll;
 use super::traits::{FormatKind, SparseMatrix};
 
 /// Build any format from canonical COO.
-pub fn from_coo(kind: FormatKind, coo: &Coo) -> Result<Box<dyn SparseMatrix>, String> {
+pub fn from_coo(kind: FormatKind, coo: &Coo) -> Result<Box<dyn SparseMatrix>, FormatError> {
     Ok(match kind {
         FormatKind::Dense => Box::new(Dense::from_coo(coo)),
         FormatKind::Coo => Box::new(coo.clone()),
@@ -28,7 +29,7 @@ pub fn from_coo(kind: FormatKind, coo: &Coo) -> Result<Box<dyn SparseMatrix>, St
 }
 
 /// InCRS with explicit geometry.
-pub fn incrs_with_params(coo: &Coo, params: InCrsParams) -> Result<InCrs, String> {
+pub fn incrs_with_params(coo: &Coo, params: InCrsParams) -> Result<InCrs, FormatError> {
     InCrs::from_csr_params(&Csr::from_coo(coo), params)
 }
 
@@ -36,38 +37,17 @@ pub fn incrs_with_params(coo: &Coo, params: InCrsParams) -> Result<InCrs, String
 pub fn convert(
     m: &dyn SparseMatrix,
     to: FormatKind,
-) -> Result<Box<dyn SparseMatrix>, String> {
+) -> Result<Box<dyn SparseMatrix>, FormatError> {
     from_coo(to, &m.to_coo())
 }
 
-/// Parse a format name as used on the CLI.
-pub fn parse_kind(s: &str) -> Result<FormatKind, String> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "dense" => FormatKind::Dense,
-        "coo" => FormatKind::Coo,
-        "crs" | "csr" => FormatKind::Csr,
-        "ccs" | "csc" => FormatKind::Csc,
-        "sll" => FormatKind::Sll,
-        "ellpack" | "ell" => FormatKind::Ellpack,
-        "lil" => FormatKind::Lil,
-        "jad" => FormatKind::Jad,
-        "incrs" => FormatKind::InCrs,
-        other => return Err(format!("unknown format {other:?}")),
-    })
+/// Parse a format name as used on the CLI (see [`FormatKind::parse`]).
+pub fn parse_kind(s: &str) -> Result<FormatKind, FormatError> {
+    FormatKind::parse(s)
 }
 
 /// All format kinds, in Table I order.
-pub const ALL_KINDS: [FormatKind; 9] = [
-    FormatKind::Dense,
-    FormatKind::Ellpack,
-    FormatKind::Lil,
-    FormatKind::Csr,
-    FormatKind::Jad,
-    FormatKind::Coo,
-    FormatKind::Sll,
-    FormatKind::Csc,
-    FormatKind::InCrs,
-];
+pub const ALL_KINDS: [FormatKind; 9] = FormatKind::ALL;
 
 #[cfg(test)]
 mod tests {
@@ -132,6 +112,16 @@ mod tests {
         assert_eq!(parse_kind("CRS").unwrap(), FormatKind::Csr);
         assert_eq!(parse_kind("csr").unwrap(), FormatKind::Csr);
         assert_eq!(parse_kind("incrs").unwrap(), FormatKind::InCrs);
-        assert!(parse_kind("nope").is_err());
+        assert_eq!(
+            parse_kind("nope").unwrap_err(),
+            super::FormatError::UnknownFormat("nope".into())
+        );
+    }
+
+    #[test]
+    fn parse_kind_inverts_name_exhaustively() {
+        for kind in ALL_KINDS {
+            assert_eq!(parse_kind(kind.name()).unwrap(), kind, "{kind:?}");
+        }
     }
 }

@@ -19,6 +19,7 @@
 
 use super::coo::Coo;
 use super::csr::Csr;
+use super::error::FormatError;
 use super::traits::{
     AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
 };
@@ -57,22 +58,27 @@ impl InCrsParams {
     }
 
     /// Validate that a counter-vector fits one 64-bit word (paper §III.B).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let bad = |reason: String| FormatError::BadParams {
+            section: self.section,
+            block: self.block,
+            reason,
+        };
         if self.block == 0 || self.section == 0 {
-            return Err("section/block must be positive".into());
+            return Err(bad("section/block must be positive".into()));
         }
         if self.section % self.block != 0 {
-            return Err(format!(
+            return Err(bad(format!(
                 "block {} must divide section {}",
                 self.block, self.section
-            ));
+            )));
         }
         let bits = 16 + self.blocks_per_section() as u32 * self.bits_per_block();
         if bits > 64 {
-            return Err(format!(
+            return Err(bad(format!(
                 "counter-vector needs {bits} bits > 64 (S={}, b={})",
                 self.section, self.block
-            ));
+            )));
         }
         Ok(())
     }
@@ -98,11 +104,11 @@ pub struct InCrs {
 }
 
 impl InCrs {
-    pub fn from_csr(m: &Csr) -> Result<InCrs, String> {
+    pub fn from_csr(m: &Csr) -> Result<InCrs, FormatError> {
         Self::from_csr_params(m, InCrsParams::default())
     }
 
-    pub fn from_csr_params(m: &Csr, params: InCrsParams) -> Result<InCrs, String> {
+    pub fn from_csr_params(m: &Csr, params: InCrsParams) -> Result<InCrs, FormatError> {
         let mut space = AddressSpace::default();
         Self::from_csr_with_space(m, params, &mut space)
     }
@@ -111,7 +117,7 @@ impl InCrs {
         m: &Csr,
         params: InCrsParams,
         space: &mut AddressSpace,
-    ) -> Result<InCrs, String> {
+    ) -> Result<InCrs, FormatError> {
         params.validate()?;
         let (rows, cols) = m.shape();
         let spr = (cols + params.section - 1) / params.section;
@@ -126,10 +132,13 @@ impl InCrs {
             let mut k = 0usize;
             for s in 0..spr {
                 if before_section > u16::MAX as usize {
-                    return Err(format!(
-                        "row {i}: {before_section} non-zeros before section {s} \
-                         exceeds the 16-bit prefix (paper assumes <= 65535/row)"
-                    ));
+                    return Err(FormatError::CounterOverflow {
+                        row: i,
+                        detail: format!(
+                            "row {i}: {before_section} non-zeros before section {s} \
+                             exceeds the 16-bit prefix (paper assumes <= 65535/row)"
+                        ),
+                    });
                 }
                 let mut word = before_section as u64; // bits 0..16
                 let sec_end = ((s + 1) * params.section).min(cols) as u32;
@@ -143,10 +152,13 @@ impl InCrs {
                         k += 1;
                     }
                     if cnt >= (1 << bits) {
-                        return Err(format!(
-                            "row {i} section {s} block {blk}: {cnt} non-zeros \
-                             overflow the {bits}-bit field"
-                        ));
+                        return Err(FormatError::CounterOverflow {
+                            row: i,
+                            detail: format!(
+                                "row {i} section {s} block {blk}: {cnt} non-zeros \
+                                 overflow the {bits}-bit field"
+                            ),
+                        });
                     }
                     word |= cnt << (16 + blk as u32 * bits);
                     in_section += cnt as usize;
@@ -398,7 +410,8 @@ mod tests {
             (0..cols as u32).map(|c| (0, c, 1.0)).collect();
         let csr = Csr::from_coo(&Coo::new(1, cols, entries));
         let err = InCrs::from_csr(&csr).unwrap_err();
-        assert!(err.contains("16-bit prefix"), "{err}");
+        assert!(matches!(err, FormatError::CounterOverflow { row: 0, .. }), "{err}");
+        assert!(err.to_string().contains("16-bit prefix"), "{err}");
     }
 
     #[test]

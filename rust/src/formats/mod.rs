@@ -3,7 +3,10 @@
 //! Every format in the paper's Table I is implemented, plus the paper's
 //! contribution, [`incrs::InCrs`]. All formats share:
 //!
-//! * a canonical interchange form ([`coo::Coo`]) for any↔any conversion,
+//! * a canonical interchange form ([`coo::Coo`]) for any↔any conversion
+//!   (typed failures: [`error::FormatError`]),
+//! * a typed, cheaply-cloneable operand handle ([`operand::MatrixOperand`])
+//!   the serving stack ingests in any native format,
 //! * a simulated address-space layout, so random accesses produce *address
 //!   streams* the cache simulator can replay (Fig 3), and
 //! * `locate(i, j, sink)` random access that reports every word it touches
@@ -15,9 +18,11 @@ pub mod csc;
 pub mod csr;
 pub mod dense;
 pub mod ell;
+pub mod error;
 pub mod incrs;
 pub mod jad;
 pub mod lil;
+pub mod operand;
 pub mod sll;
 pub mod traits;
 
@@ -27,9 +32,11 @@ pub use csc::Csc;
 pub use csr::Csr;
 pub use dense::Dense;
 pub use ell::Ellpack;
+pub use error::FormatError;
 pub use incrs::{InCrs, InCrsParams};
 pub use jad::Jad;
 pub use lil::Lil;
+pub use operand::MatrixOperand;
 pub use sll::Sll;
 pub use traits::{
     AccessSink, AddressSpace, CountSink, FormatKind, NullSink, Region, Site,

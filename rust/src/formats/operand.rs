@@ -1,0 +1,291 @@
+//! [`MatrixOperand`] — the typed, cheaply-cloneable operand handle the
+//! whole stack ingests.
+//!
+//! The paper's central claim is that *format choice drives SpMM cost*: its
+//! compact random-access format (InCRS) wins precisely when data arrives in
+//! the "wrong" order. The serving surface therefore accepts operands **as
+//! they arrive** — any Table-I format, wrapped in an `Arc` so handles clone
+//! in O(1) — and the engine sees (and costs) the conversion instead of
+//! forcing callers to pre-convert out of band. CSR submissions stay
+//! zero-cost (`to_csr` is an `Arc` share); InCRS reuses its embedded CSR
+//! arrays; every other format converts through canonical COO, whose sorted
+//! entry order makes the conversion deterministic — a job submitted in any
+//! native format produces output **bit-identical** to the same job
+//! submitted pre-converted.
+
+use std::sync::Arc;
+
+use super::coo::Coo;
+use super::csc::Csc;
+use super::csr::Csr;
+use super::dense::Dense;
+use super::ell::Ellpack;
+use super::error::FormatError;
+use super::incrs::InCrs;
+use super::jad::Jad;
+use super::lil::Lil;
+use super::sll::Sll;
+use super::traits::{FormatKind, SparseMatrix};
+
+/// A matrix operand in whichever storage format it arrived in. Cloning is
+/// one `Arc` bump; the underlying matrix is immutable and shared.
+#[derive(Clone, Debug)]
+pub enum MatrixOperand {
+    Dense(Arc<Dense>),
+    Csr(Arc<Csr>),
+    Csc(Arc<Csc>),
+    Coo(Arc<Coo>),
+    Sll(Arc<Sll>),
+    Ell(Arc<Ellpack>),
+    Lil(Arc<Lil>),
+    Jad(Arc<Jad>),
+    InCrs(Arc<InCrs>),
+}
+
+impl MatrixOperand {
+    /// The operand as the object-safe format trait (metadata, `to_coo`).
+    pub fn as_sparse(&self) -> &dyn SparseMatrix {
+        match self {
+            MatrixOperand::Dense(m) => m.as_ref(),
+            MatrixOperand::Csr(m) => m.as_ref(),
+            MatrixOperand::Csc(m) => m.as_ref(),
+            MatrixOperand::Coo(m) => m.as_ref(),
+            MatrixOperand::Sll(m) => m.as_ref(),
+            MatrixOperand::Ell(m) => m.as_ref(),
+            MatrixOperand::Lil(m) => m.as_ref(),
+            MatrixOperand::Jad(m) => m.as_ref(),
+            MatrixOperand::InCrs(m) => m.as_ref(),
+        }
+    }
+
+    /// Native storage format of this operand.
+    pub fn format(&self) -> FormatKind {
+        self.as_sparse().kind()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        self.as_sparse().shape()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape().0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape().1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.as_sparse().nnz()
+    }
+
+    /// True when both handles share one underlying allocation (same format
+    /// variant, same `Arc`) — the identity the coordinator's micro-batch
+    /// coalescer groups by.
+    pub fn same_source(&self, other: &MatrixOperand) -> bool {
+        use MatrixOperand::*;
+        match (self, other) {
+            (Dense(a), Dense(b)) => Arc::ptr_eq(a, b),
+            (Csr(a), Csr(b)) => Arc::ptr_eq(a, b),
+            (Csc(a), Csc(b)) => Arc::ptr_eq(a, b),
+            (Coo(a), Coo(b)) => Arc::ptr_eq(a, b),
+            (Sll(a), Sll(b)) => Arc::ptr_eq(a, b),
+            (Ell(a), Ell(b)) => Arc::ptr_eq(a, b),
+            (Lil(a), Lil(b)) => Arc::ptr_eq(a, b),
+            (Jad(a), Jad(b)) => Arc::ptr_eq(a, b),
+            (InCrs(a), InCrs(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// The operand as canonical CSR. Zero-cost for CSR operands (`Arc`
+    /// share); InCRS copies its embedded CSR arrays directly (no COO
+    /// round-trip); every other format converts through COO, whose sorted
+    /// entries make the result deterministic — and therefore bit-stable
+    /// across repeated conversions of the same content.
+    pub fn to_csr(&self) -> Result<Arc<Csr>, FormatError> {
+        Ok(match self {
+            MatrixOperand::Csr(m) => Arc::clone(m),
+            MatrixOperand::InCrs(m) => Arc::new(Csr::from_parts(
+                m.rows(),
+                m.cols(),
+                m.row_ptr.clone(),
+                m.col_idx.clone(),
+                m.vals.clone(),
+            )),
+            other => Arc::new(Csr::from_coo(&other.as_sparse().to_coo())),
+        })
+    }
+
+    /// Convert to `to`, sharing the existing allocation when the operand is
+    /// already in that format. Conversion goes through canonical COO (value
+    /// bits pass through untouched), except the cheap CSR/InCRS fast paths.
+    pub fn convert(&self, to: FormatKind) -> Result<MatrixOperand, FormatError> {
+        if self.format() == to {
+            return Ok(self.clone());
+        }
+        if to == FormatKind::Csr {
+            return Ok(MatrixOperand::Csr(self.to_csr()?));
+        }
+        let coo = self.as_sparse().to_coo();
+        Ok(match to {
+            FormatKind::Dense => MatrixOperand::Dense(Arc::new(Dense::from_coo(&coo))),
+            FormatKind::Csr => unreachable!("handled above"),
+            FormatKind::Csc => MatrixOperand::Csc(Arc::new(Csc::from_coo(&coo))),
+            FormatKind::Coo => MatrixOperand::Coo(Arc::new(coo)),
+            FormatKind::Sll => MatrixOperand::Sll(Arc::new(Sll::from_coo(&coo))),
+            FormatKind::Ellpack => MatrixOperand::Ell(Arc::new(Ellpack::from_coo(&coo))),
+            FormatKind::Lil => MatrixOperand::Lil(Arc::new(Lil::from_coo(&coo))),
+            FormatKind::Jad => MatrixOperand::Jad(Arc::new(Jad::from_coo(&coo))),
+            FormatKind::InCrs => {
+                MatrixOperand::InCrs(Arc::new(InCrs::from_csr(&Csr::from_coo(&coo))?))
+            }
+        })
+    }
+
+    /// Estimated words touched converting this operand to canonical CSR —
+    /// the ingestion cost `Registry::select_native` charges instead of
+    /// assuming CSR arrives free. 0 for CSR; InCRS pays its array copies;
+    /// everything else pays the COO round-trip.
+    pub fn conversion_words(&self) -> f64 {
+        conversion_words(self.format(), self.nnz(), self.rows())
+    }
+}
+
+/// Words touched converting `nnz` non-zeros (over `rows` rows) from
+/// `native` into canonical CSR. Shape of the estimate, not a cycle count —
+/// it only needs to be monotone and zero for the free path.
+pub fn conversion_words(native: FormatKind, nnz: usize, rows: usize) -> f64 {
+    match native {
+        FormatKind::Csr => 0.0,
+        // direct array copies: idx + val + row pointers
+        FormatKind::InCrs => (2 * nnz + rows + 1) as f64,
+        // to_coo (3 words/entry) + CSR build (2 words/entry + pointers)
+        _ => (5 * nnz + rows + 1) as f64,
+    }
+}
+
+macro_rules! operand_from {
+    ($ty:ty, $variant:ident) => {
+        impl From<Arc<$ty>> for MatrixOperand {
+            fn from(m: Arc<$ty>) -> MatrixOperand {
+                MatrixOperand::$variant(m)
+            }
+        }
+        impl From<$ty> for MatrixOperand {
+            fn from(m: $ty) -> MatrixOperand {
+                MatrixOperand::$variant(Arc::new(m))
+            }
+        }
+    };
+}
+
+operand_from!(Dense, Dense);
+operand_from!(Csr, Csr);
+operand_from!(Csc, Csc);
+operand_from!(Coo, Coo);
+operand_from!(Sll, Sll);
+operand_from!(Ellpack, Ell);
+operand_from!(Lil, Lil);
+operand_from!(Jad, Jad);
+operand_from!(InCrs, InCrs);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::convert::ALL_KINDS;
+
+    fn sample() -> Coo {
+        Coo::new(
+            4,
+            6,
+            vec![
+                (0, 1, 1.0),
+                (0, 5, 2.0),
+                (1, 0, 3.0),
+                (2, 2, 4.0),
+                (2, 3, 5.0),
+                (2, 4, 6.0),
+                (3, 0, 7.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn metadata_matches_every_native_format() {
+        let coo = sample();
+        let base = MatrixOperand::from(coo.clone());
+        for kind in ALL_KINDS {
+            let op = base.convert(kind).unwrap();
+            assert_eq!(op.format(), kind);
+            assert_eq!(op.shape(), coo.shape(), "{kind:?}");
+            assert_eq!(op.nnz(), coo.nnz(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn csr_to_csr_is_an_arc_share() {
+        let csr = Arc::new(Csr::from_coo(&sample()));
+        let op = MatrixOperand::from(Arc::clone(&csr));
+        assert!(Arc::ptr_eq(&op.to_csr().unwrap(), &csr));
+        // convert to the same format is also a share
+        match op.convert(FormatKind::Csr).unwrap() {
+            MatrixOperand::Csr(shared) => assert!(Arc::ptr_eq(&shared, &csr)),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(op.conversion_words(), 0.0);
+    }
+
+    #[test]
+    fn incrs_to_csr_skips_the_coo_roundtrip_and_matches() {
+        let csr = Csr::from_coo(&sample());
+        let incrs = InCrs::from_csr(&csr).unwrap();
+        let op = MatrixOperand::from(incrs);
+        let back = op.to_csr().unwrap();
+        assert_eq!(back.row_ptr, csr.row_ptr);
+        assert_eq!(back.col_idx, csr.col_idx);
+        assert_eq!(back.vals, csr.vals);
+        assert!(op.conversion_words() > 0.0);
+    }
+
+    #[test]
+    fn every_conversion_preserves_value_bits() {
+        let coo = sample();
+        let want = coo.to_dense();
+        let base = MatrixOperand::from(coo);
+        for from in ALL_KINDS {
+            let x = base.convert(from).unwrap();
+            for to in ALL_KINDS {
+                let y = x.convert(to).unwrap();
+                let got = y.as_sparse().to_coo().to_dense();
+                assert_eq!(got.len(), want.len(), "{from:?}->{to:?}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{from:?}->{to:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_source_is_arc_identity_within_a_variant() {
+        let a = MatrixOperand::from(Arc::new(sample()));
+        let b = a.clone();
+        assert!(a.same_source(&b));
+        let c = MatrixOperand::from(sample());
+        assert!(!a.same_source(&c), "distinct allocations must differ");
+        let d = a.convert(FormatKind::Csr).unwrap();
+        assert!(!a.same_source(&d), "different variants never share a source");
+    }
+
+    #[test]
+    fn conversion_cost_is_zero_only_for_csr() {
+        for kind in ALL_KINDS {
+            let w = conversion_words(kind, 100, 10);
+            if kind == FormatKind::Csr {
+                assert_eq!(w, 0.0);
+            } else {
+                assert!(w > 0.0, "{kind:?}");
+            }
+        }
+    }
+}

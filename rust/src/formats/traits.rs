@@ -137,6 +137,20 @@ pub enum FormatKind {
 }
 
 impl FormatKind {
+    /// Every format, in the paper's Table I order (also re-exported as
+    /// `formats::ALL_KINDS`).
+    pub const ALL: [FormatKind; 9] = [
+        FormatKind::Dense,
+        FormatKind::Ellpack,
+        FormatKind::Lil,
+        FormatKind::Csr,
+        FormatKind::Jad,
+        FormatKind::Coo,
+        FormatKind::Sll,
+        FormatKind::Csc,
+        FormatKind::InCrs,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             FormatKind::Dense => "dense",
@@ -149,6 +163,27 @@ impl FormatKind {
             FormatKind::Jad => "JAD",
             FormatKind::InCrs => "InCRS",
         }
+    }
+
+    /// Parse a format name (case-insensitive; accepts both the paper
+    /// spellings CRS/CCS and the common csr/csc/ell aliases). The inverse
+    /// of [`FormatKind::name`]: `parse(name(k)) == k` for every variant,
+    /// locked by an exhaustive test.
+    pub fn parse(s: &str) -> Result<FormatKind, super::error::FormatError> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => FormatKind::Dense,
+            "coo" => FormatKind::Coo,
+            "crs" | "csr" => FormatKind::Csr,
+            "ccs" | "csc" => FormatKind::Csc,
+            "sll" => FormatKind::Sll,
+            "ellpack" | "ell" => FormatKind::Ellpack,
+            "lil" => FormatKind::Lil,
+            "jad" => FormatKind::Jad,
+            "incrs" => FormatKind::InCrs,
+            other => {
+                return Err(super::error::FormatError::UnknownFormat(other.into()))
+            }
+        })
     }
 }
 
@@ -221,5 +256,16 @@ mod tests {
     fn format_names() {
         assert_eq!(FormatKind::InCrs.name(), "InCRS");
         assert_eq!(FormatKind::Csr.name(), "CRS");
+    }
+
+    #[test]
+    fn parse_inverts_name_for_every_variant() {
+        for kind in FormatKind::ALL {
+            assert_eq!(FormatKind::parse(kind.name()).unwrap(), kind, "{kind:?}");
+        }
+        assert!(matches!(
+            FormatKind::parse("nope"),
+            Err(crate::formats::FormatError::UnknownFormat(_))
+        ));
     }
 }

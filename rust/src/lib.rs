@@ -35,13 +35,24 @@
 //! the typed client API ([`coordinator::SpmmClient`]): `JobBuilder`
 //! construction, `JobHandle` futures (`wait` / `wait_timeout` /
 //! `try_poll` / `batch_wait_all`), `submit_many`/`stream` batch entry
-//! points, and [`coordinator::JobError`] instead of stringly errors. The
-//! server micro-batches jobs sharing a `B` operand so
-//! `SpmmKernel::prepare` runs once per batch (content-fingerprinted for
-//! conversion kernels, with a bounded LRU keeping each `PreparedB` across
-//! batches) — the paper's "one representation build, many multiplies"
-//! amortization at the serving layer. Coalescing stats (`prepare_builds`,
-//! `prepare_cache_hits`, `coalesced_jobs`) surface in
+//! points, and [`coordinator::JobError`] instead of stringly errors.
+//! Operands are typed [`formats::MatrixOperand`] handles — **any Table-I
+//! format, submitted as it arrived** (`client.job(coo, incrs)` works as
+//! well as `client.job(arc_csr_a, arc_csr_b)`): CSR stays zero-cost via
+//! `Arc` identity, everything else is ingested server-side
+//! (identity-memoized, metered as `operand_conversions`, typed
+//! [`formats::FormatError`] on failure) and auto-selection
+//! ([`engine::Registry::select_native`]) charges the conversion from the
+//! native format instead of assuming free CSR. Results are bit-identical
+//! to pre-converted submission. The server micro-batches jobs sharing a
+//! `B` operand so `SpmmKernel::prepare` runs once per batch
+//! (content-fingerprinted for real-prepare kernels — InCRS counters,
+//! densification, tiled/accel **blockization** (`PreparedB::Blocked`,
+//! built once and shared by every shard worker) — with a bounded LRU
+//! keeping each `PreparedB` across batches) — the paper's "one
+//! representation build, many multiplies" amortization at the serving
+//! layer. Coalescing stats (`prepare_builds`, `prepare_cache_hits`,
+//! `coalesced_jobs`, `operand_conversions`) surface in
 //! [`coordinator::MetricsSnapshot`]. Jobs may additionally ask for
 //! **sharded row-band execution** (`JobBuilder::shards(n)` →
 //! [`engine::shard`]): contiguous bands on channel-connected shard
@@ -51,7 +62,8 @@
 //! ```ignore
 //! let server = Server::start(ServerConfig::default());
 //! let client = server.client();
-//! let out = client.job(a, b).verify(true).submit()?.wait()?;
+//! let out = client.job(a, b).verify(true).submit()?.wait()?;  // any operand format
+//! let out = client.job(coo_matrix, incrs_matrix).submit()?.wait()?;
 //! let handles = client.submit_many(jobs);           // shared-B coalescing
 //! let results = JobHandle::batch_wait_all(handles); // submission order
 //! server.shutdown();                                // drains, never drops

@@ -19,7 +19,8 @@ use spmm_accel::coordinator::{
 use spmm_accel::datasets;
 use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
 use spmm_accel::eval::{run_experiment, ExpOptions};
-use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
+use spmm_accel::formats::{Csr, MatrixOperand};
 use spmm_accel::runtime::Manifest;
 use spmm_accel::spmm::plan::Geometry;
 use spmm_accel::util::args::Args;
@@ -42,6 +43,18 @@ fn exp_options(args: &Args) -> Result<ExpOptions, String> {
         seed: args.get_or("seed", 42u64)?,
         scale: args.get_or("scale", 1.0f64)?,
     })
+}
+
+/// `--a-format/--b-format <kind>`: render a generated CSR operand into the
+/// named native format (any `FormatKind` name via the typed parse) so
+/// non-CSR ingestion is exercisable straight from the CLI. `None` keeps
+/// the zero-cost CSR handle.
+fn operand_in_format(m: Arc<Csr>, fmt: Option<&str>) -> Result<MatrixOperand, String> {
+    let op = MatrixOperand::from(m);
+    match fmt {
+        None => Ok(op),
+        Some(name) => Ok(op.convert(FormatKind::parse(name)?)?),
+    }
 }
 
 /// `--kernel <auto|algorithm>` + `--format <fmt>` + legacy `--backend
@@ -135,8 +148,17 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let cols = args.get_or("cols", 256usize)?;
             let density = args.get_or("density", 0.05f64)?;
             let (kernel, prefer_pjrt) = parse_kernel_spec(args)?;
-            let a = Arc::new(datasets::uniform(rows, cols, density, seed));
-            let b = Arc::new(datasets::uniform(cols, rows, density, seed + 1));
+            // non-CSR ingestion from the CLI: --a-format/--b-format render
+            // the generated operands into any Table-I format before submit
+            let a = operand_in_format(
+                Arc::new(datasets::uniform(rows, cols, density, seed)),
+                args.str_opt("a-format"),
+            )?;
+            let b = operand_in_format(
+                Arc::new(datasets::uniform(cols, rows, density, seed + 1)),
+                args.str_opt("b-format"),
+            )?;
+            let (a_fmt, b_fmt) = (a.format(), b.format());
             let shards = args.get_or("shards", 1usize)?;
             let server = Server::start(ServerConfig {
                 workers: 1,
@@ -154,16 +176,24 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 .submit()?
                 .wait()?;
             println!(
-                "backend={} shards={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
+                "backend={} a={} b={} shards={} dispatches={} real_pairs={} wall={:?} max_err={:?}",
                 out.backend,
+                a_fmt.name(),
+                b_fmt.name(),
                 out.shards,
                 out.report.dispatches,
                 out.report.real_pairs,
                 out.wall,
                 out.max_err
             );
+            let snap = client.metrics();
+            if snap.operand_conversions > 0 {
+                println!(
+                    "ingestion: {} operand conversion(s) to canonical CRS",
+                    snap.operand_conversions
+                );
+            }
             if shards > 1 {
-                let snap = client.metrics();
                 println!(
                     "shard metrics: {} bands, wall p50={}us p99={}us, queue p50={}us",
                     snap.shards_executed,
@@ -309,6 +339,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
                  \u{20}  spmm-accel spmm --kernel tiled --shards 4   # row-band sharded execution\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
+                 \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\
                  \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\
                  \u{20}  spmm-accel kernels"
             );

@@ -83,6 +83,25 @@ impl NumericEngine {
         self.execute_plan(&p)
     }
 
+    /// C = A × B where `B` arrives pre-blockized (the `AccelKernel`
+    /// prepared-operand path: the grid is built once per `B` and shared
+    /// across jobs and shard workers, so only `A` is blockized here).
+    pub fn spmm_blocked(
+        &self,
+        a: &Csr,
+        gb: &crate::spmm::blocks::BlockGrid,
+    ) -> Result<(Dense, ExecStats), String> {
+        let geom = self.geometry();
+        if gb.block != geom.block {
+            return Err(format!(
+                "B blockized at {} but the engine geometry block is {}",
+                gb.block, geom.block
+            ));
+        }
+        let p = crate::spmm::plan::plan_blocked(a, gb, geom);
+        self.execute_plan(&p)
+    }
+
     /// Execute a prebuilt plan (the coordinator pre-plans jobs off-thread).
     pub fn execute_plan(&self, p: &Plan) -> Result<(Dense, ExecStats), String> {
         let geom = self.geometry();

@@ -62,9 +62,17 @@ pub struct Plan {
 /// Build the plan for C = A × B.
 pub fn plan(a: &Csr, b: &Csr, geom: Geometry) -> Plan {
     assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    plan_blocked(a, &blockize(b, geom.block), geom)
+}
+
+/// Build the plan for C = A × B where `B` arrives pre-blockized (built once
+/// by `AccelKernel::prepare` and reused across jobs and shard workers); `A`
+/// is blockized per call. `gb.block` must equal `geom.block`.
+pub fn plan_blocked(a: &Csr, gb: &BlockGrid, geom: Geometry) -> Plan {
+    assert_eq!(a.cols(), gb.rows, "inner dimensions");
+    assert_eq!(gb.block, geom.block, "B blockized at a different tile size");
     let ga = blockize(a, geom.block);
-    let gb = blockize(b, geom.block);
-    plan_grids(&ga, &gb, geom, a.rows(), b.cols())
+    plan_grids(&ga, gb, geom, a.rows(), gb.cols)
 }
 
 fn plan_grids(ga: &BlockGrid, gb: &BlockGrid, geom: Geometry, m: usize, n: usize) -> Plan {

@@ -65,7 +65,7 @@ fn prop_incrs_counters_are_prefix_sums() {
     check(0xF2, 40, arb_coo, |coo| {
         let csr = Csr::from_coo(coo);
         let params = InCrsParams { section: 64, block: 8 };
-        let incrs = InCrs::from_csr_params(&csr, params).map_err(|e| e)?;
+        let incrs = InCrs::from_csr_params(&csr, params).map_err(|e| e.to_string())?;
         let spr = (coo.shape().1 + 63) / 64;
         for i in 0..coo.shape().0 {
             let (cs, _) = csr.row(i);
@@ -105,7 +105,7 @@ fn prop_incrs_never_costs_more_than_csr_plus_constant() {
         let csr = Csr::from_coo(coo);
         let incrs = match InCrs::from_csr(&csr) {
             Ok(x) => x,
-            Err(e) => return Err(e),
+            Err(e) => return Err(e.to_string()),
         };
         let (rows, cols) = coo.shape();
         let mut rng = Rng::new(42);

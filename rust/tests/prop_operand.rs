@@ -1,0 +1,306 @@
+//! Property + acceptance suite for the format-polymorphic operand API:
+//!
+//! 1. `MatrixOperand::convert` round-trips across **all** format pairs with
+//!    a bit-equal dense render (values pass through conversions untouched);
+//! 2. typed error cases: bad `InCrsParams`, counter overflow on conversion,
+//!    unknown format/algorithm names, shape mismatch through the client;
+//! 3. the acceptance property: every kernel registered in the default
+//!    registry accepts a non-CSR `MatrixOperand` via the client and
+//!    produces output **bit-identical** to pre-converted CSR submission,
+//!    at shard counts {1, 4};
+//! 4. a `prop_shard`-style check that Blocked-`PreparedB` sharded runs
+//!    (tiled/accel kernels preparing a blockized B once, shared by every
+//!    shard worker) match the PR 3 baselines bit for bit.
+
+use std::sync::Arc;
+
+use spmm_accel::coordinator::{JobError, Server, ServerConfig};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{
+    shard, Registry, ShardConfig, SpmmKernel, TiledConfig, TiledKernel,
+};
+use spmm_accel::formats::coo::Coo;
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::incrs::{InCrs, InCrsParams};
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
+use spmm_accel::formats::{FormatError, MatrixOperand, ALL_KINDS};
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+const BLOCK: usize = 16;
+
+fn registry() -> Registry {
+    Registry::with_default_kernels(Geometry { block: BLOCK, pairs: 32, slots: 16 }, 2)
+}
+
+/// Random COO with small dimensions and mixed density.
+fn gen_coo(rng: &mut Rng) -> Coo {
+    let rows = rng.usize_below(24) + 1;
+    let cols = rng.usize_below(40) + 1;
+    let density = rng.f64() * 0.4;
+    uniform(rows, cols, density, rng.next_u64()).to_coo()
+}
+
+fn dense_bits(op: &MatrixOperand) -> Vec<u32> {
+    op.as_sparse()
+        .to_coo()
+        .to_dense()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// 1. Conversion round-trips across every (from, to) format pair render to
+/// the same dense bits as the source.
+#[test]
+fn prop_convert_roundtrips_bit_equal_across_all_pairs() {
+    check(0x0EAD, 8, gen_coo, |coo| {
+        let base = MatrixOperand::from(coo.clone());
+        let want = dense_bits(&base);
+        for from in ALL_KINDS {
+            let x = base
+                .convert(from)
+                .map_err(|e| format!("convert to {from:?}: {e}"))?;
+            if x.format() != from {
+                return Err(format!("{from:?} reports {:?}", x.format()));
+            }
+            for to in ALL_KINDS {
+                let y = x
+                    .convert(to)
+                    .map_err(|e| format!("{from:?}->{to:?}: {e}"))?;
+                if dense_bits(&y) != want {
+                    return Err(format!("{from:?}->{to:?} changed value bits"));
+                }
+                if (y.shape(), y.nnz()) != (coo.shape(), coo.nnz()) {
+                    return Err(format!("{from:?}->{to:?} lost metadata"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `to_csr` on every native format renders the same CSR arrays.
+#[test]
+fn prop_to_csr_is_canonical_for_every_format() {
+    check(0x0EAE, 12, gen_coo, |coo| {
+        let want = Csr::from_coo(coo);
+        let base = MatrixOperand::from(coo.clone());
+        for from in ALL_KINDS {
+            let csr = base
+                .convert(from)
+                .and_then(|op| op.to_csr())
+                .map_err(|e| format!("{from:?}: {e}"))?;
+            if csr.row_ptr != want.row_ptr || csr.col_idx != want.col_idx {
+                return Err(format!("{from:?} changed structure"));
+            }
+            let same_vals = csr
+                .vals
+                .iter()
+                .zip(&want.vals)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same_vals || csr.vals.len() != want.vals.len() {
+                return Err(format!("{from:?} changed value bits"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// 2. Typed error cases surface the right variants end to end.
+#[test]
+fn typed_errors_surface_the_right_variants() {
+    // bad InCRS geometry
+    let bad = InCrsParams { section: 256, block: 3 };
+    assert!(matches!(
+        bad.validate(),
+        Err(FormatError::BadParams { section: 256, block: 3, .. })
+    ));
+    // counter overflow during conversion: one row with > 65535 nonzeros
+    let cols = 70_000usize;
+    let entries: Vec<(u32, u32, f32)> = (0..cols as u32).map(|c| (0, c, 1.0)).collect();
+    let wide = MatrixOperand::from(Coo::new(1, cols, entries));
+    match wide.convert(FormatKind::InCrs) {
+        Err(FormatError::CounterOverflow { row: 0, detail }) => {
+            assert!(detail.contains("16-bit prefix"), "{detail}")
+        }
+        other => panic!("expected CounterOverflow, got {other:?}"),
+    }
+    // unknown names parse to typed errors
+    assert!(matches!(
+        FormatKind::parse("nope"),
+        Err(FormatError::UnknownFormat(_))
+    ));
+    assert!(matches!(
+        spmm_accel::engine::Algorithm::parse("nope"),
+        Err(FormatError::UnknownAlgorithm(_))
+    ));
+    // shape mismatch through the client, with non-CSR operands
+    let s = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        geometry: Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        ..Default::default()
+    });
+    let client = s.client();
+    let a = uniform(4, 5, 0.5, 1).to_coo();
+    let b = uniform(7, 4, 0.5, 2).to_coo();
+    let err = client.job(a, b).submit().unwrap().wait().unwrap_err();
+    assert_eq!(err, JobError::ShapeMismatch { a: (4, 5), b: (7, 4) });
+    drop(client);
+    s.shutdown();
+}
+
+/// 3. ACCEPTANCE: every registered kernel accepts non-CSR operands via the
+/// client and is bit-identical to pre-converted CSR submission at shard
+/// counts {1, 4}.
+#[test]
+fn every_kernel_serves_non_csr_operands_bit_identically_at_1_and_4_shards() {
+    let keys = registry().keys();
+    assert!(keys.len() >= 6, "registry too small: {keys:?}");
+    let s = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        geometry: Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        tile_workers: 2,
+        ..Default::default()
+    });
+    let client = s.client();
+    let a = Arc::new(uniform(64, 48, 0.2, 50));
+    let b = Arc::new(uniform(48, 40, 0.2, 51));
+    // the non-CSR arrival forms under test
+    let a_coo = MatrixOperand::from(Arc::clone(&a)).convert(FormatKind::Coo).unwrap();
+    let b_incrs = MatrixOperand::from(Arc::clone(&b)).convert(FormatKind::InCrs).unwrap();
+    for (format, algorithm) in keys {
+        for shards in [1usize, 4] {
+            let run = |ao: MatrixOperand, bo: MatrixOperand| {
+                client
+                    .job(ao, bo)
+                    .kernel(format, algorithm)
+                    .shards(shards)
+                    .submit()
+                    .unwrap()
+                    .wait()
+                    .unwrap_or_else(|e| {
+                        panic!("{format:?}/{algorithm:?} @ {shards} shards: {e}")
+                    })
+            };
+            let want = run(
+                MatrixOperand::from(Arc::clone(&a)),
+                MatrixOperand::from(Arc::clone(&b)),
+            );
+            let got = run(a_coo.clone(), b_incrs.clone());
+            assert_eq!(
+                want.c.as_ref().unwrap().bit_pattern(),
+                got.c.as_ref().unwrap().bit_pattern(),
+                "{format:?}/{algorithm:?} @ {shards} shards: non-CSR submission \
+                 diverges bitwise from pre-converted CSR"
+            );
+        }
+    }
+    let snap = client.metrics();
+    assert!(snap.operand_conversions > 0, "{snap:?}");
+    assert_eq!(snap.jobs_failed, 0, "{snap:?}");
+    drop(client);
+    s.shutdown();
+}
+
+/// 4. Blocked-`PreparedB`: the blocked kernels prepare a blockized B once;
+/// sharded execution over that single shared grid matches both the
+/// unsharded kernel and the PR 3 tiled baseline bit for bit.
+#[test]
+fn blocked_prepared_b_sharded_runs_match_pr3_baselines() {
+    let a = uniform(96, 64, 0.15, 60);
+    let b = uniform(64, 52, 0.15, 61);
+    // tiled kernel: prepare must be Blocked, and shard::execute over the
+    // shared grid must equal the standalone executor (the PR 3 path)
+    let k = TiledKernel::new(TiledConfig { block: BLOCK, workers: 2 });
+    let prepared = k.prepare(&b).unwrap();
+    assert!(
+        matches!(prepared, spmm_accel::engine::PreparedB::Blocked(_)),
+        "tiled prepare must produce a Blocked operand"
+    );
+    let baseline = spmm_accel::engine::tiled::execute(
+        &a,
+        &b,
+        TiledConfig { block: BLOCK, workers: 2 },
+    )
+    .unwrap()
+    .0
+    .bit_pattern();
+    let unsharded = k.execute(&a, &prepared).unwrap().c.bit_pattern();
+    assert_eq!(unsharded, baseline, "Blocked path diverges from PR 3 executor");
+    for shards in [1usize, 4] {
+        let out = shard::execute(
+            &k,
+            &a,
+            Some(&b),
+            &prepared,
+            ShardConfig { shards, block: BLOCK },
+        )
+        .unwrap();
+        assert_eq!(
+            out.c.bit_pattern(),
+            baseline,
+            "Blocked sharded run @ {shards} diverges from PR 3 baseline"
+        );
+    }
+    // every blocked kernel in the registry (tiled + accel/Block) round-trips
+    // prepare -> sharded execute bit-identically to its unsharded run
+    for kernel in registry().kernels() {
+        let prepared = kernel.prepare(&b).unwrap();
+        let want = kernel.execute(&a, &prepared).unwrap().c.bit_pattern();
+        for shards in [1usize, 4] {
+            let out = shard::execute(
+                kernel.as_ref(),
+                &a,
+                Some(&b),
+                &prepared,
+                ShardConfig { shards, block: BLOCK },
+            )
+            .unwrap();
+            assert_eq!(
+                out.c.bit_pattern(),
+                want,
+                "{} @ {shards} shards diverges with prepared {}",
+                kernel.name(),
+                prepared.label()
+            );
+        }
+    }
+}
+
+/// The inner-InCRS kernel adopting a native InCRS operand through a real
+/// server stays bit-identical to the rebuild path.
+#[test]
+fn incrs_native_adoption_is_bit_identical_through_the_server() {
+    let s = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        geometry: Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        ..Default::default()
+    });
+    let client = s.client();
+    let a = Arc::new(uniform(32, 300, 0.15, 70));
+    let b_csr = Arc::new(uniform(300, 40, 0.15, 71));
+    let b_native = Arc::new(InCrs::from_csr(&b_csr).unwrap());
+    let run = |bo: MatrixOperand| {
+        client
+            .job(MatrixOperand::from(Arc::clone(&a)), bo)
+            .kernel(FormatKind::InCrs, spmm_accel::engine::Algorithm::Inner)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap()
+    };
+    let want = run(MatrixOperand::from(Arc::clone(&b_csr)));
+    let got = run(MatrixOperand::InCrs(Arc::clone(&b_native)));
+    assert_eq!(
+        want.c.as_ref().unwrap().bit_pattern(),
+        got.c.as_ref().unwrap().bit_pattern(),
+        "adopted native InCRS diverges from the rebuild path"
+    );
+    drop(client);
+    s.shutdown();
+}
