@@ -1,17 +1,23 @@
 //! End-to-end numeric-path benchmarks through the unified engine: plan
 //! construction, registered-kernel execution, serial-vs-parallel tiled
 //! execution on the synthetic 4096² dataset, a 1/2/4/8-shard row-band
-//! sweep, a native-format ingestion sweep (conversion cost included), and
-//! served throughput through the coordinator. Writes machine-readable
-//! summaries to `BENCH_engine.json` (override with `SPMM_BENCH_OUT`),
-//! `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`), and `BENCH_format.json`
+//! sweep, a scalar-vs-fast Gustavson thread sweep (bit-checked, with
+//! workspace-pool reuse measured through a coalesced served batch), a
+//! native-format ingestion sweep (conversion cost included), and served
+//! throughput through the coordinator. Writes machine-readable summaries
+//! to `BENCH_engine.json` (override with `SPMM_BENCH_OUT`),
+//! `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`), `BENCH_gustavson.json`
+//! (`SPMM_BENCH_GUSTAVSON_OUT`), and `BENCH_format.json`
 //! (`SPMM_BENCH_FORMAT_OUT`).
 
 use std::sync::Arc;
 
-use spmm_accel::coordinator::{JobHandle, Server, ServerConfig};
+use spmm_accel::coordinator::{JobHandle, KernelSpec, Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
-use spmm_accel::engine::{shard, tiled, Registry, ShardConfig, SpmmKernel, TiledConfig, TiledKernel};
+use spmm_accel::engine::{
+    shard, tiled, Algorithm, GustavsonFastKernel, GustavsonKernel, PreparedB, Registry,
+    ShardConfig, SpmmKernel, TiledConfig, TiledKernel,
+};
 use spmm_accel::formats::traits::FormatKind;
 use spmm_accel::formats::MatrixOperand;
 use spmm_accel::runtime::{Manifest, NumericEngine};
@@ -165,6 +171,127 @@ fn main() {
     match std::fs::write(&shard_out_path, shard_summary.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {shard_out_path}"),
         Err(e) => println!("could not write {shard_out_path}: {e}"),
+    }
+
+    // scalar vs fast Gustavson on 4096²: the vectorized, workspace-pooled
+    // backend at 1/2/4/8 A-row-band threads, bit-checked against the
+    // scalar kernel per configuration
+    let ga = uniform(4096, 4096, 0.005, 31);
+    let gb = Arc::new(uniform(4096, 4096, 0.005, 32));
+    let scalar_kernel = GustavsonKernel;
+    let scalar_prepared = scalar_kernel.prepare_shared(&gb).unwrap();
+    let r_scalar = bench(1, 3, || {
+        black_box(
+            scalar_kernel
+                .execute(&ga, &scalar_prepared)
+                .unwrap()
+                .stats
+                .real_pairs,
+        );
+    });
+    let scalar_out = scalar_kernel.execute(&ga, &scalar_prepared).unwrap();
+    let g_macs = scalar_out.stats.real_pairs as f64;
+    let scalar_bits = scalar_out.c.bit_pattern();
+    let scalar_ms = r_scalar.median.as_secs_f64() * 1e3;
+    report("gustavson/scalar(4096x4096 @ 0.5%)", r_scalar, g_macs, "MACs");
+    let mut gust_sweep: Vec<Json> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let k = GustavsonFastKernel::new(threads);
+        let prepared = k.prepare_shared(&gb).unwrap();
+        let r = bench(1, 3, || {
+            black_box(k.execute(&ga, &prepared).unwrap().stats.real_pairs);
+        });
+        let out = k.execute(&ga, &prepared).unwrap();
+        let bit_identical = out.c.bit_pattern() == scalar_bits;
+        let (pool_hits, pool_misses) = match &prepared {
+            PreparedB::Pooled(pb) => (pb.pool.hits(), pb.pool.misses()),
+            _ => (0, 0),
+        };
+        let ms = r.median.as_secs_f64() * 1e3;
+        report(
+            &format!("gustavson/fast_{threads}t(4096x4096 @ 0.5%)"),
+            r,
+            g_macs,
+            "MACs",
+        );
+        println!(
+            "gustavson sweep {threads}t: {:.2}ms vs scalar {scalar_ms:.2}ms -> speedup \
+             {:.2}x, pool {pool_hits} hits / {pool_misses} misses, bit-identical: \
+             {bit_identical}",
+            ms,
+            scalar_ms / ms
+        );
+        gust_sweep.push(obj([
+            ("threads", Json::from(threads)),
+            ("median_ms", Json::from(ms)),
+            ("scalar_ms", Json::from(scalar_ms)),
+            ("speedup_vs_scalar", Json::from(scalar_ms / ms)),
+            ("macs", Json::from(out.stats.real_pairs)),
+            ("pool_hits", Json::from(pool_hits)),
+            ("pool_misses", Json::from(pool_misses)),
+            ("bit_identical_to_scalar", Json::Bool(bit_identical)),
+        ]));
+    }
+    // workspace-pool reuse across a coalesced served micro-batch: one
+    // worker, 16 jobs sharing B — the first allocates, the rest reuse
+    let pool_server = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 32,
+        kernel: KernelSpec::Fixed(FormatKind::Csr, Algorithm::GustavsonFast),
+        geometry: geom,
+        ..Default::default()
+    });
+    let pool_client = pool_server.client();
+    let pa = Arc::new(uniform(1024, 1024, 0.01, 33));
+    let pb = Arc::new(uniform(1024, 1024, 0.01, 34));
+    let handles = pool_client.submit_many((0..16u64).map(|i| {
+        pool_client.job(pa.clone(), pb.clone()).id(i).keep_result(false).build()
+    }));
+    for res in JobHandle::batch_wait_all(handles) {
+        black_box(res.unwrap().report.real_pairs);
+    }
+    let pool_snap = pool_client.metrics();
+    println!(
+        "served coalesced batch: {} jobs, {} PreparedB builds, workspace pool \
+         {} hits / {} misses, {} kernel observations",
+        pool_snap.jobs_completed,
+        pool_snap.prepare_builds,
+        pool_snap.workspace_pool_hits,
+        pool_snap.workspace_pool_misses,
+        pool_snap.kernel_observations
+    );
+    drop(pool_client);
+    pool_server.shutdown();
+    let gustavson_out_path = std::env::var("SPMM_BENCH_GUSTAVSON_OUT")
+        .unwrap_or_else(|_| "BENCH_gustavson.json".into());
+    let gustavson_summary = obj([
+        ("bench", Json::from("bench_e2e/gustavson")),
+        (
+            "dataset",
+            Json::from("uniform 4096x4096, density 0.005, seeds 31/32"),
+        ),
+        ("scalar_ms", Json::from(scalar_ms)),
+        ("sweep", Json::Arr(gust_sweep)),
+        (
+            "served_coalesced_batch",
+            obj([
+                ("jobs", Json::from(pool_snap.jobs_completed)),
+                ("prepare_builds", Json::from(pool_snap.prepare_builds)),
+                ("workspace_pool_hits", Json::from(pool_snap.workspace_pool_hits)),
+                (
+                    "workspace_pool_misses",
+                    Json::from(pool_snap.workspace_pool_misses),
+                ),
+                (
+                    "kernel_observations",
+                    Json::from(pool_snap.kernel_observations),
+                ),
+            ]),
+        ),
+    ]);
+    match std::fs::write(&gustavson_out_path, gustavson_summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {gustavson_out_path}"),
+        Err(e) => println!("could not write {gustavson_out_path}: {e}"),
     }
 
     // native-format ingestion sweep: the same multiply with operands

@@ -1,9 +1,16 @@
-//! Lock-free service metrics: counters plus fixed-bucket latency
+//! Service metrics: lock-free counters plus fixed-bucket latency
 //! histograms (service time *and* queue wait), shared between workers and
-//! observers.
+//! observers — and a bounded, mutex-guarded kernel-observation log (the
+//! raw `(cost_hint, ingest_cost, measured_wall)` datapoints the ROADMAP's
+//! "fit the constants" item needs; one short lock per completed job, off
+//! every per-row hot path).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::engine::Algorithm;
+use crate::formats::traits::FormatKind;
 
 /// Power-of-two microsecond buckets: [<1us, <2us, <4us, ... , <2^30us, rest]
 const BUCKETS: usize = 32;
@@ -48,6 +55,59 @@ impl Histogram {
     }
 }
 
+/// One executed job's kernel-selection datapoint: what the registry's cost
+/// model predicted vs the wall time the kernel actually took. Collected so
+/// the static `cost_hint`/`ingest_cost` constants can be fitted from real
+/// serving traffic (`Registry::select` today ranks on unfitted hints).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelObservation {
+    /// Registry key of the kernel that executed.
+    pub format: FormatKind,
+    pub algorithm: Algorithm,
+    /// `SpmmKernel::cost_hint(a, b).total()` for the job's operands.
+    pub cost_hint: f64,
+    /// `SpmmKernel::ingest_cost(b, native)` for the job's native `B`.
+    pub ingest_cost: f64,
+    /// Measured kernel execute wall time (sharded execution included,
+    /// verify/render excluded), in microseconds.
+    pub wall_us: u64,
+}
+
+/// Observations kept in the ring (newest overwrite oldest beyond this).
+const KERNEL_LOG_CAP: usize = 4096;
+
+#[derive(Debug, Default)]
+struct KernelLogInner {
+    entries: Vec<KernelObservation>,
+    cursor: usize,
+}
+
+/// Bounded ring of [`KernelObservation`]s.
+#[derive(Debug, Default)]
+pub struct KernelLog {
+    inner: Mutex<KernelLogInner>,
+}
+
+impl KernelLog {
+    fn record(&self, obs: KernelObservation) {
+        if let Ok(mut inner) = self.inner.lock() {
+            if inner.entries.len() < KERNEL_LOG_CAP {
+                inner.entries.push(obs);
+            } else {
+                let cursor = inner.cursor;
+                inner.entries[cursor] = obs;
+                inner.cursor = (cursor + 1) % KERNEL_LOG_CAP;
+            }
+        }
+    }
+
+    /// The retained observations (ring order, not chronological once the
+    /// cap has wrapped — irrelevant for fitting).
+    fn entries(&self) -> Vec<KernelObservation> {
+        self.inner.lock().map(|inner| inner.entries.clone()).unwrap_or_default()
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub jobs_submitted: AtomicU64,
@@ -82,6 +142,18 @@ pub struct Metrics {
     pub shards_executed: AtomicU64,
     /// Sharded executions that failed (worker panic or band exec error).
     pub shard_failures: AtomicU64,
+    /// Accumulator-workspace checkouts served from a `PreparedB` pool
+    /// (the fast Gustavson kernel's workspace reuse across jobs,
+    /// micro-batches, and shard workers).
+    pub workspace_pool_hits: AtomicU64,
+    /// Workspace checkouts that had to allocate (pool empty).
+    pub workspace_pool_misses: AtomicU64,
+    /// Kernel-selection datapoints recorded (total, including any beyond
+    /// the bounded log's retention).
+    pub kernel_observations: AtomicU64,
+    /// Bounded `(cost_hint, ingest_cost, wall)` log per executed kernel —
+    /// read it with [`Metrics::kernel_log`].
+    pub kernel_log: KernelLog,
     /// Per-job service time (dequeue → response ready).
     pub latency: Histogram,
     /// Per-job queue wait (submit → dequeue) — the backpressure signal.
@@ -118,6 +190,19 @@ impl Metrics {
         self.latency.quantile_us(q)
     }
 
+    /// Record one executed kernel's `(cost_hint, ingest_cost, wall)`
+    /// datapoint — the raw material for fitting the selection constants.
+    pub fn record_kernel_observation(&self, obs: KernelObservation) {
+        self.kernel_observations.fetch_add(1, Ordering::Relaxed);
+        self.kernel_log.record(obs);
+    }
+
+    /// The retained kernel observations (a bounded ring of the newest
+    /// few thousand entries).
+    pub fn kernel_log(&self) -> Vec<KernelObservation> {
+        self.kernel_log.entries()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
@@ -135,6 +220,9 @@ impl Metrics {
             sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
             shards_executed: self.shards_executed.load(Ordering::Relaxed),
             shard_failures: self.shard_failures.load(Ordering::Relaxed),
+            workspace_pool_hits: self.workspace_pool_hits.load(Ordering::Relaxed),
+            workspace_pool_misses: self.workspace_pool_misses.load(Ordering::Relaxed),
+            kernel_observations: self.kernel_observations.load(Ordering::Relaxed),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             queue_p50_us: self.queue_wait.quantile_us(0.5),
@@ -164,6 +252,9 @@ pub struct MetricsSnapshot {
     pub sharded_jobs: u64,
     pub shards_executed: u64,
     pub shard_failures: u64,
+    pub workspace_pool_hits: u64,
+    pub workspace_pool_misses: u64,
+    pub kernel_observations: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub queue_p50_us: u64,
@@ -226,6 +317,39 @@ mod tests {
         assert_eq!(s.shard_failures, 1);
         assert!(s.shard_wall_p50_us >= 256, "{s:?}");
         assert!(s.shard_queue_p50_us <= 4, "{s:?}");
+    }
+
+    #[test]
+    fn kernel_log_records_bounded_observations() {
+        let m = Metrics::new();
+        let obs = KernelObservation {
+            format: FormatKind::Csr,
+            algorithm: Algorithm::GustavsonFast,
+            cost_hint: 1234.5,
+            ingest_cost: 67.0,
+            wall_us: 89,
+        };
+        m.record_kernel_observation(obs);
+        assert_eq!(m.snapshot().kernel_observations, 1);
+        assert_eq!(m.kernel_log(), vec![obs]);
+        // the ring stays bounded and keeps counting past the cap
+        for i in 0..(KERNEL_LOG_CAP as u64 + 10) {
+            m.record_kernel_observation(KernelObservation { wall_us: i, ..obs });
+        }
+        assert_eq!(
+            m.snapshot().kernel_observations,
+            KERNEL_LOG_CAP as u64 + 11
+        );
+        assert_eq!(m.kernel_log().len(), KERNEL_LOG_CAP);
+    }
+
+    #[test]
+    fn workspace_pool_counters_surface_in_the_snapshot() {
+        let m = Metrics::new();
+        m.workspace_pool_hits.fetch_add(5, Ordering::Relaxed);
+        m.workspace_pool_misses.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.workspace_pool_hits, s.workspace_pool_misses), (5, 2));
     }
 
     #[test]

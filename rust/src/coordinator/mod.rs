@@ -37,7 +37,7 @@ pub mod server;
 pub use client::{JobBuilder, JobHandle, JobStream, SpmmClient};
 pub use error::JobError;
 pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
-pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use metrics::{Histogram, KernelObservation, Metrics, MetricsSnapshot};
 pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
 pub use server::{CoalesceConfig, RegistryHook, Server, ServerConfig};

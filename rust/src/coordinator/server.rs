@@ -611,6 +611,15 @@ fn exec_one(
 ) -> Result<JobOutput, JobError> {
     let start = Instant::now();
     let shards = job.opts.shards.max(1);
+    // pooled operands (the fast Gustavson kernel) report workspace reuse:
+    // snapshot the pool counters around the execute and meter the deltas
+    // (the pool is owned by this worker's PreparedCache, so only this
+    // job's execute — including its shard workers — moves them meanwhile)
+    let pool = match prepared {
+        crate::engine::PreparedB::Pooled(pb) => Some(&pb.pool),
+        _ => None,
+    };
+    let pool_before = pool.map(|p| (p.hits(), p.misses()));
     // a kernel that is already a shard wrapper (registry_hook /
     // Registry::shard_all) shards itself — re-sharding here would nest
     // executors (bands × bands workers, double band slicing)
@@ -638,6 +647,24 @@ fn exec_one(
         let out = kernel.execute(a_csr, prepared)?;
         (out.c, out.stats, 1)
     };
+    // kernel-selection learning groundwork: log what the cost model
+    // predicted next to the wall time the kernel actually took (execute
+    // only — verify/render below is not the kernel's cost)
+    metrics.record_kernel_observation(crate::coordinator::metrics::KernelObservation {
+        format: kernel.format(),
+        algorithm: kernel.algorithm(),
+        cost_hint: kernel.cost_hint(a_csr, b_csr).total(),
+        ingest_cost: kernel.ingest_cost(b_csr, Some(&job.b)),
+        wall_us: start.elapsed().as_micros() as u64,
+    });
+    if let (Some(pool), Some((h0, m0))) = (pool, pool_before) {
+        metrics
+            .workspace_pool_hits
+            .fetch_add(pool.hits() - h0, Ordering::Relaxed);
+        metrics
+            .workspace_pool_misses
+            .fetch_add(pool.misses() - m0, Ordering::Relaxed);
+    }
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(a_csr, b_csr);
         Some(c.max_abs_diff(&oracle))
@@ -967,6 +994,77 @@ mod tests {
         let snap = s.metrics.snapshot();
         assert_eq!(snap.prepare_builds, 6, "{snap:?}");
         assert_eq!(snap.coalesced_jobs, 0, "{snap:?}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn fast_gustavson_pools_workspaces_across_a_coalesced_micro_batch() {
+        // single worker + B-sharing coalescing: 8 jobs sharing one B
+        // resolve to one PreparedB (pool included), so the first job
+        // allocates the workspace and the rest reuse it
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            kernel: KernelSpec::Fixed(FormatKind::Csr, Algorithm::GustavsonFast),
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            ..Default::default()
+        });
+        let a = Arc::new(uniform(48, 64, 0.2, 80));
+        let b = Arc::new(uniform(64, 40, 0.2, 81));
+        let rxs: Vec<_> = (0..8)
+            .map(|i| s.submit(SpmmJob::new(i, a.clone(), b.clone())))
+            .collect();
+        let mut outs = Vec::new();
+        for rx in rxs {
+            outs.push(rx.recv().unwrap().result.unwrap());
+        }
+        for out in &outs {
+            assert_eq!(out.backend, "gustavson-fast");
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 8);
+        assert!(snap.prepare_builds < 8, "B-sharing did not coalesce: {snap:?}");
+        assert!(
+            snap.workspace_pool_hits > 0,
+            "workspace pool never reused across the micro-batch: {snap:?}"
+        );
+        // one serial band per job: 8 checkouts total, and every PreparedB
+        // rebuild (batch boundaries notwithstanding, the content-keyed LRU
+        // returns the same pool) allocates exactly one workspace
+        assert_eq!(
+            snap.workspace_pool_hits + snap.workspace_pool_misses,
+            8,
+            "{snap:?}"
+        );
+        assert_eq!(snap.workspace_pool_misses, snap.prepare_builds, "{snap:?}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn every_executed_kernel_logs_a_selection_observation() {
+        let s = cpu_server(1, 8);
+        let a = Arc::new(uniform(32, 40, 0.2, 82));
+        let b = Arc::new(uniform(40, 24, 0.2, 83));
+        for (f, alg) in [
+            (FormatKind::Csr, Algorithm::Gustavson),
+            (FormatKind::Csr, Algorithm::GustavsonFast),
+            (FormatKind::Csr, Algorithm::Tiled),
+        ] {
+            let rx = s.submit(SpmmJob::new(1, a.clone(), b.clone()).with_kernel(f, alg));
+            rx.recv().unwrap().result.unwrap();
+        }
+        assert_eq!(s.metrics.snapshot().kernel_observations, 3);
+        let log = s.metrics.kernel_log();
+        assert_eq!(log.len(), 3);
+        let algs: Vec<Algorithm> = log.iter().map(|o| o.algorithm).collect();
+        for alg in [Algorithm::Gustavson, Algorithm::GustavsonFast, Algorithm::Tiled] {
+            assert!(algs.contains(&alg), "{alg:?} missing from {algs:?}");
+        }
+        for obs in &log {
+            assert!(obs.cost_hint > 0.0, "{obs:?}");
+            // B arrived as canonical CSR: ingestion is free
+            assert_eq!(obs.ingest_cost, 0.0, "{obs:?}");
+        }
         s.shutdown();
     }
 }

@@ -18,6 +18,7 @@ use crate::formats::incrs::InCrs;
 use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::FormatKind;
 use crate::spmm::blocks::BlockGrid;
+use crate::spmm::gustavson_fast::WorkspacePool;
 
 use super::error::EngineError;
 
@@ -28,6 +29,11 @@ pub enum Algorithm {
     Dense,
     /// Row-order CRS×CRS with a sparse accumulator (CPU baseline).
     Gustavson,
+    /// Vectorized, workspace-pooled Gustavson: symbolic row sizing,
+    /// epoch-stamped accumulator, unrolled 8-lane accumulate, parallel
+    /// A-row bands — bit-identical to [`Algorithm::Gustavson`]
+    /// (`spmm::gustavson_fast` + `engine::kernels::GustavsonFastKernel`).
+    GustavsonFast,
     /// Inner-product SpMM reading `B` column-wise through `locate`.
     Inner,
     /// Multi-threaded 32×32 tile-pair executor (`engine::tiled`).
@@ -38,9 +44,10 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 5] = [
+    pub const ALL: [Algorithm; 6] = [
         Algorithm::Dense,
         Algorithm::Gustavson,
+        Algorithm::GustavsonFast,
         Algorithm::Inner,
         Algorithm::Tiled,
         Algorithm::Block,
@@ -50,6 +57,7 @@ impl Algorithm {
         match self {
             Algorithm::Dense => "dense",
             Algorithm::Gustavson => "gustavson",
+            Algorithm::GustavsonFast => "gustavson-fast",
             Algorithm::Inner => "inner",
             Algorithm::Tiled => "tiled",
             Algorithm::Block => "block",
@@ -63,6 +71,7 @@ impl Algorithm {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dense" | "oracle" => Algorithm::Dense,
             "gustavson" | "row" => Algorithm::Gustavson,
+            "gustavson-fast" | "gfast" | "simd" => Algorithm::GustavsonFast,
             "inner" => Algorithm::Inner,
             "tiled" => Algorithm::Tiled,
             "block" | "accel" => Algorithm::Block,
@@ -141,6 +150,30 @@ impl BlockedB {
     }
 }
 
+/// Canonical CSR `B` paired with a shared [`WorkspacePool`] — the fast
+/// Gustavson kernel's prepared representation. The matrix itself is an
+/// `Arc` share (no copy); what makes this prepare worth caching is the
+/// pool: the coordinator's `PreparedCache` carries it across micro-batches
+/// and every shard worker sharing the `PreparedB` draws accumulator
+/// workspaces from the same pool instead of reallocating per job
+/// (SpArch's data-reuse argument applied to the workspace, not just `B`).
+#[derive(Debug)]
+pub struct PooledCsrB {
+    /// The canonical CSR operand (shared, never copied).
+    pub src: Arc<Csr>,
+    /// Accumulator workspaces reused across rows, jobs, and shard workers.
+    pub pool: WorkspacePool,
+}
+
+impl PooledCsrB {
+    pub fn new(src: Arc<Csr>) -> PooledCsrB {
+        PooledCsrB {
+            src,
+            pool: WorkspacePool::new(),
+        }
+    }
+}
+
 /// `B` converted into the representation a kernel consumes. Built by
 /// `SpmmKernel::prepare`; callers may cache it across jobs sharing `B`.
 #[derive(Clone, Debug)]
@@ -150,6 +183,9 @@ pub enum PreparedB {
     Dense(Arc<Dense>),
     /// Blockized `B` (tiled/accel kernels): tiles + the canonical source.
     Blocked(Arc<BlockedB>),
+    /// Canonical CSR plus a shared accumulator-workspace pool (the fast
+    /// Gustavson kernel).
+    Pooled(Arc<PooledCsrB>),
 }
 
 impl PreparedB {
@@ -163,6 +199,7 @@ impl PreparedB {
             PreparedB::InCrs(_) => FormatKind::InCrs,
             PreparedB::Dense(_) => FormatKind::Dense,
             PreparedB::Blocked(_) => FormatKind::Csr,
+            PreparedB::Pooled(_) => FormatKind::Csr,
         }
     }
 
@@ -174,6 +211,7 @@ impl PreparedB {
             PreparedB::InCrs(_) => "InCRS",
             PreparedB::Dense(_) => "dense",
             PreparedB::Blocked(_) => "blocked",
+            PreparedB::Pooled(_) => "pooled-CRS",
         }
     }
 
@@ -186,6 +224,7 @@ impl PreparedB {
             PreparedB::InCrs(m) => m.shape(),
             PreparedB::Dense(m) => m.shape(),
             PreparedB::Blocked(b) => (b.grid.rows, b.grid.cols),
+            PreparedB::Pooled(p) => p.src.shape(),
         }
     }
 }

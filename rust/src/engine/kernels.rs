@@ -15,11 +15,12 @@ use crate::formats::incrs::{InCrs, InCrsParams};
 use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::{FormatKind, NullSink, SparseMatrix};
 use crate::spmm;
+use crate::spmm::gustavson_fast;
 
 use super::error::EngineError;
 use super::kernel::{
-    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PreparedB,
-    SpmmKernel,
+    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PooledCsrB,
+    PreparedB, SpmmKernel,
 };
 use super::tiled::{self, TiledConfig};
 
@@ -130,6 +131,152 @@ impl SpmmKernel for GustavsonKernel {
         let (c_sparse, macs) = spmm::gustavson::multiply_counted(a, bc);
         let c = Dense::from_coo(&c_sparse.to_coo());
         Ok(EngineOutput { c, stats: scalar_stats(macs) })
+    }
+}
+
+// -------------------------------------------------------- gustavson-fast
+
+/// Vectorized, workspace-pooled Gustavson (`spmm::gustavson_fast`):
+/// symbolic row sizing, epoch-stamped accumulator, unrolled 8-lane
+/// accumulate, and parallel execution over weighted contiguous A-row bands
+/// (the tiled executor's partition heuristic). Bit-identical to
+/// [`GustavsonKernel`] at any worker count — per-output-element
+/// accumulation order never changes; bands only move whole rows between
+/// threads.
+///
+/// `prepare` builds a [`PooledCsrB`]: the CSR is an `Arc` share, but the
+/// attached [`crate::spmm::gustavson_fast::WorkspacePool`] is the reason
+/// the prepare is non-trivial — routed through the coordinator's
+/// content-keyed `PreparedCache`, the pool persists across micro-batches
+/// and is shared by every shard worker, so accumulator workspaces are
+/// reused instead of reallocated per job.
+pub struct GustavsonFastKernel {
+    /// A-row-band threads per execute (1 = serial, same code path).
+    pub workers: usize,
+}
+
+impl GustavsonFastKernel {
+    pub fn new(workers: usize) -> GustavsonFastKernel {
+        GustavsonFastKernel { workers: workers.max(1) }
+    }
+}
+
+impl SpmmKernel for GustavsonFastKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::GustavsonFast
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        "gustavson-fast"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // same nnz(A)·N·D_B streaming traversal as scalar Gustavson, run
+        // twice (symbolic + numeric) — but the unrolled accumulate retires
+        // several lanes per issue, so the net per-MAC cost is charged at
+        // half the scalar kernel's. The 0.5 constant is exactly what the
+        // server's kernel-observation log (Metrics::kernel_log) exists to
+        // re-fit.
+        CostHint {
+            flops: a.nnz() as f64 * nd(b) * 0.5,
+            prepare_words: 0.0,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Pooled(Arc::new(PooledCsrB::new(Arc::new(
+            b.clone(),
+        )))))
+    }
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Pooled(Arc::new(PooledCsrB::new(Arc::clone(b)))))
+    }
+    /// Non-trivial on purpose: the CSR share is O(1), but the attached
+    /// workspace pool must survive across jobs — routing through the
+    /// content-keyed `PreparedCache` is what makes pool reuse happen.
+    fn prepare_is_trivial(&self) -> bool {
+        false
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+        let pb = match b {
+            PreparedB::Pooled(pb) => pb,
+            other => return Err(wrong_operand(self, other)),
+        };
+        let src = pb.src.as_ref();
+        if a.cols() != src.rows() {
+            return Err(EngineError::ShapeMismatch {
+                a: a.shape(),
+                b: src.shape(),
+            });
+        }
+        let (m, n) = (a.rows(), src.cols());
+        // exact per-row MAC weights (one B-row length per A-nonzero) feed
+        // the same weighted contiguous partition the tiled executor uses;
+        // a serial kernel is one band by definition, so the default
+        // serving configuration never pays the extra pass over A
+        let bounds = if self.workers <= 1 || m <= 1 {
+            if m == 0 { Vec::new() } else { vec![(0, m)] }
+        } else {
+            let weights: Vec<usize> = (0..m)
+                .map(|i| a.row(i).0.iter().map(|&k| src.row_nnz(k as usize)).sum())
+                .collect();
+            tiled::partition_by_weight(&weights, self.workers)
+        };
+        let mut c = Dense::zeros(m, n);
+        let mut macs = 0u64;
+        let pool = &pb.pool;
+        let scatter = |c: &mut Dense, lo: usize, band: &gustavson_fast::BandResult| {
+            for (r, w) in band.row_ptr.windows(2).enumerate() {
+                let row = &mut c.data[(lo + r) * n..(lo + r + 1) * n];
+                let (e0, e1) = (w[0] as usize, w[1] as usize);
+                for (&j, &v) in band.col_idx[e0..e1].iter().zip(&band.vals[e0..e1]) {
+                    row[j as usize] = v;
+                }
+            }
+        };
+        if bounds.len() <= 1 {
+            if let Some(&(lo, hi)) = bounds.first() {
+                let mut ws = pool.checkout(n);
+                let band = gustavson_fast::multiply_band(a, lo, hi, src, &mut ws);
+                pool.give_back(ws);
+                macs = band.macs;
+                scatter(&mut c, lo, &band);
+            }
+        } else {
+            let results: Vec<(usize, gustavson_fast::BandResult)> = std::thread::scope(|s| {
+                let handles: Vec<_> = bounds
+                    .iter()
+                    .map(|&(lo, hi)| {
+                        s.spawn(move || {
+                            let mut ws = pool.checkout(n);
+                            let band = gustavson_fast::multiply_band(a, lo, hi, src, &mut ws);
+                            pool.give_back(ws);
+                            (lo, band)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("gustavson band worker panicked"))
+                    .collect()
+            });
+            // bands cover disjoint row ranges: the merge is a pure scatter,
+            // no reduction crosses a band
+            for (lo, band) in &results {
+                macs += band.macs;
+                scatter(&mut c, *lo, band);
+            }
+        }
+        Ok(EngineOutput {
+            c,
+            stats: ExecStats {
+                dispatches: bounds.len() as u64,
+                real_pairs: macs,
+                padded_pairs: macs,
+                macs_issued: macs,
+                threads: bounds.len().max(1),
+            },
+        })
     }
 }
 
@@ -333,6 +480,7 @@ mod tests {
         vec![
             Box::new(DenseOracleKernel),
             Box::new(GustavsonKernel),
+            Box::new(GustavsonFastKernel::new(2)),
             Box::new(InnerKernel::csr()),
             Box::new(InnerKernel::incrs(InCrsParams::default())),
             Box::new(TiledKernel::new(TiledConfig { block: 16, workers: 2 })),
@@ -445,6 +593,61 @@ mod tests {
         assert_eq!(k.ingest_cost(&b, None), 0.0);
         let coo_op = MatrixOperand::from(b.to_coo());
         assert!(GustavsonKernel.ingest_cost(&b, Some(&coo_op)) > 0.0);
+    }
+
+    #[test]
+    fn fast_gustavson_is_bit_identical_to_scalar_at_any_worker_count() {
+        let a = uniform(60, 80, 0.18, 40);
+        let b = uniform(80, 52, 0.18, 41);
+        let want = GustavsonKernel.run(&a, &b).unwrap().c;
+        for workers in [1usize, 2, 3, 7] {
+            let k = GustavsonFastKernel::new(workers);
+            let out = k.run(&a, &b).unwrap();
+            assert_eq!(
+                want.bit_pattern(),
+                out.c.bit_pattern(),
+                "{workers} workers diverge bitwise from scalar Gustavson"
+            );
+            assert!(out.stats.threads <= workers);
+            assert_eq!(out.stats.dispatches as usize, out.stats.threads);
+        }
+        // MAC accounting matches the scalar kernel's
+        let scalar = GustavsonKernel.run(&a, &b).unwrap().stats.real_pairs;
+        let fast = GustavsonFastKernel::new(4).run(&a, &b).unwrap().stats.real_pairs;
+        assert_eq!(scalar, fast);
+    }
+
+    #[test]
+    fn fast_gustavson_pool_is_reused_across_executes_and_shared_arcs() {
+        let k = GustavsonFastKernel::new(1);
+        let a = uniform(40, 48, 0.2, 42);
+        let b = Arc::new(uniform(48, 36, 0.2, 43));
+        let prepared = k.prepare_shared(&b).unwrap();
+        let pool = match &prepared {
+            PreparedB::Pooled(pb) => {
+                assert!(Arc::ptr_eq(&pb.src, &b), "prepare_shared must Arc-share B");
+                &pb.pool
+            }
+            other => panic!("unexpected prepared operand {other:?}"),
+        };
+        assert!(!k.prepare_is_trivial(), "pool must route through the PreparedCache");
+        // serial kernel: deterministic counts — one allocation ever, every
+        // later execute against the same PreparedB reuses it
+        k.execute(&a, &prepared).unwrap();
+        assert_eq!((pool.hits(), pool.misses(), pool.pooled()), (0, 1, 1));
+        k.execute(&a, &prepared).unwrap();
+        k.execute(&a, &prepared).unwrap();
+        assert_eq!((pool.hits(), pool.misses(), pool.pooled()), (2, 1, 1));
+        // a parallel kernel drawing on the SAME prepared operand (the shard
+        // workers' shape) keeps reusing the pool: everything it checks out
+        // is returned, and the workspace count never exceeds the peak
+        // concurrency it actually needed
+        let k3 = GustavsonFastKernel::new(3);
+        k3.execute(&a, &prepared).unwrap();
+        let allocated = pool.misses();
+        assert_eq!(pool.pooled() as u64, allocated, "workspaces not returned");
+        assert!(allocated <= 3, "over-allocated: {allocated}");
+        assert!(pool.hits() >= 3, "parallel execute bypassed the pool");
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //! blocked accelerator path when the MXU is available. This module makes
 //! the axes explicit:
 //!
-//! * [`Algorithm`] — the compute organization (dense oracle, Gustavson,
+//! * [`Algorithm`] — the compute organization (dense oracle, Gustavson —
+//!   scalar and the vectorized workspace-pooled fast variant —
 //!   inner-product, tiled, accelerator block plan);
 //! * [`kernel::SpmmKernel`] — the execution contract: `cost_hint` (choose
 //!   without running), `prepare` (build B's representation once, cacheable),
@@ -72,9 +73,11 @@ pub mod tiled;
 pub use accel::AccelKernel;
 pub use error::EngineError;
 pub use kernel::{
-    Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
+    Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PooledCsrB, PreparedB, SpmmKernel,
 };
-pub use kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
+pub use kernels::{
+    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, TiledKernel,
+};
 pub use prepared::{fingerprint_csr, CsrMemo, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry};
 pub use shard::{ShardBand, ShardConfig, ShardPlan, ShardPlanner, ShardedKernel};

@@ -17,7 +17,9 @@ use crate::spmm::plan::Geometry;
 use super::accel::AccelKernel;
 use super::error::EngineError;
 use super::kernel::{Algorithm, SpmmKernel};
-use super::kernels::{DenseOracleKernel, GustavsonKernel, InnerKernel, TiledKernel};
+use super::kernels::{
+    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, TiledKernel,
+};
 use super::tiled::TiledConfig;
 
 /// The registry key: which representation of `B` the kernel consumes and
@@ -35,13 +37,16 @@ impl Registry {
         Registry { map: BTreeMap::new() }
     }
 
-    /// The standard CPU kernel set: dense oracle, Gustavson, inner-product
-    /// over CRS and InCRS, the `tile_workers`-threaded tiled executor, and
-    /// the CPU accelerator-plan twin at `geom`.
+    /// The standard CPU kernel set: dense oracle, Gustavson (scalar and the
+    /// vectorized workspace-pooled fast variant, the latter running
+    /// `tile_workers` A-row bands), inner-product over CRS and InCRS, the
+    /// `tile_workers`-threaded tiled executor, and the CPU accelerator-plan
+    /// twin at `geom`.
     pub fn with_default_kernels(geom: Geometry, tile_workers: usize) -> Registry {
         let mut r = Registry::new();
         r.register(Arc::new(DenseOracleKernel));
         r.register(Arc::new(GustavsonKernel));
+        r.register(Arc::new(GustavsonFastKernel::new(tile_workers)));
         r.register(Arc::new(InnerKernel::csr()));
         r.register(Arc::new(InnerKernel::incrs(InCrsParams::default())));
         r.register(Arc::new(TiledKernel::new(TiledConfig {
@@ -208,8 +213,9 @@ mod tests {
         let formats: std::collections::BTreeSet<_> = keys.iter().map(|k| k.0).collect();
         let algos: std::collections::BTreeSet<_> = keys.iter().map(|k| k.1).collect();
         assert!(formats.len() >= 3, "{keys:?}");
-        assert!(algos.len() >= 4, "{keys:?}");
+        assert!(algos.len() >= 5, "{keys:?}");
         assert!(r.resolve(FormatKind::Csr, Algorithm::Gustavson).is_some());
+        assert!(r.resolve(FormatKind::Csr, Algorithm::GustavsonFast).is_some());
         assert!(r.resolve(FormatKind::InCrs, Algorithm::Inner).is_some());
         assert!(r.resolve(FormatKind::Dense, Algorithm::Dense).is_some());
         assert!(r.resolve(FormatKind::Csr, Algorithm::Block).is_some());
@@ -289,6 +295,21 @@ mod tests {
         assert_ne!(k.algorithm(), Algorithm::Dense);
         let out = k.run(&a, &b).unwrap();
         assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn fast_gustavson_hint_undercuts_scalar_so_selection_never_picks_scalar() {
+        let r = default_registry();
+        let scalar = r.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
+        let fast = r.resolve(FormatKind::Csr, Algorithm::GustavsonFast).unwrap();
+        for (m, k, n, d) in [(64usize, 128usize, 64usize, 0.02), (200, 100, 50, 0.2)] {
+            let a = uniform(m, k, d, 91);
+            let b = uniform(k, n, d, 92);
+            assert!(
+                fast.cost_hint(&a, &b).total() < scalar.cost_hint(&a, &b).total(),
+                "fast must undercut scalar on {m}x{k}x{n} @ {d}"
+            );
+        }
     }
 
     #[test]

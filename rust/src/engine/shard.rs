@@ -212,9 +212,10 @@ pub fn execute(
     let b_struct: Option<&Csr> = match (b, prepared) {
         (Some(b), _) => Some(b),
         (None, PreparedB::Csr(m)) => Some(m.as_ref()),
-        // blocked operands carry their canonical CSR source: exact
-        // tile-pair weights even when wrapping a blocked kernel
+        // blocked/pooled operands carry their canonical CSR source: exact
+        // tile-pair weights even when wrapping a blocked or pooled kernel
         (None, PreparedB::Blocked(bb)) => Some(bb.src.as_ref()),
+        (None, PreparedB::Pooled(pb)) => Some(pb.src.as_ref()),
         (None, _) => None,
     };
     // bands must never cut inside the kernel's own tile rows — round the

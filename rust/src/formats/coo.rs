@@ -22,8 +22,20 @@ pub struct Coo {
 
 impl Coo {
     /// Build from (possibly unsorted, must-be-unique) triplets.
+    ///
+    /// Entries that already arrive in row-major order — every CSR/format
+    /// `to_coo()` render, MatrixMarket files written by this crate — skip
+    /// the sort entirely: one ordered-scan check replaces the O(n log n)
+    /// call (the format-polymorphic-ingestion fast path the ROADMAP
+    /// names). The check uses strict ordering, so duplicate coordinates
+    /// still take the sort path and trip the duplicate assert below.
     pub fn new(rows: usize, cols: usize, mut entries: Vec<(u32, u32, f32)>) -> Coo {
-        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let row_major = entries
+            .windows(2)
+            .all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1));
+        if !row_major {
+            entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        }
         for w in entries.windows(2) {
             assert!(
                 (w[0].0, w[0].1) != (w[1].0, w[1].1),
@@ -205,9 +217,30 @@ mod tests {
     }
 
     #[test]
+    fn row_major_fast_path_matches_the_sorting_path_bitwise() {
+        let sorted = sample().entries.clone();
+        let mut reversed = sorted.clone();
+        reversed.reverse();
+        let fast = Coo::new(3, 4, sorted); // already row-major: no sort
+        let slow = Coo::new(3, 4, reversed); // forces the sort path
+        assert_eq!(fast.entries.len(), slow.entries.len());
+        for (x, y) in fast.entries.iter().zip(&slow.entries) {
+            assert_eq!((x.0, x.1, x.2.to_bits()), (y.0, y.1, y.2.to_bits()));
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "duplicate coordinate")]
     fn rejects_duplicates() {
         Coo::new(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate coordinate")]
+    fn rejects_duplicates_in_row_major_input() {
+        // adjacent duplicates fail the strict-order check, take the sort
+        // path, and still trip the duplicate assert
+        Coo::new(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0)]);
     }
 
     #[test]

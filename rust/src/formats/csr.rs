@@ -202,6 +202,21 @@ impl Csr {
         Csr::from_parts(self.cols, self.rows, cnt, col_idx, vals)
     }
 
+    /// Shape, structure, and raw value bits as one comparable vector —
+    /// the sparse twin of `Dense::bit_pattern`: two CSRs are bitwise
+    /// identical (same shape, row pointers, column indices, and f32 value
+    /// bits) iff their patterns are equal. The bit-identity suites compare
+    /// through this so the definition lives in one place.
+    pub fn bit_pattern(&self) -> Vec<u32> {
+        let mut bits = Vec::with_capacity(2 + self.row_ptr.len() + 2 * self.col_idx.len());
+        bits.push(self.rows as u32);
+        bits.push(self.cols as u32);
+        bits.extend_from_slice(&self.row_ptr);
+        bits.extend_from_slice(&self.col_idx);
+        bits.extend(self.vals.iter().map(|v| v.to_bits()));
+        bits
+    }
+
     /// Average non-zeros per row (the quantity Table II keys on).
     pub fn nnz_row_stats(&self) -> (usize, f64, usize) {
         let mut min = usize::MAX;
@@ -350,6 +365,29 @@ mod tests {
         assert_eq!(back.row_ptr, m.row_ptr);
         assert_eq!(back.col_idx, m.col_idx);
         assert_eq!(back.vals, m.vals);
+        assert_eq!(back.bit_pattern(), m.bit_pattern());
+    }
+
+    #[test]
+    fn bit_pattern_discriminates_shape_structure_and_value_bits() {
+        let m = sample();
+        assert_eq!(m.bit_pattern(), m.clone().bit_pattern());
+        let mut tweaked = m.clone();
+        tweaked.vals[0] = -tweaked.vals[0];
+        assert_ne!(m.bit_pattern(), tweaked.bit_pattern());
+        // ±0.0 compare equal as floats but differ in bits — the pattern
+        // is strictly bitwise
+        let z_pos = Csr::from_parts(1, 1, vec![0, 1], vec![0], vec![0.0]);
+        let z_neg = Csr::from_parts(1, 1, vec![0, 1], vec![0], vec![-0.0]);
+        assert_eq!(z_pos.vals, z_neg.vals, "floats compare equal");
+        assert_ne!(z_pos.bit_pattern(), z_neg.bit_pattern());
+        // same entries, different declared shape
+        let wide = Csr::from_coo(&Coo::new(
+            3,
+            5,
+            m.to_coo().entries.clone(),
+        ));
+        assert_ne!(m.bit_pattern(), wide.bit_pattern());
     }
 
     #[test]

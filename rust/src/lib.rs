@@ -48,12 +48,17 @@
 //! `B` operand so `SpmmKernel::prepare` runs once per batch
 //! (content-fingerprinted for real-prepare kernels — InCRS counters,
 //! densification, tiled/accel **blockization** (`PreparedB::Blocked`,
-//! built once and shared by every shard worker) — with a bounded LRU
+//! built once and shared by every shard worker), the fast Gustavson
+//! kernel's **workspace pool** (`PreparedB::Pooled`, accumulator
+//! workspaces reused across jobs and shard workers) — with a bounded LRU
 //! keeping each `PreparedB` across batches) — the paper's "one
 //! representation build, many multiplies" amortization at the serving
 //! layer. Coalescing stats (`prepare_builds`, `prepare_cache_hits`,
-//! `coalesced_jobs`, `operand_conversions`) surface in
-//! [`coordinator::MetricsSnapshot`]. Jobs may additionally ask for
+//! `coalesced_jobs`, `operand_conversions`, `workspace_pool_hits`)
+//! surface in [`coordinator::MetricsSnapshot`], and every executed job
+//! logs a `(cost_hint, ingest_cost, measured wall)` datapoint into the
+//! bounded [`coordinator::Metrics::kernel_log`] for fitting the selection
+//! constants. Jobs may additionally ask for
 //! **sharded row-band execution** (`JobBuilder::shards(n)` →
 //! [`engine::shard`]): contiguous bands on channel-connected shard
 //! workers sharing one `PreparedB`, merged with no cross-shard reduction

@@ -257,6 +257,17 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 snap.prepare_cache_hits,
                 snap.coalesced_jobs
             );
+            if snap.workspace_pool_hits + snap.workspace_pool_misses > 0 {
+                println!(
+                    "workspace pool: {} reuses / {} allocations across the run",
+                    snap.workspace_pool_hits, snap.workspace_pool_misses
+                );
+            }
+            println!(
+                "kernel log: {} (cost_hint, ingest_cost, wall) observations recorded \
+                 (Metrics::kernel_log)",
+                snap.kernel_observations
+            );
             drop(client);
             server.shutdown();
             Ok(())
@@ -337,6 +348,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel exp --id engines --scale 0.5\n\
                  \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
+                 \u{20}  spmm-accel spmm --kernel gustavson-fast --tile-workers 4   # vectorized pooled Gustavson\n\
                  \u{20}  spmm-accel spmm --kernel tiled --shards 4   # row-band sharded execution\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\

@@ -6,6 +6,7 @@
 
 use crate::formats::csr::Csr;
 use crate::formats::traits::SparseMatrix;
+use crate::spmm::gustavson_fast::Workspace;
 
 /// C = A × B with a sparse accumulator per output row.
 pub fn multiply(a: &Csr, b: &Csr) -> Csr {
@@ -16,6 +17,12 @@ pub fn multiply(a: &Csr, b: &Csr) -> Csr {
 /// count falls out of the traversal the multiply already does, so callers
 /// that want accounting (the engine's Gustavson kernel) don't pay a second
 /// pass over A.
+///
+/// The accumulator is the epoch-stamped [`Workspace`] shared with the fast
+/// backend: row clears are O(touched columns) and a value that cancels to
+/// exactly `0.0` mid-row can no longer re-enter the touched list (the old
+/// `acc[j] == 0.0` probe re-pushed such columns, wasting sort/scan work —
+/// the emitted result was and is identical).
 pub fn multiply_counted(a: &Csr, b: &Csr) -> (Csr, u64) {
     assert_eq!(a.cols(), b.rows(), "inner dimensions");
     let (m, n) = (a.rows(), b.cols());
@@ -24,35 +31,26 @@ pub fn multiply_counted(a: &Csr, b: &Csr) -> (Csr, u64) {
     row_ptr.push(0u32);
     let mut col_idx: Vec<u32> = Vec::new();
     let mut vals: Vec<f32> = Vec::new();
-
-    // dense accumulator + touched list (classic Gustavson workspace)
-    let mut acc = vec![0.0f32; n];
-    let mut touched: Vec<u32> = Vec::new();
+    let mut ws = Workspace::new(n);
 
     for i in 0..m {
+        ws.begin_row();
         let (a_cols, a_vals) = a.row(i);
         for (&k, &av) in a_cols.iter().zip(a_vals) {
             let (b_cols, b_vals) = b.row(k as usize);
             macs += b_cols.len() as u64;
             for (&j, &bv) in b_cols.iter().zip(b_vals) {
-                if acc[j as usize] == 0.0 {
-                    touched.push(j);
-                }
-                acc[j as usize] += av * bv;
+                ws.accum(j, av * bv);
             }
         }
-        touched.sort_unstable();
-        for &j in &touched {
-            let v = acc[j as usize];
+        for (j, v) in ws.drain_row_sorted() {
             // numerical cancellation can produce exact zeros; keep them out
             // of the sparse result to maintain the nnz invariant
             if v != 0.0 {
                 col_idx.push(j);
                 vals.push(v);
             }
-            acc[j as usize] = 0.0;
         }
-        touched.clear();
         row_ptr.push(col_idx.len() as u32);
     }
     (Csr::from_parts(m, n, row_ptr, col_idx, vals), macs)

@@ -1,0 +1,449 @@
+//! High-performance Gustavson SpMM: the scalar baseline (`gustavson`)
+//! restructured for throughput while staying **bit-identical** to it.
+//!
+//! Three changes, none of which touch per-output-element accumulation
+//! order (the bit-identity invariant every execution path is tested on):
+//!
+//! 1. **Symbolic pass.** Each output row's structural nonzero count is
+//!    computed up front, so the numeric pass writes into exactly-sized
+//!    buffers — no `Vec` regrowth in the hot loop.
+//! 2. **Epoch-stamped accumulator.** The dense accumulator is paired with
+//!    a per-column epoch stamp; "is this column new for this row" is one
+//!    integer compare, clears are free (bumping the epoch invalidates the
+//!    whole row), and exact cancellation to `0.0` can never re-enter a
+//!    column into the touched list (the scalar kernel's `acc[j] == 0.0`
+//!    probe re-pushed and re-sorted such columns).
+//! 3. **Unrolled accumulate.** Contributions from one B-row are processed
+//!    in 8-lane chunks: the eight products are straight-line multiplies
+//!    the compiler autovectorizes, and each add targets a distinct
+//!    accumulator slot — so every output element still receives its
+//!    contributions in the scalar kernel's exact order. (Real `std::simd`
+//!    is the named follow-up once the toolchain allows; these chunks are
+//!    the portable form.)
+//!
+//! Parallelism (contiguous A-row bands) and workspace pooling live in the
+//! engine's `GustavsonFastKernel`; this module is the single-threaded
+//! algorithm body plus the [`Workspace`]/[`WorkspacePool`] types both
+//! layers share.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::formats::csr::Csr;
+use crate::formats::traits::SparseMatrix;
+
+/// Unroll width of the accumulate loop (see module docs, point 3).
+pub const LANES: usize = 8;
+
+/// Reusable Gustavson accumulator: dense value array + epoch stamps +
+/// touched-column list. One workspace serves any number of multiplies
+/// against matrices with up to [`Workspace::width`] output columns;
+/// [`WorkspacePool`] reuses them across rows, jobs, micro-batches, and
+/// shard workers instead of reallocating per call.
+#[derive(Debug)]
+pub struct Workspace {
+    acc: Vec<f32>,
+    stamp: Vec<u32>,
+    epoch: u32,
+    touched: Vec<u32>,
+}
+
+impl Workspace {
+    /// A workspace for products with `n` output columns.
+    pub fn new(n: usize) -> Workspace {
+        Workspace {
+            acc: vec![0.0; n],
+            stamp: vec![0; n],
+            epoch: 0,
+            touched: Vec::new(),
+        }
+    }
+
+    /// Columns this workspace can accumulate over.
+    pub fn width(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Grow (never shrink) to serve `n` output columns.
+    pub fn ensure(&mut self, n: usize) {
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
+            self.stamp.resize(n, 0);
+        }
+    }
+
+    /// Start accumulating a new output row: bump the epoch, which
+    /// invalidates every previous stamp at once — no per-entry zeroing,
+    /// and no `acc[j] == 0.0` probe that could re-admit a cancelled
+    /// column (the scalar path's wasted re-push + re-sort).
+    #[inline]
+    pub(crate) fn begin_row(&mut self) {
+        if self.epoch == u32::MAX {
+            // one fill per 2³² rows: reset stamps so epoch 1 is fresh again
+            self.stamp.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+        self.touched.clear();
+    }
+
+    /// Accumulate one product into column `j`. First touch this row zeroes
+    /// the slot then adds — the scalar kernel's exact `0.0 + p` sequence,
+    /// so value bits (including the `-0.0` corner) never diverge.
+    #[inline(always)]
+    pub(crate) fn accum(&mut self, j: u32, p: f32) {
+        let ji = j as usize;
+        if self.stamp[ji] != self.epoch {
+            self.stamp[ji] = self.epoch;
+            self.acc[ji] = 0.0;
+            self.touched.push(j);
+        }
+        self.acc[ji] += p;
+    }
+
+    /// Sort this row's touched columns ascending and iterate their
+    /// `(column, accumulated value)` pairs — the emission order both the
+    /// scalar and fast kernels share.
+    pub(crate) fn drain_row_sorted(&mut self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let Workspace { touched, acc, .. } = self;
+        touched.sort_unstable();
+        touched.iter().map(move |&j| (j, acc[j as usize]))
+    }
+
+    #[cfg(test)]
+    fn force_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+}
+
+/// Shared pool of [`Workspace`]s. Lives inside the fast kernel's prepared
+/// `B` (`engine::PooledCsrB`), so the coordinator's `PreparedCache` carries
+/// it across micro-batches and every shard worker sharing the `PreparedB`
+/// draws from the same pool. Checkout prefers a pooled workspace (a
+/// **hit**) and falls back to allocating (a **miss**); the counters are the
+/// reuse metric the serving layer reports.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// A workspace covering `n` output columns — pooled if available.
+    pub fn checkout(&self, n: usize) -> Workspace {
+        let pooled = self.free.lock().ok().and_then(|mut free| free.pop());
+        match pooled {
+            Some(mut ws) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                ws.ensure(n);
+                ws
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Workspace::new(n)
+            }
+        }
+    }
+
+    /// Return a workspace for reuse.
+    pub fn give_back(&self, ws: Workspace) {
+        if let Ok(mut free) = self.free.lock() {
+            free.push(ws);
+        }
+    }
+
+    /// Checkouts served from the pool.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Workspaces currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().map(|free| free.len()).unwrap_or(0)
+    }
+}
+
+/// Structural (pre-cancellation) nonzero count of each output row in
+/// `lo..hi` — the symbolic pass. Upper-bounds the numeric row sizes
+/// exactly (equality whenever no accumulation cancels to exactly `0.0`).
+pub fn symbolic_row_nnz(a: &Csr, lo: usize, hi: usize, b: &Csr, ws: &mut Workspace) -> Vec<u32> {
+    ws.ensure(b.cols());
+    let mut counts = Vec::with_capacity(hi - lo);
+    for i in lo..hi {
+        ws.begin_row();
+        let mut count = 0u32;
+        let (a_cols, _) = a.row(i);
+        for &k in a_cols {
+            let (b_cols, _) = b.row(k as usize);
+            for &j in b_cols {
+                if ws.stamp[j as usize] != ws.epoch {
+                    ws.stamp[j as usize] = ws.epoch;
+                    count += 1;
+                }
+            }
+        }
+        counts.push(count);
+    }
+    counts
+}
+
+/// One computed A-row band of `C = A × B` in CSR parts (row pointers
+/// relative to the band) plus its accounting.
+#[derive(Debug)]
+pub struct BandResult {
+    /// Relative row pointers, length `hi - lo + 1`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    /// Scalar MACs performed (identical to the scalar kernel's count).
+    pub macs: u64,
+    /// Total structural nnz the symbolic pass sized the buffers for
+    /// (`>= col_idx.len()`; equal in the absence of exact cancellation).
+    pub symbolic_nnz: usize,
+}
+
+/// Compute output rows `lo..hi` of `C = A × B`: symbolic pass sizes the
+/// band's buffers, numeric pass fills them with the scalar kernel's exact
+/// per-element accumulation order. Row-decomposable by construction —
+/// the band's rows are bit-identical to the full run's rows.
+pub fn multiply_band(a: &Csr, lo: usize, hi: usize, b: &Csr, ws: &mut Workspace) -> BandResult {
+    debug_assert!(lo <= hi && hi <= a.rows());
+    debug_assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    ws.ensure(b.cols());
+
+    let counts = symbolic_row_nnz(a, lo, hi, b, ws);
+    let symbolic_nnz: usize = counts.iter().map(|&c| c as usize).sum();
+
+    // exact-capacity output buffers: the numeric pass never regrows them
+    let mut row_ptr = Vec::with_capacity(hi - lo + 1);
+    row_ptr.push(0u32);
+    let mut col_idx: Vec<u32> = Vec::with_capacity(symbolic_nnz);
+    let mut vals: Vec<f32> = Vec::with_capacity(symbolic_nnz);
+    let mut macs = 0u64;
+
+    for i in lo..hi {
+        ws.begin_row();
+        let (a_cols, a_vals) = a.row(i);
+        for (&k, &av) in a_cols.iter().zip(a_vals) {
+            let (b_cols, b_vals) = b.row(k as usize);
+            macs += b_cols.len() as u64;
+            let mut c_chunks = b_cols.chunks_exact(LANES);
+            let mut v_chunks = b_vals.chunks_exact(LANES);
+            for (c8, v8) in (&mut c_chunks).zip(&mut v_chunks) {
+                // eight independent products in one straight-line block
+                // (autovectorizable); the accumulates hit distinct slots,
+                // so each output element's add order matches the scalar
+                // kernel exactly
+                let p = [
+                    av * v8[0],
+                    av * v8[1],
+                    av * v8[2],
+                    av * v8[3],
+                    av * v8[4],
+                    av * v8[5],
+                    av * v8[6],
+                    av * v8[7],
+                ];
+                for (&j, &pj) in c8.iter().zip(&p) {
+                    ws.accum(j, pj);
+                }
+            }
+            for (&j, &bv) in c_chunks.remainder().iter().zip(v_chunks.remainder()) {
+                ws.accum(j, av * bv);
+            }
+        }
+        for (j, v) in ws.drain_row_sorted() {
+            // keep exact cancellations out of the sparse result (the
+            // scalar kernel's nnz invariant)
+            if v != 0.0 {
+                col_idx.push(j);
+                vals.push(v);
+            }
+        }
+        row_ptr.push(col_idx.len() as u32);
+    }
+    debug_assert!(col_idx.len() <= symbolic_nnz);
+    BandResult {
+        row_ptr,
+        col_idx,
+        vals,
+        macs,
+        symbolic_nnz,
+    }
+}
+
+/// `C = A × B` with a caller-provided workspace. Bit-identical to
+/// [`super::gustavson::multiply_counted`] (locked by `tests/prop_gustavson`).
+pub fn multiply_counted_ws(a: &Csr, b: &Csr, ws: &mut Workspace) -> (Csr, u64) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    let band = multiply_band(a, 0, a.rows(), b, ws);
+    (
+        Csr::from_parts(a.rows(), b.cols(), band.row_ptr, band.col_idx, band.vals),
+        band.macs,
+    )
+}
+
+/// Convenience wrapper allocating a fresh workspace.
+pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    let mut ws = Workspace::new(b.cols());
+    multiply_counted_ws(a, b, &mut ws).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::coo::Coo;
+    use crate::spmm::gustavson;
+
+    fn same_csr_bits(x: &Csr, y: &Csr) -> bool {
+        x.bit_pattern() == y.bit_pattern()
+    }
+
+    #[test]
+    fn matches_scalar_gustavson_bitwise() {
+        let mut ws = Workspace::new(0);
+        for seed in 0..6 {
+            let a = uniform(30, 40, 0.2, seed);
+            let b = uniform(40, 33, 0.2, seed + 100);
+            let (want, want_macs) = gustavson::multiply_counted(&a, &b);
+            let (got, got_macs) = multiply_counted_ws(&a, &b, &mut ws);
+            assert!(same_csr_bits(&want, &got), "seed {seed}");
+            assert_eq!(want_macs, got_macs, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn symbolic_counts_size_the_numeric_pass_exactly_without_cancellation() {
+        // uniform values live in [0.5, 1.5): all positive, no cancellation,
+        // so structural == numeric nnz per row
+        let a = uniform(25, 30, 0.25, 3);
+        let b = uniform(30, 28, 0.25, 4);
+        let mut ws = Workspace::new(b.cols());
+        let counts = symbolic_row_nnz(&a, 0, a.rows(), &b, &mut ws);
+        let band = multiply_band(&a, 0, a.rows(), &b, &mut ws);
+        assert_eq!(counts.len(), a.rows());
+        assert_eq!(
+            band.symbolic_nnz,
+            counts.iter().map(|&c| c as usize).sum::<usize>()
+        );
+        assert_eq!(band.col_idx.len(), band.symbolic_nnz);
+        for (i, &c) in counts.iter().enumerate() {
+            assert_eq!(
+                band.row_ptr[i + 1] - band.row_ptr[i],
+                c,
+                "row {i} sized wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn cancellation_shrinks_numeric_below_symbolic_and_drops_the_entry() {
+        // A = [1, -1, 2] times B rows [3], [3], [7]: column 0 receives
+        // 3, -3 (exact cancellation), then 14 — one output entry, while
+        // the symbolic pass counts the column once and sizes for it
+        let a = Csr::from_coo(&Coo::new(
+            1,
+            3,
+            vec![(0, 0, 1.0), (0, 1, -1.0), (0, 2, 2.0)],
+        ));
+        let b = Csr::from_coo(&Coo::new(
+            3,
+            1,
+            vec![(0, 0, 3.0), (1, 0, 3.0), (2, 0, 7.0)],
+        ));
+        let mut ws = Workspace::new(1);
+        let band = multiply_band(&a, 0, 1, &b, &mut ws);
+        assert_eq!(band.symbolic_nnz, 1);
+        assert_eq!(band.vals, vec![14.0]);
+        // full cancellation: the entry vanishes entirely
+        let b0 = Csr::from_coo(&Coo::new(
+            3,
+            1,
+            vec![(0, 0, 3.0), (1, 0, 3.0)],
+        ));
+        let band0 = multiply_band(&a, 0, 1, &b0, &mut ws);
+        assert_eq!(band0.symbolic_nnz, 1);
+        assert_eq!(band0.col_idx.len(), 0);
+        // and both agree with the scalar kernel bitwise
+        let (want, _) = gustavson::multiply_counted(&a, &b0);
+        assert_eq!(want.nnz(), 0);
+    }
+
+    #[test]
+    fn bands_compose_to_the_full_product() {
+        let a = uniform(40, 32, 0.2, 9);
+        let b = uniform(32, 26, 0.2, 10);
+        let mut ws = Workspace::new(b.cols());
+        let whole = multiply_band(&a, 0, 40, &b, &mut ws);
+        let lo_band = multiply_band(&a, 0, 16, &b, &mut ws);
+        let hi_band = multiply_band(&a, 16, 40, &b, &mut ws);
+        assert_eq!(
+            whole.col_idx.len(),
+            lo_band.col_idx.len() + hi_band.col_idx.len()
+        );
+        assert_eq!(&whole.col_idx[..lo_band.col_idx.len()], &lo_band.col_idx[..]);
+        assert_eq!(&whole.col_idx[lo_band.col_idx.len()..], &hi_band.col_idx[..]);
+        let recombined: Vec<u32> = lo_band
+            .vals
+            .iter()
+            .chain(&hi_band.vals)
+            .map(|v| v.to_bits())
+            .collect();
+        let want: Vec<u32> = whole.vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(recombined, want, "band split changed value bits");
+        assert_eq!(whole.macs, lo_band.macs + hi_band.macs);
+    }
+
+    #[test]
+    fn epoch_wrap_resets_stamps_instead_of_aliasing() {
+        let a = uniform(6, 8, 0.5, 20);
+        let b = uniform(8, 7, 0.5, 21);
+        let mut ws = Workspace::new(b.cols());
+        let (want, _) = multiply_counted_ws(&a, &b, &mut ws);
+        // park the epoch at the wrap boundary: the wrap must reset every
+        // stamp before reusing small epoch values, or the first run's
+        // stale stamps (1, 2, …) would alias the second run's epochs and
+        // skip the zeroing of touched slots
+        ws.force_epoch(u32::MAX);
+        let (got, _) = multiply_counted_ws(&a, &b, &mut ws);
+        assert!(same_csr_bits(&want, &got), "epoch wrap corrupted the workspace");
+    }
+
+    #[test]
+    fn workspace_pool_reuses_and_counts() {
+        let pool = WorkspacePool::new();
+        assert_eq!((pool.hits(), pool.misses()), (0, 0));
+        let ws1 = pool.checkout(16);
+        let ws2 = pool.checkout(16);
+        assert_eq!((pool.hits(), pool.misses()), (0, 2));
+        pool.give_back(ws1);
+        pool.give_back(ws2);
+        assert_eq!(pool.pooled(), 2);
+        // reuse grows the workspace when the next job is wider
+        let ws = pool.checkout(64);
+        assert_eq!((pool.hits(), pool.misses()), (1, 2));
+        assert!(ws.width() >= 64);
+        pool.give_back(ws);
+        assert_eq!(pool.pooled(), 2);
+    }
+
+    #[test]
+    fn empty_operands() {
+        let a = uniform(5, 8, 0.0, 1);
+        let b = uniform(8, 6, 0.5, 2);
+        let c = multiply(&a, &b);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.shape(), (5, 6));
+    }
+}

@@ -5,6 +5,11 @@
 //! * [`dense`] — the numeric oracle (row-expansion reference multiply).
 //! * [`gustavson`] — row-order CRS×CRS (the CPU baseline that *avoids*
 //!   column access).
+//! * [`gustavson_fast`] — the same algorithm restructured for throughput
+//!   (symbolic row sizing, epoch-stamped accumulator, unrolled 8-lane
+//!   accumulate) while staying bit-identical to [`gustavson`]; the engine's
+//!   `GustavsonFastKernel` adds A-row-band parallelism and workspace
+//!   pooling on top.
 //! * [`inner`] — inner-product SpMM with column-order `locate` access to B
 //!   (the access pattern Tables I/II and Fig 3 measure).
 //! * [`blocks`]/[`plan`] — 32×32 blocking and sorted tile-pair dispatch
@@ -14,6 +19,7 @@
 pub mod blocks;
 pub mod dense;
 pub mod gustavson;
+pub mod gustavson_fast;
 pub mod inner;
 pub mod plan;
 

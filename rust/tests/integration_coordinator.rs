@@ -145,6 +145,7 @@ fn sharded_serving_is_bit_identical_and_metered() {
     let kernels = [
         (FormatKind::Csr, Algorithm::Tiled),
         (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::GustavsonFast),
         (FormatKind::Csr, Algorithm::Block),
         (FormatKind::InCrs, Algorithm::Inner),
     ];

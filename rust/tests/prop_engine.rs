@@ -79,7 +79,7 @@ fn every_registered_kernel_agrees_with_the_dense_oracle() {
         Geometry { block: 16, pairs: 32, slots: 16 },
         2,
     );
-    assert!(registry.len() >= 5, "default registry too small: {registry:?}");
+    assert!(registry.len() >= 7, "default registry too small: {registry:?}");
     check(0xBEEF, 15, gen_pair, |(a, b)| {
         let want = dense_ref(a, b);
         for kernel in registry.kernels() {
@@ -124,6 +124,7 @@ fn registry_resolves_the_contracted_kernels() {
     // the acceptance surface: ≥3 algorithms over ≥3 formats
     for (f, alg) in [
         (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::GustavsonFast),
         (FormatKind::Csr, Algorithm::Inner),
         (FormatKind::InCrs, Algorithm::Inner),
         (FormatKind::Dense, Algorithm::Dense),

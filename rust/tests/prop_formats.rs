@@ -33,6 +33,41 @@ fn prop_every_format_roundtrips_coo() {
     });
 }
 
+/// The Coo→CSR fast path: entries arriving already row-major skip the
+/// construction sort; the resulting Coo and its CSR render must be
+/// bit-identical to building from the same entries shuffled (the sorting
+/// path).
+#[test]
+fn prop_coo_row_major_fast_path_is_bit_identical_to_the_sorting_path() {
+    let gen = |rng: &mut Rng| {
+        let coo = arb_coo(rng);
+        let mut shuffled = coo.entries.clone();
+        rng.shuffle(&mut shuffled);
+        (coo, shuffled)
+    };
+    check(0xF7, 30, gen, |(coo, shuffled)| {
+        let (rows, cols) = coo.shape();
+        // coo.entries are sorted (Coo invariant): this construction takes
+        // the fast path; the shuffled clone forces the sort
+        let fast = Coo::new(rows, cols, coo.entries.clone());
+        let slow = Coo::new(rows, cols, shuffled.clone());
+        if fast.entries.len() != slow.entries.len() {
+            return Err("entry counts diverge".into());
+        }
+        for (x, y) in fast.entries.iter().zip(&slow.entries) {
+            if (x.0, x.1, x.2.to_bits()) != (y.0, y.1, y.2.to_bits()) {
+                return Err(format!("entries diverge at ({}, {})", x.0, x.1));
+            }
+        }
+        let csr_fast = Csr::from_coo(&fast);
+        let csr_slow = Csr::from_coo(&slow);
+        if csr_fast.bit_pattern() != csr_slow.bit_pattern() {
+            return Err("CSR renders diverge bitwise".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_locate_agrees_across_all_formats() {
     check(0xF1, 25, arb_coo, |coo| {

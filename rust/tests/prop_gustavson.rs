@@ -1,0 +1,230 @@
+//! Bit-identity property suite for the vectorized, workspace-pooled
+//! Gustavson backend (`spmm::gustavson_fast` + `GustavsonFastKernel`):
+//!
+//! 1. the fast algorithm body is bit-identical to the scalar
+//!    `gustavson::multiply_counted` — structure, value bits, and MAC
+//!    counts — on random inputs, reusing one workspace across cases;
+//! 2. the kernel is bit-identical to the scalar `GustavsonKernel` at every
+//!    worker count, through the registry key and through the sharded
+//!    executor at {1, 2, 3, 5, 8} shards (the `prop_shard` property,
+//!    asserted here for the new key explicitly);
+//! 3. the symbolic pass sizes the numeric pass exactly (no `Vec` regrowth)
+//!    and exact cancellation never double-emits a column;
+//! 4. the workspace pool is shared by shard workers drawing on one
+//!    `PreparedB`.
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{
+    shard, Algorithm, GustavsonFastKernel, GustavsonKernel, PreparedB, Registry,
+    ShardConfig, SpmmKernel,
+};
+use spmm_accel::formats::coo::Coo;
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::spmm::{gustavson, gustavson_fast};
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+const BLOCK: usize = 16;
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 5, 8];
+
+fn gen_pair(rng: &mut Rng) -> (Csr, Csr) {
+    let m = rng.usize_below(80) + 1;
+    let k = rng.usize_below(60) + 1;
+    let n = rng.usize_below(50) + 1;
+    let da = rng.f64() * 0.35;
+    let db = rng.f64() * 0.35;
+    let seed = rng.next_u64();
+    (uniform(m, k, da, seed), uniform(k, n, db, seed ^ 0xFA57))
+}
+
+fn same_csr_bits(x: &Csr, y: &Csr) -> Result<(), String> {
+    if x.bit_pattern() != y.bit_pattern() {
+        return Err(format!(
+            "CSRs diverge bitwise: {:?}/{} nnz vs {:?}/{} nnz",
+            x.shape(),
+            x.nnz(),
+            y.shape(),
+            y.nnz()
+        ));
+    }
+    Ok(())
+}
+
+/// 1. Algorithm body: fast == scalar bitwise, same MAC count, one reused
+/// workspace across all cases (epoch stamping must isolate rows/jobs).
+#[test]
+fn prop_fast_body_is_bit_identical_to_scalar_gustavson() {
+    let mut ws = gustavson_fast::Workspace::new(0);
+    check(0x6057, 40, gen_pair, |(a, b)| {
+        let (want, want_macs) = gustavson::multiply_counted(a, b);
+        let (got, got_macs) = gustavson_fast::multiply_counted_ws(a, b, &mut ws);
+        same_csr_bits(&want, &got)?;
+        if want_macs != got_macs {
+            return Err(format!("macs {want_macs} != {got_macs}"));
+        }
+        Ok(())
+    });
+}
+
+/// 2a. Kernel vs kernel: every worker count renders the same Dense bits as
+/// the scalar kernel.
+#[test]
+fn prop_fast_kernel_matches_scalar_kernel_at_every_worker_count() {
+    check(0x6058, 12, gen_pair, |(a, b)| {
+        let want = GustavsonKernel.run(a, b).map_err(|e| e.to_string())?.c.bit_pattern();
+        for workers in [1usize, 2, 3, 7] {
+            let out = GustavsonFastKernel::new(workers)
+                .run(a, b)
+                .map_err(|e| format!("{workers} workers: {e}"))?;
+            if out.c.bit_pattern() != want {
+                return Err(format!("{workers} workers diverge bitwise"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// 2b. Through the registry and the sharded executor: the new key resolves,
+/// and sharded output at {1,2,3,5,8} is bit-identical to unsharded.
+#[test]
+fn fast_kernel_is_registered_and_shards_bit_identically() {
+    let registry = Registry::with_default_kernels(
+        Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        2,
+    );
+    let kernel = registry
+        .resolve(FormatKind::Csr, Algorithm::GustavsonFast)
+        .expect("(Csr, GustavsonFast) must be a default kernel");
+    assert_eq!(kernel.name(), "gustavson-fast");
+    let a = uniform(70, 90, 0.12, 1);
+    let b = uniform(90, 40, 0.12, 2);
+    let prepared = kernel.prepare(&b).unwrap();
+    let want = kernel.execute(&a, &prepared).unwrap().c.bit_pattern();
+    // also identical to the SCALAR kernel — the acceptance bar
+    let scalar = GustavsonKernel.run(&a, &b).unwrap().c.bit_pattern();
+    assert_eq!(want, scalar, "fast kernel diverges from scalar Gustavson");
+    for shards in SHARD_COUNTS {
+        let out = shard::execute(
+            kernel.as_ref(),
+            &a,
+            Some(&b),
+            &prepared,
+            ShardConfig { shards, block: BLOCK },
+        )
+        .unwrap();
+        assert_eq!(out.c.bit_pattern(), want, "{shards} shards diverge bitwise");
+    }
+}
+
+/// 3. Symbolic sizing: structural counts bound the numeric output exactly
+/// (equality without cancellation — `uniform` values are positive), and a
+/// crafted cancellation shrinks the numeric row without re-emitting.
+#[test]
+fn prop_symbolic_pass_sizes_numeric_output() {
+    let mut ws = gustavson_fast::Workspace::new(0);
+    check(0x6059, 25, gen_pair, |(a, b)| {
+        let band = gustavson_fast::multiply_band(a, 0, a.rows(), b, &mut ws);
+        let counts = gustavson_fast::symbolic_row_nnz(a, 0, a.rows(), b, &mut ws);
+        let total: usize = counts.iter().map(|&c| c as usize).sum();
+        if band.symbolic_nnz != total {
+            return Err(format!("symbolic {} != {}", band.symbolic_nnz, total));
+        }
+        // positive values: no cancellation, so sizing is exact per row
+        for (i, &c) in counts.iter().enumerate() {
+            let got = band.row_ptr[i + 1] - band.row_ptr[i];
+            if got != c {
+                return Err(format!("row {i}: sized {c}, emitted {got}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cancellation_emits_once_in_both_scalar_and_fast() {
+    // A row [1, -1, 2] × B rows [3], [3], [7]: column 0 cancels to exactly
+    // 0.0 mid-row, then revives to 14 — the old scalar probe re-pushed the
+    // column into its touched list here; both paths must emit it once
+    let a = Csr::from_coo(&Coo::new(
+        1,
+        3,
+        vec![(0, 0, 1.0), (0, 1, -1.0), (0, 2, 2.0)],
+    ));
+    let b = Csr::from_coo(&Coo::new(
+        3,
+        1,
+        vec![(0, 0, 3.0), (1, 0, 3.0), (2, 0, 7.0)],
+    ));
+    let (scalar, _) = gustavson::multiply_counted(&a, &b);
+    let fast = gustavson_fast::multiply(&a, &b);
+    assert_eq!(scalar.nnz(), 1);
+    assert_eq!(scalar.row(0), (&[0u32][..], &[14.0f32][..]));
+    same_csr_bits(&scalar, &fast).unwrap();
+    // full cancellation: the entry is dropped by both (nnz invariant)
+    let b0 = Csr::from_coo(&Coo::new(3, 1, vec![(0, 0, 3.0), (1, 0, 3.0)]));
+    let (scalar0, _) = gustavson::multiply_counted(&a, &b0);
+    let fast0 = gustavson_fast::multiply(&a, &b0);
+    assert_eq!(scalar0.nnz(), 0);
+    same_csr_bits(&scalar0, &fast0).unwrap();
+}
+
+/// 4. One `PreparedB`, many shard workers: all of them draw from (and
+/// return to) the same workspace pool.
+#[test]
+fn shard_workers_share_one_workspace_pool() {
+    let kernel = GustavsonFastKernel::new(1);
+    let a = uniform(96, 64, 0.15, 9);
+    let b = uniform(64, 52, 0.15, 10);
+    let prepared = kernel.prepare(&b).unwrap();
+    let pool = match &prepared {
+        PreparedB::Pooled(pb) => &pb.pool,
+        other => panic!("unexpected prepared operand {other:?}"),
+    };
+    let out = shard::execute(
+        &kernel,
+        &a,
+        Some(&b),
+        &prepared,
+        ShardConfig { shards: 4, block: BLOCK },
+    )
+    .unwrap();
+    assert!(out.shards.len() > 1);
+    let bands = out.shards.len() as u64;
+    assert_eq!(pool.hits() + pool.misses(), bands, "one checkout per band");
+    assert_eq!(pool.pooled() as u64, pool.misses(), "workspaces not returned");
+    // the next sharded run draws on the parked workspaces; across both
+    // runs the pool never allocates more than one workspace per concurrent
+    // band, so at least half of all checkouts are reuses
+    shard::execute(
+        &kernel,
+        &a,
+        Some(&b),
+        &prepared,
+        ShardConfig { shards: 4, block: BLOCK },
+    )
+    .unwrap();
+    assert_eq!(pool.hits() + pool.misses(), 2 * bands);
+    assert!(pool.misses() <= bands, "allocated beyond peak concurrency");
+    assert!(pool.hits() >= bands, "pool bypassed across sharded runs");
+    assert_eq!(pool.pooled() as u64, pool.misses(), "workspaces not returned");
+}
+
+/// The wrapped-sharded registry path (`Registry::shard_all`) stays
+/// bit-identical for the new kernel too.
+#[test]
+fn shard_all_wrapped_fast_kernel_is_bit_identical() {
+    let a = uniform(50, 60, 0.2, 21);
+    let b = uniform(60, 30, 0.2, 22);
+    let mut reg = Registry::with_default_kernels(
+        Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        2,
+    );
+    let inner = reg.resolve(FormatKind::Csr, Algorithm::GustavsonFast).unwrap();
+    let want = inner.run(&a, &b).unwrap().c.bit_pattern();
+    reg.shard_all(ShardConfig { shards: 3, block: BLOCK });
+    let wrapped = reg.resolve(FormatKind::Csr, Algorithm::GustavsonFast).unwrap();
+    assert_eq!(wrapped.name(), "sharded");
+    assert_eq!(wrapped.run(&a, &b).unwrap().c.bit_pattern(), want);
+}

@@ -19,7 +19,7 @@ use spmm_accel::engine::{
 use spmm_accel::formats::coo::Coo;
 use spmm_accel::formats::csr::Csr;
 use spmm_accel::formats::dense::Dense;
-use spmm_accel::formats::traits::SparseMatrix;
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
 use spmm_accel::spmm::plan::Geometry;
 use spmm_accel::util::ptest::check;
 use spmm_accel::util::rng::Rng;
@@ -54,7 +54,11 @@ fn gen_pair(rng: &mut Rng) -> (Csr, Csr) {
 #[test]
 fn sharded_output_is_bit_identical_for_every_registered_kernel() {
     let registry = registry();
-    assert!(registry.len() >= 5, "registry too small: {registry:?}");
+    assert!(registry.len() >= 7, "registry too small: {registry:?}");
+    assert!(
+        registry.resolve(FormatKind::Csr, Algorithm::GustavsonFast).is_some(),
+        "the fast Gustavson kernel must ride this suite: {registry:?}"
+    );
     check(0x5AAD, 10, gen_pair, |(a, b)| {
         for kernel in registry.kernels() {
             let name = kernel.name();
