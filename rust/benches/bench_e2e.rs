@@ -7,13 +7,15 @@
 //! throughput through the coordinator. Writes machine-readable summaries
 //! to `BENCH_engine.json` (override with `SPMM_BENCH_OUT`),
 //! `BENCH_shard.json` (`SPMM_BENCH_SHARD_OUT`), `BENCH_gustavson.json`
-//! (`SPMM_BENCH_GUSTAVSON_OUT`), and `BENCH_format.json`
-//! (`SPMM_BENCH_FORMAT_OUT`).
+//! (`SPMM_BENCH_GUSTAVSON_OUT`), `BENCH_format.json`
+//! (`SPMM_BENCH_FORMAT_OUT`), and a hyper-sparse power-law
+//! scalar-vs-outer sweep in `BENCH_outer.json` (`SPMM_BENCH_OUTER_OUT`).
 
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{JobHandle, KernelSpec, Server, ServerConfig};
 use spmm_accel::datasets::synth::uniform;
+use spmm_accel::datasets::{generate, ColumnDist, DatasetSpec, NnzRow};
 use spmm_accel::engine::{
     shard, tiled, Algorithm, GustavsonFastKernel, GustavsonKernel, PreparedB, Registry,
     ShardConfig, SpmmKernel, TiledConfig, TiledKernel,
@@ -373,6 +375,108 @@ fn main() {
     match std::fs::write(&format_out_path, format_summary.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {format_out_path}"),
         Err(e) => println!("could not write {format_out_path}: {e}"),
+    }
+
+    // hyper-sparse power-law sweep: ~4096² with a handful of non-zeros per
+    // row under Zipf column popularity — the regime the outer-product
+    // backend targets. Every row-centric kernel plus outer, prepare-once,
+    // bit-checked against the scalar Gustavson baseline.
+    let zipf = |rows: usize, cols: usize, seed: u64| {
+        generate(
+            &DatasetSpec {
+                name: "bench-outer-zipf",
+                rows,
+                cols,
+                stated_density: 4.0 / cols as f64,
+                nnz_row: NnzRow { min: 0, avg: 4.0, max: 64 },
+                dist: ColumnDist::Zipf(1.2),
+            },
+            seed,
+        )
+    };
+    let ha = zipf(4096, 4096, 61);
+    let hb = Arc::new(zipf(4096, 4096, 62));
+    let h_scalar = reg
+        .resolve(FormatKind::Csr, Algorithm::Gustavson)
+        .expect("scalar gustavson registered");
+    let h_prepared = h_scalar.prepare_shared(&hb).unwrap();
+    let h_bits = h_scalar.execute(&ha, &h_prepared).unwrap().c.bit_pattern();
+    let mut outer_sweep: Vec<Json> = Vec::new();
+    let mut scalar_hs_ms = 0.0f64;
+    let mut outer_hs_ms = 0.0f64;
+    let mut row_centric_best_ms = f64::INFINITY;
+    for (fmt, alg) in [
+        (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::GustavsonFast),
+        (FormatKind::Csr, Algorithm::Inner),
+        (FormatKind::Csr, Algorithm::Tiled),
+        (FormatKind::Csc, Algorithm::OuterProduct),
+    ] {
+        let k = reg.resolve(fmt, alg).expect("sweep kernel registered");
+        let prepared = k.prepare_shared(&hb).unwrap();
+        let r = bench(1, 3, || {
+            black_box(k.execute(&ha, &prepared).unwrap().stats.real_pairs);
+        });
+        let out = k.execute(&ha, &prepared).unwrap();
+        let bit_identical = out.c.bit_pattern() == h_bits;
+        let ms = r.median.as_secs_f64() * 1e3;
+        match alg {
+            Algorithm::Gustavson => scalar_hs_ms = ms,
+            Algorithm::OuterProduct => outer_hs_ms = ms,
+            _ => {}
+        }
+        if alg != Algorithm::OuterProduct {
+            row_centric_best_ms = row_centric_best_ms.min(ms);
+        }
+        report(
+            &format!("outer/{}(4096x4096 zipf)", k.name()),
+            r,
+            out.stats.real_pairs as f64,
+            "MACs",
+        );
+        println!(
+            "hyper-sparse sweep {}: {ms:.2}ms, bit-identical to scalar: {bit_identical}",
+            k.name()
+        );
+        outer_sweep.push(obj([
+            ("kernel", Json::from(k.name())),
+            ("format", Json::from(fmt.name())),
+            ("algorithm", Json::from(alg.name())),
+            ("median_ms", Json::from(ms)),
+            ("macs", Json::from(out.stats.real_pairs)),
+            ("bit_identical_to_scalar", Json::Bool(bit_identical)),
+        ]));
+    }
+    println!(
+        "hyper-sparse 4096² zipf: outer {outer_hs_ms:.2}ms vs scalar {scalar_hs_ms:.2}ms \
+         ({:.2}x) vs best row-centric {row_centric_best_ms:.2}ms ({:.2}x)",
+        scalar_hs_ms / outer_hs_ms,
+        row_centric_best_ms / outer_hs_ms
+    );
+    let outer_out_path =
+        std::env::var("SPMM_BENCH_OUTER_OUT").unwrap_or_else(|_| "BENCH_outer.json".into());
+    let outer_summary = obj([
+        ("bench", Json::from("bench_e2e/outer")),
+        (
+            "dataset",
+            Json::from("zipf(1.2) 4096x4096, ~4 nnz/row, seeds 61/62"),
+        ),
+        ("sweep", Json::Arr(outer_sweep)),
+        ("scalar_ms", Json::from(scalar_hs_ms)),
+        ("outer_ms", Json::from(outer_hs_ms)),
+        ("best_row_centric_ms", Json::from(row_centric_best_ms)),
+        (
+            "outer_speedup_vs_scalar",
+            Json::from(scalar_hs_ms / outer_hs_ms),
+        ),
+        (
+            "outer_speedup_vs_best_row_centric",
+            Json::from(row_centric_best_ms / outer_hs_ms),
+        ),
+    ]);
+    match std::fs::write(&outer_out_path, outer_summary.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {outer_out_path}"),
+        Err(e) => println!("could not write {outer_out_path}: {e}"),
     }
 
     // served throughput: 16 jobs through 4 CPU workers via the client API

@@ -46,12 +46,14 @@ impl Default for KernelSpec {
 
 impl KernelSpec {
     /// The registry key an algorithm is registered under by default
-    /// (inner-product → InCRS, the dense oracle → Dense, everything else →
+    /// (inner-product → InCRS, the dense oracle → Dense, outer-product →
+    /// CCS — the key names its column-major view of A — everything else →
     /// CSR) — the single place the CLI and examples map `--kernel` names.
     pub fn for_algorithm(alg: Algorithm) -> KernelSpec {
         let fmt = match alg {
             Algorithm::Inner => FormatKind::InCrs,
             Algorithm::Dense => FormatKind::Dense,
+            Algorithm::OuterProduct => FormatKind::Csc,
             _ => FormatKind::Csr,
         };
         KernelSpec::Fixed(fmt, alg)

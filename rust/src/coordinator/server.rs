@@ -611,15 +611,21 @@ fn exec_one(
 ) -> Result<JobOutput, JobError> {
     let start = Instant::now();
     let shards = job.opts.shards.max(1);
-    // pooled operands (the fast Gustavson kernel) report workspace reuse:
-    // snapshot the pool counters around the execute and meter the deltas
-    // (the pool is owned by this worker's PreparedCache, so only this
-    // job's execute — including its shard workers — moves them meanwhile)
-    let pool = match prepared {
-        crate::engine::PreparedB::Pooled(pb) => Some(&pb.pool),
-        _ => None,
-    };
-    let pool_before = pool.map(|p| (p.hits(), p.misses()));
+    // pooled operands (the fast Gustavson kernel's row workspaces, the
+    // outer kernel's merge buffers) report scratch reuse: snapshot the
+    // pool counters around the execute and meter the deltas (the pool is
+    // owned by this worker's PreparedCache, so only this job's execute —
+    // including its shard workers — moves them meanwhile)
+    fn pool_counts(prepared: &crate::engine::PreparedB) -> Option<(u64, u64)> {
+        match prepared {
+            crate::engine::PreparedB::Pooled(pb) => Some((pb.pool.hits(), pb.pool.misses())),
+            crate::engine::PreparedB::OuterPooled(ob) => {
+                Some((ob.pool.hits(), ob.pool.misses()))
+            }
+            _ => None,
+        }
+    }
+    let pool_before = pool_counts(prepared);
     // a kernel that is already a shard wrapper (registry_hook /
     // Registry::shard_all) shards itself — re-sharding here would nest
     // executors (bands × bands workers, double band slicing)
@@ -657,13 +663,13 @@ fn exec_one(
         ingest_cost: kernel.ingest_cost(b_csr, Some(&job.b)),
         wall_us: start.elapsed().as_micros() as u64,
     });
-    if let (Some(pool), Some((h0, m0))) = (pool, pool_before) {
+    if let (Some((h0, m0)), Some((h1, m1))) = (pool_before, pool_counts(prepared)) {
         metrics
             .workspace_pool_hits
-            .fetch_add(pool.hits() - h0, Ordering::Relaxed);
+            .fetch_add(h1 - h0, Ordering::Relaxed);
         metrics
             .workspace_pool_misses
-            .fetch_add(pool.misses() - m0, Ordering::Relaxed);
+            .fetch_add(m1 - m0, Ordering::Relaxed);
     }
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(a_csr, b_csr);

@@ -19,6 +19,7 @@ use crate::formats::operand::MatrixOperand;
 use crate::formats::traits::FormatKind;
 use crate::spmm::blocks::BlockGrid;
 use crate::spmm::gustavson_fast::WorkspacePool;
+use crate::spmm::outer::MergePool;
 
 use super::error::EngineError;
 
@@ -36,6 +37,12 @@ pub enum Algorithm {
     GustavsonFast,
     /// Inner-product SpMM reading `B` column-wise through `locate`.
     Inner,
+    /// Outer-product SpGEMM (SpArch-style): A streamed by column against B
+    /// by row, per-column partial-product runs combined by a deterministic
+    /// k-ordered multiway merge (`spmm::outer`) — bit-identical to
+    /// [`Algorithm::Gustavson`] at any merge fan-in or worker count, and
+    /// the backend of choice for hyper-sparse (power-law) inputs.
+    OuterProduct,
     /// Multi-threaded 32×32 tile-pair executor (`engine::tiled`).
     Tiled,
     /// Accelerator dispatch path: sorted tile-pair plan executed by the
@@ -44,11 +51,12 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 6] = [
+    pub const ALL: [Algorithm; 7] = [
         Algorithm::Dense,
         Algorithm::Gustavson,
         Algorithm::GustavsonFast,
         Algorithm::Inner,
+        Algorithm::OuterProduct,
         Algorithm::Tiled,
         Algorithm::Block,
     ];
@@ -59,6 +67,7 @@ impl Algorithm {
             Algorithm::Gustavson => "gustavson",
             Algorithm::GustavsonFast => "gustavson-fast",
             Algorithm::Inner => "inner",
+            Algorithm::OuterProduct => "outer",
             Algorithm::Tiled => "tiled",
             Algorithm::Block => "block",
         }
@@ -73,6 +82,7 @@ impl Algorithm {
             "gustavson" | "row" => Algorithm::Gustavson,
             "gustavson-fast" | "gfast" | "simd" => Algorithm::GustavsonFast,
             "inner" => Algorithm::Inner,
+            "outer" | "sparch" => Algorithm::OuterProduct,
             "tiled" => Algorithm::Tiled,
             "block" | "accel" => Algorithm::Block,
             other => return Err(FormatError::UnknownAlgorithm(other.into())),
@@ -174,6 +184,30 @@ impl PooledCsrB {
     }
 }
 
+/// Canonical CSR `B` paired with a shared [`MergePool`] — the
+/// outer-product kernel's prepared representation, the merge-buffer mirror
+/// of [`PooledCsrB`]. The matrix is an `Arc` share (B is streamed row `k`
+/// at a time, which canonical CSR already serves); the pool of
+/// partial-product merge buffers is what makes the prepare non-trivial, so
+/// the coordinator's content-keyed `PreparedCache` carries the scratch
+/// across micro-batches and every shard worker sharing the `PreparedB`.
+#[derive(Debug)]
+pub struct OuterB {
+    /// The canonical CSR operand (shared, never copied).
+    pub src: Arc<Csr>,
+    /// Partial-product merge buffers reused across jobs and shard workers.
+    pub pool: MergePool,
+}
+
+impl OuterB {
+    pub fn new(src: Arc<Csr>) -> OuterB {
+        OuterB {
+            src,
+            pool: MergePool::new(),
+        }
+    }
+}
+
 /// `B` converted into the representation a kernel consumes. Built by
 /// `SpmmKernel::prepare`; callers may cache it across jobs sharing `B`.
 #[derive(Clone, Debug)]
@@ -186,13 +220,18 @@ pub enum PreparedB {
     /// Canonical CSR plus a shared accumulator-workspace pool (the fast
     /// Gustavson kernel).
     Pooled(Arc<PooledCsrB>),
+    /// Canonical CSR plus a shared partial-product merge-buffer pool (the
+    /// outer-product kernel).
+    OuterPooled(Arc<OuterB>),
 }
 
 impl PreparedB {
-    /// Canonical format of the prepared operand. `Blocked` reports
-    /// [`FormatKind::Csr`] — it carries its canonical CSR source and is
-    /// produced by CSR-keyed kernels; use [`PreparedB::label`] when the
-    /// exact representation matters (error messages).
+    /// Canonical format of the prepared operand. `Blocked`, `Pooled`, and
+    /// `OuterPooled` report [`FormatKind::Csr`] — each carries its
+    /// canonical CSR source (the outer kernel's CSC registry key names the
+    /// *algorithm's* column-major view of A, not B's storage); use
+    /// [`PreparedB::label`] when the exact representation matters (error
+    /// messages).
     pub fn format(&self) -> FormatKind {
         match self {
             PreparedB::Csr(_) => FormatKind::Csr,
@@ -200,6 +239,7 @@ impl PreparedB {
             PreparedB::Dense(_) => FormatKind::Dense,
             PreparedB::Blocked(_) => FormatKind::Csr,
             PreparedB::Pooled(_) => FormatKind::Csr,
+            PreparedB::OuterPooled(_) => FormatKind::Csr,
         }
     }
 
@@ -212,6 +252,7 @@ impl PreparedB {
             PreparedB::Dense(_) => "dense",
             PreparedB::Blocked(_) => "blocked",
             PreparedB::Pooled(_) => "pooled-CRS",
+            PreparedB::OuterPooled(_) => "outer-pooled",
         }
     }
 
@@ -225,6 +266,7 @@ impl PreparedB {
             PreparedB::Dense(m) => m.shape(),
             PreparedB::Blocked(b) => (b.grid.rows, b.grid.cols),
             PreparedB::Pooled(p) => p.src.shape(),
+            PreparedB::OuterPooled(p) => p.src.shape(),
         }
     }
 }
@@ -298,6 +340,20 @@ pub trait SpmmKernel: Send + Sync {
         let kind = native.map_or(FormatKind::Csr, MatrixOperand::format);
         crate::formats::operand::conversion_words(kind, b.nnz(), b.rows())
     }
+    /// Per-operand kernel specialization: given `B`'s native arrival form,
+    /// return a variant of this kernel tuned to that operand — e.g. the
+    /// inner-InCRS kernel re-parameterized to a native InCRS operand's own
+    /// [`crate::formats::incrs::InCrsParams`], so its `prepare_operand` can
+    /// adopt the arrays instead of rebuilding them under default params.
+    /// [`crate::engine::Registry::select_native`] adds the returned kernel
+    /// to its candidate set, where it competes on the same
+    /// `cost_hint + ingest_cost` basis as every registered kernel. `None`
+    /// (the default) means this kernel has no operand-specific variant.
+    fn negotiate(&self, native: &MatrixOperand) -> Option<Arc<dyn SpmmKernel>> {
+        let _ = native;
+        None
+    }
+
     /// Row-band alignment required for sharded execution to stay
     /// bit-identical (`engine::shard`): blocked kernels return their tile
     /// block (band cuts inside a tile would re-blockize rows differently
@@ -358,6 +414,7 @@ mod tests {
             assert_eq!(Algorithm::parse(alg.name()).unwrap(), alg);
         }
         assert_eq!(Algorithm::parse("ACCEL").unwrap(), Algorithm::Block);
+        assert_eq!(Algorithm::parse("sparch").unwrap(), Algorithm::OuterProduct);
         assert!(Algorithm::parse("nope").is_err());
     }
 

@@ -1,6 +1,8 @@
-//! CPU kernels: the three existing SpMM algorithms (`spmm::{dense,
-//! gustavson, inner}`) plus the multi-threaded tiled executor, each wrapped
-//! behind [`SpmmKernel`] so the registry can dispatch them interchangeably.
+//! CPU kernels: the scalar SpMM algorithms (`spmm::{dense, gustavson,
+//! inner}`), the vectorized pooled Gustavson, the outer-product multiway
+//! merge (`spmm::outer`), and the multi-threaded tiled executor, each
+//! wrapped behind [`SpmmKernel`] so the registry dispatches them
+//! interchangeably.
 //!
 //! Cost hints follow the paper's access-count models (§II/§III): Gustavson
 //! pays `nnz(A)·N·D_B` streaming work; inner-product pays one `locate` per
@@ -19,7 +21,7 @@ use crate::spmm::gustavson_fast;
 
 use super::error::EngineError;
 use super::kernel::{
-    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PooledCsrB,
+    wrong_operand, Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, OuterB, PooledCsrB,
     PreparedB, SpmmKernel,
 };
 use super::tiled::{self, TiledConfig};
@@ -356,6 +358,19 @@ impl SpmmKernel for InnerKernel {
         }
         self.prepare_shared(b)
     }
+    /// A native InCRS operand whose geometry differs from this kernel's
+    /// can't be adopted here — but a sibling parameterized to the
+    /// operand's **own** params can adopt it for free. Hand selection that
+    /// sibling, so the router negotiates per-operand `InCrsParams` instead
+    /// of re-deriving defaults and rebuilding the counter vectors.
+    fn negotiate(&self, native: &MatrixOperand) -> Option<Arc<dyn SpmmKernel>> {
+        if let (FormatKind::InCrs, MatrixOperand::InCrs(m)) = (self.format, native) {
+            if m.params != self.params {
+                return Some(Arc::new(InnerKernel::incrs(m.params)));
+            }
+        }
+        None
+    }
     /// Credit the adopted-native path: an InCRS operand with **matching
     /// geometry** skips both the CSR conversion and the counter build this
     /// kernel's `cost_hint.prepare_words` assumes. A mismatched-params
@@ -391,6 +406,110 @@ impl SpmmKernel for InnerKernel {
         })?;
         let macs = a.nnz() as u64 * c.cols() as u64;
         Ok(EngineOutput { c, stats: scalar_stats(macs) })
+    }
+}
+
+// ----------------------------------------------------------------- outer
+
+/// Outer-product SpGEMM (`spmm::outer`, SpArch-style): A streamed
+/// column-by-column against the matching B row, per-column partial-product
+/// runs combined by a deterministic k-ordered multiway merge — bit-identical
+/// to [`GustavsonKernel`] at any merge fan-in or worker count. Wins on
+/// hyper-sparse inputs (power-law graphs, adjacency chains) where A's rows
+/// are near-empty: work is proportional to the partial products actually
+/// produced, with no per-output-row machinery over `m` mostly-empty rows.
+///
+/// Registered under `(Csc, OuterProduct)`: the CSC key names the
+/// algorithm's column-major consumption of A — `execute` transposes the
+/// canonical row-ordered A (A's columns *are* Aᵀ's rows) and `cost_hint`
+/// charges that transpose — while `B` stays canonical CSR inside
+/// [`OuterB`] (row `k` streaming is what CSR already serves). CSC-native
+/// operand arrivals are credited automatically through the default
+/// `ingest_cost`: `MatrixOperand::to_csr` converts CSC by direct transpose
+/// (no COO hop), the cheapest non-trivial tier in `conversion_words`.
+///
+/// `prepare` builds an [`OuterB`]: the CSR is an `Arc` share, but the
+/// attached [`crate::spmm::outer::MergePool`] makes the prepare
+/// non-trivial — routed through the coordinator's content-keyed
+/// `PreparedCache`, the merge scratch persists across micro-batches and is
+/// shared by every shard worker (the same reuse argument as
+/// [`GustavsonFastKernel`]'s workspace pool).
+pub struct OuterKernel {
+    pub cfg: spmm::outer::OuterConfig,
+}
+
+impl OuterKernel {
+    pub fn new(cfg: spmm::outer::OuterConfig) -> OuterKernel {
+        OuterKernel { cfg }
+    }
+}
+
+impl SpmmKernel for OuterKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::OuterProduct
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csc
+    }
+    fn name(&self) -> &'static str {
+        "outer"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        // the same Σₖ |A·col k|·|B·row k| partial products Gustavson
+        // performs (estimated nnz(A)·N·D_B), each passed through one pure
+        // merge per hierarchical round plus the final accumulating pass —
+        // plus the per-execute CSR→CSC transpose of A that column
+        // streaming requires. Honest on ordinary inputs: the merge rounds
+        // keep this above the fast-Gustavson hint, so auto-selection only
+        // reaches for outer where hyper-sparsity makes the row-centric
+        // constants dominate.
+        let products = a.nnz() as f64 * nd(b);
+        let runs = a.cols().min(a.nnz()).max(2) as f64;
+        let fan = self.cfg.fan_in.max(2) as f64;
+        let rounds = (runs.ln() / fan.ln()).ceil().max(1.0);
+        CostHint {
+            flops: products * (1.0 + rounds) + (2 * a.nnz() + a.cols()) as f64,
+            prepare_words: 0.0,
+        }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::OuterPooled(Arc::new(OuterB::new(Arc::new(
+            b.clone(),
+        )))))
+    }
+    fn prepare_shared(&self, b: &Arc<Csr>) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::OuterPooled(Arc::new(OuterB::new(Arc::clone(b)))))
+    }
+    /// Non-trivial on purpose: the CSR share is O(1), but the attached
+    /// merge-buffer pool must survive across jobs — routing through the
+    /// content-keyed `PreparedCache` is what makes scratch reuse happen.
+    fn prepare_is_trivial(&self) -> bool {
+        false
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+        let ob = match b {
+            PreparedB::OuterPooled(ob) => ob,
+            other => return Err(wrong_operand(self, other)),
+        };
+        let src = ob.src.as_ref();
+        if a.cols() != src.rows() {
+            return Err(EngineError::ShapeMismatch {
+                a: a.shape(),
+                b: src.shape(),
+            });
+        }
+        let (c_sparse, macs, bands) = spmm::outer::multiply_counted(a, src, &self.cfg, &ob.pool);
+        let c = Dense::from_coo(&c_sparse.to_coo());
+        Ok(EngineOutput {
+            c,
+            stats: ExecStats {
+                dispatches: bands.max(1) as u64,
+                real_pairs: macs,
+                padded_pairs: macs,
+                macs_issued: macs,
+                threads: bands.max(1),
+            },
+        })
     }
 }
 
@@ -475,6 +594,7 @@ mod tests {
     use super::*;
     use crate::datasets::synth::uniform;
     use crate::spmm::dense::multiply as dense_ref;
+    use crate::spmm::outer::OuterConfig;
 
     fn kernels() -> Vec<Box<dyn SpmmKernel>> {
         vec![
@@ -483,6 +603,7 @@ mod tests {
             Box::new(GustavsonFastKernel::new(2)),
             Box::new(InnerKernel::csr()),
             Box::new(InnerKernel::incrs(InCrsParams::default())),
+            Box::new(OuterKernel::new(OuterConfig { fan_in: 2, workers: 2 })),
             Box::new(TiledKernel::new(TiledConfig { block: 16, workers: 2 })),
         ]
     }
@@ -648,6 +769,69 @@ mod tests {
         assert_eq!(pool.pooled() as u64, allocated, "workspaces not returned");
         assert!(allocated <= 3, "over-allocated: {allocated}");
         assert!(pool.hits() >= 3, "parallel execute bypassed the pool");
+    }
+
+    #[test]
+    fn outer_kernel_is_bit_identical_and_pools_merge_buffers() {
+        let k = OuterKernel::new(OuterConfig { fan_in: 2, workers: 2 });
+        let a = uniform(48, 64, 0.08, 21);
+        let b = Arc::new(uniform(64, 40, 0.08, 22));
+        let want = GustavsonKernel.run(&a, &b).unwrap();
+        let prepared = k.prepare_shared(&b).unwrap();
+        let pool = match &prepared {
+            PreparedB::OuterPooled(ob) => {
+                assert!(Arc::ptr_eq(&ob.src, &b), "prepare_shared must Arc-share B");
+                &ob.pool
+            }
+            other => panic!("unexpected prepared operand {other:?}"),
+        };
+        assert!(!k.prepare_is_trivial(), "pool must route through the PreparedCache");
+        let out = k.execute(&a, &prepared).unwrap();
+        assert_eq!(
+            out.c.bit_pattern(),
+            want.c.bit_pattern(),
+            "outer diverges bitwise from scalar Gustavson"
+        );
+        assert_eq!(out.stats.real_pairs, want.stats.real_pairs, "MAC accounting");
+        // every merge buffer returns to the pool, and later executes
+        // against the same PreparedB reuse them instead of allocating
+        let allocated = pool.misses();
+        assert!(allocated > 0);
+        assert_eq!(pool.pooled() as u64, allocated, "merge buffers leaked");
+        k.execute(&a, &prepared).unwrap();
+        assert!(pool.hits() > 0, "second execute bypassed the pool");
+        // CSC-native ingestion is credited the direct-transpose tier,
+        // below the generic COO round-trip other foreign formats pay
+        let csc_op = MatrixOperand::from(b.as_ref().clone())
+            .convert(FormatKind::Csc)
+            .unwrap();
+        let coo_op = MatrixOperand::from(b.to_coo());
+        assert!(k.ingest_cost(&b, Some(&csc_op)) > 0.0);
+        assert!(k.ingest_cost(&b, Some(&csc_op)) < k.ingest_cost(&b, Some(&coo_op)));
+        assert_eq!(k.ingest_cost(&b, None), 0.0);
+    }
+
+    #[test]
+    fn inner_incrs_negotiates_a_sibling_for_foreign_params() {
+        let k = InnerKernel::incrs(InCrsParams::default());
+        let b = uniform(24, 300, 0.2, 9);
+        let foreign_params = InCrsParams { section: 64, block: 8 };
+        let foreign = Arc::new(InCrs::from_csr_params(&b, foreign_params).unwrap());
+        let op = MatrixOperand::InCrs(Arc::clone(&foreign));
+        let negotiated = k.negotiate(&op).expect("foreign params must negotiate a sibling");
+        // the sibling adopts the native operand outright: credited ingest,
+        // Arc-shared arrays
+        assert!(negotiated.ingest_cost(&b, Some(&op)) < 0.0);
+        let b_arc = Arc::new(b.clone());
+        match negotiated.prepare_operand(&op, &b_arc).unwrap() {
+            PreparedB::InCrs(adopted) => assert!(Arc::ptr_eq(&adopted, &foreign)),
+            other => panic!("expected adoption, got {other:?}"),
+        }
+        // matching params need no sibling; non-InCRS kernels never negotiate
+        let matching = MatrixOperand::InCrs(Arc::new(InCrs::from_csr(&b).unwrap()));
+        assert!(k.negotiate(&matching).is_none());
+        assert!(GustavsonKernel.negotiate(&op).is_none());
+        assert!(InnerKernel::csr().negotiate(&op).is_none());
     }
 
     #[test]

@@ -14,7 +14,8 @@
 //!
 //! * [`Algorithm`] — the compute organization (dense oracle, Gustavson —
 //!   scalar and the vectorized workspace-pooled fast variant —
-//!   inner-product, tiled, accelerator block plan);
+//!   inner-product, outer-product multiway merge for hyper-sparse inputs,
+//!   tiled, accelerator block plan);
 //! * [`kernel::SpmmKernel`] — the execution contract: `cost_hint` (choose
 //!   without running), `prepare` (build B's representation once, cacheable),
 //!   `execute` (the multiply);
@@ -73,10 +74,11 @@ pub mod tiled;
 pub use accel::AccelKernel;
 pub use error::EngineError;
 pub use kernel::{
-    Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, PooledCsrB, PreparedB, SpmmKernel,
+    Algorithm, BlockedB, CostHint, EngineOutput, ExecStats, OuterB, PooledCsrB, PreparedB,
+    SpmmKernel,
 };
 pub use kernels::{
-    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, TiledKernel,
+    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, OuterKernel, TiledKernel,
 };
 pub use prepared::{fingerprint_csr, CsrMemo, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry};

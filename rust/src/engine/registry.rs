@@ -18,9 +18,11 @@ use super::accel::AccelKernel;
 use super::error::EngineError;
 use super::kernel::{Algorithm, SpmmKernel};
 use super::kernels::{
-    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, TiledKernel,
+    DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, OuterKernel,
+    TiledKernel,
 };
 use super::tiled::TiledConfig;
+use crate::spmm::outer::OuterConfig;
 
 /// The registry key: which representation of `B` the kernel consumes and
 /// which compute organization it applies.
@@ -40,6 +42,7 @@ impl Registry {
     /// The standard CPU kernel set: dense oracle, Gustavson (scalar and the
     /// vectorized workspace-pooled fast variant, the latter running
     /// `tile_workers` A-row bands), inner-product over CRS and InCRS, the
+    /// outer-product merge kernel (`tile_workers` k-range workers), the
     /// `tile_workers`-threaded tiled executor, and the CPU accelerator-plan
     /// twin at `geom`.
     pub fn with_default_kernels(geom: Geometry, tile_workers: usize) -> Registry {
@@ -49,6 +52,10 @@ impl Registry {
         r.register(Arc::new(GustavsonFastKernel::new(tile_workers)));
         r.register(Arc::new(InnerKernel::csr()));
         r.register(Arc::new(InnerKernel::incrs(InCrsParams::default())));
+        r.register(Arc::new(OuterKernel::new(OuterConfig {
+            fan_in: 4,
+            workers: tile_workers.max(1),
+        })));
         r.register(Arc::new(TiledKernel::new(TiledConfig {
             block: geom.block,
             workers: tile_workers.max(1),
@@ -117,17 +124,30 @@ impl Registry {
         b: &Csr,
         b_native: Option<&crate::formats::operand::MatrixOperand>,
     ) -> Option<Arc<dyn SpmmKernel>> {
-        let best = self
+        let mut candidates: Vec<Arc<dyn SpmmKernel>> = self
             .map
             .values()
             .filter(|k| k.algorithm() != Algorithm::Dense)
-            .min_by(|x, y| {
-                let cx = x.cost_hint(a, b).total() + x.ingest_cost(b, b_native);
-                let cy = y.cost_hint(a, b).total() + y.ingest_cost(b, b_native);
-                cx.total_cmp(&cy)
-            });
-        best.cloned()
-            .or_else(|| self.resolve_algorithm(Algorithm::Dense))
+            .cloned()
+            .collect();
+        // per-operand negotiation: a kernel may offer a sibling specialized
+        // to B's native form (inner-InCRS re-parameterized to the operand's
+        // own InCrsParams) — the sibling competes on the same cost basis,
+        // so the operand's geometry is passed through instead of being
+        // re-derived from defaults
+        if let Some(native) = b_native {
+            let negotiated: Vec<Arc<dyn SpmmKernel>> = candidates
+                .iter()
+                .filter_map(|k| k.negotiate(native))
+                .collect();
+            candidates.extend(negotiated);
+        }
+        let best = candidates.into_iter().min_by(|x, y| {
+            let cx = x.cost_hint(a, b).total() + x.ingest_cost(b, b_native);
+            let cy = y.cost_hint(a, b).total() + y.ingest_cost(b, b_native);
+            cx.total_cmp(&cy)
+        });
+        best.or_else(|| self.resolve_algorithm(Algorithm::Dense))
     }
 
     /// [`Registry::select`] with a typed error for the empty-registry case.
@@ -217,6 +237,7 @@ mod tests {
         assert!(r.resolve(FormatKind::Csr, Algorithm::Gustavson).is_some());
         assert!(r.resolve(FormatKind::Csr, Algorithm::GustavsonFast).is_some());
         assert!(r.resolve(FormatKind::InCrs, Algorithm::Inner).is_some());
+        assert!(r.resolve(FormatKind::Csc, Algorithm::OuterProduct).is_some());
         assert!(r.resolve(FormatKind::Dense, Algorithm::Dense).is_some());
         assert!(r.resolve(FormatKind::Csr, Algorithm::Block).is_some());
     }
@@ -295,6 +316,42 @@ mod tests {
         assert_ne!(k.algorithm(), Algorithm::Dense);
         let out = k.run(&a, &b).unwrap();
         assert!(out.c.max_abs_diff(&dense_ref(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn select_native_negotiates_per_operand_incrs_params() {
+        use crate::formats::incrs::InCrs;
+        use crate::formats::operand::MatrixOperand;
+        // restricted registry: only the default-params inner-InCRS kernel
+        // is registered, so what decides selection is whether the operand's
+        // own geometry is passed through (the negotiated sibling adopts the
+        // native arrays) instead of re-derived from defaults
+        let mut r = Registry::new();
+        r.register(Arc::new(InnerKernel::incrs(InCrsParams::default())));
+        let a = uniform(32, 64, 0.1, 17);
+        let b = uniform(64, 48, 0.1, 18);
+        let params = InCrsParams { section: 64, block: 8 };
+        let native = Arc::new(InCrs::from_csr_params(&b, params).unwrap());
+        let op = MatrixOperand::InCrs(Arc::clone(&native));
+        let k = r.select_native(&a, &b, Some(&op)).unwrap();
+        assert_eq!(
+            (k.format(), k.algorithm()),
+            (FormatKind::InCrs, Algorithm::Inner)
+        );
+        assert!(
+            k.ingest_cost(&b, Some(&op)) < 0.0,
+            "the winner must be the negotiated sibling that adopts the operand"
+        );
+        let b_arc = Arc::new(b.clone());
+        match k.prepare_operand(&op, &b_arc).unwrap() {
+            crate::engine::PreparedB::InCrs(adopted) => {
+                assert!(Arc::ptr_eq(&adopted, &native), "adoption must Arc-share")
+            }
+            other => panic!("expected adoption, got {other:?}"),
+        }
+        // without a native operand, selection is unchanged by negotiation
+        let plain = r.select_native(&a, &b, None).unwrap();
+        assert!(plain.ingest_cost(&b, None) >= 0.0);
     }
 
     #[test]

@@ -216,6 +216,7 @@ pub fn execute(
         // tile-pair weights even when wrapping a blocked or pooled kernel
         (None, PreparedB::Blocked(bb)) => Some(bb.src.as_ref()),
         (None, PreparedB::Pooled(pb)) => Some(pb.src.as_ref()),
+        (None, PreparedB::OuterPooled(ob)) => Some(ob.src.as_ref()),
         (None, _) => None,
     };
     // bands must never cut inside the kernel's own tile rows — round the
@@ -387,6 +388,15 @@ impl SpmmKernel for ShardedKernel {
     ) -> f64 {
         self.inner.ingest_cost(b, native)
     }
+    /// Delegate negotiation, then re-wrap: a sibling the inner kernel
+    /// offers for this operand must keep running sharded at this config.
+    fn negotiate(
+        &self,
+        native: &crate::formats::operand::MatrixOperand,
+    ) -> Option<Arc<dyn SpmmKernel>> {
+        let sibling = self.inner.negotiate(native)?;
+        Some(Arc::new(ShardedKernel::wrap(sibling, self.cfg)))
+    }
     fn band_alignment(&self) -> usize {
         self.inner.band_alignment()
     }
@@ -548,6 +558,49 @@ mod tests {
         let sharded = reg.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
         assert_eq!(sharded.name(), "sharded");
         assert_eq!(bits(&sharded.run(&a, &b).unwrap().c), want);
+    }
+
+    #[test]
+    fn sharded_outer_kernel_is_bit_identical_to_unsharded() {
+        use crate::engine::kernels::OuterKernel;
+        use crate::spmm::outer::OuterConfig;
+        let k = OuterKernel::new(OuterConfig { fan_in: 3, workers: 2 });
+        let a = uniform(60, 80, 0.08, 25);
+        let b = uniform(80, 44, 0.08, 26);
+        let prepared = k.prepare(&b).unwrap();
+        let want = bits(&k.execute(&a, &prepared).unwrap().c);
+        for shards in [1usize, 2, 3, 5, 8] {
+            let out = execute(&k, &a, Some(&b), &prepared, ShardConfig { shards, block: 16 })
+                .unwrap();
+            assert_eq!(bits(&out.c), want, "{shards} shards diverge");
+        }
+        // the prepared operand's CSR source also feeds the planner when no
+        // explicit B is passed (the ShardedKernel wrapper's path)
+        let out = execute(&k, &a, None, &prepared, ShardConfig { shards: 3, block: 16 })
+            .unwrap();
+        assert_eq!(bits(&out.c), want);
+    }
+
+    #[test]
+    fn sharded_wrapper_re_wraps_negotiated_siblings() {
+        use crate::engine::kernels::InnerKernel;
+        use crate::formats::incrs::{InCrs, InCrsParams};
+        use crate::formats::operand::MatrixOperand;
+        let inner: Arc<dyn SpmmKernel> = Arc::new(InnerKernel::incrs(InCrsParams::default()));
+        let wrapped = ShardedKernel::wrap(inner, ShardConfig { shards: 2, block: 16 });
+        let b = uniform(24, 300, 0.2, 9);
+        let foreign =
+            InCrs::from_csr_params(&b, InCrsParams { section: 64, block: 8 }).unwrap();
+        let op = MatrixOperand::from(foreign);
+        let negotiated = wrapped.negotiate(&op).expect("wrapper must delegate negotiation");
+        assert_eq!(negotiated.name(), "sharded", "sibling must stay sharded");
+        assert!(negotiated.ingest_cost(&b, Some(&op)) < 0.0, "sibling must adopt");
+        // a kernel with nothing to offer stays silent through the wrapper
+        let plain = ShardedKernel::wrap(
+            Arc::new(GustavsonKernel),
+            ShardConfig { shards: 2, block: 16 },
+        );
+        assert!(plain.negotiate(&op).is_none());
     }
 
     #[test]

@@ -45,6 +45,26 @@ impl Csc {
         }
     }
 
+    /// Direct CRS → CCS without a COO hop: the CCS arrays of `M` *are* the
+    /// CRS arrays of `Mᵀ`, and [`Csr::transpose`] is a stable counting
+    /// sort, so the arrays are moved (not cloned) out of the transpose and
+    /// carry exactly the bits [`Csc::from_coo`] would produce.
+    pub fn from_csr(m: &Csr) -> Csc {
+        let mut space = AddressSpace::default();
+        let t = m.transpose();
+        let nnz = t.nnz();
+        Csc {
+            rows: m.rows(),
+            cols: m.cols(),
+            col_ptr: t.row_ptr,
+            row_idx: t.col_idx,
+            vals: t.vals,
+            r_ptr: space.alloc(m.cols() + 1, 4),
+            r_idx: space.alloc(nnz, 4),
+            r_val: space.alloc(nnz, 4),
+        }
+    }
+
     /// Column `j` as (row indices, vals) — the cheap direction.
     #[inline]
     pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
@@ -156,6 +176,20 @@ mod tests {
         let n = m.read_col(0, &mut s);
         assert_eq!(n, 2);
         assert_eq!(s.total, 1 + 2 * 2); // ptr + 2*(idx+val)
+    }
+
+    #[test]
+    fn from_csr_matches_the_coo_route_bit_for_bit() {
+        let coo = sample().to_coo();
+        let via_coo = Csc::from_coo(&coo);
+        let via_csr = Csc::from_csr(&Csr::from_coo(&coo));
+        assert_eq!(via_csr.shape(), via_coo.shape());
+        assert_eq!(via_csr.col_ptr, via_coo.col_ptr);
+        assert_eq!(via_csr.row_idx, via_coo.row_idx);
+        assert_eq!(
+            via_csr.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via_coo.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -8,10 +8,11 @@
 //! in O(1) — and the engine sees (and costs) the conversion instead of
 //! forcing callers to pre-convert out of band. CSR submissions stay
 //! zero-cost (`to_csr` is an `Arc` share); InCRS reuses its embedded CSR
-//! arrays; every other format converts through canonical COO, whose sorted
-//! entry order makes the conversion deterministic — a job submitted in any
-//! native format produces output **bit-identical** to the same job
-//! submitted pre-converted.
+//! arrays; CCS transposes directly in either direction (no COO hop); every
+//! other format converts through canonical COO, whose sorted entry order
+//! makes the conversion deterministic — a job submitted in any native
+//! format produces output **bit-identical** to the same job submitted
+//! pre-converted.
 
 use std::sync::Arc;
 
@@ -100,9 +101,12 @@ impl MatrixOperand {
 
     /// The operand as canonical CSR. Zero-cost for CSR operands (`Arc`
     /// share); InCRS copies its embedded CSR arrays directly (no COO
-    /// round-trip); every other format converts through COO, whose sorted
-    /// entries make the result deterministic — and therefore bit-stable
-    /// across repeated conversions of the same content.
+    /// round-trip); CCS transposes directly (its arrays *are* the CSR
+    /// arrays of the transpose, and `Csr::transpose` is a stable counting
+    /// sort — same bits as the COO route, one pass instead of two); every
+    /// other format converts through COO, whose sorted entries make the
+    /// result deterministic — and therefore bit-stable across repeated
+    /// conversions of the same content.
     pub fn to_csr(&self) -> Result<Arc<Csr>, FormatError> {
         Ok(match self {
             MatrixOperand::Csr(m) => Arc::clone(m),
@@ -113,7 +117,29 @@ impl MatrixOperand {
                 m.col_idx.clone(),
                 m.vals.clone(),
             )),
+            MatrixOperand::Csc(m) => {
+                let t = Csr::from_parts(
+                    m.cols(),
+                    m.rows(),
+                    m.col_ptr.clone(),
+                    m.row_idx.clone(),
+                    m.vals.clone(),
+                );
+                Arc::new(t.transpose())
+            }
             other => Arc::new(Csr::from_coo(&other.as_sparse().to_coo())),
+        })
+    }
+
+    /// The operand as CCS — the column-major twin of [`to_csr`](Self::to_csr),
+    /// used by the outer-product backend's CSC ingestion path. `Arc` share
+    /// when the operand already is CCS; CSR transposes directly via
+    /// [`Csc::from_csr`]; everything else goes through canonical COO.
+    pub fn to_csc(&self) -> Result<Arc<Csc>, FormatError> {
+        Ok(match self {
+            MatrixOperand::Csc(m) => Arc::clone(m),
+            MatrixOperand::Csr(m) => Arc::new(Csc::from_csr(m)),
+            other => Arc::new(Csc::from_coo(&other.as_sparse().to_coo())),
         })
     }
 
@@ -127,11 +153,13 @@ impl MatrixOperand {
         if to == FormatKind::Csr {
             return Ok(MatrixOperand::Csr(self.to_csr()?));
         }
+        if to == FormatKind::Csc {
+            return Ok(MatrixOperand::Csc(self.to_csc()?));
+        }
         let coo = self.as_sparse().to_coo();
         Ok(match to {
             FormatKind::Dense => MatrixOperand::Dense(Arc::new(Dense::from_coo(&coo))),
-            FormatKind::Csr => unreachable!("handled above"),
-            FormatKind::Csc => MatrixOperand::Csc(Arc::new(Csc::from_coo(&coo))),
+            FormatKind::Csr | FormatKind::Csc => unreachable!("handled above"),
             FormatKind::Coo => MatrixOperand::Coo(Arc::new(coo)),
             FormatKind::Sll => MatrixOperand::Sll(Arc::new(Sll::from_coo(&coo))),
             FormatKind::Ellpack => MatrixOperand::Ell(Arc::new(Ellpack::from_coo(&coo))),
@@ -146,7 +174,8 @@ impl MatrixOperand {
     /// Estimated words touched converting this operand to canonical CSR —
     /// the ingestion cost `Registry::select_native` charges instead of
     /// assuming CSR arrives free. 0 for CSR; InCRS pays its array copies;
-    /// everything else pays the COO round-trip.
+    /// CCS pays one counting-sort transpose; everything else pays the COO
+    /// round-trip.
     pub fn conversion_words(&self) -> f64 {
         conversion_words(self.format(), self.nnz(), self.rows())
     }
@@ -160,6 +189,10 @@ pub fn conversion_words(native: FormatKind, nnz: usize, rows: usize) -> f64 {
         FormatKind::Csr => 0.0,
         // direct array copies: idx + val + row pointers
         FormatKind::InCrs => (2 * nnz + rows + 1) as f64,
+        // direct counting-sort transpose: idx + val written once, plus a
+        // counting pass — cheaper than the COO round-trip, dearer than a
+        // straight copy
+        FormatKind::Csc => (3 * nnz + rows + 1) as f64,
         // to_coo (3 words/entry) + CSR build (2 words/entry + pointers)
         _ => (5 * nnz + rows + 1) as f64,
     }
@@ -246,6 +279,48 @@ mod tests {
         assert_eq!(back.col_idx, csr.col_idx);
         assert_eq!(back.vals, csr.vals);
         assert!(op.conversion_words() > 0.0);
+    }
+
+    #[test]
+    fn csc_to_csr_direct_transpose_matches_the_coo_route() {
+        let coo = sample();
+        let csc = Csc::from_coo(&coo);
+        let op = MatrixOperand::from(csc);
+        let direct = op.to_csr().unwrap();
+        let via_coo = Csr::from_coo(&op.as_sparse().to_coo());
+        assert_eq!(direct.row_ptr, via_coo.row_ptr);
+        assert_eq!(direct.col_idx, via_coo.col_idx);
+        assert_eq!(
+            direct.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via_coo.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn to_csc_shares_when_native_and_transposes_csr_directly() {
+        let csc = Arc::new(Csc::from_coo(&sample()));
+        let op = MatrixOperand::from(Arc::clone(&csc));
+        assert!(Arc::ptr_eq(&op.to_csc().unwrap(), &csc));
+        match op.convert(FormatKind::Csc).unwrap() {
+            MatrixOperand::Csc(shared) => assert!(Arc::ptr_eq(&shared, &csc)),
+            other => panic!("unexpected {other:?}"),
+        }
+        // CSR source takes the direct-transpose path, same arrays as COO
+        let csr_op = MatrixOperand::from(Csr::from_coo(&sample()));
+        let got = csr_op.to_csc().unwrap();
+        assert_eq!(got.col_ptr, csc.col_ptr);
+        assert_eq!(got.row_idx, csc.row_idx);
+        assert_eq!(
+            got.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            csc.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn csc_ingestion_tier_sits_between_incrs_and_the_coo_formats() {
+        let csc_w = conversion_words(FormatKind::Csc, 100, 10);
+        assert!(conversion_words(FormatKind::InCrs, 100, 10) < csc_w);
+        assert!(csc_w < conversion_words(FormatKind::Coo, 100, 10));
     }
 
     #[test]

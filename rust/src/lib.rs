@@ -50,7 +50,9 @@
 //! densification, tiled/accel **blockization** (`PreparedB::Blocked`,
 //! built once and shared by every shard worker), the fast Gustavson
 //! kernel's **workspace pool** (`PreparedB::Pooled`, accumulator
-//! workspaces reused across jobs and shard workers) — with a bounded LRU
+//! workspaces reused across jobs and shard workers), the outer-product
+//! kernel's **merge-buffer pool** (`PreparedB::OuterPooled`, partial-
+//! product runs recycled across jobs) — with a bounded LRU
 //! keeping each `PreparedB` across batches) — the paper's "one
 //! representation build, many multiplies" amortization at the serving
 //! layer. Coalescing stats (`prepare_builds`, `prepare_cache_hits`,

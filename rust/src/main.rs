@@ -350,6 +350,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
                  \u{20}  spmm-accel spmm --kernel gustavson-fast --tile-workers 4   # vectorized pooled Gustavson\n\
                  \u{20}  spmm-accel spmm --kernel tiled --shards 4   # row-band sharded execution\n\
+                 \u{20}  spmm-accel spmm --kernel outer --shards 2 --b-format csc   # outer-product merge (hyper-sparse)\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\
                  \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\

@@ -12,6 +12,10 @@
 //!   pooling on top.
 //! * [`inner`] — inner-product SpMM with column-order `locate` access to B
 //!   (the access pattern Tables I/II and Fig 3 measure).
+//! * [`outer`] — outer-product SpMM (SpArch-style) for hyper-sparse
+//!   inputs: A streamed by column against B by row, per-column
+//!   partial-product runs combined by a deterministic k-ordered multiway
+//!   merge — bit-identical to [`gustavson`] at any fan-in or worker count.
 //! * [`blocks`]/[`plan`] — 32×32 blocking and sorted tile-pair dispatch
 //!   planning for the AOT Pallas kernel (the TPU re-expression of the
 //!   paper's comparator mesh, DESIGN.md §Hardware-Adaptation).
@@ -21,6 +25,7 @@ pub mod dense;
 pub mod gustavson;
 pub mod gustavson_fast;
 pub mod inner;
+pub mod outer;
 pub mod plan;
 
 pub use blocks::{blockize, BlockGrid};

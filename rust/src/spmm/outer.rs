@@ -1,0 +1,436 @@
+//! Outer-product SpMM (SpArch-style, PAPERS.md) with a deterministic
+//! k-ordered multiway merge — the column-major formulation for hyper-sparse
+//! inputs where row-centric kernels collapse.
+//!
+//! # Algorithm
+//!
+//! `C = A × B` is the sum of K rank-1 outer products: column `k` of A times
+//! row `k` of B. Each outer product is a *run* of partial products already
+//! sorted by output coordinate `(i, j)` — A's column is row-ordered (CSC)
+//! and B's row is column-ordered (CSR) — so the multiply reduces to merging
+//! K sorted runs. That is exactly the shape SpArch builds its merge tree
+//! around, and it does work proportional to the partial products actually
+//! produced: a near-empty A row costs nothing, where Gustavson still pays
+//! its per-row machinery over `m` mostly-empty rows.
+//!
+//! # Bit-reproducibility
+//!
+//! The scalar Gustavson oracle accumulates each output cell's products in
+//! ascending-k order, folding left-to-right from `0.0`
+//! (`gustavson_fast::Workspace::accum`). f32 addition is not associative,
+//! so this module never lets the merge topology touch the fold:
+//!
+//! * runs carry **raw products**, never partial sums;
+//! * every intermediate merge ([`merge_k_range`]'s hierarchical fan-in
+//!   rounds) is a **pure stable merge** — equal coordinates drain in
+//!   ascending-k order (lower run index first; runs are built in ascending
+//!   k, and parallel k-ranges are contiguous and disjoint);
+//! * accumulation happens **once**, in the single final pass over the
+//!   globally (i, j, k)-ordered stream ([`accumulate_merged`]), folding
+//!   each coordinate's products from `0.0` — the scalar fold, verbatim.
+//!
+//! The output is therefore bitwise identical to `gustavson::multiply` at
+//! any merge fan-in and any worker count (locked by `tests/prop_outer.rs`).
+//! Exact zeros (cancellation) are dropped on emission just like the scalar
+//! kernel's `v != 0.0` filter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::tiled::partition_by_weight;
+use crate::formats::csr::Csr;
+use crate::formats::traits::SparseMatrix;
+
+/// One partial product: packed output coordinate (row in the high 32 bits,
+/// column in the low 32) and the raw `a_ik · b_kj` value. Plain `u64`
+/// ordering of the key is lexicographic `(i, j)` order.
+pub type PartialProduct = (u64, f32);
+
+#[inline(always)]
+fn pack(i: u32, j: u32) -> u64 {
+    ((i as u64) << 32) | j as u64
+}
+
+/// Merge policy for one outer-product multiply.
+#[derive(Clone, Copy, Debug)]
+pub struct OuterConfig {
+    /// Runs combined per intermediate merge round (≤ 1 = one flat multiway
+    /// merge per k-range, no intermediate rounds). Any value produces the
+    /// same bits; it only trades merge passes against cursor fan-out.
+    pub fan_in: usize,
+    /// Worker threads, each merging a contiguous k-range (1 = serial).
+    pub workers: usize,
+}
+
+impl Default for OuterConfig {
+    fn default() -> Self {
+        OuterConfig { fan_in: 4, workers: 1 }
+    }
+}
+
+/// Shared pool of partial-product merge buffers — the outer kernel's
+/// mirror of [`crate::spmm::gustavson_fast::WorkspacePool`]. Lives inside
+/// the prepared `B` (`engine::OuterB`), so the coordinator's content-keyed
+/// `PreparedCache` carries it across micro-batches and every shard worker
+/// sharing the `PreparedB` draws merge scratch from the same pool.
+/// Checkout prefers a pooled buffer (a **hit**) and falls back to
+/// allocating (a **miss**).
+#[derive(Debug, Default)]
+pub struct MergePool {
+    free: Mutex<Vec<Vec<PartialProduct>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MergePool {
+    pub fn new() -> MergePool {
+        MergePool::default()
+    }
+
+    /// An empty partial-product buffer — pooled if available.
+    pub fn checkout(&self) -> Vec<PartialProduct> {
+        let pooled = self.free.lock().ok().and_then(|mut free| free.pop());
+        match pooled {
+            Some(buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer for reuse (cleared, capacity kept).
+    pub fn give_back(&self, mut buf: Vec<PartialProduct>) {
+        buf.clear();
+        if let Ok(mut free) = self.free.lock() {
+            free.push(buf);
+        }
+    }
+
+    /// Checkouts served from the pool.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().map(|free| free.len()).unwrap_or(0)
+    }
+}
+
+/// C = A × B by outer products. Transposes A internally (the CSR→CSC step
+/// the engine's cost hint charges) and delegates to
+/// [`multiply_transposed_counted`]. Returns `(C, macs, k_bands)`.
+pub fn multiply_counted(
+    a: &Csr,
+    b: &Csr,
+    cfg: &OuterConfig,
+    pool: &MergePool,
+) -> (Csr, u64, usize) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    multiply_transposed_counted(&a.transpose(), b, cfg, pool)
+}
+
+/// C = A × B given `at` = Aᵀ (so `at.row(k)` is A's column `k`, already
+/// sorted by ascending output row — exactly a CSC column). Streams column
+/// `k` of A against row `k` of B, merges the per-column runs k-range by
+/// k-range (parallel over `cfg.workers` contiguous ranges weighted by
+/// per-column partial-product counts), then runs the single accumulating
+/// merge. Returns `(C, macs, k_bands)` where `macs` is the scalar MAC
+/// count (identical to Gustavson's) and `k_bands` the number of k-ranges
+/// actually executed.
+pub fn multiply_transposed_counted(
+    at: &Csr,
+    b: &Csr,
+    cfg: &OuterConfig,
+    pool: &MergePool,
+) -> (Csr, u64, usize) {
+    assert_eq!(at.rows(), b.rows(), "inner dimensions (Aᵀ rows vs B rows)");
+    let kdim = at.rows();
+    let (m, n) = (at.cols(), b.cols());
+
+    // per-column flop weights: |A.col(k)| · |B.row(k)| partial products —
+    // the same weighted contiguous partition the tiled executor uses
+    let weights: Vec<usize> = (0..kdim).map(|k| at.row_nnz(k) * b.row_nnz(k)).collect();
+    let macs: u64 = weights.iter().map(|&w| w as u64).sum();
+    let ranges = partition_by_weight(&weights, cfg.workers.max(1));
+    let bands = ranges.len();
+
+    // stage 1: per-range pure merges, in parallel. Ranges are contiguous
+    // and ascending in k, so range order preserves k order globally.
+    let mut runs: Vec<Vec<PartialProduct>> = if bands <= 1 {
+        ranges
+            .iter()
+            .map(|&(lo, hi)| merge_k_range(at, b, lo, hi, cfg.fan_in, pool))
+            .collect()
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| s.spawn(move || merge_k_range(at, b, lo, hi, cfg.fan_in, pool)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("outer merge worker panicked"))
+                .collect()
+        })
+    };
+
+    // stage 2: the one accumulating pass across the per-range streams
+    let c = accumulate_merged(&runs, m, n);
+    for run in runs.drain(..) {
+        pool.give_back(run);
+    }
+    (c, macs, bands)
+}
+
+/// Pure (non-accumulating) merge of the per-column runs for `k` in
+/// `[k_lo, k_hi)`: the returned stream is sorted by packed `(i, j)` key
+/// with equal-key entries kept in ascending-k emission order. No values are
+/// ever combined here — that is what makes the result invariant under
+/// `fan_in`.
+fn merge_k_range(
+    at: &Csr,
+    b: &Csr,
+    k_lo: usize,
+    k_hi: usize,
+    fan_in: usize,
+    pool: &MergePool,
+) -> Vec<PartialProduct> {
+    // per-column runs: A's column k (ascending i) × B's row k (ascending j)
+    // — each run is born (i, j)-sorted, and the list is ascending in k
+    let mut runs: Vec<Vec<PartialProduct>> = Vec::new();
+    for k in k_lo..k_hi {
+        let (is, a_vals) = at.row(k);
+        let (js, b_vals) = b.row(k);
+        if is.is_empty() || js.is_empty() {
+            continue;
+        }
+        let mut run = pool.checkout();
+        run.reserve(is.len() * js.len());
+        for (&i, &av) in is.iter().zip(a_vals) {
+            for (&j, &bv) in js.iter().zip(b_vals) {
+                run.push((pack(i, j), av * bv));
+            }
+        }
+        runs.push(run);
+    }
+    if fan_in >= 2 {
+        // hierarchical rounds of `fan_in`-way merges (SpArch's merge tree):
+        // chunking preserves run order, so ties keep draining lower k first
+        while runs.len() > 1 {
+            let mut next = Vec::with_capacity(runs.len().div_ceil(fan_in));
+            for group in runs.chunks(fan_in) {
+                next.push(multiway_merge(group, pool));
+            }
+            for run in runs.drain(..) {
+                pool.give_back(run);
+            }
+            runs = next;
+        }
+        runs.pop().unwrap_or_else(|| pool.checkout())
+    } else {
+        // one flat multiway merge over every run in the range
+        let merged = multiway_merge(&runs, pool);
+        for run in runs.drain(..) {
+            pool.give_back(run);
+        }
+        merged
+    }
+}
+
+/// Stable multiway merge of sorted `streams` (stream order = ascending k):
+/// equal keys drain lower-index streams first, preserving ascending-k
+/// order at every output coordinate. Linear cursor scan — fan-in is small
+/// by construction.
+fn multiway_merge(streams: &[Vec<PartialProduct>], pool: &MergePool) -> Vec<PartialProduct> {
+    let total: usize = streams.iter().map(Vec::len).sum();
+    let mut out = pool.checkout();
+    out.reserve(total);
+    let mut cursors = vec![0usize; streams.len()];
+    loop {
+        let mut best: Option<(u64, usize)> = None;
+        for (s, &c) in cursors.iter().enumerate() {
+            if c < streams[s].len() {
+                let key = streams[s][c].0;
+                // strict `<` keeps ties on the earliest (lowest-k) stream
+                let better = match best {
+                    None => true,
+                    Some((bk, _)) => key < bk,
+                };
+                if better {
+                    best = Some((key, s));
+                }
+            }
+        }
+        match best {
+            Some((_, s)) => {
+                out.push(streams[s][cursors[s]]);
+                cursors[s] += 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// The single accumulating pass: multiway-merge the per-range streams
+/// (range order = ascending k, so equal-key ties drain in ascending-k
+/// order) and fold each output coordinate's products left-to-right from
+/// `0.0` — exactly the scalar Gustavson accumulation. Exact zeros
+/// (cancellation, including the `-0.0` corner) are dropped on emission,
+/// matching the scalar kernel's `v != 0.0` filter.
+fn accumulate_merged(runs: &[Vec<PartialProduct>], m: usize, n: usize) -> Csr {
+    let mut row_ptr: Vec<u32> = Vec::with_capacity(m + 1);
+    row_ptr.push(0);
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    // rows [0, closed) have their end pointer pushed already
+    let mut closed = 0usize;
+    fn emit(
+        key: u64,
+        v: f32,
+        closed: &mut usize,
+        row_ptr: &mut Vec<u32>,
+        col_idx: &mut Vec<u32>,
+        vals: &mut Vec<f32>,
+    ) {
+        if v == 0.0 {
+            return;
+        }
+        let i = (key >> 32) as usize;
+        while *closed < i {
+            row_ptr.push(col_idx.len() as u32);
+            *closed += 1;
+        }
+        col_idx.push((key & 0xFFFF_FFFF) as u32);
+        vals.push(v);
+    }
+
+    let mut cursors = vec![0usize; runs.len()];
+    let mut pending: Option<(u64, f32)> = None;
+    loop {
+        let mut best: Option<(u64, usize)> = None;
+        for (s, &c) in cursors.iter().enumerate() {
+            if c < runs[s].len() {
+                let key = runs[s][c].0;
+                let better = match best {
+                    None => true,
+                    Some((bk, _)) => key < bk,
+                };
+                if better {
+                    best = Some((key, s));
+                }
+            }
+        }
+        let Some((key, s)) = best else { break };
+        let (_, p) = runs[s][cursors[s]];
+        cursors[s] += 1;
+        pending = Some(match pending {
+            Some((k0, acc)) if k0 == key => (k0, acc + p),
+            Some((k0, acc)) => {
+                emit(k0, acc, &mut closed, &mut row_ptr, &mut col_idx, &mut vals);
+                // first touch zeroes then adds — the scalar `0.0 + p`
+                // sequence, so the `-0.0` bit never diverges
+                (key, 0.0 + p)
+            }
+            None => (key, 0.0 + p),
+        });
+    }
+    if let Some((k0, acc)) = pending {
+        emit(k0, acc, &mut closed, &mut row_ptr, &mut col_idx, &mut vals);
+    }
+    while closed < m {
+        row_ptr.push(col_idx.len() as u32);
+        closed += 1;
+    }
+    Csr::from_parts(m, n, row_ptr, col_idx, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::formats::coo::Coo;
+    use crate::spmm::gustavson;
+
+    #[test]
+    fn matches_gustavson_bitwise_across_fan_ins_and_workers() {
+        for seed in 0..4 {
+            let a = uniform(30, 40, 0.12, seed);
+            let b = uniform(40, 26, 0.12, seed + 100);
+            let (want, want_macs) = gustavson::multiply_counted(&a, &b);
+            let want_bits = want.bit_pattern();
+            for fan_in in [1usize, 2, 3, 7] {
+                for workers in [1usize, 3] {
+                    let pool = MergePool::new();
+                    let cfg = OuterConfig { fan_in, workers };
+                    let (c, macs, _) = multiply_counted(&a, &b, &cfg, &pool);
+                    assert_eq!(
+                        c.bit_pattern(),
+                        want_bits,
+                        "seed {seed}, fan_in {fan_in}, workers {workers}"
+                    );
+                    assert_eq!(macs, want_macs, "MAC accounting diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_drops_exact_zeros_like_the_scalar_kernel() {
+        // C[0,0] = 1·1 + (-1)·1 folds to exactly 0.0 and must be dropped;
+        // C[0,1] survives partial cancellation: (0 + 1 - 1) + 0.5 = 0.5
+        let a = Csr::from_coo(&Coo::new(
+            1,
+            3,
+            vec![(0, 0, 1.0), (0, 1, -1.0), (0, 2, 0.5)],
+        ));
+        let b = Csr::from_coo(&Coo::new(
+            3,
+            2,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (2, 1, 1.0)],
+        ));
+        let (want, _) = gustavson::multiply_counted(&a, &b);
+        let pool = MergePool::new();
+        let (c, _, _) = multiply_counted(&a, &b, &OuterConfig::default(), &pool);
+        assert_eq!(c.bit_pattern(), want.bit_pattern());
+        assert_eq!(c.nnz(), 1, "cancelled cell must not be stored");
+        assert_eq!(c.row(0), (&[1u32][..], &[0.5f32][..]));
+    }
+
+    #[test]
+    fn empty_operands_produce_an_empty_result() {
+        let a = uniform(5, 8, 0.0, 1);
+        let b = uniform(8, 6, 0.5, 2);
+        let pool = MergePool::new();
+        let (c, macs, _) = multiply_counted(&a, &b, &OuterConfig::default(), &pool);
+        assert_eq!(c.shape(), (5, 6));
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(macs, 0);
+    }
+
+    #[test]
+    fn merge_buffers_return_to_the_pool() {
+        let a = uniform(24, 32, 0.2, 7);
+        let b = uniform(32, 20, 0.2, 8);
+        let pool = MergePool::new();
+        let cfg = OuterConfig { fan_in: 2, workers: 1 };
+        multiply_counted(&a, &b, &cfg, &pool);
+        let allocated = pool.misses();
+        assert!(allocated > 0);
+        assert_eq!(pool.pooled() as u64, allocated, "buffers leaked from the pool");
+        // a second multiply reuses parked buffers instead of allocating
+        multiply_counted(&a, &b, &cfg, &pool);
+        assert_eq!(pool.misses(), allocated, "second run re-allocated");
+        assert!(pool.hits() > 0);
+    }
+}

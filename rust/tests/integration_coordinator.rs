@@ -494,3 +494,40 @@ fn legacy_submit_shim_still_serves() {
     assert!(res.result.unwrap().max_err.unwrap() < 1e-3);
     s.shutdown();
 }
+
+#[test]
+fn outer_kernel_jobs_log_selection_observations() {
+    // the kernel-observation log must cover newly registered algorithms
+    // with no coordinator changes: run outer-product jobs and find them
+    // in `Metrics::kernel_log` with an honest cost hint attached
+    let s = server(
+        KernelSpec::Fixed(FormatKind::Csc, Algorithm::OuterProduct),
+        false,
+        1,
+    );
+    let client = s.client();
+    for i in 0..3u64 {
+        let a = Arc::new(uniform(32, 40, 0.1, i + 80));
+        let b = Arc::new(uniform(40, 24, 0.1, i + 90));
+        let out = client
+            .job(a, b)
+            .verify(true)
+            .keep_result(false)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.backend, "outer");
+        assert!(out.max_err.unwrap() < 1e-3);
+    }
+    assert_eq!(s.metrics.snapshot().kernel_observations, 3);
+    let log = s.metrics.kernel_log();
+    assert!(
+        log.iter().any(|o| o.algorithm == Algorithm::OuterProduct
+            && o.format == FormatKind::Csc
+            && o.cost_hint > 0.0),
+        "no outer-product observation in {log:?}"
+    );
+    drop(client);
+    s.shutdown();
+}

@@ -79,7 +79,7 @@ fn every_registered_kernel_agrees_with_the_dense_oracle() {
         Geometry { block: 16, pairs: 32, slots: 16 },
         2,
     );
-    assert!(registry.len() >= 7, "default registry too small: {registry:?}");
+    assert!(registry.len() >= 8, "default registry too small: {registry:?}");
     check(0xBEEF, 15, gen_pair, |(a, b)| {
         let want = dense_ref(a, b);
         for kernel in registry.kernels() {
@@ -130,6 +130,7 @@ fn registry_resolves_the_contracted_kernels() {
         (FormatKind::Dense, Algorithm::Dense),
         (FormatKind::Csr, Algorithm::Tiled),
         (FormatKind::Csr, Algorithm::Block),
+        (FormatKind::Csc, Algorithm::OuterProduct),
     ] {
         assert!(
             registry.resolve(f, alg).is_some(),

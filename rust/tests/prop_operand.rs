@@ -158,7 +158,7 @@ fn typed_errors_surface_the_right_variants() {
 #[test]
 fn every_kernel_serves_non_csr_operands_bit_identically_at_1_and_4_shards() {
     let keys = registry().keys();
-    assert!(keys.len() >= 7, "registry too small: {keys:?}");
+    assert!(keys.len() >= 8, "registry too small: {keys:?}");
     assert!(
         keys.contains(&(FormatKind::Csr, spmm_accel::engine::Algorithm::GustavsonFast)),
         "the fast Gustavson kernel must ride this suite: {keys:?}"

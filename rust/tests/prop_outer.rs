@@ -1,0 +1,236 @@
+//! Property + acceptance suite for the outer-product SpGEMM backend:
+//!
+//! 1. `spmm::outer` is **bit-identical** to the scalar Gustavson oracle on
+//!    random uniform inputs at every merge fan-in {1, 2, 3, 7} and worker
+//!    count {1, 3}, with equal MAC counts;
+//! 2. the same holds on hyper-sparse power-law (Zipf) inputs — the regime
+//!    the backend exists for, with near-empty rows and skewed column
+//!    degrees;
+//! 3. the registered `(Csc, OuterProduct)` kernel matches the `(Csr,
+//!    Gustavson)` kernel bitwise, unsharded and under `shard::execute` at
+//!    shard counts {1, 2, 3, 5, 8};
+//! 4. `Registry::shard_all` wraps the outer kernel and stays bit-identical;
+//! 5. cancellation produces **exact zeros that are dropped**, matching the
+//!    scalar kernel's `v != 0.0` emission filter;
+//! 6. CSC, CSR, and COO submissions of the same content through a real
+//!    coordinator server produce bit-identical output.
+
+use std::sync::Arc;
+
+use spmm_accel::coordinator::{Server, ServerConfig};
+use spmm_accel::datasets::{generate, uniform, ColumnDist, DatasetSpec, NnzRow};
+use spmm_accel::engine::{shard, Algorithm, Registry, ShardConfig, SpmmKernel};
+use spmm_accel::formats::coo::Coo;
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
+use spmm_accel::formats::MatrixOperand;
+use spmm_accel::spmm::gustavson;
+use spmm_accel::spmm::outer::{self, MergePool, OuterConfig};
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+const BLOCK: usize = 16;
+
+fn registry() -> Registry {
+    Registry::with_default_kernels(Geometry { block: BLOCK, pairs: 32, slots: 16 }, 2)
+}
+
+/// Hyper-sparse power-law matrix: Zipf column popularity, rows ranging
+/// from empty to a handful of entries — the regime where row-centric
+/// kernels waste their workspaces and the outer product pays off.
+fn power_law(rows: usize, cols: usize, avg: f64, skew: f64, seed: u64) -> Csr {
+    generate(
+        &DatasetSpec {
+            name: "prop-outer-zipf",
+            rows,
+            cols,
+            stated_density: avg / cols as f64,
+            nnz_row: NnzRow { min: 0, avg, max: rows.min(48) },
+            dist: ColumnDist::Zipf(skew),
+        },
+        seed,
+    )
+}
+
+/// Random compatible (A, B) pair mixing shapes and densities.
+fn gen_pair(rng: &mut Rng) -> (Csr, Csr) {
+    let m = rng.usize_below(40) + 4;
+    let k = rng.usize_below(40) + 4;
+    let n = rng.usize_below(40) + 4;
+    let da = 0.03 + rng.f64() * 0.25;
+    let db = 0.03 + rng.f64() * 0.25;
+    let seed = rng.next_u64();
+    (uniform(m, k, da, seed), uniform(k, n, db, seed ^ 0xC0DE))
+}
+
+/// 1. Outer == scalar Gustavson, bit for bit, at every fan-in and worker
+/// count, with the same MAC count.
+#[test]
+fn prop_outer_matches_gustavson_bitwise_on_random_inputs() {
+    check(0x007E4, 12, gen_pair, |(a, b)| {
+        let (want, want_macs) = gustavson::multiply_counted(a, b);
+        let want_bits = want.bit_pattern();
+        for fan_in in [1usize, 2, 3, 7] {
+            for workers in [1usize, 3] {
+                let pool = MergePool::default();
+                let (got, macs, _) =
+                    outer::multiply_counted(a, b, &OuterConfig { fan_in, workers }, &pool);
+                if got.bit_pattern() != want_bits {
+                    return Err(format!(
+                        "outer diverges bitwise at fan_in={fan_in} workers={workers}"
+                    ));
+                }
+                if macs != want_macs {
+                    return Err(format!(
+                        "MAC count {macs} != Gustavson {want_macs} at \
+                         fan_in={fan_in} workers={workers}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// 2. The same bit-identity on hyper-sparse power-law inputs.
+#[test]
+fn outer_matches_gustavson_on_power_law_inputs() {
+    for (seed, skew, avg) in [(80u64, 1.1, 2.0), (81, 1.4, 4.0), (82, 0.9, 3.0)] {
+        let a = power_law(96, 128, avg, skew, seed);
+        let b = power_law(128, 80, avg, skew, seed ^ 0xBEEF);
+        let (want, want_macs) = gustavson::multiply_counted(&a, &b);
+        let want_bits = want.bit_pattern();
+        for fan_in in [1usize, 2, 3, 7] {
+            let pool = MergePool::default();
+            let (got, macs, _) = outer::multiply_counted(
+                &a,
+                &b,
+                &OuterConfig { fan_in, workers: 2 },
+                &pool,
+            );
+            assert_eq!(
+                got.bit_pattern(),
+                want_bits,
+                "power-law divergence at seed={seed} fan_in={fan_in}"
+            );
+            assert_eq!(macs, want_macs, "seed={seed} fan_in={fan_in}");
+        }
+    }
+}
+
+/// 3. The registered kernel matches the Gustavson kernel bitwise,
+/// unsharded and at shard counts {1, 2, 3, 5, 8}.
+#[test]
+fn registered_outer_kernel_is_bit_identical_across_shard_counts() {
+    let reg = registry();
+    let outer_k = reg
+        .resolve(FormatKind::Csc, Algorithm::OuterProduct)
+        .expect("outer kernel registered");
+    let gust = reg
+        .resolve(FormatKind::Csr, Algorithm::Gustavson)
+        .expect("gustavson kernel registered");
+    let a = power_law(80, 96, 3.0, 1.2, 90);
+    let b = power_law(96, 64, 3.0, 1.2, 91);
+    let want = gust.run(&a, &b).unwrap().c.bit_pattern();
+    let prepared = outer_k.prepare(&b).unwrap();
+    assert_eq!(outer_k.execute(&a, &prepared).unwrap().c.bit_pattern(), want);
+    for shards in [1usize, 2, 3, 5, 8] {
+        let out = shard::execute(
+            outer_k.as_ref(),
+            &a,
+            Some(&b),
+            &prepared,
+            ShardConfig { shards, block: BLOCK },
+        )
+        .unwrap();
+        assert_eq!(
+            out.c.bit_pattern(),
+            want,
+            "outer kernel diverges at {shards} shards"
+        );
+    }
+}
+
+/// 4. `shard_all` wraps the outer kernel; the wrapped kernel stays
+/// bit-identical to the unwrapped run.
+#[test]
+fn shard_all_wraps_outer_bit_identically() {
+    let mut reg = registry();
+    let a = uniform(64, 80, 0.08, 92);
+    let b = uniform(80, 56, 0.08, 93);
+    let want = reg
+        .resolve(FormatKind::Csc, Algorithm::OuterProduct)
+        .unwrap()
+        .run(&a, &b)
+        .unwrap()
+        .c
+        .bit_pattern();
+    reg.shard_all(ShardConfig { shards: 3, block: BLOCK });
+    let wrapped = reg
+        .resolve(FormatKind::Csc, Algorithm::OuterProduct)
+        .expect("outer survives shard_all");
+    assert_eq!(wrapped.name(), "sharded");
+    assert_eq!(wrapped.run(&a, &b).unwrap().c.bit_pattern(), want);
+}
+
+/// 5. Cancellation produces an exact zero that is dropped from the sparse
+/// result — exactly like the scalar kernel's `v != 0.0` filter.
+#[test]
+fn cancellation_drops_exact_zeros_like_gustavson() {
+    // C[0,0] = 1*1 + (-1)*1 = exactly 0 -> dropped; C[0,1] = 0.5 survives
+    let a = Csr::from_coo(&Coo::new(
+        1,
+        3,
+        vec![(0, 0, 1.0), (0, 1, -1.0), (0, 2, 0.5)],
+    ));
+    let b = Csr::from_coo(&Coo::new(
+        3,
+        2,
+        vec![(0, 0, 1.0), (1, 0, 1.0), (2, 1, 1.0)],
+    ));
+    let (want, _) = gustavson::multiply_counted(&a, &b);
+    assert_eq!(want.nnz(), 1, "oracle must drop the cancelled cell");
+    for fan_in in [1usize, 2, 7] {
+        let pool = MergePool::default();
+        let (got, _, _) =
+            outer::multiply_counted(&a, &b, &OuterConfig { fan_in, workers: 1 }, &pool);
+        assert_eq!(got.bit_pattern(), want.bit_pattern(), "fan_in={fan_in}");
+    }
+}
+
+/// 6. CSC, CSR, and COO submissions of the same content through a real
+/// server are bit-identical on the outer kernel.
+#[test]
+fn csc_csr_and_coo_ingestion_are_bit_identical_through_the_server() {
+    let s = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        geometry: Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        ..Default::default()
+    });
+    let client = s.client();
+    let a = Arc::new(power_law(48, 64, 3.0, 1.2, 94));
+    let b = Arc::new(power_law(64, 40, 3.0, 1.2, 95));
+    let b_op = MatrixOperand::from(Arc::clone(&b));
+    let run = |bo: MatrixOperand| {
+        client
+            .job(MatrixOperand::from(Arc::clone(&a)), bo)
+            .kernel(FormatKind::Csc, Algorithm::OuterProduct)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap()
+    };
+    let want = run(b_op.clone());
+    for kind in [FormatKind::Csc, FormatKind::Coo] {
+        let got = run(b_op.convert(kind).unwrap());
+        assert_eq!(
+            want.c.as_ref().unwrap().bit_pattern(),
+            got.c.as_ref().unwrap().bit_pattern(),
+            "{kind:?} submission diverges from CSR on the outer kernel"
+        );
+    }
+    drop(client);
+    s.shutdown();
+}

@@ -54,7 +54,7 @@ fn gen_pair(rng: &mut Rng) -> (Csr, Csr) {
 #[test]
 fn sharded_output_is_bit_identical_for_every_registered_kernel() {
     let registry = registry();
-    assert!(registry.len() >= 7, "registry too small: {registry:?}");
+    assert!(registry.len() >= 8, "registry too small: {registry:?}");
     assert!(
         registry.resolve(FormatKind::Csr, Algorithm::GustavsonFast).is_some(),
         "the fast Gustavson kernel must ride this suite: {registry:?}"
