@@ -1,0 +1,325 @@
+//! Rule **C1** — cross-file consistency between the kernel registry, the
+//! all-kernels property suite, and the README Backends table.
+//!
+//! The contract: every `Algorithm` variant and every kernel registered by
+//! `Registry::with_default_kernels` is (a) exercised by
+//! `tests/prop_engine.rs` (whose registry-size assertion must keep up with
+//! the default kernel count) and (b) documented in the README `## Backends`
+//! table under its `Algorithm::name()` string. A new kernel that skips the
+//! suite or the docs fails `cargo test --test repo_lint`.
+//!
+//! The checks are pure functions over file contents so the fixtures in the
+//! test module can prove each one fires; [`super::run_repo_lint`] feeds
+//! them the real files.
+
+use super::report::Finding;
+use super::scan::scan_source;
+
+/// The file contents C1 cross-references.
+pub struct ConsistencyInput<'a> {
+    /// `src/engine/kernel.rs` (declares `Algorithm` and its `name()` map).
+    pub kernel_src: &'a str,
+    /// `src/engine/registry.rs` (declares `with_default_kernels`).
+    pub registry_src: &'a str,
+    /// `tests/prop_engine.rs` (the all-kernels bit-identity suite).
+    pub prop_engine_src: &'a str,
+    /// The repo `README.md` (the `## Backends` table).
+    pub readme_src: &'a str,
+}
+
+/// Run every cross-file check. Returns the findings plus the number of
+/// individual assertions performed (so the lint harness can prove the
+/// layer actually ran).
+pub fn check(input: &ConsistencyInput<'_>) -> (Vec<Finding>, usize) {
+    let mut findings = Vec::new();
+    let mut checks = 0usize;
+
+    let variants = algorithm_variants(input.kernel_src);
+    if variants.is_empty() {
+        findings.push(Finding {
+            rule: "C1",
+            path: "src/engine/kernel.rs".into(),
+            line: 0,
+            detail: "could not locate `pub enum Algorithm` — the consistency \
+                     pass needs updating"
+                .into(),
+        });
+        return (findings, checks);
+    }
+    let names = algorithm_names(input.kernel_src);
+
+    // (a) every variant has a name() string
+    for v in &variants {
+        checks += 1;
+        if !names.iter().any(|(var, _)| var == v) {
+            findings.push(Finding {
+                rule: "C1",
+                path: "src/engine/kernel.rs".into(),
+                line: 0,
+                detail: format!("Algorithm::{v} has no `name()` string mapping"),
+            });
+        }
+    }
+
+    // (b) every variant appears in the all-kernels property suite
+    for v in &variants {
+        checks += 1;
+        if !input.prop_engine_src.contains(&format!("Algorithm::{v}")) {
+            findings.push(Finding {
+                rule: "C1",
+                path: "tests/prop_engine.rs".into(),
+                line: 0,
+                detail: format!(
+                    "Algorithm::{v} is registered but never referenced by the \
+                     all-kernels suite — add it to the contracted-kernels list"
+                ),
+            });
+        }
+    }
+
+    // (c) every algorithm name string appears in the README Backends table
+    match backends_section(input.readme_src) {
+        None => findings.push(Finding {
+            rule: "C1",
+            path: "README.md".into(),
+            line: 0,
+            detail: "no `## Backends` section found".into(),
+        }),
+        Some(section) => {
+            for (v, name) in &names {
+                checks += 1;
+                if !section.contains(&format!(", {name})")) {
+                    findings.push(Finding {
+                        rule: "C1",
+                        path: "README.md".into(),
+                        line: 0,
+                        detail: format!(
+                            "Algorithm::{v} (`{name}`) missing from the \
+                             `## Backends` table — document the new kernel"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // (d) the suite's registry-size floor keeps up with the default set
+    let registered = default_register_count(input.registry_src);
+    checks += 1;
+    match prop_engine_len_floor(input.prop_engine_src) {
+        None => findings.push(Finding {
+            rule: "C1",
+            path: "tests/prop_engine.rs".into(),
+            line: 0,
+            detail: "no `registry.len() >= N` assertion found — the all-kernels \
+                     suite no longer guards the default kernel count"
+                .into(),
+        }),
+        Some(floor) if floor < registered => findings.push(Finding {
+            rule: "C1",
+            path: "tests/prop_engine.rs".into(),
+            line: 0,
+            detail: format!(
+                "`registry.len() >= {floor}` lags `with_default_kernels` \
+                 ({registered} kernels registered) — raise the floor so a \
+                 dropped kernel fails the suite"
+            ),
+        }),
+        Some(_) => {}
+    }
+
+    (findings, checks)
+}
+
+/// Unit-variant names of `pub enum Algorithm`, parsed from the blanked
+/// code view (doc comments with braces can't break the depth tracking).
+fn algorithm_variants(kernel_src: &str) -> Vec<String> {
+    let file = scan_source("engine/kernel.rs", kernel_src);
+    let mut variants = Vec::new();
+    let mut inside = false;
+    for line in &file.code {
+        if line.contains("pub enum Algorithm") {
+            inside = true;
+            continue;
+        }
+        if inside {
+            let t = line.trim();
+            if t.starts_with('}') {
+                break;
+            }
+            let ident = t.trim_end_matches(',');
+            if !ident.is_empty()
+                && ident.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+                && ident.chars().all(|c| c.is_ascii_alphanumeric())
+            {
+                variants.push(ident.to_string());
+            }
+        }
+    }
+    variants
+}
+
+/// `(variant, name-string)` pairs from lines shaped `Algorithm::X => "y"`
+/// (the body of `Algorithm::name`).
+fn algorithm_names(kernel_src: &str) -> Vec<(String, String)> {
+    let mut pairs = Vec::new();
+    for line in kernel_src.lines() {
+        let Some(pos) = line.find("Algorithm::") else {
+            continue;
+        };
+        let rest = &line[pos + "Algorithm::".len()..];
+        let variant: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric())
+            .collect();
+        let Some(arrow) = rest.find("=> \"") else {
+            continue;
+        };
+        let after = &rest[arrow + 4..];
+        let Some(close) = after.find('"') else {
+            continue;
+        };
+        if !variant.is_empty() {
+            pairs.push((variant, after[..close].to_string()));
+        }
+    }
+    pairs.sort();
+    pairs.dedup();
+    pairs
+}
+
+/// The README text between `## Backends` and the next `## ` heading.
+fn backends_section(readme: &str) -> Option<&str> {
+    let start = readme.find("## Backends")?;
+    let rest = &readme[start..];
+    match rest[2..].find("\n## ") {
+        Some(end) => Some(&rest[..end + 2]),
+        None => Some(rest),
+    }
+}
+
+/// Number of `r.register(` calls inside `with_default_kernels`.
+fn default_register_count(registry_src: &str) -> usize {
+    let Some(start) = registry_src.find("fn with_default_kernels") else {
+        return 0;
+    };
+    let body = &registry_src[start..];
+    let end = body.find("\n    }").map(|e| e + 1).unwrap_or(body.len());
+    body[..end].matches("r.register(").count()
+}
+
+/// `N` from the suite's `registry.len() >= N` assertion.
+fn prop_engine_len_floor(prop_engine_src: &str) -> Option<usize> {
+    let pos = prop_engine_src.find("registry.len() >= ")?;
+    let after = &prop_engine_src[pos + "registry.len() >= ".len()..];
+    let digits: String = after.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KERNEL_FIXTURE: &str = r#"
+/// Which algorithm a kernel implements.
+pub enum Algorithm {
+    /// The oracle { braces in doc comments are fine }.
+    Dense,
+    Gustavson,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Dense => "dense",
+            Algorithm::Gustavson => "gustavson",
+        }
+    }
+}
+"#;
+
+    const REGISTRY_FIXTURE: &str = "
+    pub fn with_default_kernels() -> Registry {
+        let mut r = Registry::new();
+        r.register(Arc::new(DenseOracleKernel));
+        r.register(Arc::new(GustavsonKernel));
+        r
+    }
+";
+
+    fn input<'a>(prop_engine: &'a str, readme: &'a str) -> ConsistencyInput<'a> {
+        ConsistencyInput {
+            kernel_src: KERNEL_FIXTURE,
+            registry_src: REGISTRY_FIXTURE,
+            prop_engine_src: prop_engine,
+            readme_src: readme,
+        }
+    }
+
+    const GOOD_PROP: &str =
+        "assert!(registry.len() >= 2); Algorithm::Dense; Algorithm::Gustavson;";
+    const GOOD_README: &str =
+        "## Backends\n| `(dense, dense)` | x |\n| `(crs, gustavson)` | y |\n\n## Next\n";
+
+    #[test]
+    fn clean_inputs_produce_no_findings_and_count_checks() {
+        let (findings, checks) = check(&input(GOOD_PROP, GOOD_README));
+        assert!(findings.is_empty(), "{findings:?}");
+        // 2 name checks + 2 suite checks + 2 readme checks + 1 floor check
+        assert_eq!(checks, 7);
+    }
+
+    #[test]
+    fn missing_suite_reference_fires() {
+        let prop = "assert!(registry.len() >= 2); Algorithm::Dense;";
+        let (findings, _) = check(&input(prop, GOOD_README));
+        assert!(
+            findings.iter().any(|f| f.detail.contains("Algorithm::Gustavson")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn missing_readme_row_fires() {
+        let readme = "## Backends\n| `(dense, dense)` | x |\n";
+        let (findings, _) = check(&input(GOOD_PROP, readme));
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.path == "README.md" && f.detail.contains("`gustavson`")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn lagging_registry_floor_fires() {
+        let prop = "assert!(registry.len() >= 1); Algorithm::Dense; Algorithm::Gustavson;";
+        let (findings, _) = check(&input(prop, GOOD_README));
+        assert!(
+            findings.iter().any(|f| f.detail.contains("lags")),
+            "{findings:?}"
+        );
+        let prop = "Algorithm::Dense; Algorithm::Gustavson;";
+        let (findings, _) = check(&input(prop, GOOD_README));
+        assert!(
+            findings.iter().any(|f| f.detail.contains("no `registry.len()")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn parsers_extract_the_real_shapes() {
+        assert_eq!(algorithm_variants(KERNEL_FIXTURE), vec!["Dense", "Gustavson"]);
+        assert_eq!(
+            algorithm_names(KERNEL_FIXTURE),
+            vec![
+                ("Dense".to_string(), "dense".to_string()),
+                ("Gustavson".to_string(), "gustavson".to_string()),
+            ]
+        );
+        assert_eq!(default_register_count(REGISTRY_FIXTURE), 2);
+        assert_eq!(prop_engine_len_floor(GOOD_PROP), Some(2));
+        assert!(backends_section(GOOD_README)
+            .is_some_and(|s| s.contains("gustavson") && !s.contains("Next")));
+    }
+}

@@ -1,0 +1,144 @@
+//! `detlint` — the repo's dependency-free static-analysis pass.
+//!
+//! The crate's north-star contract (ROADMAP) is that every kernel is
+//! **bit-identical** to scalar Gustavson at any worker/shard/fan-in count,
+//! and that the serving layer fails with **typed errors**, never panics.
+//! The property suites sample that contract; this pass enforces the coding
+//! discipline that makes it hold *by construction*, the way rust-lang's
+//! `tidy` enforces repo policy — no external deps, runs as
+//! `cargo test --test repo_lint`.
+//!
+//! ## Rules
+//!
+//! | rule | scope | what it rejects |
+//! |---|---|---|
+//! | **D1** | `spmm`, `engine`, `formats`, `coordinator` | `HashMap`/`HashSet`/`RandomState` — unspecified iteration order feeding numeric results or serving decisions; use `BTreeMap`/`BTreeSet` or index vectors |
+//! | **D2** | `spmm`, `engine` | accumulation-order hazards: `partial_cmp` (NaN makes the order partial), float `.sum::<fN>()` turbofish, `sort_unstable` near float keys |
+//! | **P1** | `coordinator`, `engine` (non-test code) | `.unwrap()` / `.expect()` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` — the serving path returns typed `EngineError`/`JobError` |
+//! | **C1** | cross-file | a kernel registered in `Registry::with_default_kernels` that the `prop_engine` all-kernels suite or the README Backends table doesn't cover |
+//! | **A0** | everywhere | allowlist hygiene: unused or unjustified `lint: allow` annotations |
+//!
+//! A genuinely-unreachable panic site is annotated in place — a comment
+//! on the offending line or the line above, reading `lint: allow` with
+//! the rule id in parentheses, then a dash and the justification (see the
+//! README "Correctness tooling" section for a literal example). The
+//! justification is mandatory and the annotation must keep matching a
+//! finding — otherwise rule **A0** reports the annotation itself, so the
+//! allowlist can never silently rot.
+//!
+//! The static pass is paired with a runtime layer: the core formats expose
+//! `validate_invariants()` (monotone index pointers, strictly-sorted
+//! in-bounds indices, nnz consistency), asserted at engine boundaries via
+//! [`crate::formats::strict_check`] under the `strict-invariants` feature
+//! (CI runs the full suite with it on).
+
+pub mod consistency;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use report::{Finding, LintReport};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Run the full lint over a crate rooted at `crate_root` (the directory
+/// holding `Cargo.toml` and `src/`): every per-file rule over `src/**/*.rs`
+/// plus the cross-file consistency checks. I/O problems surface as `IO`
+/// findings rather than panics, so the lint itself honors rule P1's
+/// spirit.
+pub fn run_repo_lint(crate_root: &Path) -> LintReport {
+    let src_root = crate_root.join("src");
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut report = LintReport::default();
+    collect_rs_files(&src_root, &mut files, &mut report);
+    files.sort();
+
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                report.findings.push(Finding {
+                    rule: "IO",
+                    path: format!("src/{rel}"),
+                    line: 0,
+                    detail: format!("unreadable source file: {e}"),
+                });
+                continue;
+            }
+        };
+        let scanned = scan::scan_source(&rel, &src);
+        report.files_scanned += 1;
+        report.lines_scanned += scanned.code.len();
+        let (findings, used) = rules::check_file(&scanned);
+        report.findings.extend(findings);
+        report.allows_used += used;
+    }
+
+    // Cross-file consistency: a missing input is itself a finding (the
+    // checks would silently weaken if the files moved).
+    let read = |rel: &str, report: &mut LintReport| -> String {
+        let path = crate_root.join(rel);
+        match fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                report.findings.push(Finding {
+                    rule: "IO",
+                    path: rel.to_string(),
+                    line: 0,
+                    detail: format!("consistency input unreadable: {e}"),
+                });
+                String::new()
+            }
+        }
+    };
+    let kernel_src = read("src/engine/kernel.rs", &mut report);
+    let registry_src = read("src/engine/registry.rs", &mut report);
+    let prop_engine_src = read("tests/prop_engine.rs", &mut report);
+    let readme_src = read("../README.md", &mut report);
+    let (findings, checks) = consistency::check(&consistency::ConsistencyInput {
+        kernel_src: &kernel_src,
+        registry_src: &registry_src,
+        prop_engine_src: &prop_engine_src,
+        readme_src: &readme_src,
+    });
+    report.findings.extend(findings);
+    report.consistency_checks = checks;
+
+    report
+        .findings
+        .sort_by(|a, b| (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule)));
+    report
+}
+
+/// Depth-first collection of `.rs` files; unreadable directories surface
+/// as `IO` findings.
+fn collect_rs_files(dir: &Path, files: &mut Vec<PathBuf>, report: &mut LintReport) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            report.findings.push(Finding {
+                rule: "IO",
+                path: dir.to_string_lossy().into_owned(),
+                line: 0,
+                detail: format!("unreadable directory: {e}"),
+            });
+            return;
+        }
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, files, report);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+}

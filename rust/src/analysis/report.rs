@@ -1,0 +1,109 @@
+//! Lint findings and the aggregate report `cargo test --test repo_lint`
+//! prints on failure.
+
+use std::fmt;
+
+/// One rule violation at one location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id: `D1`, `D2`, `P1`, `C1`, `A0`, or `IO`.
+    pub rule: &'static str,
+    /// Path relative to the crate (e.g. `src/engine/registry.rs`), or a
+    /// logical location for cross-file findings.
+    pub path: String,
+    /// 1-indexed line, or 0 for findings without a line anchor.
+    pub line: usize,
+    /// What fired and why it matters.
+    pub detail: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(w, "[{}] {} — {}", self.rule, self.path, self.detail)
+        } else {
+            write!(
+                w,
+                "[{}] {}:{} — {}",
+                self.rule, self.path, self.line, self.detail
+            )
+        }
+    }
+}
+
+/// The aggregate result of one lint run over the crate.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Every surviving finding, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Source files scanned under `src/`.
+    pub files_scanned: usize,
+    /// Total lines scanned.
+    pub lines_scanned: usize,
+    /// `lint: allow(...)` annotations that suppressed a finding.
+    pub allows_used: usize,
+    /// Individual cross-file consistency assertions performed (C1).
+    pub consistency_checks: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            w,
+            "detlint: {} finding(s) over {} files / {} lines \
+             ({} allow(s) honored, {} consistency checks)",
+            self.findings.len(),
+            self.files_scanned,
+            self.lines_scanned,
+            self.allows_used,
+            self.consistency_checks,
+        )?;
+        for f in &self.findings {
+            writeln!(w, "  {f}")?;
+        }
+        if !self.findings.is_empty() {
+            writeln!(
+                w,
+                "  fix the code, or annotate a genuinely-unreachable site with\n  \
+                 `// lint: allow(<rule>) — <why>` (see README \"Correctness tooling\")"
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_rule_location_and_detail() {
+        let f = Finding {
+            rule: "P1",
+            path: "src/engine/x.rs".into(),
+            line: 42,
+            detail: "`.unwrap()` in non-test engine code".into(),
+        };
+        let s = f.to_string();
+        assert!(s.contains("[P1]"));
+        assert!(s.contains("src/engine/x.rs:42"));
+        let report = LintReport {
+            findings: vec![f],
+            files_scanned: 3,
+            lines_scanned: 100,
+            allows_used: 1,
+            consistency_checks: 7,
+        };
+        assert!(!report.is_clean());
+        let text = report.to_string();
+        assert!(text.contains("1 finding(s)"));
+        assert!(text.contains("lint: allow"));
+        assert!(LintReport::default().is_clean());
+    }
+}

@@ -1,0 +1,388 @@
+//! The per-file lint rules enforcing the crate's determinism and
+//! panic-safety contracts (see the module docs in [`super`] for the rule
+//! catalogue and scopes).
+//!
+//! Matching is line-oriented over the scanner's blanked code view
+//! ([`super::scan::SourceFile::code`]), so text inside comments and string
+//! literals never fires a rule — including the pattern strings in this
+//! very file.
+
+use super::report::Finding;
+use super::scan::SourceFile;
+
+/// Modules where iteration order feeds numeric results or serving
+/// decisions — rule **D1** bans unordered hash collections here outright
+/// (test code included: a test asserting on hash order is still flaky).
+const D1_SCOPE: &[&str] = &["spmm", "engine", "formats", "coordinator"];
+
+/// Kernel modules where **D2** looks for accumulation-order hazards.
+const D2_SCOPE: &[&str] = &["spmm", "engine"];
+
+/// Serving-path modules where **P1** audits the non-test panic surface.
+const P1_SCOPE: &[&str] = &["coordinator", "engine"];
+
+/// Identifiers D1 rejects: the unordered-hash surface of `std`.
+const D1_IDENTS: &[&str] = &["HashMap", "HashSet", "RandomState", "hash_map", "hash_set"];
+
+/// Methods P1 rejects in non-test code (typed errors instead).
+const P1_METHODS: &[&str] = &["unwrap", "expect"];
+
+/// Macros P1 rejects in non-test code.
+const P1_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Rule ids an allow annotation may name. (`C1` findings are cross-file
+/// and have no single line to annotate, so they cannot be allowed away;
+/// `A0` findings are about the annotations themselves.)
+const ALLOWABLE: &[&str] = &["D1", "D2", "P1"];
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `line` contain `word` as a standalone identifier (not as a
+/// substring of a longer identifier)?
+pub fn has_ident(line: &str, word: &str) -> bool {
+    ident_positions(line, word).next().is_some()
+}
+
+/// Byte offsets of standalone-identifier occurrences of `word` in `line`.
+fn ident_positions<'a>(line: &'a str, word: &'a str) -> impl Iterator<Item = usize> + 'a {
+    let bytes = line.as_bytes();
+    line.match_indices(word).filter_map(move |(i, _)| {
+        let before_ok = i == 0 || !is_ident_char(bytes[i - 1]);
+        let after = i + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_char(bytes[after]);
+        (before_ok && after_ok).then_some(i)
+    })
+}
+
+/// Does `line` contain a `.name(` method call (whitespace tolerated around
+/// the dot and before the paren)?
+fn method_call(line: &str, name: &str) -> bool {
+    let bytes = line.as_bytes();
+    ident_positions(line, name).any(|i| {
+        let before_dot = bytes[..i]
+            .iter()
+            .rev()
+            .find(|b| !b.is_ascii_whitespace())
+            == Some(&b'.');
+        let after_paren = bytes[i + name.len()..]
+            .iter()
+            .find(|b| !b.is_ascii_whitespace())
+            == Some(&b'(');
+        before_dot && after_paren
+    })
+}
+
+/// Does `line` invoke the macro `name!`?
+fn macro_call(line: &str, name: &str) -> bool {
+    let bytes = line.as_bytes();
+    ident_positions(line, name).any(|i| {
+        bytes[i + name.len()..]
+            .iter()
+            .find(|b| !b.is_ascii_whitespace())
+            == Some(&b'!')
+    })
+}
+
+/// Does `line` sum floats via turbofish (`.sum::<f32>()` / `.sum::<f64>()`)?
+fn float_sum_turbofish(line: &str) -> bool {
+    ident_positions(line, "sum").any(|i| {
+        let rest: String = line[i + 3..]
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .take(8)
+            .collect();
+        rest.starts_with("::<f32>") || rest.starts_with("::<f64>")
+    })
+}
+
+/// Run every per-file rule over one scanned file. Returns the surviving
+/// findings plus the number of allow annotations that were honored.
+pub fn check_file(file: &SourceFile) -> (Vec<Finding>, usize) {
+    let top = file.top_module();
+    let d1 = D1_SCOPE.contains(&top);
+    let d2 = D2_SCOPE.contains(&top);
+    let p1 = P1_SCOPE.contains(&top);
+    let display_path = format!("src/{}", file.rel_path);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for (idx, line) in file.code.iter().enumerate() {
+        let lineno = idx + 1;
+        if d1 {
+            for &w in D1_IDENTS {
+                if has_ident(line, w) {
+                    raw.push(Finding {
+                        rule: "D1",
+                        path: display_path.clone(),
+                        line: lineno,
+                        detail: format!(
+                            "`{w}` in determinism-critical module `{top}` — iteration \
+                             order is unspecified; use BTreeMap/BTreeSet or index vectors"
+                        ),
+                    });
+                }
+            }
+        }
+        if d2 {
+            if has_ident(line, "partial_cmp") {
+                raw.push(Finding {
+                    rule: "D2",
+                    path: display_path.clone(),
+                    line: lineno,
+                    detail: "`partial_cmp` in a kernel module — NaN makes the order \
+                             partial (and `.unwrap()` on it panics); use `f64::total_cmp` \
+                             with explicit NaN policy"
+                        .into(),
+                });
+            }
+            if float_sum_turbofish(line) {
+                raw.push(Finding {
+                    rule: "D2",
+                    path: display_path.clone(),
+                    line: lineno,
+                    detail: "float `.sum::<fN>()` in a kernel module — iterator sum \
+                             order is an accumulation-order hazard; fold in an explicit, \
+                             documented order"
+                        .into(),
+                });
+            }
+            if has_ident(line, "sort_unstable")
+                && (line.contains("f32") || line.contains("f64"))
+            {
+                raw.push(Finding {
+                    rule: "D2",
+                    path: display_path.clone(),
+                    line: lineno,
+                    detail: "`sort_unstable` near float keys in a kernel module — \
+                             unstable order of equal keys reorders reductions; sort on \
+                             integer keys or use a total order"
+                        .into(),
+                });
+            }
+        }
+        if p1 && !file.in_test[idx] {
+            for &m in P1_METHODS {
+                if method_call(line, m) {
+                    raw.push(Finding {
+                        rule: "P1",
+                        path: display_path.clone(),
+                        line: lineno,
+                        detail: format!(
+                            "`.{m}(…)` in non-test `{top}` code — return a typed \
+                             EngineError/JobError, or justify with \
+                             `// lint: allow(P1) — <why>`"
+                        ),
+                    });
+                }
+            }
+            for &m in P1_MACROS {
+                if macro_call(line, m) {
+                    raw.push(Finding {
+                        rule: "P1",
+                        path: display_path.clone(),
+                        line: lineno,
+                        detail: format!(
+                            "`{m}!` in non-test `{top}` code — return a typed error, \
+                             or justify with `// lint: allow(P1) — <why>`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Apply the allowlist: an annotation suppresses findings of its named
+    // rules on its own line and the line below, but only when justified
+    // (non-empty reason). Unused or unjustified annotations are findings
+    // themselves (A0), so the allowlist can never silently rot.
+    let mut used = vec![false; file.allows.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in raw {
+        let mut suppressed = false;
+        for (ai, allow) in file.allows.iter().enumerate() {
+            let covers = allow.line == f.line || allow.line + 1 == f.line;
+            if covers && !allow.reason.is_empty() && allow.rules.iter().any(|r| r == f.rule) {
+                suppressed = true;
+                used[ai] = true;
+            }
+        }
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    let mut allows_used = 0usize;
+    for (ai, allow) in file.allows.iter().enumerate() {
+        if allow.reason.is_empty() {
+            findings.push(Finding {
+                rule: "A0",
+                path: display_path.clone(),
+                line: allow.line,
+                detail: format!(
+                    "allow({}) without a justification — write \
+                     `// lint: allow(<rule>) — <why>`",
+                    allow.rules.join(",")
+                ),
+            });
+        } else if let Some(bad) = allow.rules.iter().find(|r| !ALLOWABLE.contains(&r.as_str()))
+        {
+            findings.push(Finding {
+                rule: "A0",
+                path: display_path.clone(),
+                line: allow.line,
+                detail: format!("allow({bad}) names an unknown or non-allowable rule"),
+            });
+        } else if !used[ai] {
+            findings.push(Finding {
+                rule: "A0",
+                path: display_path.clone(),
+                line: allow.line,
+                detail: format!(
+                    "unused allow({}) — no finding on this or the next line; delete it",
+                    allow.rules.join(",")
+                ),
+            });
+        } else {
+            allows_used += 1;
+        }
+    }
+    (findings, allows_used)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scan::scan_source;
+    use super::*;
+
+    fn run(rel_path: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan_source(rel_path, src)).0
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // --- D1: one positive + one negative fixture ---
+
+    #[test]
+    fn d1_fires_on_hash_collections_in_scope() {
+        let found = run(
+            "engine/fake.rs",
+            "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, f32> = HashMap::new(); }\n",
+        );
+        assert!(rules_of(&found).contains(&"D1"), "{found:?}");
+        // scoped: the same text outside a determinism-critical module is fine
+        assert!(run("eval/fake.rs", "use std::collections::HashMap;\n").is_empty());
+    }
+
+    #[test]
+    fn d1_ignores_ordered_collections_and_comment_mentions() {
+        let clean = run(
+            "formats/fake.rs",
+            "use std::collections::BTreeMap; // HashMap considered and rejected\nfn f() { let m: BTreeMap<u32, f32> = BTreeMap::new(); }\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    // --- D2: one positive + one negative fixture ---
+
+    #[test]
+    fn d2_fires_on_partial_cmp_and_float_sum() {
+        let found = run(
+            "spmm/fake.rs",
+            "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+        let found = run(
+            "spmm/fake.rs",
+            "fn f(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+        let found = run(
+            "engine/fake.rs",
+            "fn f(xs: &mut [(f64, u32)]) { xs.sort_unstable(); }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+    }
+
+    #[test]
+    fn d2_accepts_total_cmp_and_integer_sums() {
+        let clean = run(
+            "spmm/fake.rs",
+            "fn f(xs: &mut [f64]) -> usize { xs.sort_by(f64::total_cmp); \
+             [1usize, 2].iter().sum::<usize>() }\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    // --- P1: one positive + one negative fixture ---
+
+    #[test]
+    fn p1_fires_on_unwrap_expect_and_panic_macros_outside_tests() {
+        let found = run(
+            "coordinator/fake.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        assert!(rules_of(&found).contains(&"P1"), "{found:?}");
+        let found = run("engine/fake.rs", "fn f() { panic!(\"boom\"); }\n");
+        assert!(rules_of(&found).contains(&"P1"), "{found:?}");
+        // scoped: spmm algorithm bodies are not part of the serving panic audit
+        assert!(run("spmm/fake.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n").is_empty());
+    }
+
+    #[test]
+    fn p1_skips_test_modules_and_non_panicking_lookalikes() {
+        let clean = run(
+            "coordinator/fake.rs",
+            concat!(
+                "fn f(x: Option<u32>) -> u32 { x.unwrap_or_default() }\n",
+                "#[cfg(test)]\n",
+                "mod tests {\n",
+                "    #[test]\n",
+                "    fn t() { Some(1u32).unwrap(); panic!(\"fine in tests\"); }\n",
+                "}\n",
+            ),
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    // --- A0 + suppression: positive + negative fixtures ---
+
+    #[test]
+    fn justified_allow_suppresses_and_counts_as_used() {
+        let (found, used) = check_file(&scan_source(
+            "coordinator/fake.rs",
+            "// lint: allow(P1) — startup spawn failure is unrecoverable\nlet t = b.spawn(f).expect(\"spawn\");\n",
+        ));
+        assert!(found.is_empty(), "{found:?}");
+        assert_eq!(used, 1);
+    }
+
+    #[test]
+    fn a0_fires_on_unjustified_unused_or_unknown_allows() {
+        // no reason: the finding survives AND the annotation is reported
+        let found = run(
+            "coordinator/fake.rs",
+            "// lint: allow(P1)\nlet t = b.spawn(f).expect(\"spawn\");\n",
+        );
+        assert_eq!(rules_of(&found), vec!["P1", "A0"], "{found:?}");
+        // nothing to suppress: unused annotation is reported
+        let found = run(
+            "coordinator/fake.rs",
+            "// lint: allow(P1) — stale justification\nlet x = 1;\n",
+        );
+        assert_eq!(rules_of(&found), vec!["A0"], "{found:?}");
+        // unknown rule id
+        let found = run("engine/fake.rs", "// lint: allow(Z9) — nonsense\n");
+        assert_eq!(rules_of(&found), vec!["A0"], "{found:?}");
+    }
+
+    #[test]
+    fn matching_is_identifier_exact() {
+        // `HashMapLike` / `my_unwrap` must not fire
+        assert!(run("engine/fake.rs", "struct HashMapLike;\n").is_empty());
+        assert!(run("engine/fake.rs", "fn f() { my_unwrap(); }\n").is_empty());
+        // field access without a call is not a method call
+        assert!(run("engine/fake.rs", "let u = s.unwrap;\n").is_empty());
+    }
+}

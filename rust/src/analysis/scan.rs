@@ -1,0 +1,415 @@
+//! A lightweight Rust source scanner for the repo lint (`detlint`).
+//!
+//! This is deliberately *not* a parser: the rules in [`super::rules`] only
+//! need to know, per line, (a) what the code says once comments, string
+//! literals, and char literals are blanked out, (b) whether the line is
+//! inside a `#[cfg(test)] mod` region, and (c) whether a justifying
+//! allow annotation covers it (see [`AllowEntry`]). A character-level
+//! state machine provides exactly that, with no dependencies — the same
+//! trade rust-lang's `tidy` makes.
+//!
+//! Handled Rust lexical structure: line comments, nested block comments,
+//! string literals (with escapes), raw strings (`r"…"`, `r#"…"#`, any hash
+//! depth), byte strings, char/byte-char literals, and the
+//! lifetime-vs-char-literal ambiguity (`'a` in `&'a str` is a lifetime;
+//! `'a'` is a literal).
+
+/// One allow annotation parsed out of a comment: `lint: allow` followed
+/// by a parenthesized rule list, a dash separator, and the justification.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// 1-indexed line the annotation sits on.
+    pub line: usize,
+    /// Rule ids the annotation names, e.g. `["P1"]`.
+    pub rules: Vec<String>,
+    /// Justification text after the rule list. Empty = unjustified (the
+    /// lint reports it instead of honoring it).
+    pub reason: String,
+}
+
+/// A scanned source file, ready for the rule engine.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path relative to `src/`, `/`-separated (e.g. `engine/registry.rs`).
+    pub rel_path: String,
+    /// Per-line code with comments/strings/chars blanked to spaces. Line
+    /// structure (count and per-line column positions) is preserved.
+    pub code: Vec<String>,
+    /// Per-line flag: inside a `#[cfg(test)] mod … { … }` region.
+    pub in_test: Vec<bool>,
+    /// Every allow annotation in the file, in line order.
+    pub allows: Vec<AllowEntry>,
+}
+
+impl SourceFile {
+    /// Top-level module directory of this file (`engine` for
+    /// `engine/registry.rs`), or `""` for files directly under `src/`
+    /// (`lib.rs`, `main.rs`) — the scoping key the rules match on.
+    pub fn top_module(&self) -> &str {
+        match self.rel_path.split_once('/') {
+            Some((top, _)) => top,
+            None => "",
+        }
+    }
+}
+
+/// Scan one source file: blank non-code text, mark test regions, collect
+/// allow annotations.
+pub fn scan_source(rel_path: &str, src: &str) -> SourceFile {
+    let (code_text, comment_text) = blank_non_code(src);
+    let code: Vec<String> = code_text.split('\n').map(str::to_string).collect();
+    let in_test = test_regions(&code);
+    let mut allows = Vec::new();
+    for (idx, comment_line) in comment_text.split('\n').enumerate() {
+        if let Some(entry) = parse_allow(comment_line, idx + 1) {
+            allows.push(entry);
+        }
+    }
+    SourceFile {
+        rel_path: rel_path.to_string(),
+        code,
+        in_test,
+        allows,
+    }
+}
+
+/// Lexer states for [`blank_non_code`].
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    /// Block comment with its current nesting depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string with the hash count of its delimiter.
+    RawStr(usize),
+}
+
+/// Replace comments, string/char literals with spaces in the first returned
+/// string (the *code* view) and everything that is not comment text with
+/// spaces in the second (the *comment* view). Newlines are preserved in
+/// both, so line/column positions survive.
+fn blank_non_code(src: &str) -> (String, String) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(src.len());
+    let mut comment = String::with_capacity(src.len());
+    let mut state = State::Code;
+    let mut i = 0usize;
+    // push one char to both views, keeping newlines in sync
+    let push = |code: &mut String, comment: &mut String, c: char, keep_code: bool, keep_comment: bool| {
+        if c == '\n' {
+            code.push('\n');
+            comment.push('\n');
+            return;
+        }
+        code.push(if keep_code { c } else { ' ' });
+        comment.push(if keep_comment { c } else { ' ' });
+    };
+    while i < n {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match state {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    push(&mut code, &mut comment, c, false, true);
+                    push(&mut code, &mut comment, '/', false, true);
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    push(&mut code, &mut comment, c, false, false);
+                    push(&mut code, &mut comment, '*', false, false);
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    push(&mut code, &mut comment, c, false, false);
+                    i += 1;
+                } else if c == 'r' && matches!(next, Some('"') | Some('#')) {
+                    // possible raw string r"…" / r#"…"# (any hash depth)
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        state = State::RawStr(hashes);
+                        for k in i..=j {
+                            push(&mut code, &mut comment, chars[k], false, false);
+                        }
+                        i = j + 1;
+                    } else {
+                        // `r` was an ordinary identifier char (e.g. `r#raw` idents
+                        // don't appear in this codebase; treat as code)
+                        push(&mut code, &mut comment, c, true, false);
+                        i += 1;
+                    }
+                } else if c == 'b' && next == Some('"') {
+                    state = State::Str;
+                    push(&mut code, &mut comment, c, false, false);
+                    push(&mut code, &mut comment, '"', false, false);
+                    i += 2;
+                } else if c == '\'' {
+                    // lifetime (`'a`) vs char literal (`'a'`, `'\n'`)
+                    let c2 = chars.get(i + 1).copied();
+                    let c3 = chars.get(i + 2).copied();
+                    let lifetime = matches!(c2, Some(x) if x.is_alphabetic() || x == '_')
+                        && c3 != Some('\'');
+                    if lifetime {
+                        push(&mut code, &mut comment, c, true, false);
+                        i += 1;
+                    } else {
+                        // char literal: consume through the closing quote
+                        let mut j = i + 1;
+                        if chars.get(j) == Some(&'\\') {
+                            j += 2;
+                            while j < n && chars[j] != '\'' {
+                                j += 1;
+                            }
+                        } else if j < n {
+                            j += 1;
+                        }
+                        let end = (j + 1).min(n);
+                        for k in i..end {
+                            push(&mut code, &mut comment, chars[k], false, false);
+                        }
+                        i = end;
+                    }
+                } else {
+                    push(&mut code, &mut comment, c, true, false);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    state = State::Code;
+                }
+                push(&mut code, &mut comment, c, false, true);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    push(&mut code, &mut comment, c, false, true);
+                    push(&mut code, &mut comment, '*', false, true);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    push(&mut code, &mut comment, c, false, true);
+                    push(&mut code, &mut comment, '/', false, true);
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                } else {
+                    push(&mut code, &mut comment, c, false, true);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    push(&mut code, &mut comment, c, false, false);
+                    if let Some(nx) = next {
+                        push(&mut code, &mut comment, nx, false, false);
+                    }
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = State::Code;
+                    }
+                    push(&mut code, &mut comment, c, false, false);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && chars[j] == '#' && h < hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        state = State::Code;
+                        for k in i..j {
+                            push(&mut code, &mut comment, chars[k], false, false);
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                push(&mut code, &mut comment, c, false, false);
+                i += 1;
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// Mark every line inside a `#[cfg(test)] mod … { … }` region, tracked by
+/// brace depth over the blanked code. A `#[cfg(test)]` attribute that is
+/// *not* followed by a `mod` before the next item boundary (`;`) does not
+/// open a region (e.g. a cfg-gated `use`).
+fn test_regions(code: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code.len()];
+    let mut depth = 0i64;
+    let mut pending = false;
+    let mut saw_mod = false;
+    let mut test_depth: Option<i64> = None;
+    for (ln, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+            saw_mod = false;
+        }
+        if pending && super::rules::has_ident(line, "mod") {
+            saw_mod = true;
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending && saw_mod && test_depth.is_none() {
+                        test_depth = Some(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth -= 1;
+                }
+                ';' => {
+                    if pending && !saw_mod {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if test_depth.is_some() {
+            in_test[ln] = true;
+        }
+    }
+    in_test
+}
+
+/// Parse an allow annotation out of one line of comment text. The
+/// separator between the rule list and the reason may be an em dash,
+/// `--`, or `-`; the reason may be empty (which the lint then reports as
+/// unjustified). The marker must open the comment (only whitespace and
+/// comment sigils before it), so documentation *describing* the
+/// annotation syntax mid-sentence never registers as one.
+fn parse_allow(comment_line: &str, lineno: usize) -> Option<AllowEntry> {
+    const MARKER: &str = "lint: allow(";
+    let pos = comment_line.find(MARKER)?;
+    if !comment_line[..pos]
+        .chars()
+        .all(|c| c.is_whitespace() || matches!(c, '/' | '!' | '*'))
+    {
+        return None;
+    }
+    let rest = &comment_line[pos + MARKER.len()..];
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let reason = rest[close + 1..]
+        .trim_start_matches(|c: char| c.is_whitespace() || c == '—' || c == '–' || c == '-')
+        .trim()
+        .to_string();
+    Some(AllowEntry {
+        line: lineno,
+        rules,
+        reason,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> SourceFile {
+        scan_source("engine/fake.rs", src)
+    }
+
+    #[test]
+    fn strings_comments_and_chars_are_blanked() {
+        let f = scan(concat!(
+            "let s = \"HashMap in a string\"; // HashMap in a comment\n",
+            "let c = 'x'; let l: &'a str = s; /* HashMap\nstill comment */\n",
+            "let r = r#\"HashMap raw\"#;\n",
+            "let real: usize = 1;\n",
+        ));
+        assert!(!f.code.iter().any(|l| l.contains("HashMap")));
+        // code outside literals survives blanking
+        assert!(f.code[3].contains("let real: usize = 1;"));
+        // the lifetime tick did not open a char literal
+        assert!(f.code[1].contains("str"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let f = scan("/* outer /* inner */ still-comment */ let x = 1;\n");
+        assert!(!f.code[0].contains("still-comment"));
+        assert!(f.code[0].contains("let x = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_the_module_body_only() {
+        let f = scan(concat!(
+            "fn live() { x.unwrap(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { x.unwrap(); }\n",
+            "}\n",
+            "fn live2() {}\n",
+        ));
+        assert_eq!(f.in_test, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_on_a_non_mod_item_does_not_open_a_region() {
+        let f = scan(concat!(
+            "#[cfg(test)]\n",
+            "use std::collections::BTreeMap;\n",
+            "fn live() { let b: BTreeMap<u32, u32> = BTreeMap::new(); }\n",
+        ));
+        assert!(f.in_test.iter().all(|&t| !t));
+    }
+
+    #[test]
+    fn allow_annotations_parse_rules_and_reason() {
+        let f = scan(concat!(
+            "// lint: allow(P1) — startup failure is unrecoverable\n",
+            "x.expect(\"boom\");\n",
+            "// lint: allow(D1, D2)\n",
+        ));
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].line, 1);
+        assert_eq!(f.allows[0].rules, vec!["P1".to_string()]);
+        assert_eq!(f.allows[0].reason, "startup failure is unrecoverable");
+        assert_eq!(
+            f.allows[1].rules,
+            vec!["D1".to_string(), "D2".to_string()]
+        );
+        assert!(f.allows[1].reason.is_empty());
+    }
+
+    #[test]
+    fn top_module_is_the_first_path_component() {
+        assert_eq!(scan_source("engine/registry.rs", "").top_module(), "engine");
+        assert_eq!(scan_source("lib.rs", "").top_module(), "");
+        assert_eq!(
+            scan_source("coordinator/server.rs", "").top_module(),
+            "coordinator"
+        );
+    }
+}

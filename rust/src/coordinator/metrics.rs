@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use crate::engine::Algorithm;
 use crate::formats::traits::FormatKind;
+use crate::util::lock_unpoisoned;
 
 /// Power-of-two microsecond buckets: [<1us, <2us, <4us, ... , <2^30us, rest]
 const BUCKETS: usize = 32;
@@ -90,21 +91,22 @@ pub struct KernelLog {
 
 impl KernelLog {
     fn record(&self, obs: KernelObservation) {
-        if let Ok(mut inner) = self.inner.lock() {
-            if inner.entries.len() < KERNEL_LOG_CAP {
-                inner.entries.push(obs);
-            } else {
-                let cursor = inner.cursor;
-                inner.entries[cursor] = obs;
-                inner.cursor = (cursor + 1) % KERNEL_LOG_CAP;
-            }
+        // the ring is structurally valid after any holder's panic (single
+        // push or slot overwrite), so recover rather than drop samples
+        let mut inner = lock_unpoisoned(&self.inner);
+        if inner.entries.len() < KERNEL_LOG_CAP {
+            inner.entries.push(obs);
+        } else {
+            let cursor = inner.cursor;
+            inner.entries[cursor] = obs;
+            inner.cursor = (cursor + 1) % KERNEL_LOG_CAP;
         }
     }
 
     /// The retained observations (ring order, not chronological once the
     /// cap has wrapped — irrelevant for fitting).
     fn entries(&self) -> Vec<KernelObservation> {
-        self.inner.lock().map(|inner| inner.entries.clone()).unwrap_or_default()
+        lock_unpoisoned(&self.inner).entries.clone()
     }
 }
 

@@ -48,6 +48,7 @@ use crate::engine::{
 use crate::formats::csr::Csr;
 use crate::formats::operand::MatrixOperand;
 use crate::spmm::plan::Geometry;
+use crate::util::lock_unpoisoned;
 
 /// Micro-batch coalescing policy (per worker).
 #[derive(Clone, Copy, Debug)]
@@ -173,6 +174,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("spmm-worker-{wid}"))
                     .spawn(move || worker_loop(wid, cfg, rx, metrics))
+                    // lint: allow(P1) — no worker thread at startup leaves no server to return
                     .expect("spawn worker"),
             );
         }
@@ -207,6 +209,7 @@ impl Server {
         self.client()
             .submit(job)
             .map(|h| h.into_receiver())
+            // lint: allow(P1) — documented legacy contract: panics after shutdown; SpmmClient::submit is the typed path
             .expect("server shut down")
     }
 
@@ -257,20 +260,21 @@ impl Server {
         // drops below -> the waiting JobHandle sees Shutdown) but is not
         // counted in jobs_failed — the invariant is best-effort across
         // that last race window.
-        if let Ok(guard) = rx.lock() {
-            for pass in 0..2 {
-                while let Ok(env) = guard.try_recv() {
-                    if let Envelope::Job(je) = env {
-                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                        let _ = je.reply.send(JobResult {
-                            id: je.job.id,
-                            result: Err(JobError::Shutdown),
-                        });
-                    }
+        // poisoning (a worker panicked holding the queue lock) must not
+        // skip the drain: the Receiver stays valid, so recover the guard
+        let guard = lock_unpoisoned(&rx);
+        for pass in 0..2 {
+            while let Ok(env) = guard.try_recv() {
+                if let Envelope::Job(je) = env {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = je.reply.send(JobResult {
+                        id: je.job.id,
+                        result: Err(JobError::Shutdown),
+                    });
                 }
-                if pass == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                }
+            }
+            if pass == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
             }
         }
     }
@@ -336,10 +340,10 @@ fn worker_loop(
         let mut batch: Vec<JobEnvelope> = Vec::new();
         let mut saw_stop = false;
         {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => return,
-            };
+            // a sibling worker panicking mid-recv poisons this mutex; the
+            // Receiver itself is still sound, so keep serving rather than
+            // silently exiting the pool (see `util::lock_unpoisoned`)
+            let guard = lock_unpoisoned(&rx);
             match guard.recv() {
                 // disconnected + drained: shutdown
                 Err(_) => return,
@@ -486,6 +490,10 @@ fn run_batch(
                 continue;
             }
         };
+        // `strict-invariants` builds validate what ingestion produced
+        // before it reaches any kernel (no-op otherwise)
+        crate::formats::strict_check("server ingest(A)", || a_csr.validate_invariants());
+        crate::formats::strict_check("server ingest(B)", || b_csr.validate_invariants());
         let kernel = match resolve_kernel(registry, cfg.kernel, &env.job, &a_csr, &b_csr) {
             Ok(k) => k,
             Err(e) => {

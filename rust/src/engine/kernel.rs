@@ -369,6 +369,10 @@ pub trait SpmmKernel: Send + Sync {
 
     /// Convenience: prepare + execute in one call.
     fn run(&self, a: &Csr, b: &Csr) -> Result<EngineOutput, EngineError> {
+        // `strict-invariants` builds validate operands where they enter
+        // the engine (no-op otherwise — see `formats::strict_check`)
+        crate::formats::strict_check("SpmmKernel::run(A)", || a.validate_invariants());
+        crate::formats::strict_check("SpmmKernel::run(B)", || b.validate_invariants());
         let prepared = self.prepare(b)?;
         self.execute(a, &prepared)
     }

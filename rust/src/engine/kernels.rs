@@ -245,23 +245,36 @@ impl SpmmKernel for GustavsonFastKernel {
                 scatter(&mut c, lo, &band);
             }
         } else {
-            let results: Vec<(usize, gustavson_fast::BandResult)> = std::thread::scope(|s| {
-                let handles: Vec<_> = bounds
-                    .iter()
-                    .map(|&(lo, hi)| {
-                        s.spawn(move || {
-                            let mut ws = pool.checkout(n);
-                            let band = gustavson_fast::multiply_band(a, lo, hi, src, &mut ws);
-                            pool.give_back(ws);
-                            (lo, band)
+            // every handle is joined inside the scope (a panicked worker
+            // must not escape as a scope re-panic); lost bands surface as
+            // a typed error after the scope closes
+            let joined: Vec<std::thread::Result<(usize, gustavson_fast::BandResult)>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = bounds
+                        .iter()
+                        .map(|&(lo, hi)| {
+                            s.spawn(move || {
+                                let mut ws = pool.checkout(n);
+                                let band =
+                                    gustavson_fast::multiply_band(a, lo, hi, src, &mut ws);
+                                pool.give_back(ws);
+                                (lo, band)
+                            })
                         })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("gustavson band worker panicked"))
-                    .collect()
-            });
+                        .collect();
+                    handles.into_iter().map(|h| h.join()).collect()
+                });
+            let mut results = Vec::with_capacity(joined.len());
+            for r in joined {
+                match r {
+                    Ok(band) => results.push(band),
+                    Err(_) => {
+                        return Err(EngineError::ExecFailed(
+                            "gustavson-fast band worker panicked".into(),
+                        ))
+                    }
+                }
+            }
             // bands cover disjoint row ranges: the merge is a pure scatter,
             // no reduction crosses a band
             for (lo, band) in &results {

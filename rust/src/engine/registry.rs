@@ -142,11 +142,22 @@ impl Registry {
                 .collect();
             candidates.extend(negotiated);
         }
-        let best = candidates.into_iter().min_by(|x, y| {
-            let cx = x.cost_hint(a, b).total() + x.ingest_cost(b, b_native);
-            let cy = y.cost_hint(a, b).total() + y.ingest_cost(b, b_native);
-            cx.total_cmp(&cy)
-        });
+        // NaN-safe total-ordered scoring: a kernel whose hint arithmetic
+        // produces NaN must never *win* selection (total_cmp orders -NaN
+        // below every real number, so a raw min_by would hand it the
+        // whole registry); clamping NaN to +inf demotes it instead,
+        // keeping the comparison total and deterministic
+        let score = |k: &Arc<dyn SpmmKernel>| -> f64 {
+            let c = k.cost_hint(a, b).total() + k.ingest_cost(b, b_native);
+            if c.is_nan() {
+                f64::INFINITY
+            } else {
+                c
+            }
+        };
+        let best = candidates
+            .into_iter()
+            .min_by(|x, y| score(x).total_cmp(&score(y)));
         best.or_else(|| self.resolve_algorithm(Algorithm::Dense))
     }
 
@@ -410,6 +421,46 @@ mod tests {
         r.shard_all(crate::engine::ShardConfig { shards: 2, block: 16 });
         let after = r.resolve(FormatKind::Csr, Algorithm::Gustavson).unwrap();
         assert!(Arc::ptr_eq(&before, &after), "shard_all re-wrapped a sharded kernel");
+    }
+
+    #[test]
+    fn selection_is_nan_safe() {
+        use super::super::kernel::{CostHint, EngineOutput, PreparedB};
+        // total_cmp orders -NaN below every real number: without the score
+        // clamp, one kernel returning NaN from its hint arithmetic could
+        // win selection for the whole registry
+        struct NanCostKernel;
+        impl SpmmKernel for NanCostKernel {
+            fn algorithm(&self) -> Algorithm {
+                Algorithm::Gustavson
+            }
+            fn format(&self) -> FormatKind {
+                FormatKind::Jad
+            }
+            fn name(&self) -> &'static str {
+                "nan-cost"
+            }
+            fn cost_hint(&self, _a: &Csr, _b: &Csr) -> CostHint {
+                CostHint { flops: -f64::NAN, prepare_words: 0.0 }
+            }
+            fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+                GustavsonKernel.prepare(b)
+            }
+            fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+                GustavsonKernel.execute(a, b)
+            }
+        }
+        let a = uniform(24, 32, 0.2, 41);
+        let b = uniform(32, 24, 0.2, 42);
+        let mut r = default_registry();
+        r.register(Arc::new(NanCostKernel));
+        let k = r.select(&a, &b).unwrap();
+        assert_ne!(k.name(), "nan-cost", "a NaN-scored kernel won selection");
+        // with no finite-cost competition, selection still returns it
+        // (demoted, not excluded) rather than panicking or yielding None
+        let mut only = Registry::new();
+        only.register(Arc::new(NanCostKernel));
+        assert_eq!(only.select(&a, &b).unwrap().name(), "nan-cost");
     }
 
     #[test]

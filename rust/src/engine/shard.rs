@@ -209,6 +209,12 @@ pub fn execute(
             b: (b_rows, b_cols),
         });
     }
+    // `strict-invariants` builds validate operands entering the shard
+    // executor (no-op otherwise — see `formats::strict_check`)
+    crate::formats::strict_check("shard::execute(A)", || a.validate_invariants());
+    if let Some(b) = b {
+        crate::formats::strict_check("shard::execute(B)", || b.validate_invariants());
+    }
     let b_struct: Option<&Csr> = match (b, prepared) {
         (Some(b), _) => Some(b),
         (None, PreparedB::Csr(m)) => Some(m.as_ref()),

@@ -122,8 +122,11 @@ pub fn execute_blocked(
     let weights: Vec<usize> = tasks.iter().map(|(_, p)| p.len()).collect();
     let bounds = partition_by_weight(&weights, workers.max(1));
 
-    // each worker owns one scratch buffer covering all of its output tiles
-    let buffers: Vec<Vec<f32>> = std::thread::scope(|s| {
+    // each worker owns one scratch buffer covering all of its output
+    // tiles; every handle is joined inside the scope (a panicked worker
+    // must not escape as a scope re-panic) and lost workers surface as a
+    // typed error after the scope closes
+    let joined: Vec<std::thread::Result<Vec<f32>>> = std::thread::scope(|s| {
         let handles: Vec<_> = bounds
             .iter()
             .map(|&(lo, hi)| {
@@ -140,11 +143,15 @@ pub fn execute_blocked(
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("tile worker panicked"))
-            .collect()
+        handles.into_iter().map(|h| h.join()).collect()
     });
+    let mut buffers = Vec::with_capacity(joined.len());
+    for r in joined {
+        match r {
+            Ok(buf) => buffers.push(buf),
+            Err(_) => return Err(EngineError::ExecFailed("tile worker panicked".into())),
+        }
+    }
 
     // scatter: every output tile is written exactly once (crop ragged edges)
     let mut c = Dense::zeros(m, n);

@@ -126,6 +126,34 @@ impl Coo {
     pub fn col_region(&self) -> Region {
         self.r_col
     }
+
+    /// Structural invariants of the entry list: strictly row-major order
+    /// (which also implies unique coordinates) and in-bounds coordinates.
+    /// [`Coo::new`] establishes both, but `entries` is `pub`, so
+    /// corruption can enter after construction.
+    pub fn validate_invariants(&self) -> Result<(), super::error::FormatError> {
+        let err = |detail: String| super::error::FormatError::CorruptStructure {
+            format: "coo",
+            detail,
+        };
+        for w in self.entries.windows(2) {
+            if (w[0].0, w[0].1) >= (w[1].0, w[1].1) {
+                return Err(err(format!(
+                    "entries not strictly row-major at ({}, {}) then ({}, {})",
+                    w[0].0, w[0].1, w[1].0, w[1].1
+                )));
+            }
+        }
+        for &(r, c, _) in &self.entries {
+            if r as usize >= self.rows || c as usize >= self.cols {
+                return Err(err(format!(
+                    "entry ({r}, {c}) out of bounds ({} × {})",
+                    self.rows, self.cols
+                )));
+            }
+        }
+        Ok(())
+    }
 }
 
 impl SparseMatrix for Coo {
@@ -170,6 +198,27 @@ mod tests {
                 (2, 0, 4.0),
             ],
         )
+    }
+
+    #[test]
+    fn validate_invariants_accepts_valid_and_rejects_corruption() {
+        let m = sample();
+        assert_eq!(m.validate_invariants(), Ok(()));
+        // construction sorted the entries; break the order afterwards
+        let mut bad = m.clone();
+        bad.entries.swap(0, 1);
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("row-major")));
+        // duplicate coordinate is also an ordering violation (strict <)
+        let mut bad = m.clone();
+        bad.entries[1] = bad.entries[0];
+        assert!(bad.validate_invariants().is_err());
+        let mut bad = m.clone();
+        bad.entries[4] = (2, 9, 1.0);
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("out of bounds")));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use super::coo::Coo;
 use super::csr::Csr;
+use super::error::FormatError;
 use super::traits::{
     AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
 };
@@ -93,6 +94,71 @@ impl Csc {
         None
     }
 
+    /// Structural invariants of the CCS arrays — the column-major mirror
+    /// of [`Csr::validate_invariants`]: pointer length/endpoints,
+    /// monotonicity, strictly-increasing in-bounds row indices per
+    /// column, index/value agreement.
+    pub fn validate_invariants(&self) -> Result<(), FormatError> {
+        let err = |detail: String| FormatError::CorruptStructure {
+            format: "ccs",
+            detail,
+        };
+        if self.col_ptr.len() != self.cols + 1 {
+            return Err(err(format!(
+                "col_ptr len {} != cols+1 ({})",
+                self.col_ptr.len(),
+                self.cols + 1
+            )));
+        }
+        if self.col_ptr.first() != Some(&0) {
+            return Err(err("col_ptr[0] != 0".into()));
+        }
+        for (j, w) in self.col_ptr.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(err(format!(
+                    "col_ptr not monotone at col {j}: {} > {}",
+                    w[0], w[1]
+                )));
+            }
+        }
+        if self.row_idx.len() != self.vals.len() {
+            return Err(err(format!(
+                "row_idx len {} != vals len {}",
+                self.row_idx.len(),
+                self.vals.len()
+            )));
+        }
+        let last = self.col_ptr.last().copied().unwrap_or(0) as usize;
+        if last != self.row_idx.len() {
+            return Err(err(format!(
+                "col_ptr end {last} != nnz {}",
+                self.row_idx.len()
+            )));
+        }
+        for j in 0..self.cols {
+            let lo = self.col_ptr[j] as usize;
+            let hi = self.col_ptr[j + 1] as usize;
+            let rs = &self.row_idx[lo..hi];
+            for w in rs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(err(format!(
+                        "col {j}: row_idx not strictly increasing ({} then {})",
+                        w[0], w[1]
+                    )));
+                }
+            }
+            if let Some(&r) = rs.last() {
+                if r as usize >= self.rows {
+                    return Err(err(format!(
+                        "col {j}: row {r} out of bounds (rows = {})",
+                        self.rows
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Sequential read of one whole column (the ideal Fig-3 comparator):
     /// pointer + every (idx, val) pair in the column.
     pub fn read_col(&self, j: usize, sink: &mut impl AccessSink) -> usize {
@@ -139,6 +205,26 @@ impl SparseMatrix for Csc {
 mod tests {
     use super::*;
     use crate::formats::traits::CountSink;
+
+    #[test]
+    fn validate_invariants_accepts_valid_and_rejects_corruption() {
+        let m = sample();
+        assert_eq!(m.validate_invariants(), Ok(()));
+        let mut bad = m.clone();
+        bad.col_ptr[1] = 90;
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("not monotone")));
+        let mut bad = m.clone();
+        bad.row_idx[0] = 70;
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("out of bounds")
+                || e.to_string().contains("strictly increasing")));
+        let mut bad = m.clone();
+        bad.vals.pop();
+        assert!(bad.validate_invariants().is_err());
+    }
 
     fn sample() -> Csc {
         Csc::from_coo(&Coo::new(

@@ -11,6 +11,7 @@
 //! under the cache simulator.
 
 use super::coo::Coo;
+use super::error::FormatError;
 use super::traits::{
     AccessSink, AddressSpace, FormatKind, Region, Site, SparseMatrix,
 };
@@ -217,6 +218,75 @@ impl Csr {
         bits
     }
 
+    /// Check every structural invariant of the CSR arrays: pointer length
+    /// and endpoints, monotonicity, strictly-increasing in-bounds column
+    /// indices per row, and index/value array agreement. The fields are
+    /// `pub` (tests and generators build them directly), so corruption
+    /// *can* enter — the engine asserts this at prepare/execute
+    /// boundaries via [`crate::formats::strict_check`] under the
+    /// `strict-invariants` feature.
+    pub fn validate_invariants(&self) -> Result<(), FormatError> {
+        let err = |detail: String| FormatError::CorruptStructure {
+            format: "crs",
+            detail,
+        };
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(err(format!(
+                "row_ptr len {} != rows+1 ({})",
+                self.row_ptr.len(),
+                self.rows + 1
+            )));
+        }
+        if self.row_ptr.first() != Some(&0) {
+            return Err(err("row_ptr[0] != 0".into()));
+        }
+        for (i, w) in self.row_ptr.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(err(format!(
+                    "row_ptr not monotone at row {i}: {} > {}",
+                    w[0], w[1]
+                )));
+            }
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err(err(format!(
+                "col_idx len {} != vals len {}",
+                self.col_idx.len(),
+                self.vals.len()
+            )));
+        }
+        let last = self.row_ptr.last().copied().unwrap_or(0) as usize;
+        if last != self.col_idx.len() {
+            return Err(err(format!(
+                "row_ptr end {last} != nnz {}",
+                self.col_idx.len()
+            )));
+        }
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            let cs = &self.col_idx[lo..hi];
+            for w in cs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(err(format!(
+                        "row {i}: col_idx not strictly increasing ({} then {})",
+                        w[0], w[1]
+                    )));
+                }
+            }
+            // strictly increasing ⇒ only the last index can breach cols
+            if let Some(&c) = cs.last() {
+                if c as usize >= self.cols {
+                    return Err(err(format!(
+                        "row {i}: col {c} out of bounds (cols = {})",
+                        self.cols
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Average non-zeros per row (the quantity Table II keys on).
     pub fn nnz_row_stats(&self) -> (usize, f64, usize) {
         let mut min = usize::MAX;
@@ -414,6 +484,49 @@ mod tests {
         let none = m.row_band(2, 2);
         assert_eq!(none.shape(), (0, 4));
         assert_eq!(none.nnz(), 0);
+    }
+
+    #[test]
+    fn validate_invariants_accepts_valid_matrices() {
+        assert_eq!(sample().validate_invariants(), Ok(()));
+        // degenerate shapes are valid too
+        let empty = Csr::from_coo(&Coo::new(0, 0, vec![]));
+        assert_eq!(empty.validate_invariants(), Ok(()));
+    }
+
+    #[test]
+    fn validate_invariants_rejects_each_corruption_kind() {
+        let m = sample();
+        let expect_err = |bad: &Csr, needle: &str| {
+            let e = bad
+                .validate_invariants()
+                .expect_err(&format!("corruption undetected: {needle}"));
+            assert!(
+                e.to_string().contains(needle),
+                "{e} does not mention {needle:?}"
+            );
+        };
+        let mut bad = m.clone();
+        bad.row_ptr[1] = 9; // 9 > row_ptr[2] = 3
+        expect_err(&bad, "not monotone");
+        let mut bad = m.clone();
+        bad.row_ptr[0] = 1;
+        expect_err(&bad, "row_ptr[0]");
+        let mut bad = m.clone();
+        bad.row_ptr.pop();
+        expect_err(&bad, "rows+1");
+        let mut bad = m.clone();
+        bad.row_ptr[3] = 4; // end != nnz
+        expect_err(&bad, "nnz");
+        let mut bad = m.clone();
+        bad.col_idx.swap(0, 1); // row 0 becomes [2, 0]
+        expect_err(&bad, "strictly increasing");
+        let mut bad = m.clone();
+        bad.col_idx[2] = 99; // row 1 single entry, out of 4 cols
+        expect_err(&bad, "out of bounds");
+        let mut bad = m.clone();
+        bad.vals.pop();
+        expect_err(&bad, "vals len");
     }
 
     #[test]

@@ -27,6 +27,17 @@ pub enum FormatError {
     /// A counter field overflowed while building InCRS from CSR (the
     /// paper's ≤65 535-nonzeros-per-row prefix or the per-block bit field).
     CounterOverflow { row: usize, detail: String },
+    /// A structural invariant of a format's arrays is violated — a
+    /// non-monotone index pointer, an unsorted or out-of-bounds index,
+    /// an nnz inconsistency, a counter word disagreeing with the indices.
+    /// Reported by the formats' `validate_invariants()` and asserted at
+    /// engine boundaries by `formats::strict_check` under the
+    /// `strict-invariants` feature.
+    CorruptStructure {
+        /// Format name (`crs`, `ccs`, `coo`, `incrs`).
+        format: &'static str,
+        detail: String,
+    },
 }
 
 impl fmt::Display for FormatError {
@@ -39,6 +50,9 @@ impl fmt::Display for FormatError {
             }
             FormatError::BadParams { reason, .. } => write!(w, "{reason}"),
             FormatError::CounterOverflow { detail, .. } => write!(w, "{detail}"),
+            FormatError::CorruptStructure { format, detail } => {
+                write!(w, "corrupt {format} structure: {detail}")
+            }
         }
     }
 }
@@ -78,6 +92,14 @@ mod tests {
             detail: "row 7: 70000 non-zeros before section 1 exceeds the 16-bit prefix".into(),
         };
         assert!(overflow.to_string().contains("16-bit prefix"));
+        let corrupt = FormatError::CorruptStructure {
+            format: "crs",
+            detail: "row_ptr not monotone at row 3".into(),
+        };
+        assert_eq!(
+            corrupt.to_string(),
+            "corrupt crs structure: row_ptr not monotone at row 3"
+        );
     }
 
     #[test]

@@ -199,6 +199,128 @@ impl InCrs {
         (before, inside)
     }
 
+    /// Structural invariants of the InCRS arrays: the underlying CSR
+    /// checks (pointer endpoints/monotonicity, strictly-sorted in-bounds
+    /// indices, nnz agreement) **plus** the paper's addition — every
+    /// counter word's 16-bit section prefix and per-block bit fields must
+    /// agree with the column indices they summarize (a stale counter
+    /// silently mis-routes every `locate` into the wrong run of
+    /// non-zeros).
+    pub fn validate_invariants(&self) -> Result<(), FormatError> {
+        let err = |detail: String| FormatError::CorruptStructure {
+            format: "incrs",
+            detail,
+        };
+        self.params.validate()?;
+        // CSR-core checks, inline (the arrays are this struct's own)
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(err(format!(
+                "row_ptr len {} != rows+1 ({})",
+                self.row_ptr.len(),
+                self.rows + 1
+            )));
+        }
+        if self.row_ptr.first() != Some(&0) {
+            return Err(err("row_ptr[0] != 0".into()));
+        }
+        for (i, w) in self.row_ptr.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(err(format!(
+                    "row_ptr not monotone at row {i}: {} > {}",
+                    w[0], w[1]
+                )));
+            }
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err(err(format!(
+                "col_idx len {} != vals len {}",
+                self.col_idx.len(),
+                self.vals.len()
+            )));
+        }
+        let last = self.row_ptr.last().copied().unwrap_or(0) as usize;
+        if last != self.col_idx.len() {
+            return Err(err(format!(
+                "row_ptr end {last} != nnz {}",
+                self.col_idx.len()
+            )));
+        }
+        let spr = self.sections_per_row;
+        let expected_spr = (self.cols + self.params.section - 1) / self.params.section;
+        if spr != expected_spr {
+            return Err(err(format!(
+                "sections_per_row {spr} != ceil(cols/section) = {expected_spr}"
+            )));
+        }
+        if self.counters.len() != self.rows * spr {
+            return Err(err(format!(
+                "counters len {} != rows×sections ({})",
+                self.counters.len(),
+                self.rows * spr
+            )));
+        }
+        let bps = self.params.blocks_per_section();
+        let bits = self.params.bits_per_block();
+        let mask = (1u64 << bits) - 1;
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            let cs = &self.col_idx[lo..hi];
+            for w in cs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(err(format!(
+                        "row {i}: col_idx not strictly increasing ({} then {})",
+                        w[0], w[1]
+                    )));
+                }
+            }
+            if let Some(&c) = cs.last() {
+                if c as usize >= self.cols {
+                    return Err(err(format!(
+                        "row {i}: col {c} out of bounds (cols = {})",
+                        self.cols
+                    )));
+                }
+            }
+            // replay the construction walk and compare against the words
+            let mut k = 0usize;
+            for s in 0..spr {
+                let word = self.counters[i * spr + s];
+                let prefix = (word & 0xFFFF) as usize;
+                if prefix != k {
+                    return Err(err(format!(
+                        "row {i} section {s}: prefix {prefix} != {k} non-zeros before it"
+                    )));
+                }
+                let sec_end = (((s + 1) * self.params.section).min(self.cols)) as u32;
+                for blk in 0..bps {
+                    let blk_end = ((s * self.params.section + (blk + 1) * self.params.block)
+                        as u32)
+                        .min(sec_end);
+                    let mut cnt = 0u64;
+                    while k < cs.len() && cs[k] < blk_end {
+                        cnt += 1;
+                        k += 1;
+                    }
+                    let stored = (word >> (16 + blk as u32 * bits)) & mask;
+                    if stored != cnt {
+                        return Err(err(format!(
+                            "row {i} section {s} block {blk}: counter says {stored} \
+                             non-zeros, indices say {cnt}"
+                        )));
+                    }
+                }
+            }
+            if k != cs.len() {
+                return Err(err(format!(
+                    "row {i}: {} non-zeros beyond the last section",
+                    cs.len() - k
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// The paper's locate: row pointer (1) + counter word (1) + scan of the
     /// target block's non-zeros (+ value on hit).
     pub fn locate(&self, i: usize, j: usize, sink: &mut impl AccessSink) -> Option<f32> {
@@ -316,6 +438,38 @@ mod tests {
             .collect();
         let csr = Csr::from_coo(&Coo::new(1, 24, entries));
         InCrs::from_csr_params(&csr, small_params()).unwrap()
+    }
+
+    #[test]
+    fn validate_invariants_accepts_valid_and_rejects_corruption() {
+        let m = fig1_like();
+        assert_eq!(m.validate_invariants(), Ok(()));
+        // a stale counter word (the InCRS-specific hazard): bump one
+        // block field so it disagrees with the indices it summarizes
+        let mut bad = m.clone();
+        bad.counters[0] += 1 << 16;
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("counter says")));
+        // a wrong section prefix
+        let mut bad = m.clone();
+        bad.counters[1] ^= 1; // prefix bits of section 1
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("prefix")));
+        // CSR-core corruption is caught too
+        let mut bad = m.clone();
+        bad.row_ptr[1] = 4;
+        assert!(bad.validate_invariants().is_err());
+        let mut bad = m.clone();
+        bad.col_idx[0] = 3; // duplicate of the next index
+        assert!(bad.validate_invariants().is_err());
+        // counters array truncated
+        let mut bad = m.clone();
+        bad.counters.pop();
+        assert!(bad
+            .validate_invariants()
+            .is_err_and(|e| e.to_string().contains("counters len")));
     }
 
     #[test]

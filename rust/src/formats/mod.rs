@@ -11,6 +11,12 @@
 //!   streams* the cache simulator can replay (Fig 3), and
 //! * `locate(i, j, sink)` random access that reports every word it touches
 //!   to an [`traits::AccessSink`] (Table I/II access counting).
+//!
+//! The core execution formats ([`Csr`], [`Csc`], [`Coo`], [`InCrs`])
+//! additionally expose `validate_invariants()` — monotone index pointers,
+//! strictly-sorted in-bounds indices, nnz consistency, counter-word
+//! agreement — which the engine asserts at prepare/execute boundaries via
+//! [`strict_check`] when the `strict-invariants` feature is on.
 
 pub mod convert;
 pub mod coo;
@@ -42,3 +48,61 @@ pub use traits::{
     AccessSink, AddressSpace, CountSink, FormatKind, NullSink, Region, Site,
     SparseMatrix,
 };
+
+/// Run a structural-invariant check at an execution boundary.
+///
+/// Under the `strict-invariants` feature a violation panics with the
+/// boundary's `context` and the typed [`FormatError`] — corruption is
+/// caught where it *enters* the engine, not wherever the bad index later
+/// explodes. Without the feature (the default) the closure is never
+/// called, so the O(nnz) validation costs nothing in production builds.
+/// CI runs the full test suite both ways.
+#[inline]
+pub fn strict_check(context: &str, check: impl FnOnce() -> Result<(), FormatError>) {
+    #[cfg(feature = "strict-invariants")]
+    if let Err(e) = check() {
+        // lint would not fire here (formats is outside P1's scope), but
+        // for the record: panicking is the point — this is a debug
+        // assertion about memory-safety-adjacent corruption, not a
+        // recoverable serving error
+        panic!("strict-invariants violated at {context}: {e}");
+    }
+    #[cfg(not(feature = "strict-invariants"))]
+    {
+        let _ = (context, check);
+    }
+}
+
+#[cfg(test)]
+mod strict_tests {
+    use super::*;
+
+    fn corrupt() -> Result<(), FormatError> {
+        Err(FormatError::CorruptStructure {
+            format: "crs",
+            detail: "injected".into(),
+        })
+    }
+
+    #[cfg(feature = "strict-invariants")]
+    #[test]
+    #[should_panic(expected = "strict-invariants violated at unit-test")]
+    fn panics_on_violation_when_enabled() {
+        strict_check("unit-test", corrupt);
+    }
+
+    #[cfg(not(feature = "strict-invariants"))]
+    #[test]
+    fn is_a_noop_when_disabled() {
+        // the closure must not even run
+        strict_check("unit-test", || {
+            unreachable!("validation executed without the feature")
+        });
+        strict_check("unit-test", corrupt);
+    }
+
+    #[test]
+    fn passing_checks_are_silent_either_way() {
+        strict_check("unit-test", || Ok(()));
+    }
+}

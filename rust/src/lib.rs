@@ -76,6 +76,19 @@
 //! server.shutdown();                                // drains, never drops
 //! ```
 //!
+//! ## Determinism contract
+//!
+//! Every registered kernel is **bit-identical** to scalar Gustavson at
+//! any worker, shard, or merge fan-in count: reductions happen in one
+//! fixed, documented order (ascending K), never in thread-completion or
+//! hash-iteration order. The contract is enforced three ways: sampled
+//! (the `prop_*` bit-identity suites), statically ([`analysis`] — the
+//! `detlint` pass run by `cargo test --test repo_lint` bans unordered
+//! hash collections, accumulation-order hazards, and unjustified panics
+//! in the serving path), and structurally (the core formats'
+//! `validate_invariants()`, asserted at engine boundaries under the
+//! `strict-invariants` feature). See README "Correctness tooling".
+//!
 //! ## Crate layout
 //!
 //! * [`formats`] — all Table-I sparse formats + [`formats::InCrs`], with
@@ -98,6 +111,8 @@
 //!   kernel registry.
 //! * [`eval`] — drivers that regenerate every table and figure, plus the
 //!   `engines` kernel-comparison experiment.
+//! * [`analysis`] — `detlint`, the repo-native static-analysis pass
+//!   enforcing the determinism/panic-safety contracts.
 //!
 //! ## Features
 //!
@@ -107,8 +122,13 @@
 //!   feature or the artifacts are absent. **Enabling it requires first
 //!   adding the vendored `xla` bindings** (see the feature comment in
 //!   Cargo.toml) — without them `--features pjrt` does not compile.
+//! * `strict-invariants` — asserts the formats' `validate_invariants()`
+//!   at engine prepare/execute boundaries ([`formats::strict_check`]).
+//!   Off by default (the checks are O(nnz) per boundary); CI runs the
+//!   full suite a second time with it enabled.
 
 pub mod access;
+pub mod analysis;
 pub mod arch;
 pub mod cachesim;
 pub mod coordinator;

@@ -29,6 +29,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::lock_unpoisoned;
+
 use crate::formats::csr::Csr;
 use crate::formats::traits::SparseMatrix;
 
@@ -136,7 +138,9 @@ impl WorkspacePool {
 
     /// A workspace covering `n` output columns — pooled if available.
     pub fn checkout(&self, n: usize) -> Workspace {
-        let pooled = self.free.lock().ok().and_then(|mut free| free.pop());
+        // pool free-list stays valid across a holder's panic (push/pop of
+        // whole workspaces): recover instead of silently disabling reuse
+        let pooled = lock_unpoisoned(&self.free).pop();
         match pooled {
             Some(mut ws) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -152,9 +156,7 @@ impl WorkspacePool {
 
     /// Return a workspace for reuse.
     pub fn give_back(&self, ws: Workspace) {
-        if let Ok(mut free) = self.free.lock() {
-            free.push(ws);
-        }
+        lock_unpoisoned(&self.free).push(ws);
     }
 
     /// Checkouts served from the pool.
@@ -169,7 +171,7 @@ impl WorkspacePool {
 
     /// Workspaces currently parked in the pool.
     pub fn pooled(&self) -> usize {
-        self.free.lock().map(|free| free.len()).unwrap_or(0)
+        lock_unpoisoned(&self.free).len()
     }
 }
 

@@ -40,6 +40,7 @@ use std::sync::Mutex;
 use crate::engine::tiled::partition_by_weight;
 use crate::formats::csr::Csr;
 use crate::formats::traits::SparseMatrix;
+use crate::util::lock_unpoisoned;
 
 /// One partial product: packed output coordinate (row in the high 32 bits,
 /// column in the low 32) and the raw `a_ik · b_kj` value. Plain `u64`
@@ -89,7 +90,9 @@ impl MergePool {
 
     /// An empty partial-product buffer — pooled if available.
     pub fn checkout(&self) -> Vec<PartialProduct> {
-        let pooled = self.free.lock().ok().and_then(|mut free| free.pop());
+        // pool free-list stays valid across a holder's panic (push/pop of
+        // whole buffers): recover instead of silently disabling reuse
+        let pooled = lock_unpoisoned(&self.free).pop();
         match pooled {
             Some(buf) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -105,9 +108,7 @@ impl MergePool {
     /// Return a buffer for reuse (cleared, capacity kept).
     pub fn give_back(&self, mut buf: Vec<PartialProduct>) {
         buf.clear();
-        if let Ok(mut free) = self.free.lock() {
-            free.push(buf);
-        }
+        lock_unpoisoned(&self.free).push(buf);
     }
 
     /// Checkouts served from the pool.
@@ -122,7 +123,7 @@ impl MergePool {
 
     /// Buffers currently parked in the pool.
     pub fn pooled(&self) -> usize {
-        self.free.lock().map(|free| free.len()).unwrap_or(0)
+        lock_unpoisoned(&self.free).len()
     }
 }
 

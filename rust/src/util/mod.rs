@@ -11,9 +11,11 @@ pub mod bench;
 pub mod json;
 pub mod ptest;
 pub mod rng;
+pub mod sync;
 pub mod tables;
 
 pub use args::Args;
+pub use sync::lock_unpoisoned;
 pub use json::Json;
 pub use rng::Rng;
 pub use tables::Table;

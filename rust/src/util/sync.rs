@@ -1,0 +1,63 @@
+//! Synchronization policy shared across the crate.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// The crate's single poisoned-lock policy: recover the guard and keep
+/// serving.
+///
+/// A poisoned `Mutex` only records that *some* holder panicked while the
+/// lock was held — it says nothing about the guarded data. Every
+/// structure this crate guards with a `Mutex` (the workspace and
+/// merge-buffer pool free lists, the kernel-observation ring, the
+/// server's shared job receiver) stays structurally valid across a
+/// holder's panic: the critical sections only push/pop whole elements or
+/// receive from a channel, so the worst a panicking holder leaves behind
+/// is a shorter free list or an un-recorded observation. Recovering via
+/// `into_inner` is therefore sound here, and strictly better than the
+/// failure modes it replaces — a server worker silently exiting, a pool
+/// silently ceasing to pool, metrics silently dropping records.
+///
+/// Panicking *kernels* are a separate concern with a separate mechanism:
+/// band/tile/shard workers are joined explicitly and surface as typed
+/// `EngineError::ExecFailed`. This helper is the only place the crate
+/// makes a lock-poisoning decision; new `Mutex` call sites should use it
+/// (or justify why not).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_the_guard_after_a_holder_panicked() {
+        let m = Mutex::new(vec![1u32, 2]);
+        // poison it: a thread panics while holding the lock
+        let poisoner = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = m.lock().unwrap();
+                panic!("holder dies");
+            })
+            .join()
+        });
+        assert!(poisoner.is_err(), "the holder should have panicked");
+        assert!(m.lock().is_err(), "the mutex should be poisoned");
+        let mut guard = lock_unpoisoned(&m);
+        assert_eq!(*guard, vec![1, 2], "data survives the poison");
+        guard.push(3);
+        drop(guard);
+        assert_eq!(*lock_unpoisoned(&m), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn behaves_like_lock_on_a_healthy_mutex() {
+        let m = Mutex::new(7u32);
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -117,6 +117,21 @@ fn parallel_tiled_kernel_is_bit_identical_to_serial_on_random_inputs() {
     });
 }
 
+/// With `strict-invariants` on, a structurally corrupt operand must be
+/// caught at the `SpmmKernel::run` boundary before any kernel reads it.
+/// (Without the feature the check closure never runs — see the
+/// `formats::strict_check` no-op test.)
+#[cfg(feature = "strict-invariants")]
+#[test]
+#[should_panic(expected = "strict-invariants violated at SpmmKernel::run(B)")]
+fn strict_builds_reject_corrupt_operands_at_the_run_boundary() {
+    use spmm_accel::engine::{GustavsonKernel, SpmmKernel};
+    let a = uniform(8, 8, 0.4, 1);
+    let mut b = uniform(8, 8, 0.4, 2);
+    b.col_idx[0] = 99; // out of bounds: structurally corrupt
+    let _ = GustavsonKernel.run(&a, &b);
+}
+
 #[test]
 fn registry_resolves_the_contracted_kernels() {
     use spmm_accel::formats::traits::FormatKind;

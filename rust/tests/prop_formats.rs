@@ -5,7 +5,7 @@ use spmm_accel::datasets::synth::uniform;
 use spmm_accel::formats::convert::{from_coo, ALL_KINDS};
 use spmm_accel::formats::incrs::{InCrs, InCrsParams};
 use spmm_accel::formats::traits::{CountSink, SparseMatrix};
-use spmm_accel::formats::{Coo, Csr};
+use spmm_accel::formats::{Coo, Csc, Csr};
 use spmm_accel::util::ptest::check;
 use spmm_accel::util::rng::Rng;
 
@@ -190,6 +190,73 @@ fn prop_storage_words_ordering() {
                 csr.storage_words(),
                 rows * spr
             ));
+        }
+        Ok(())
+    });
+}
+
+/// Every constructor-produced matrix satisfies its own
+/// `validate_invariants` — the runtime contract the `strict-invariants`
+/// feature debug-asserts at engine/serving boundaries.
+#[test]
+fn prop_constructed_matrices_always_validate() {
+    check(0xF8, 40, arb_coo, |coo| {
+        coo.validate_invariants().map_err(|e| format!("coo: {e}"))?;
+        let csr = Csr::from_coo(coo);
+        csr.validate_invariants().map_err(|e| format!("csr: {e}"))?;
+        Csc::from_csr(&csr)
+            .validate_invariants()
+            .map_err(|e| format!("csc: {e}"))?;
+        InCrs::from_csr(&csr)
+            .map_err(|e| e.to_string())?
+            .validate_invariants()
+            .map_err(|e| format!("incrs: {e}"))?;
+        Ok(())
+    });
+}
+
+/// Randomly corrupted indptr/indices are always rejected: flipping a
+/// pointer to break monotonicity, pushing an index out of bounds, or
+/// truncating the value array must never validate as clean.
+#[test]
+fn prop_corrupted_structure_never_validates() {
+    let gen = |rng: &mut Rng| {
+        // ensure at least one nonzero so there is structure to corrupt
+        let mut coo = arb_coo(rng);
+        while coo.nnz() == 0 {
+            coo = arb_coo(rng);
+        }
+        (Csr::from_coo(&coo), rng.next_u64())
+    };
+    check(0xF9, 40, gen, |(csr, salt)| {
+        let mut rng = Rng::new(*salt);
+        let mut bad = csr.clone();
+        let kind = rng.usize_below(4);
+        match kind {
+            0 => {
+                // point past the end of the index arrays: a middle pointer
+                // breaks monotonicity against the (= nnz) final pointer, the
+                // final pointer breaks the nnz agreement — always invalid,
+                // unlike a small bump that may form another valid matrix
+                let p = 1 + rng.usize_below(bad.row_ptr.len() - 1);
+                bad.row_ptr[p] = bad.vals.len() as u32 + 1 + rng.usize_below(9) as u32;
+            }
+            1 => {
+                // push a column index out of bounds
+                let e = rng.usize_below(bad.col_idx.len());
+                bad.col_idx[e] = bad.cols() as u32 + rng.usize_below(10) as u32;
+            }
+            2 => {
+                // truncate vals so index/value arrays disagree
+                bad.vals.pop();
+            }
+            _ => {
+                // drop the final row pointer (length invariant)
+                bad.row_ptr.pop();
+            }
+        }
+        if bad.validate_invariants().is_ok() {
+            return Err(format!("corruption kind {kind} validated as clean"));
         }
         Ok(())
     });

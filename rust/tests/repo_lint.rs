@@ -1,0 +1,44 @@
+//! The repo's own static-analysis gate: `cargo test --test repo_lint`.
+//!
+//! Runs `detlint` (see `spmm_accel::analysis`) over this crate's sources
+//! and fails on any finding — no unordered hash collections in
+//! determinism-critical modules (D1), no accumulation-order hazards in
+//! kernel modules (D2), no unjustified panics in the serving path (P1),
+//! and every registered kernel covered by the all-kernels suite and the
+//! README Backends table (C1). Allowlist hygiene is enforced by A0, so a
+//! clean run also means zero unjustified or stale `lint: allow` entries.
+
+use std::path::Path;
+
+use spmm_accel::analysis::run_repo_lint;
+
+#[test]
+fn repo_is_lint_clean() {
+    let report = run_repo_lint(Path::new(env!("CARGO_MANIFEST_DIR")));
+    // sanity: the walk really covered the tree and the cross-file layer ran
+    // (a silently-empty scan would make a "clean" result meaningless)
+    assert!(
+        report.files_scanned >= 50,
+        "suspiciously few files scanned ({}) — did the src/ walk break?",
+        report.files_scanned
+    );
+    assert!(
+        report.lines_scanned > 10_000,
+        "suspiciously few lines scanned ({})",
+        report.lines_scanned
+    );
+    assert!(
+        report.consistency_checks >= 10,
+        "consistency layer performed only {} checks",
+        report.consistency_checks
+    );
+    // the tree carries exactly the documented, justified panic sites
+    // (coordinator startup/legacy-shim — see their annotations); every
+    // annotation must both carry a reason and still match a finding
+    assert!(
+        report.allows_used >= 2,
+        "expected the documented allow annotations to be in use, saw {}",
+        report.allows_used
+    );
+    assert!(report.is_clean(), "\n{report}");
+}
