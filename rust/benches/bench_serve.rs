@@ -5,14 +5,17 @@
 //! serves it), the uncoalesced path builds it once per job.
 //!
 //! Writes a machine-readable summary to `BENCH_serve.json` (override the
-//! path with `SPMM_BENCH_SERVE_OUT`).
+//! path with `SPMM_BENCH_SERVE_OUT`), plus a learned-selection comparison
+//! — auto-selection latency with a serving-trained cost model warm-loaded
+//! vs static cost hints — to `BENCH_selection.json` (override with
+//! `SPMM_BENCH_SELECTION_OUT`).
 //!
 //! Run: `cargo bench --bench bench_serve`
 
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
-    CoalesceConfig, JobHandle, KernelSpec, MetricsSnapshot, Server, ServerConfig,
+    CoalesceConfig, JobHandle, KernelSpec, LearnConfig, MetricsSnapshot, Server, ServerConfig,
 };
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::Algorithm;
@@ -64,6 +67,41 @@ fn run_case(coalesce: bool, a_set: &[Arc<Csr>], b: &Arc<Csr>) -> (BenchResult, M
     });
     let snap = serve_batch(coalesce, a_set, b);
     (r, snap)
+}
+
+/// One auto-selected serve run under the given learn config; returns the
+/// metrics snapshot (per-job p50/p99) and the batch wall in milliseconds.
+fn serve_auto(learn: LearnConfig, a_set: &[Arc<Csr>], b: &Arc<Csr>) -> (MetricsSnapshot, f64) {
+    let server = Server::start(ServerConfig {
+        workers: WORKERS,
+        queue_depth: 32,
+        kernel: KernelSpec::Auto,
+        geometry: Geometry::default(),
+        learn,
+        ..Default::default()
+    });
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let jobs = a_set
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            client
+                .job(Arc::clone(a), Arc::clone(b))
+                .id(i as u64)
+                .keep_result(false)
+                .build()
+        })
+        .collect::<Vec<_>>();
+    let handles = client.submit_many(jobs);
+    for res in JobHandle::batch_wait_all(handles) {
+        black_box(res.expect("job ok").report.real_pairs);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let snap = client.metrics();
+    drop(client);
+    server.shutdown();
+    (snap, wall_ms)
 }
 
 fn main() {
@@ -128,5 +166,68 @@ fn main() {
     match std::fs::write(&out_path, summary.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {out_path}"),
         Err(e) => println!("could not write {out_path}: {e}"),
+    }
+
+    // learned selection: train a cost model through the serving loop (the
+    // refit cadence persists it), then serve the same batch twice — once
+    // with the model warm-loaded, once on static cost hints — and compare
+    // per-job latency percentiles
+    let model_path = std::env::temp_dir()
+        .join(format!("spmm_bench_cost_model_{}.txt", std::process::id()));
+    let (snap_train, _) = serve_auto(
+        LearnConfig {
+            refit_every: 8,
+            min_samples: 2,
+            model_path: Some(model_path.clone()),
+            ..Default::default()
+        },
+        &a_set,
+        &b,
+    );
+    let (snap_fit, wall_fit_ms) = serve_auto(
+        LearnConfig {
+            refit_every: 0,
+            model_path: Some(model_path.clone()),
+            ..Default::default()
+        },
+        &a_set,
+        &b,
+    );
+    let (snap_static, wall_static_ms) = serve_auto(LearnConfig::default(), &a_set, &b);
+    std::fs::remove_file(&model_path).ok();
+    println!(
+        "selection (trained over {} refits): fitted p50={}us p99={}us, \
+         static p50={}us p99={}us",
+        snap_train.model_refits,
+        snap_fit.p50_us,
+        snap_fit.p99_us,
+        snap_static.p50_us,
+        snap_static.p99_us
+    );
+
+    let sel_path = std::env::var("SPMM_BENCH_SELECTION_OUT")
+        .unwrap_or_else(|_| "BENCH_selection.json".into());
+    let sel = obj([
+        ("bench", Json::from("bench_serve/learned_selection")),
+        (
+            "workload",
+            Json::from(format!(
+                "{JOBS} auto-selected jobs sharing one B (256x512 @ 5%), A 48x256 @ 8%, \
+                 {WORKERS} workers; model trained in-serve (refit every 8), then warm-loaded"
+            )),
+        ),
+        ("jobs", Json::from(JOBS)),
+        ("workers", Json::from(WORKERS)),
+        ("train_model_refits", Json::from(snap_train.model_refits)),
+        ("fitted_p50_us", Json::from(snap_fit.p50_us)),
+        ("fitted_p99_us", Json::from(snap_fit.p99_us)),
+        ("static_p50_us", Json::from(snap_static.p50_us)),
+        ("static_p99_us", Json::from(snap_static.p99_us)),
+        ("fitted_wall_ms", Json::from(wall_fit_ms)),
+        ("static_wall_ms", Json::from(wall_static_ms)),
+    ]);
+    match std::fs::write(&sel_path, sel.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {sel_path}"),
+        Err(e) => println!("could not write {sel_path}: {e}"),
     }
 }

@@ -1,12 +1,15 @@
 //! Rule **C1** — cross-file consistency between the kernel registry, the
-//! all-kernels property suite, and the README Backends table.
+//! all-kernels property suite, the README Backends table, and the CLI.
 //!
 //! The contract: every `Algorithm` variant and every kernel registered by
 //! `Registry::with_default_kernels` is (a) exercised by
 //! `tests/prop_engine.rs` (whose registry-size assertion must keep up with
-//! the default kernel count) and (b) documented in the README `## Backends`
-//! table under its `Algorithm::name()` string. A new kernel that skips the
-//! suite or the docs fails `cargo test --test repo_lint`.
+//! the default kernel count), (b) documented in the README `## Backends`
+//! table under its `Algorithm::name()` string, and (c) reachable from the
+//! CLI — `src/main.rs` keeps a `kernels` listing that walks the registry
+//! and mentions every algorithm name in its `--kernel` help. A new kernel
+//! that skips the suite, the docs, or the CLI fails
+//! `cargo test --test repo_lint`.
 //!
 //! The checks are pure functions over file contents so the fixtures in the
 //! test module can prove each one fires; [`super::run_repo_lint`] feeds
@@ -25,6 +28,8 @@ pub struct ConsistencyInput<'a> {
     pub prop_engine_src: &'a str,
     /// The repo `README.md` (the `## Backends` table).
     pub readme_src: &'a str,
+    /// `src/main.rs` (the CLI: the `kernels` listing and `--kernel` help).
+    pub main_src: &'a str,
 }
 
 /// Run every cross-file check. Returns the findings plus the number of
@@ -103,7 +108,37 @@ pub fn check(input: &ConsistencyInput<'_>) -> (Vec<Finding>, usize) {
         }
     }
 
-    // (d) the suite's registry-size floor keeps up with the default set
+    // (d) the CLI's `kernels` listing actually walks the registry, so a
+    // registered kernel can never be invisible from the command line
+    checks += 1;
+    if !(input.main_src.contains("\"kernels\"") && input.main_src.contains(".kernels()")) {
+        findings.push(Finding {
+            rule: "C1",
+            path: "src/main.rs".into(),
+            line: 0,
+            detail: "no `kernels` subcommand iterating `Registry::kernels()` — the \
+                     CLI listing no longer reflects the registry"
+                .into(),
+        });
+    }
+
+    // (e) every algorithm name is spellable from the CLI help
+    for (v, name) in &names {
+        checks += 1;
+        if !input.main_src.contains(name.as_str()) {
+            findings.push(Finding {
+                rule: "C1",
+                path: "src/main.rs".into(),
+                line: 0,
+                detail: format!(
+                    "Algorithm::{v} (`{name}`) is never mentioned in the CLI — add it \
+                     to the `--kernel` algorithms line in the help text"
+                ),
+            });
+        }
+    }
+
+    // (f) the suite's registry-size floor keeps up with the default set
     let registered = default_register_count(input.registry_src);
     checks += 1;
     match prop_engine_len_floor(input.prop_engine_src) {
@@ -247,12 +282,30 @@ impl Algorithm {
     }
 ";
 
+    const MAIN_FIXTURE: &str = "
+    match cmd {
+        \"kernels\" => {
+            for k in reg.kernels() { println!(\"{}\", k.name()); }
+        }
+        _ => println!(\"algorithms (--kernel): dense | gustavson\"),
+    }
+";
+
     fn input<'a>(prop_engine: &'a str, readme: &'a str) -> ConsistencyInput<'a> {
+        input_with_main(prop_engine, readme, MAIN_FIXTURE)
+    }
+
+    fn input_with_main<'a>(
+        prop_engine: &'a str,
+        readme: &'a str,
+        main_src: &'a str,
+    ) -> ConsistencyInput<'a> {
         ConsistencyInput {
             kernel_src: KERNEL_FIXTURE,
             registry_src: REGISTRY_FIXTURE,
             prop_engine_src: prop_engine,
             readme_src: readme,
+            main_src,
         }
     }
 
@@ -265,8 +318,9 @@ impl Algorithm {
     fn clean_inputs_produce_no_findings_and_count_checks() {
         let (findings, checks) = check(&input(GOOD_PROP, GOOD_README));
         assert!(findings.is_empty(), "{findings:?}");
-        // 2 name checks + 2 suite checks + 2 readme checks + 1 floor check
-        assert_eq!(checks, 7);
+        // 2 name checks + 2 suite checks + 2 readme checks + 1 CLI-listing
+        // check + 2 CLI-name checks + 1 floor check
+        assert_eq!(checks, 10);
     }
 
     #[test]
@@ -287,6 +341,28 @@ impl Algorithm {
             findings
                 .iter()
                 .any(|f| f.path == "README.md" && f.detail.contains("`gustavson`")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn missing_cli_listing_or_name_fires() {
+        // no `kernels` arm walking the registry
+        let main = "match cmd { _ => println!(\"dense gustavson\") }";
+        let (findings, _) = check(&input_with_main(GOOD_PROP, GOOD_README, main));
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.path == "src/main.rs" && f.detail.contains("`kernels` subcommand")),
+            "{findings:?}"
+        );
+        // listing present but one algorithm unspellable from the CLI
+        let main = "\"kernels\" => reg.kernels(); // help: --kernel dense";
+        let (findings, _) = check(&input_with_main(GOOD_PROP, GOOD_README, main));
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.path == "src/main.rs" && f.detail.contains("`gustavson`")),
             "{findings:?}"
         );
     }

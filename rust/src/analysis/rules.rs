@@ -85,10 +85,12 @@ fn macro_call(line: &str, name: &str) -> bool {
     })
 }
 
-/// Does `line` sum floats via turbofish (`.sum::<f32>()` / `.sum::<f64>()`)?
-fn float_sum_turbofish(line: &str) -> bool {
-    ident_positions(line, "sum").any(|i| {
-        let rest: String = line[i + 3..]
+/// Does `line` call `name` with a float turbofish (`.sum::<f32>()`,
+/// `.product::<f64>()`, …)? The whole-iterator float reductions share one
+/// hazard: the accumulation order is the iterator's, not a documented one.
+fn float_turbofish(line: &str, name: &str) -> bool {
+    ident_positions(line, name).any(|i| {
+        let rest: String = line[i + name.len()..]
             .chars()
             .filter(|c| !c.is_whitespace())
             .take(8)
@@ -136,16 +138,35 @@ pub fn check_file(file: &SourceFile) -> (Vec<Finding>, usize) {
                         .into(),
                 });
             }
-            if float_sum_turbofish(line) {
-                raw.push(Finding {
-                    rule: "D2",
-                    path: display_path.clone(),
-                    line: lineno,
-                    detail: "float `.sum::<fN>()` in a kernel module — iterator sum \
-                             order is an accumulation-order hazard; fold in an explicit, \
-                             documented order"
-                        .into(),
-                });
+            for reduction in ["sum", "product"] {
+                if float_turbofish(line, reduction) {
+                    raw.push(Finding {
+                        rule: "D2",
+                        path: display_path.clone(),
+                        line: lineno,
+                        detail: format!(
+                            "float `.{reduction}::<fN>()` in a kernel module — iterator \
+                             reduction order is an accumulation-order hazard; fold in an \
+                             explicit, documented order"
+                        ),
+                    });
+                }
+            }
+            for folding in ["reduce", "scan"] {
+                if method_call(line, folding)
+                    && (line.contains("f32") || line.contains("f64"))
+                {
+                    raw.push(Finding {
+                        rule: "D2",
+                        path: display_path.clone(),
+                        line: lineno,
+                        detail: format!(
+                            "`.{folding}(…)` near floats in a kernel module — the \
+                             accumulation order is the iterator's, not a documented one; \
+                             use an explicit indexed fold (or annotate the order)"
+                        ),
+                    });
+                }
             }
             if has_ident(line, "sort_unstable")
                 && (line.contains("f32") || line.contains("f64"))
@@ -311,6 +332,46 @@ mod tests {
             "spmm/fake.rs",
             "fn f(xs: &mut [f64]) -> usize { xs.sort_by(f64::total_cmp); \
              [1usize, 2].iter().sum::<usize>() }\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn d2_fires_on_float_product_reduce_and_scan() {
+        let found = run(
+            "spmm/fake.rs",
+            "fn f(xs: &[f64]) -> f64 { xs.iter().product::<f64>() }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+        let found = run(
+            "engine/fake.rs",
+            "fn f(xs: &[f32]) -> Option<f32> { xs.iter().copied().reduce(|a, b| a + b) }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+        let found = run(
+            "engine/fake.rs",
+            "fn f(xs: &[f64]) { let _ = xs.iter().scan(0.0f64, |s, x| { *s += x; Some(*s) }); }\n",
+        );
+        assert!(rules_of(&found).contains(&"D2"), "{found:?}");
+    }
+
+    #[test]
+    fn d2_accepts_integer_reductions_and_explicit_folds() {
+        // integer product / reduce on integer lines carry no float hazard
+        let clean = run(
+            "spmm/fake.rs",
+            "fn f(xs: &[usize]) -> usize { xs.iter().product::<usize>() }\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+        let clean = run(
+            "engine/fake.rs",
+            "fn f(xs: &[u32]) -> Option<u32> { xs.iter().copied().reduce(|a, b| a.max(b)) }\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+        // fold is the sanctioned idiom: the closure states the order
+        let clean = run(
+            "spmm/fake.rs",
+            "fn f(xs: &[f64]) -> f64 { xs.iter().fold(0.0f64, |acc, x| acc + x) }\n",
         );
         assert!(clean.is_empty(), "{clean:?}");
     }

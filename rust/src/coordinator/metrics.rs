@@ -34,6 +34,9 @@ impl Histogram {
     }
 
     /// Approximate quantile from the histogram (upper bucket bound in µs).
+    /// The last bucket is unbounded ("rest"): a quantile landing there
+    /// reports `u64::MAX` — there is no honest upper bound, and reporting
+    /// `1 << 32` would silently cap p99 at ~71 minutes.
     pub fn quantile_us(&self, q: f64) -> u64 {
         let counts: Vec<u64> = self
             .buckets
@@ -49,7 +52,11 @@ impl Histogram {
         for (i, &c) in counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return 1u64 << (i + 1);
+                return if i + 1 >= BUCKETS {
+                    u64::MAX
+                } else {
+                    1u64 << (i + 1)
+                };
             }
         }
         u64::MAX
@@ -72,6 +79,21 @@ pub struct KernelObservation {
     /// Measured kernel execute wall time (sharded execution included,
     /// verify/render excluded), in microseconds.
     pub wall_us: u64,
+}
+
+/// One kernel's published calibration state, surfaced from the refit loop
+/// for observability (`serve` prints these; `mean_abs_err_us` is the
+/// per-kernel calibration error).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationEntry {
+    pub format: FormatKind,
+    pub algorithm: Algorithm,
+    /// Fitted microseconds per raw cost unit.
+    pub scale: f64,
+    /// Observations the fit used.
+    pub samples: u64,
+    /// Mean |predicted − measured| wall time, microseconds.
+    pub mean_abs_err_us: f64,
 }
 
 /// Observations kept in the ring (newest overwrite oldest beyond this).
@@ -153,6 +175,14 @@ pub struct Metrics {
     /// Kernel-selection datapoints recorded (total, including any beyond
     /// the bounded log's retention).
     pub kernel_observations: AtomicU64,
+    /// Cost-model refits published by the learned-selection loop
+    /// (`engine::learn`); warm-loads at startup are not counted.
+    pub model_refits: AtomicU64,
+    /// Latest per-kernel calibration published by the refit loop (scale +
+    /// mean absolute prediction error) — read with
+    /// [`Metrics::calibration`]. Kept out of [`MetricsSnapshot`] so the
+    /// snapshot stays `Copy`.
+    calibration: Mutex<Vec<CalibrationEntry>>,
     /// Bounded `(cost_hint, ingest_cost, wall)` log per executed kernel —
     /// read it with [`Metrics::kernel_log`].
     pub kernel_log: KernelLog,
@@ -205,6 +235,17 @@ impl Metrics {
         self.kernel_log.entries()
     }
 
+    /// Publish the latest per-kernel calibration (refit loop only).
+    pub fn set_calibration(&self, entries: Vec<CalibrationEntry>) {
+        *lock_unpoisoned(&self.calibration) = entries;
+    }
+
+    /// The latest published per-kernel calibration (empty until the first
+    /// refit or warm-load).
+    pub fn calibration(&self) -> Vec<CalibrationEntry> {
+        lock_unpoisoned(&self.calibration).clone()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
@@ -225,6 +266,7 @@ impl Metrics {
             workspace_pool_hits: self.workspace_pool_hits.load(Ordering::Relaxed),
             workspace_pool_misses: self.workspace_pool_misses.load(Ordering::Relaxed),
             kernel_observations: self.kernel_observations.load(Ordering::Relaxed),
+            model_refits: self.model_refits.load(Ordering::Relaxed),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             queue_p50_us: self.queue_wait.quantile_us(0.5),
@@ -257,6 +299,7 @@ pub struct MetricsSnapshot {
     pub workspace_pool_hits: u64,
     pub workspace_pool_misses: u64,
     pub kernel_observations: u64,
+    pub model_refits: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub queue_p50_us: u64,
@@ -343,6 +386,97 @@ mod tests {
             KERNEL_LOG_CAP as u64 + 11
         );
         assert_eq!(m.kernel_log().len(), KERNEL_LOG_CAP);
+    }
+
+    #[test]
+    fn rest_bucket_quantile_is_not_falsely_bounded() {
+        let m = Metrics::new();
+        // > 2^31 µs lands in the unbounded rest bucket: the only honest
+        // answer is u64::MAX, not the old 1 << 32 cap
+        m.observe_latency(Duration::from_micros((1u64 << 33) + 17));
+        assert_eq!(m.latency_quantile_us(0.5), u64::MAX);
+        assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
+        // a bounded sibling population still reports bounded quantiles
+        m.observe_latency(Duration::from_micros(10));
+        assert!(m.latency_quantile_us(0.25) <= 16);
+        assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn kernel_log_wrap_retains_exactly_the_newest_cap() {
+        let base = KernelObservation {
+            format: FormatKind::Csr,
+            algorithm: Algorithm::Gustavson,
+            cost_hint: 1.0,
+            ingest_cost: 0.0,
+            wall_us: 0,
+        };
+        for k in [1u64, 7, 100, KERNEL_LOG_CAP as u64 + 3] {
+            let m = Metrics::new();
+            let total = KERNEL_LOG_CAP as u64 + k;
+            for i in 0..total {
+                m.record_kernel_observation(KernelObservation { wall_us: i, ..base });
+            }
+            let mut walls: Vec<u64> = m.kernel_log().iter().map(|o| o.wall_us).collect();
+            walls.sort_unstable();
+            let want: Vec<u64> = (k..total).collect();
+            assert_eq!(
+                walls, want,
+                "after {total} records the ring must hold exactly the newest {KERNEL_LOG_CAP} (k={k})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q_and_bracket_observed_buckets() {
+        let m = Metrics::new();
+        let observed_us = [1u64, 3, 10, 100, 5_000, 250_000, (1 << 31) + 9];
+        for &us in &observed_us {
+            m.observe_latency(Duration::from_micros(us));
+        }
+        // the only values quantile_us can honestly report are the upper
+        // bounds of buckets that actually hold observations
+        let valid: Vec<u64> = observed_us
+            .iter()
+            .map(|&us| {
+                let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+                if bucket + 1 >= BUCKETS {
+                    u64::MAX
+                } else {
+                    1u64 << (bucket + 1)
+                }
+            })
+            .collect();
+        let qs = [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+        let mut prev = 0u64;
+        for q in qs {
+            let v = m.latency_quantile_us(q);
+            assert!(v >= prev, "quantile must be monotone in q: q={q} gave {v} < {prev}");
+            assert!(valid.contains(&v), "q={q} reported {v}, not an observed bucket bound");
+            prev = v;
+        }
+        // brackets the population: the low quantile is the smallest
+        // observed bound, the high one the rest bucket
+        assert_eq!(m.latency_quantile_us(0.01), 2);
+        assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn model_refits_and_calibration_surface() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().model_refits, 0);
+        assert!(m.calibration().is_empty());
+        m.model_refits.fetch_add(1, Ordering::Relaxed);
+        let entry = CalibrationEntry {
+            format: FormatKind::Csr,
+            algorithm: Algorithm::GustavsonFast,
+            scale: 2.5e-3,
+            samples: 64,
+            mean_abs_err_us: 1.5,
+        };
+        m.set_calibration(vec![entry]);
+        assert_eq!(m.snapshot().model_refits, 1);
+        assert_eq!(m.calibration(), vec![entry]);
     }
 
     #[test]

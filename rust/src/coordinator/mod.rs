@@ -24,7 +24,15 @@
 //! * [`metrics`] — lock-free counters + latency/queue-wait histograms +
 //!   coalescing stats (`prepare_builds`, `prepare_cache_hits`,
 //!   `coalesced_jobs`) + per-shard wall/queue histograms
-//!   (`shard_wall_p50_us`, `shard_queue_p50_us`, `shards_executed`).
+//!   (`shard_wall_p50_us`, `shard_queue_p50_us`, `shards_executed`) + the
+//!   learned-selection surface (`kernel_log`, `model_refits`, per-kernel
+//!   [`metrics::CalibrationEntry`] calibration errors).
+//!
+//! The learned-selection loop (`engine::learn`) rides the server: every
+//! executed job logs the scores selection ranked, a refit every
+//! [`LearnConfig::refit_every`] completed jobs republishes the fitted
+//! cost model to all workers (with hysteresis damping flapping), and the
+//! model persists to [`LearnConfig::model_path`] across restarts.
 
 pub mod client;
 pub mod error;
@@ -37,7 +45,7 @@ pub mod server;
 pub use client::{JobBuilder, JobHandle, JobStream, SpmmClient};
 pub use error::JobError;
 pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
-pub use metrics::{Histogram, KernelObservation, Metrics, MetricsSnapshot};
+pub use metrics::{CalibrationEntry, Histogram, KernelObservation, Metrics, MetricsSnapshot};
 pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};
-pub use server::{CoalesceConfig, RegistryHook, Server, ServerConfig};
+pub use server::{CoalesceConfig, LearnConfig, RegistryHook, Server, ServerConfig};

@@ -39,11 +39,12 @@ use std::time::Instant;
 use super::client::SpmmClient;
 use super::error::JobError;
 use super::job::{JobOutput, JobResult, SpmmJob};
-use super::metrics::Metrics;
+use super::metrics::{CalibrationEntry, Metrics};
 use super::router::KernelSpec;
+use crate::engine::learn::{CostModel, FittedModel, Sample, DEFAULT_MARGIN, DEFAULT_MIN_SAMPLES};
 use crate::engine::{
     shard, AccelKernel, CsrMemo, EngineError, FingerprintMemo, PreparedCache,
-    PreparedKey, Registry, SpmmKernel,
+    PreparedKey, Registry, SelectionScores, SpmmKernel,
 };
 use crate::formats::csr::Csr;
 use crate::formats::operand::MatrixOperand;
@@ -77,6 +78,37 @@ impl Default for CoalesceConfig {
 /// register — custom backends, sharded wrappers, fault injection in tests.
 pub type RegistryHook = Arc<dyn Fn(&mut Registry) + Send + Sync>;
 
+/// Learned-selection loop configuration (see `engine::learn`): how often
+/// the cost model is refitted from the kernel-observation log, how sticky
+/// selection is, and where the fitted model persists.
+#[derive(Clone, Debug)]
+pub struct LearnConfig {
+    /// Refit the shared cost model every N completed jobs (server-wide;
+    /// exactly one worker performs each refit). 0 disables refitting —
+    /// selection stays static (or warm-loaded, if `model_path` has one).
+    pub refit_every: u64,
+    /// Hysteresis margin: the fractional predicted win a challenger needs
+    /// before it displaces the incumbent kernel for a workload class.
+    pub margin: f64,
+    /// Persist the fitted model here after every refit (and load it at
+    /// startup, so a restarted server doesn't relearn from zero). Plain
+    /// versioned text; load failures log and start uncalibrated.
+    pub model_path: Option<std::path::PathBuf>,
+    /// Minimum observations per kernel before its fit is trusted.
+    pub min_samples: usize,
+}
+
+impl Default for LearnConfig {
+    fn default() -> Self {
+        LearnConfig {
+            refit_every: 0,
+            margin: DEFAULT_MARGIN,
+            model_path: None,
+            min_samples: DEFAULT_MIN_SAMPLES,
+        }
+    }
+}
+
 #[derive(Clone)]
 pub struct ServerConfig {
     pub workers: usize,
@@ -101,6 +133,8 @@ pub struct ServerConfig {
     pub coalesce: CoalesceConfig,
     /// Optional per-worker registry extension hook (see [`RegistryHook`]).
     pub registry_hook: Option<RegistryHook>,
+    /// Learned-selection loop (see [`LearnConfig`]; default: disabled).
+    pub learn: LearnConfig,
 }
 
 impl Default for ServerConfig {
@@ -115,6 +149,7 @@ impl Default for ServerConfig {
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             coalesce: CoalesceConfig::default(),
             registry_hook: None,
+            learn: LearnConfig::default(),
         }
     }
 }
@@ -131,6 +166,7 @@ impl std::fmt::Debug for ServerConfig {
             .field("artifacts_dir", &self.artifacts_dir)
             .field("coalesce", &self.coalesce)
             .field("registry_hook", &self.registry_hook.as_ref().map(|_| "…"))
+            .field("learn", &self.learn)
             .finish()
     }
 }
@@ -156,6 +192,8 @@ pub struct Server {
     closed: Arc<AtomicBool>,
     next_id: Arc<AtomicU64>,
     workers: usize,
+    learn: LearnConfig,
+    cost_model: CostModel,
     pub metrics: Arc<Metrics>,
 }
 
@@ -165,15 +203,38 @@ impl Server {
         let (tx, rx) = sync_channel::<Envelope>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
+        // one cost model shared by every worker's registry and the refit
+        // loop; warm-load the persisted fit so a restart serves calibrated
+        // from the first job (load failures start uncalibrated = static)
+        let cost_model = CostModel::new(cfg.learn.margin);
+        if let Some(path) = &cfg.learn.model_path {
+            match FittedModel::load(path) {
+                Ok(fitted) => {
+                    if !fitted.is_empty() {
+                        metrics.set_calibration(calibration_entries(&fitted));
+                        cost_model.publish(fitted);
+                    }
+                }
+                Err(e) => {
+                    if path.exists() {
+                        eprintln!(
+                            "cost-model load failed ({}): {e}; starting uncalibrated",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        }
         let mut handles = Vec::new();
         for wid in 0..cfg.workers {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
+            let model = cost_model.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("spmm-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg, rx, metrics))
+                    .spawn(move || worker_loop(wid, cfg, rx, metrics, model))
                     // lint: allow(P1) — no worker thread at startup leaves no server to return
                     .expect("spawn worker"),
             );
@@ -185,8 +246,15 @@ impl Server {
             closed: Arc::new(AtomicBool::new(false)),
             next_id: Arc::new(AtomicU64::new(0)),
             workers: cfg.workers,
+            learn: cfg.learn,
+            cost_model,
             metrics,
         }
+    }
+
+    /// The live learned-selection handle (shared with every worker).
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost_model
     }
 
     /// A cheap, cloneable, `Send` handle for submitting work — the public
@@ -230,7 +298,17 @@ impl Server {
     /// (result, drained error, or reply-channel disconnect), and jobs are
     /// counted completed/failed best-effort across the final race window.
     pub fn shutdown(self) {
-        let Server { tx, rx, handles, closed, next_id: _, workers, metrics } = self;
+        let Server {
+            tx,
+            rx,
+            handles,
+            closed,
+            next_id: _,
+            workers,
+            learn,
+            cost_model,
+            metrics,
+        } = self;
         closed.store(true, Ordering::Release);
         for _ in 0..workers {
             // try_send + liveness check instead of a blocking send: if
@@ -277,6 +355,12 @@ impl Server {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
         }
+        // final fit + persist: a short-lived server (fewer completed jobs
+        // than the refit cadence) still leaves its observations behind for
+        // the next start's warm-load
+        if learn.model_path.is_some() {
+            refit_model(&cost_model, &metrics, &learn);
+        }
     }
 }
 
@@ -297,7 +381,7 @@ fn try_send_stop(tx: &SyncSender<Envelope>) -> PillSend {
 /// Build this worker's registry: the default CPU kernel set plus — when
 /// asked and possible — the PJRT-backed block kernel. Each worker owns its
 /// registry because PJRT clients must stay thread-local.
-fn worker_registry(cfg: &ServerConfig, metrics: &Metrics) -> Registry {
+fn worker_registry(cfg: &ServerConfig, metrics: &Metrics, model: &CostModel) -> Registry {
     let mut reg = Registry::with_default_kernels(cfg.geometry, cfg.tile_workers);
     if cfg.prefer_pjrt {
         match AccelKernel::pjrt(&cfg.artifacts_dir) {
@@ -313,7 +397,55 @@ fn worker_registry(cfg: &ServerConfig, metrics: &Metrics) -> Registry {
     if let Some(hook) = &cfg.registry_hook {
         hook(&mut reg);
     }
+    // after the hook, so a hook replacing kernels can't detach the shared
+    // learned-selection handle
+    reg.set_cost_model(model.clone());
     reg
+}
+
+/// Refit the shared cost model from the kernel-observation log, surface
+/// the calibration in metrics, and persist it. A fit with nothing
+/// calibrated (too few samples per kernel, or sub-µs walls) publishes
+/// nothing — selection stays as it was.
+fn refit_model(model: &CostModel, metrics: &Metrics, learn: &LearnConfig) {
+    let log = metrics.kernel_log();
+    let mut samples: Vec<Sample> = Vec::with_capacity(log.len());
+    for obs in &log {
+        samples.push(Sample {
+            format: obs.format,
+            algorithm: obs.algorithm,
+            // exactly the score selection ranked (threaded through
+            // exec_one), so the fit's x-values match the model's inputs
+            predicted: obs.cost_hint + obs.ingest_cost,
+            wall_us: obs.wall_us,
+        });
+    }
+    let fitted = FittedModel::fit(&samples, learn.min_samples);
+    if fitted.is_empty() {
+        return;
+    }
+    metrics.set_calibration(calibration_entries(&fitted));
+    if let Some(path) = &learn.model_path {
+        if let Err(e) = fitted.save(path) {
+            eprintln!("cost-model persist failed: {e}");
+        }
+    }
+    model.publish(fitted);
+    metrics.model_refits.fetch_add(1, Ordering::Relaxed);
+}
+
+fn calibration_entries(fitted: &FittedModel) -> Vec<CalibrationEntry> {
+    let mut out = Vec::new();
+    for ((format, algorithm), cal) in fitted.entries() {
+        out.push(CalibrationEntry {
+            format: *format,
+            algorithm: *algorithm,
+            scale: cal.scale,
+            samples: cal.samples,
+            mean_abs_err_us: cal.mean_abs_err_us,
+        });
+    }
+    out
 }
 
 fn worker_loop(
@@ -321,8 +453,9 @@ fn worker_loop(
     cfg: ServerConfig,
     rx: Arc<Mutex<Receiver<Envelope>>>,
     metrics: Arc<Metrics>,
+    model: CostModel,
 ) {
-    let registry = worker_registry(&cfg, &metrics);
+    let registry = worker_registry(&cfg, &metrics, &model);
     let cap = if cfg.coalesce.enabled {
         cfg.coalesce.cache_capacity
     } else {
@@ -384,6 +517,7 @@ fn worker_loop(
             &mut csr_memo,
             batch,
             &metrics,
+            &model,
         );
         if saw_stop {
             return;
@@ -402,24 +536,38 @@ struct PrepGroup {
     /// adoption in `prepare_operand`).
     native: MatrixOperand,
     b_csr: Arc<Csr>,
-    envs: Vec<(JobEnvelope, Arc<Csr>)>,
+    envs: Vec<(JobEnvelope, Arc<Csr>, SelectionScores)>,
 }
 
-/// Resolve the kernel for `job` (per-job override > server spec). Auto
-/// selection is operand-aware: conversion cost is charged from `B`'s
-/// native arrival format.
+/// Resolve the kernel for `job` (per-job override > server spec), plus the
+/// exact scores selection ranked for it. Auto selection is operand-aware:
+/// conversion cost is charged from `B`'s native arrival format. The scores
+/// are computed here — once, at resolve time — and threaded through to the
+/// `KernelObservation`: recomputing them at execute time can disagree with
+/// what selection compared (a batch-mate's negotiated InCRS sibling
+/// executes the group, native-operand credits differ per job), which would
+/// hand the fitter wrong x-values.
 fn resolve_kernel(
     registry: &Registry,
     spec: KernelSpec,
     job: &SpmmJob,
     a: &Csr,
     b: &Csr,
-) -> Result<Arc<dyn SpmmKernel>, EngineError> {
+) -> Result<(Arc<dyn SpmmKernel>, SelectionScores), EngineError> {
+    let fixed = |f, alg| {
+        registry.resolve_or_err(f, alg).map(|k| {
+            let scores = SelectionScores {
+                cost_hint: k.cost_hint(a, b).total(),
+                ingest_cost: k.ingest_cost(b, Some(&job.b)),
+            };
+            (k, scores)
+        })
+    };
     match job.opts.kernel {
-        Some((f, alg)) => registry.resolve_or_err(f, alg),
+        Some((f, alg)) => fixed(f, alg),
         None => match spec {
-            KernelSpec::Fixed(f, alg) => registry.resolve_or_err(f, alg),
-            KernelSpec::Auto => registry.select_native_or_err(a, b, Some(&job.b)),
+            KernelSpec::Fixed(f, alg) => fixed(f, alg),
+            KernelSpec::Auto => registry.select_native_scored_or_err(a, b, Some(&job.b)),
         },
     }
 }
@@ -440,6 +588,7 @@ fn reply_err(env: JobEnvelope, err: JobError, metrics: &Metrics, batch_start: In
 /// (memoized by source identity; conversions are metered), group by (B
 /// fingerprint, kernel), prepare once per group (LRU-cached across
 /// batches), execute each job.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     registry: &Registry,
     cfg: &ServerConfig,
@@ -448,6 +597,7 @@ fn run_batch(
     csr_memo: &mut CsrMemo,
     batch: Vec<JobEnvelope>,
     metrics: &Metrics,
+    model: &CostModel,
 ) {
     // service latency is dequeue -> response ready: every job in this
     // batch was dequeued "now", so each one's latency (observed at reply
@@ -494,8 +644,9 @@ fn run_batch(
         // before it reaches any kernel (no-op otherwise)
         crate::formats::strict_check("server ingest(A)", || a_csr.validate_invariants());
         crate::formats::strict_check("server ingest(B)", || b_csr.validate_invariants());
-        let kernel = match resolve_kernel(registry, cfg.kernel, &env.job, &a_csr, &b_csr) {
-            Ok(k) => k,
+        let (kernel, scores) = match resolve_kernel(registry, cfg.kernel, &env.job, &a_csr, &b_csr)
+        {
+            Ok(pair) => pair,
             Err(e) => {
                 reply_err(env, e.into(), metrics, batch_start);
                 continue;
@@ -520,7 +671,7 @@ fn run_batch(
             algorithm: kernel.algorithm(),
         };
         match groups.iter_mut().find(|g| g.key == key) {
-            Some(g) => g.envs.push((env, a_csr)),
+            Some(g) => g.envs.push((env, a_csr, scores)),
             None => {
                 let native = env.job.b.clone();
                 groups.push(PrepGroup {
@@ -528,7 +679,7 @@ fn run_batch(
                     kernel,
                     native,
                     b_csr,
-                    envs: vec![(env, a_csr)],
+                    envs: vec![(env, a_csr, scores)],
                 });
             }
         }
@@ -554,7 +705,7 @@ fn run_batch(
             Ok(p) => p,
             Err(e) => {
                 let err = JobError::from(e);
-                for (env, _) in envs {
+                for (env, _, _) in envs {
                     reply_err(env, err.clone(), metrics, batch_start);
                 }
                 continue;
@@ -572,22 +723,36 @@ fn run_batch(
                 .fetch_add(envs.len() as u64 - 1, Ordering::Relaxed);
         }
 
-        for (env, a_csr) in envs {
+        for (env, a_csr, scores) in envs {
             let start = Instant::now();
-            let result =
-                exec_one(kernel.as_ref(), &env.job, &a_csr, &b_csr, &prepared, cfg, metrics);
+            let result = exec_one(
+                kernel.as_ref(),
+                &env.job,
+                &a_csr,
+                &b_csr,
+                &prepared,
+                scores,
+                cfg,
+                metrics,
+            );
             metrics
                 .busy_ns
                 .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
             match &result {
                 Ok(out) => {
-                    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    let done = metrics.jobs_completed.fetch_add(1, Ordering::Relaxed) + 1;
                     metrics
                         .dispatches
                         .fetch_add(out.report.dispatches, Ordering::Relaxed);
                     metrics
                         .real_pairs
                         .fetch_add(out.report.real_pairs, Ordering::Relaxed);
+                    // refit cadence rides the shared completion counter:
+                    // fetch_add hands each job a unique count, so exactly
+                    // one worker performs each scheduled refit
+                    if cfg.learn.refit_every > 0 && done % cfg.learn.refit_every == 0 {
+                        refit_model(model, metrics, &cfg.learn);
+                    }
                 }
                 Err(_) => {
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -608,12 +773,14 @@ fn run_batch(
 /// bit-identical; see `engine::shard`). A lost shard worker (panic)
 /// surfaces as [`JobError::ExecFailed`] and the server worker keeps
 /// serving.
+#[allow(clippy::too_many_arguments)]
 fn exec_one(
     kernel: &dyn SpmmKernel,
     job: &SpmmJob,
     a_csr: &Arc<Csr>,
     b_csr: &Arc<Csr>,
     prepared: &crate::engine::PreparedB,
+    scores: SelectionScores,
     cfg: &ServerConfig,
     metrics: &Metrics,
 ) -> Result<JobOutput, JobError> {
@@ -661,23 +828,34 @@ fn exec_one(
         let out = kernel.execute(a_csr, prepared)?;
         (out.c, out.stats, 1)
     };
-    // kernel-selection learning groundwork: log what the cost model
-    // predicted next to the wall time the kernel actually took (execute
-    // only — verify/render below is not the kernel's cost)
+    // learned-selection datapoint: the *selection-time* scores (threaded
+    // from resolve_kernel) next to the wall time the kernel actually took
+    // (execute only — verify/render below is not the kernel's cost).
+    // Never recomputed here: the group kernel × this job's operands can
+    // score differently from what selection ranked, and the fitter must
+    // see the model's own x-values.
     metrics.record_kernel_observation(crate::coordinator::metrics::KernelObservation {
         format: kernel.format(),
         algorithm: kernel.algorithm(),
-        cost_hint: kernel.cost_hint(a_csr, b_csr).total(),
-        ingest_cost: kernel.ingest_cost(b_csr, Some(&job.b)),
+        cost_hint: scores.cost_hint,
+        ingest_cost: scores.ingest_cost,
         wall_us: start.elapsed().as_micros() as u64,
     });
     if let (Some((h0, m0)), Some((h1, m1))) = (pool_before, pool_counts(prepared)) {
+        // only this job's execute moves the pool counters, so they are
+        // monotone here; strict builds verify that, release builds degrade
+        // a regression to a zero delta instead of a panicking underflow
+        #[cfg(feature = "strict-invariants")]
+        debug_assert!(
+            h1 >= h0 && m1 >= m0,
+            "workspace pool counters regressed: hits {h0}->{h1}, misses {m0}->{m1}"
+        );
         metrics
             .workspace_pool_hits
-            .fetch_add(h1 - h0, Ordering::Relaxed);
+            .fetch_add(h1.saturating_sub(h0), Ordering::Relaxed);
         metrics
             .workspace_pool_misses
-            .fetch_add(m1 - m0, Ordering::Relaxed);
+            .fetch_add(m1.saturating_sub(m0), Ordering::Relaxed);
     }
     let max_err = if job.opts.verify {
         let oracle = crate::spmm::dense::multiply(a_csr, b_csr);
@@ -1080,5 +1258,121 @@ mod tests {
             assert_eq!(obs.ingest_cost, 0.0, "{obs:?}");
         }
         s.shutdown();
+    }
+
+    #[test]
+    fn observation_records_selection_time_scores_for_native_csc_jobs() {
+        let geometry = Geometry { block: 8, pairs: 16, slots: 8 };
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            kernel: KernelSpec::Auto,
+            geometry,
+            ..Default::default()
+        });
+        let client = s.client();
+        let a = Arc::new(uniform(32, 48, 0.05, 70));
+        let b = Arc::new(uniform(48, 40, 0.05, 71));
+        let b_csc = MatrixOperand::from(Arc::clone(&b))
+            .convert(FormatKind::Csc)
+            .unwrap();
+        // job 1: explicit outer kernel on the native-CSC operand — the
+        // charged ingest is the CSC direct-transpose tier, computed at
+        // resolve time and recorded verbatim
+        let out = client
+            .job(MatrixOperand::from(Arc::clone(&a)), b_csc.clone())
+            .kernel(FormatKind::Csc, Algorithm::OuterProduct)
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.backend, "outer");
+        // job 2: auto selection on the same native-CSC operand
+        let out2 = client
+            .job(MatrixOperand::from(Arc::clone(&a)), b_csc.clone())
+            .submit()
+            .unwrap()
+            .wait()
+            .unwrap();
+        let log = s.metrics.kernel_log();
+        assert_eq!(log.len(), 2);
+        // recompute what resolve-time selection scored, on an identically
+        // constructed registry: the observation must match *exactly*
+        let reg = Registry::with_default_kernels(geometry, 1);
+        let b_ing = b_csc.to_csr().unwrap();
+        let k = reg.resolve(FormatKind::Csc, Algorithm::OuterProduct).unwrap();
+        let want_hint = k.cost_hint(&a, &b_ing).total();
+        let want_ingest = k.ingest_cost(&b_ing, Some(&b_csc));
+        assert!(want_ingest > 0.0, "CSC arrival must be charged its transpose");
+        assert_eq!(log[0].cost_hint, want_hint, "{:?}", log[0]);
+        assert_eq!(log[0].ingest_cost, want_ingest, "{:?}", log[0]);
+        let (want_k, want_scores) = reg.select_native_scored(&a, &b_ing, Some(&b_csc)).unwrap();
+        assert_eq!(out2.backend, want_k.name());
+        assert_eq!(
+            (log[1].format, log[1].algorithm),
+            (want_k.format(), want_k.algorithm())
+        );
+        assert_eq!(log[1].cost_hint, want_scores.cost_hint, "{:?}", log[1]);
+        assert_eq!(log[1].ingest_cost, want_scores.ingest_cost, "{:?}", log[1]);
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn refit_cadence_fits_persists_and_warm_loads() {
+        let dir = std::env::temp_dir().join(format!("spmm_learn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.txt");
+        let _ = std::fs::remove_file(&path);
+        let cfg = ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            kernel: KernelSpec::Auto,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            learn: LearnConfig {
+                refit_every: 4,
+                min_samples: 2,
+                model_path: Some(path.clone()),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = Server::start(cfg.clone());
+        // big enough that execute walls are comfortably over 1µs, so the
+        // fit has usable y-values
+        let a = Arc::new(uniform(128, 128, 0.3, 90));
+        let b = Arc::new(uniform(128, 96, 0.3, 91));
+        for i in 0..12 {
+            let rx = s.submit(SpmmJob::new(i, a.clone(), b.clone()));
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let snap = s.metrics.snapshot();
+        assert!(snap.model_refits >= 1, "{snap:?}");
+        let cal = s.metrics.calibration();
+        assert!(!cal.is_empty());
+        for c in &cal {
+            assert!(c.scale.is_finite() && c.scale > 0.0, "{c:?}");
+            assert!(c.samples >= 2, "{c:?}");
+        }
+        assert!(path.exists(), "refit must persist the model");
+        s.shutdown();
+        // restart warm: the persisted model loads bit-exactly and the
+        // server serves calibrated from the first job
+        let s2 = Server::start(ServerConfig {
+            learn: LearnConfig {
+                refit_every: 0,
+                model_path: Some(path.clone()),
+                ..Default::default()
+            },
+            ..cfg
+        });
+        let warm = s2.cost_model().fitted();
+        assert!(!warm.is_empty(), "warm-load failed");
+        assert_eq!(warm, crate::engine::FittedModel::load(&path).unwrap());
+        assert!(!s2.metrics.calibration().is_empty(), "warm-load must surface calibration");
+        let rx = s2.submit(SpmmJob::new(99, a.clone(), b.clone()));
+        assert!(rx.recv().unwrap().result.is_ok());
+        s2.shutdown();
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,588 @@
+//! Learned kernel selection: fit per-`(FormatKind, Algorithm)` scale
+//! constants from serving observations and feed them back into
+//! [`Registry::select_native`](super::Registry::select_native) live.
+//!
+//! The registry's static hints (`cost_hint + ingest_cost`) rank kernels in
+//! *model units* — products touched, words moved — with hand-tuned factors
+//! (the fast Gustavson 0.5× vectorization discount is the canonical
+//! example). Every executed job logs the hint it was ranked on next to the
+//! wall time it actually took (`Metrics::kernel_log`); this module closes
+//! the loop:
+//!
+//! * [`FittedModel::fit`] — per-kernel least squares through the origin:
+//!   `scale = Σ(x·y) / Σ(x²)` over `(x = hint, y = wall_us)`, the
+//!   closed-form minimizer of `Σ(scale·x − y)²`. One constant per kernel
+//!   is exactly the ROADMAP's "fit the constants" item: it converts each
+//!   kernel's private cost units into commensurable microseconds, so
+//!   selection compares predicted *time* instead of incomparable unit
+//!   systems.
+//! * [`CostModel`] — the live handle the registry consults. A refit
+//!   [`publish`](CostModel::publish)es atomically; selection prices every
+//!   candidate only when *all* of them are calibrated (otherwise it falls
+//!   back to the static ranking, bit-for-bit the uncalibrated behavior).
+//! * Hysteresis — [`CostModel::choose`] remembers the incumbent winner per
+//!   coarse workload class and only switches when the challenger's
+//!   predicted time beats the incumbent's by more than a configurable
+//!   margin. Near-tied kernels therefore never flap across refits on
+//!   timing noise.
+//! * Persistence — [`FittedModel::to_text`]/[`from_text`](FittedModel::from_text)
+//!   round-trip the model through a versioned plain-text file (f64 fields
+//!   serialized as IEEE-754 bit patterns in hex, so the round-trip is
+//!   bit-exact); a restarted server warm-loads instead of relearning from
+//!   zero.
+//!
+//! Selection may change *which* kernel runs, never *what* it computes:
+//! every registered kernel is oracle-checked, so routing is a pure
+//! performance decision (`tests/prop_learn.rs` locks this).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::formats::traits::{FormatKind, SparseMatrix};
+use crate::util::lock_unpoisoned;
+
+use super::kernel::Algorithm;
+use super::registry::KernelKey;
+
+/// First line of every persisted model file. Bumped when the record layout
+/// changes; a mismatched file is rejected, never misread.
+pub const MODEL_FILE_VERSION: &str = "spmm-accel-cost-model v1";
+
+/// Default hysteresis margin: a challenger must predict at least this
+/// fractional win over the incumbent to take over a workload class.
+pub const DEFAULT_MARGIN: f64 = 0.10;
+
+/// Default minimum observations per kernel before a fit is trusted.
+pub const DEFAULT_MIN_SAMPLES: usize = 8;
+
+/// Incumbent workload classes remembered before the hysteresis table is
+/// reset (bounds memory under adversarial shape churn).
+const MAX_INCUMBENT_CLASSES: usize = 64;
+
+/// One fitting datapoint: what selection predicted for a kernel vs the
+/// wall time it measured. The coordinator derives these from
+/// `KernelObservation`s (`predicted = cost_hint + ingest_cost` — exactly
+/// the score `select_native` ranked).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    pub format: FormatKind,
+    pub algorithm: Algorithm,
+    /// The ranked score, in the kernel's own cost units.
+    pub predicted: f64,
+    /// Measured execute wall time, microseconds.
+    pub wall_us: u64,
+}
+
+/// One kernel's fitted constant: `scale` converts its raw score into
+/// predicted microseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Calibration {
+    /// Microseconds per raw cost unit (always finite and positive).
+    pub scale: f64,
+    /// Observations the fit used.
+    pub samples: u64,
+    /// Mean |predicted − measured| over those observations, microseconds —
+    /// the per-kernel calibration error surfaced in metrics.
+    pub mean_abs_err_us: f64,
+}
+
+/// Model-file I/O and parse failures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelError {
+    Io(String),
+    Parse { line: usize, detail: String },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::Io(detail) => write!(f, "model file io: {detail}"),
+            ModelError::Parse { line, detail } => {
+                write!(f, "model file parse (line {line}): {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// A fitted set of per-kernel calibrations. Immutable snapshot semantics:
+/// refits build a fresh model and [`CostModel::publish`] swaps it in.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FittedModel {
+    entries: BTreeMap<KernelKey, Calibration>,
+}
+
+impl FittedModel {
+    pub fn new() -> FittedModel {
+        FittedModel::default()
+    }
+
+    /// Least squares through the origin, per kernel key: the `scale`
+    /// minimizing `Σ(scale·x − y)²` is `Σ(x·y) / Σ(x²)`. Samples with a
+    /// non-finite or non-positive predicted score are skipped (a score of
+    /// zero carries no information about the constant), and a key is only
+    /// calibrated once it has `min_samples` usable observations *and* the
+    /// fitted scale is finite and positive — all-zero walls (sub-µs
+    /// kernels below timer resolution) therefore stay uncalibrated rather
+    /// than predicting that everything is free.
+    pub fn fit(samples: &[Sample], min_samples: usize) -> FittedModel {
+        struct Acc {
+            sum_xy: f64,
+            sum_xx: f64,
+            n: u64,
+        }
+        let mut accs: BTreeMap<KernelKey, Acc> = BTreeMap::new();
+        // explicit accumulation order: samples in slice order (D2)
+        for s in samples {
+            if !s.predicted.is_finite() || s.predicted <= 0.0 {
+                continue;
+            }
+            let acc = accs
+                .entry((s.format, s.algorithm))
+                .or_insert_with(|| Acc { sum_xy: 0.0, sum_xx: 0.0, n: 0 });
+            acc.sum_xy += s.predicted * s.wall_us as f64;
+            acc.sum_xx += s.predicted * s.predicted;
+            acc.n += 1;
+        }
+        let mut entries = BTreeMap::new();
+        for (key, acc) in &accs {
+            if acc.n < min_samples.max(1) as u64 || acc.sum_xx <= 0.0 {
+                continue;
+            }
+            let scale = acc.sum_xy / acc.sum_xx;
+            if !scale.is_finite() || scale <= 0.0 {
+                continue;
+            }
+            let mut abs_err = 0.0f64;
+            for s in samples {
+                if (s.format, s.algorithm) != *key
+                    || !s.predicted.is_finite()
+                    || s.predicted <= 0.0
+                {
+                    continue;
+                }
+                abs_err += (scale * s.predicted - s.wall_us as f64).abs();
+            }
+            entries.insert(
+                *key,
+                Calibration {
+                    scale,
+                    samples: acc.n,
+                    mean_abs_err_us: abs_err / acc.n as f64,
+                },
+            );
+        }
+        FittedModel { entries }
+    }
+
+    pub fn get(&self, key: KernelKey) -> Option<Calibration> {
+        self.entries.get(&key).copied()
+    }
+
+    /// Insert (or replace) one calibration — test and tooling surface; the
+    /// serving path builds models through [`FittedModel::fit`].
+    pub fn insert(&mut self, key: KernelKey, cal: Calibration) {
+        self.entries.insert(key, cal);
+    }
+
+    /// Calibrated entries in key order.
+    pub fn entries(&self) -> impl Iterator<Item = (&KernelKey, &Calibration)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Predicted wall time (µs) for a kernel's raw score, if calibrated.
+    pub fn predict_us(&self, key: KernelKey, raw_score: f64) -> Option<f64> {
+        self.get(key).map(|c| c.scale * raw_score)
+    }
+
+    /// Versioned plain-text rendering. Each record stores its f64 fields
+    /// as IEEE-754 bit patterns in hex so [`FittedModel::from_text`]
+    /// reproduces them bit-exactly; the trailing `#` comment is a
+    /// human-readable gloss the parser ignores.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(MODEL_FILE_VERSION);
+        out.push('\n');
+        out.push_str("# <format> <algorithm> <scale:f64-bits-hex> <samples> <err:f64-bits-hex>\n");
+        for ((format, algorithm), c) in &self.entries {
+            out.push_str(&format!(
+                "{} {} {:016x} {} {:016x} # scale~{:.3e} us/unit, err~{:.1} us\n",
+                format.name(),
+                algorithm.name(),
+                c.scale.to_bits(),
+                c.samples,
+                c.mean_abs_err_us.to_bits(),
+                c.scale,
+                c.mean_abs_err_us,
+            ));
+        }
+        out
+    }
+
+    /// Parse [`FittedModel::to_text`] output. The first non-empty,
+    /// non-comment line must be [`MODEL_FILE_VERSION`]; every malformed
+    /// record is a typed error (a stale or corrupted model is rejected
+    /// whole, never half-loaded).
+    pub fn from_text(text: &str) -> Result<FittedModel, ModelError> {
+        let mut entries = BTreeMap::new();
+        let mut version_seen = false;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = match raw.split('#').next() {
+                Some(l) => l.trim(),
+                None => "",
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if !version_seen {
+                if line != MODEL_FILE_VERSION {
+                    return Err(ModelError::Parse {
+                        line: lineno,
+                        detail: format!("expected version header `{MODEL_FILE_VERSION}`, got `{line}`"),
+                    });
+                }
+                version_seen = true;
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() != 5 {
+                return Err(ModelError::Parse {
+                    line: lineno,
+                    detail: format!(
+                        "expected `<format> <algorithm> <scale> <samples> <err>`, got {} fields",
+                        toks.len()
+                    ),
+                });
+            }
+            let parse_err = |detail: String| ModelError::Parse { line: lineno, detail };
+            let format = FormatKind::parse(toks[0]).map_err(|e| parse_err(e.to_string()))?;
+            let algorithm = Algorithm::parse(toks[1]).map_err(|e| parse_err(e.to_string()))?;
+            let scale = u64::from_str_radix(toks[2], 16)
+                .map(f64::from_bits)
+                .map_err(|e| parse_err(format!("scale bits: {e}")))?;
+            let samples = toks[3]
+                .parse::<u64>()
+                .map_err(|e| parse_err(format!("samples: {e}")))?;
+            let mean_abs_err_us = u64::from_str_radix(toks[4], 16)
+                .map(f64::from_bits)
+                .map_err(|e| parse_err(format!("err bits: {e}")))?;
+            entries.insert(
+                (format, algorithm),
+                Calibration { scale, samples, mean_abs_err_us },
+            );
+        }
+        if !version_seen {
+            return Err(ModelError::Parse {
+                line: 1,
+                detail: format!("empty model file (expected `{MODEL_FILE_VERSION}`)"),
+            });
+        }
+        Ok(FittedModel { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        std::fs::write(path, self.to_text())
+            .map_err(|e| ModelError::Io(format!("{}: {e}", path.display())))
+    }
+
+    pub fn load(path: &Path) -> Result<FittedModel, ModelError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ModelError::Io(format!("{}: {e}", path.display())))?;
+        FittedModel::from_text(&text)
+    }
+}
+
+#[derive(Debug, Default)]
+struct CostModelState {
+    fitted: FittedModel,
+    /// Workload class → the kernel currently winning it (hysteresis
+    /// memory; survives refits, which is what damps flapping).
+    incumbents: BTreeMap<u64, KernelKey>,
+    publishes: u64,
+    switches: u64,
+}
+
+/// The live fitted-selection handle: cloneable, shared between the refit
+/// loop (publisher) and every per-worker registry (consumers). One short
+/// lock per selection and per refit — off every per-row hot path.
+#[derive(Clone, Debug, Default)]
+pub struct CostModel {
+    state: Arc<Mutex<CostModelState>>,
+    margin: f64,
+}
+
+impl CostModel {
+    /// `margin` is the hysteresis knob: the fractional predicted win a
+    /// challenger needs before it displaces an incumbent (clamped to
+    /// ≥ 0; 0 = switch on any strict improvement).
+    pub fn new(margin: f64) -> CostModel {
+        CostModel {
+            state: Arc::new(Mutex::new(CostModelState::default())),
+            margin: margin.max(0.0),
+        }
+    }
+
+    pub fn margin(&self) -> f64 {
+        self.margin
+    }
+
+    /// Swap in a freshly fitted model. Incumbents are kept: a refit alone
+    /// never changes selection unless the new predictions clear the
+    /// hysteresis margin.
+    pub fn publish(&self, fitted: FittedModel) {
+        let mut state = lock_unpoisoned(&self.state);
+        state.fitted = fitted;
+        state.publishes += 1;
+    }
+
+    /// Snapshot of the current fitted model.
+    pub fn fitted(&self) -> FittedModel {
+        lock_unpoisoned(&self.state).fitted.clone()
+    }
+
+    /// Models published so far (warm-load included).
+    pub fn publishes(&self) -> u64 {
+        lock_unpoisoned(&self.state).publishes
+    }
+
+    /// Incumbent changes so far — the flap count hysteresis bounds.
+    pub fn switches(&self) -> u64 {
+        lock_unpoisoned(&self.state).switches
+    }
+
+    /// Pick among `scored` candidates (`(key, NaN-clamped raw score)`) for
+    /// one workload class. Returns the chosen index only when every
+    /// candidate is calibrated — partial calibration falls back to the
+    /// caller's static ranking (`None`), so a half-learned model can never
+    /// compare fitted µs against unfitted model units.
+    pub fn choose(&self, class: u64, scored: &[(KernelKey, f64)]) -> Option<usize> {
+        if scored.is_empty() {
+            return None;
+        }
+        let mut state = lock_unpoisoned(&self.state);
+        if state.fitted.is_empty() {
+            return None;
+        }
+        let mut predicted: Vec<f64> = Vec::with_capacity(scored.len());
+        for (key, raw) in scored {
+            let cal = state.fitted.get(*key)?;
+            let p = cal.scale * raw;
+            predicted.push(if p.is_nan() { f64::INFINITY } else { p });
+        }
+        // same argmin convention as the registry's static path (min_by:
+        // last minimum wins ties), total-ordered and deterministic
+        let best = match (0..predicted.len())
+            .min_by(|&x, &y| predicted[x].total_cmp(&predicted[y]))
+        {
+            Some(i) => i,
+            None => return None,
+        };
+        let chosen = match state.incumbents.get(&class).copied() {
+            Some(inc_key) if inc_key != scored[best].0 => {
+                // cheapest candidate still carrying the incumbent key (a
+                // negotiated sibling competes under its parent's key)
+                let mut inc_best: Option<usize> = None;
+                for (i, (key, _)) in scored.iter().enumerate() {
+                    let better = match inc_best {
+                        Some(j) => predicted[i].total_cmp(&predicted[j]).is_lt(),
+                        None => true,
+                    };
+                    if *key == inc_key && better {
+                        inc_best = Some(i);
+                    }
+                }
+                match inc_best {
+                    // incumbent left the candidate set: hand over
+                    None => best,
+                    Some(i) => {
+                        let win_bar = predicted[i] * (1.0 - self.margin);
+                        if predicted[best].total_cmp(&win_bar).is_lt() {
+                            best
+                        } else {
+                            i
+                        }
+                    }
+                }
+            }
+            _ => best,
+        };
+        let chosen_key = scored[chosen].0;
+        if state.incumbents.get(&class) != Some(&chosen_key) {
+            if state.incumbents.contains_key(&class) {
+                state.switches += 1;
+            } else if state.incumbents.len() >= MAX_INCUMBENT_CLASSES {
+                state.incumbents.clear();
+            }
+            state.incumbents.insert(class, chosen_key);
+        }
+        Some(chosen)
+    }
+}
+
+/// Coarse workload-class signature for hysteresis: log2 buckets of the
+/// operand dimensions and populations, packed. Workloads in the same
+/// bucket share one incumbent; a different shape regime gets its own.
+pub fn workload_class(a: &crate::formats::csr::Csr, b: &crate::formats::csr::Csr) -> u64 {
+    fn lg(x: usize) -> u64 {
+        (usize::BITS - x.max(1).leading_zeros()) as u64
+    }
+    (lg(a.rows()) << 24) | (lg(a.nnz()) << 16) | (lg(b.cols()) << 8) | lg(b.nnz())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key_fast() -> KernelKey {
+        (FormatKind::Csr, Algorithm::GustavsonFast)
+    }
+
+    fn key_tiled() -> KernelKey {
+        (FormatKind::Csr, Algorithm::Tiled)
+    }
+
+    fn planted(key: KernelKey, scale: f64, n: usize) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for i in 0..n {
+            let x = 1.0e4 * (i + 1) as f64;
+            out.push(Sample {
+                format: key.0,
+                algorithm: key.1,
+                predicted: x,
+                wall_us: (scale * x).round() as u64,
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_a_planted_constant() {
+        let samples = planted(key_fast(), 2.5e-3, 32);
+        let m = FittedModel::fit(&samples, 8);
+        let cal = m.get(key_fast()).unwrap();
+        assert!((cal.scale - 2.5e-3).abs() / 2.5e-3 < 0.02, "{cal:?}");
+        assert_eq!(cal.samples, 32);
+        assert!(cal.mean_abs_err_us < 1.0, "{cal:?}");
+    }
+
+    #[test]
+    fn fit_skips_sparse_degenerate_and_unusable_keys() {
+        let mut samples = planted(key_fast(), 1.0e-3, 4); // below min_samples
+        samples.extend(planted(key_tiled(), 0.0, 16)); // all-zero walls
+        samples.push(Sample {
+            format: FormatKind::Csc,
+            algorithm: Algorithm::OuterProduct,
+            predicted: f64::NAN,
+            wall_us: 10,
+        });
+        let m = FittedModel::fit(&samples, 8);
+        assert!(m.is_empty(), "{m:?}");
+    }
+
+    #[test]
+    fn text_round_trip_is_bit_exact() {
+        let mut m = FittedModel::new();
+        m.insert(
+            key_fast(),
+            Calibration { scale: 1.0 / 3.0, samples: 17, mean_abs_err_us: 0.1 + 0.2 },
+        );
+        m.insert(
+            (FormatKind::Csc, Algorithm::OuterProduct),
+            Calibration { scale: 7.25e-9, samples: 4096, mean_abs_err_us: 1234.5 },
+        );
+        let text = m.to_text();
+        let back = FittedModel::from_text(&text).unwrap();
+        assert_eq!(back, m);
+        for (key, cal) in m.entries() {
+            let b = back.get(*key).unwrap();
+            assert_eq!(b.scale.to_bits(), cal.scale.to_bits());
+            assert_eq!(b.mean_abs_err_us.to_bits(), cal.mean_abs_err_us.to_bits());
+        }
+    }
+
+    #[test]
+    fn malformed_model_files_are_rejected_whole() {
+        assert!(matches!(
+            FittedModel::from_text(""),
+            Err(ModelError::Parse { line: 1, .. })
+        ));
+        assert!(FittedModel::from_text("some-other-header v9\n").is_err());
+        let truncated = format!("{MODEL_FILE_VERSION}\ncsr gustavson-fast 3f00\n");
+        assert!(FittedModel::from_text(&truncated).is_err());
+        let bad_alg = format!("{MODEL_FILE_VERSION}\ncsr warp 0 1 0\n");
+        assert!(FittedModel::from_text(&bad_alg).is_err());
+        // comments and blank lines are fine
+        let ok = format!("{MODEL_FILE_VERSION}\n\n# a comment\n");
+        assert_eq!(FittedModel::from_text(&ok).unwrap(), FittedModel::new());
+    }
+
+    #[test]
+    fn choose_requires_full_calibration() {
+        let model = CostModel::new(0.1);
+        let scored = vec![(key_fast(), 100.0), (key_tiled(), 50.0)];
+        // empty model: static fallback
+        assert_eq!(model.choose(1, &scored), None);
+        let mut m = FittedModel::new();
+        m.insert(key_fast(), Calibration { scale: 1.0, samples: 8, mean_abs_err_us: 0.0 });
+        model.publish(m.clone());
+        // partially calibrated: still static
+        assert_eq!(model.choose(1, &scored), None);
+        m.insert(key_tiled(), Calibration { scale: 1.0, samples: 8, mean_abs_err_us: 0.0 });
+        model.publish(m);
+        assert_eq!(model.choose(1, &scored), Some(1));
+    }
+
+    #[test]
+    fn hysteresis_keeps_the_incumbent_inside_the_margin() {
+        let model = CostModel::new(0.25);
+        let mut m = FittedModel::new();
+        m.insert(key_fast(), Calibration { scale: 1.0, samples: 8, mean_abs_err_us: 0.0 });
+        m.insert(key_tiled(), Calibration { scale: 1.0, samples: 8, mean_abs_err_us: 0.0 });
+        model.publish(m.clone());
+        // fast wins class 7 and becomes incumbent
+        assert_eq!(model.choose(7, &[(key_fast(), 10.0), (key_tiled(), 20.0)]), Some(0));
+        // refit: tiled now predicts 10% cheaper — inside the 25% margin,
+        // the incumbent holds, across repeated selections and republishes
+        for _ in 0..5 {
+            model.publish(m.clone());
+            assert_eq!(
+                model.choose(7, &[(key_fast(), 10.0), (key_tiled(), 9.0)]),
+                Some(0)
+            );
+        }
+        assert_eq!(model.switches(), 0);
+        // a 50% win clears the margin: exactly one switch, then stable
+        for _ in 0..5 {
+            assert_eq!(
+                model.choose(7, &[(key_fast(), 10.0), (key_tiled(), 5.0)]),
+                Some(1)
+            );
+        }
+        assert_eq!(model.switches(), 1);
+        // a different workload class has its own incumbent
+        assert_eq!(model.choose(8, &[(key_fast(), 10.0), (key_tiled(), 9.0)]), Some(1));
+        assert_eq!(model.switches(), 1);
+    }
+
+    #[test]
+    fn workload_class_buckets_by_magnitude() {
+        use crate::datasets::synth::uniform;
+        let a1 = uniform(64, 64, 0.1, 1);
+        let a2 = uniform(64, 64, 0.1, 2); // same regime, different values
+        let b = uniform(64, 32, 0.1, 3);
+        assert_eq!(workload_class(&a1, &b), workload_class(&a2, &b));
+        let big = uniform(512, 64, 0.1, 4);
+        assert_ne!(workload_class(&a1, &b), workload_class(&big, &b));
+    }
+}

@@ -23,6 +23,11 @@
 //!   cost-hint-based selection ([`Registry::select`]); the typed variants
 //!   ([`Registry::resolve_or_err`] / [`Registry::select_or_err`]) return
 //!   [`EngineError`] for serving-path callers;
+//! * [`learn`] — the learned-selection loop: least-squares calibration of
+//!   each kernel's cost constants from serving observations
+//!   ([`learn::FittedModel`]), fed back into selection live through a
+//!   [`learn::CostModel`] handle with hysteresis, persisted to a
+//!   versioned plain-text model file;
 //! * [`EngineError`] — the typed failure surface (kernel unavailable,
 //!   shape mismatch, backend failure) every kernel and registry path
 //!   reports; the coordinator lifts it into `JobError`;
@@ -66,6 +71,7 @@ pub mod accel;
 pub mod error;
 pub mod kernel;
 pub mod kernels;
+pub mod learn;
 pub mod prepared;
 pub mod registry;
 pub mod shard;
@@ -80,7 +86,8 @@ pub use kernel::{
 pub use kernels::{
     DenseOracleKernel, GustavsonFastKernel, GustavsonKernel, InnerKernel, OuterKernel, TiledKernel,
 };
+pub use learn::{Calibration, CostModel, FittedModel, ModelError, Sample};
 pub use prepared::{fingerprint_csr, CsrMemo, FingerprintMemo, PreparedCache, PreparedKey};
-pub use registry::{KernelKey, Registry};
+pub use registry::{KernelKey, Registry, SelectionScores};
 pub use shard::{ShardBand, ShardConfig, ShardPlan, ShardPlanner, ShardedKernel};
 pub use tiled::TiledConfig;

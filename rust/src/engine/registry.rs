@@ -28,15 +28,49 @@ use crate::spmm::outer::OuterConfig;
 /// which compute organization it applies.
 pub type KernelKey = (FormatKind, Algorithm);
 
+/// The exact numbers selection ranked for the winning kernel — threaded
+/// through the serving path so `KernelObservation` records what the model
+/// predicted, not a post-hoc recomputation that can disagree (negotiated
+/// InCRS siblings, native-CSC arrivals).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SelectionScores {
+    /// `SpmmKernel::cost_hint(a, b).total()` at selection time.
+    pub cost_hint: f64,
+    /// `SpmmKernel::ingest_cost(b, b_native)` at selection time (may be
+    /// negative: a kernel adopting the native representation is credited).
+    pub ingest_cost: f64,
+}
+
+impl SelectionScores {
+    pub fn total(&self) -> f64 {
+        self.cost_hint + self.ingest_cost
+    }
+
+    /// The NaN-clamped value selection actually compares (see
+    /// [`Registry::select_native`]'s NaN-safety note).
+    pub fn ranked(&self) -> f64 {
+        let c = self.total();
+        if c.is_nan() {
+            f64::INFINITY
+        } else {
+            c
+        }
+    }
+}
+
 #[derive(Default)]
 pub struct Registry {
     map: BTreeMap<KernelKey, Arc<dyn SpmmKernel>>,
+    /// Optional learned-selection handle (see [`super::learn`]): when set
+    /// *and* every candidate is calibrated, `select_native` ranks on
+    /// predicted microseconds with hysteresis instead of raw hint units.
+    cost_model: Option<super::learn::CostModel>,
 }
 
 impl Registry {
     /// Empty registry (register kernels explicitly).
     pub fn new() -> Registry {
-        Registry { map: BTreeMap::new() }
+        Registry { map: BTreeMap::new(), cost_model: None }
     }
 
     /// The standard CPU kernel set: dense oracle, Gustavson (scalar and the
@@ -124,6 +158,19 @@ impl Registry {
         b: &Csr,
         b_native: Option<&crate::formats::operand::MatrixOperand>,
     ) -> Option<Arc<dyn SpmmKernel>> {
+        self.select_native_scored(a, b, b_native).map(|(k, _)| k)
+    }
+
+    /// [`Registry::select_native`] returning the winner *with* the exact
+    /// `(cost_hint, ingest_cost)` it was ranked on — the serving path
+    /// threads these into `KernelObservation` so the fitted model learns
+    /// from the scores selection actually compared.
+    pub fn select_native_scored(
+        &self,
+        a: &Csr,
+        b: &Csr,
+        b_native: Option<&crate::formats::operand::MatrixOperand>,
+    ) -> Option<(Arc<dyn SpmmKernel>, SelectionScores)> {
         let mut candidates: Vec<Arc<dyn SpmmKernel>> = self
             .map
             .values()
@@ -142,23 +189,51 @@ impl Registry {
                 .collect();
             candidates.extend(negotiated);
         }
-        // NaN-safe total-ordered scoring: a kernel whose hint arithmetic
-        // produces NaN must never *win* selection (total_cmp orders -NaN
-        // below every real number, so a raw min_by would hand it the
-        // whole registry); clamping NaN to +inf demotes it instead,
-        // keeping the comparison total and deterministic
-        let score = |k: &Arc<dyn SpmmKernel>| -> f64 {
-            let c = k.cost_hint(a, b).total() + k.ingest_cost(b, b_native);
-            if c.is_nan() {
-                f64::INFINITY
-            } else {
-                c
-            }
+        let scores_for = |k: &Arc<dyn SpmmKernel>| SelectionScores {
+            cost_hint: k.cost_hint(a, b).total(),
+            ingest_cost: k.ingest_cost(b, b_native),
         };
-        let best = candidates
-            .into_iter()
-            .min_by(|x, y| score(x).total_cmp(&score(y)));
-        best.or_else(|| self.resolve_algorithm(Algorithm::Dense))
+        if candidates.is_empty() {
+            return self
+                .resolve_algorithm(Algorithm::Dense)
+                .map(|k| {
+                    let s = scores_for(&k);
+                    (k, s)
+                });
+        }
+        // NaN-safe total-ordered scoring (SelectionScores::ranked): a
+        // kernel whose hint arithmetic produces NaN must never *win*
+        // selection (total_cmp orders -NaN below every real number, so a
+        // raw min_by would hand it the whole registry); clamping NaN to
+        // +inf demotes it instead, keeping the comparison total and
+        // deterministic
+        let scored: Vec<SelectionScores> = candidates.iter().map(scores_for).collect();
+        // fitted path: only when a cost model is set and can price every
+        // candidate — partial calibration falls back to the static ranking
+        if let Some(model) = &self.cost_model {
+            let keyed: Vec<(KernelKey, f64)> = candidates
+                .iter()
+                .zip(&scored)
+                .map(|(k, s)| ((k.format(), k.algorithm()), s.ranked()))
+                .collect();
+            if let Some(i) = model.choose(super::learn::workload_class(a, b), &keyed) {
+                return Some((Arc::clone(&candidates[i]), scored[i]));
+            }
+        }
+        (0..candidates.len())
+            .min_by(|&x, &y| scored[x].ranked().total_cmp(&scored[y].ranked()))
+            .map(|i| (Arc::clone(&candidates[i]), scored[i]))
+    }
+
+    /// Attach (or replace) the learned-selection cost model consulted by
+    /// [`Registry::select_native`]. The handle is shared: a refit loop
+    /// publishing into a clone is immediately visible here.
+    pub fn set_cost_model(&mut self, model: super::learn::CostModel) {
+        self.cost_model = Some(model);
+    }
+
+    pub fn cost_model(&self) -> Option<&super::learn::CostModel> {
+        self.cost_model.as_ref()
     }
 
     /// [`Registry::select`] with a typed error for the empty-registry case.
@@ -175,6 +250,21 @@ impl Registry {
         b_native: Option<&crate::formats::operand::MatrixOperand>,
     ) -> Result<Arc<dyn SpmmKernel>, EngineError> {
         self.select_native(a, b, b_native)
+            .ok_or(EngineError::KernelUnavailable {
+                format: None,
+                algorithm: None,
+            })
+    }
+
+    /// [`Registry::select_native_scored`] with a typed error for the
+    /// empty-registry case.
+    pub fn select_native_scored_or_err(
+        &self,
+        a: &Csr,
+        b: &Csr,
+        b_native: Option<&crate::formats::operand::MatrixOperand>,
+    ) -> Result<(Arc<dyn SpmmKernel>, SelectionScores), EngineError> {
+        self.select_native_scored(a, b, b_native)
             .ok_or(EngineError::KernelUnavailable {
                 format: None,
                 algorithm: None,
@@ -363,6 +453,34 @@ mod tests {
         // without a native operand, selection is unchanged by negotiation
         let plain = r.select_native(&a, &b, None).unwrap();
         assert!(plain.ingest_cost(&b, None) >= 0.0);
+    }
+
+    #[test]
+    fn scored_selection_reports_exactly_what_it_ranked() {
+        use crate::formats::incrs::InCrs;
+        use crate::formats::operand::MatrixOperand;
+        // the negotiated-sibling case is where a post-hoc recomputation
+        // would disagree: the winner's ingest is a *credit* computed
+        // against the operand's own params
+        let mut r = Registry::new();
+        r.register(Arc::new(InnerKernel::incrs(InCrsParams::default())));
+        let a = uniform(32, 64, 0.1, 17);
+        let b = uniform(64, 48, 0.1, 18);
+        let params = InCrsParams { section: 64, block: 8 };
+        let op = MatrixOperand::from(InCrs::from_csr_params(&b, params).unwrap());
+        let (k, scores) = r.select_native_scored(&a, &b, Some(&op)).unwrap();
+        assert_eq!(scores.cost_hint, k.cost_hint(&a, &b).total());
+        assert_eq!(scores.ingest_cost, k.ingest_cost(&b, Some(&op)));
+        assert!(scores.ingest_cost < 0.0, "winner must be the credited sibling");
+        assert_eq!(scores.total(), scores.cost_hint + scores.ingest_cost);
+        // scored and unscored selection agree on the winner everywhere
+        let full = default_registry();
+        let plain = full.select_native(&a, &b, Some(&op)).unwrap();
+        let (scored, _) = full.select_native_scored(&a, &b, Some(&op)).unwrap();
+        assert_eq!(
+            (plain.format(), plain.algorithm()),
+            (scored.format(), scored.algorithm())
+        );
     }
 
     #[test]

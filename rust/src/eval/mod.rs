@@ -10,15 +10,17 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod report;
+pub mod selection;
 pub mod table1;
 pub mod table2;
 
 pub use report::{ExpOptions, ExpResult};
 
 /// All experiment ids: the paper's tables/figures in paper order, then the
-/// repo's own `engines` kernel comparison.
-pub const ALL_EXPERIMENTS: [&str; 8] = [
-    "table1", "table2", "fig3", "table4", "fig4a", "fig4b", "fig5", "engines",
+/// repo's own `engines` kernel comparison and the learned-selection
+/// calibration study.
+pub const ALL_EXPERIMENTS: [&str; 9] = [
+    "table1", "table2", "fig3", "table4", "fig4a", "fig4b", "fig5", "engines", "selection",
 ];
 // table5 is parameter accounting, printed alongside fig5
 
@@ -34,6 +36,7 @@ pub fn run_experiment(id: &str, opts: ExpOptions) -> Result<Vec<ExpResult>, Stri
         "fig4b" => vec![fig4::run_b(opts)],
         "fig5" => vec![fig5::run_table5(), fig5::run(opts)],
         "engines" => vec![engines::run(opts)],
+        "selection" => vec![selection::run(opts)],
         "ablations" => ablations::run_all(opts),
         "all" => {
             let mut out = Vec::new();

@@ -1,0 +1,165 @@
+//! `selection` experiment: the learned-selection loop, offline — measure
+//! every registered kernel on heterogeneous workloads, least-squares-fit
+//! each kernel's cost constant from the measurements (`engine::learn`),
+//! then compare what static cost-hint ranking and the fitted model pick
+//! for the same jobs.
+//!
+//! This is the eval-side twin of the serving loop: the server fits from
+//! `Metrics::kernel_log` every `LearnConfig::refit_every` jobs, while this
+//! driver fits from a deliberate sweep so the per-kernel scale constants
+//! (µs per raw cost unit) are visible in one table run.
+
+use std::time::Instant;
+
+use super::report::{ExpOptions, ExpResult};
+use crate::datasets::synth::uniform;
+use crate::engine::{Algorithm, CostModel, FittedModel, Registry, Sample, SpmmKernel};
+use crate::formats::Csr;
+use crate::spmm::plan::Geometry;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{sig, Table};
+
+/// Usable observations a kernel needs before its constant is trusted —
+/// lower than the serving default because the sweep below is deliberate
+/// (every kernel sees every workload) rather than selection-skewed.
+const MIN_SAMPLES: usize = 4;
+const REPS: usize = 3;
+
+fn workloads(opts: ExpOptions) -> Vec<(&'static str, Csr, Csr)> {
+    let n = opts.scaled(512);
+    let s = opts.seed;
+    vec![
+        ("square 2%", uniform(n, n, 0.02, s), uniform(n, n, 0.02, s + 1)),
+        (
+            "tall-skinny 5%",
+            uniform(2 * n, n / 2, 0.05, s + 2),
+            uniform(n / 2, n, 0.05, s + 3),
+        ),
+        (
+            "hyper-sparse 0.3%",
+            uniform(n, n, 0.003, s + 4),
+            uniform(n, n, 0.003, s + 5),
+        ),
+    ]
+}
+
+pub fn run(opts: ExpOptions) -> ExpResult {
+    let reg = Registry::with_default_kernels(Geometry::default(), 1);
+    let work = workloads(opts);
+
+    // calibration sweep: every non-oracle kernel on every workload, REPS
+    // times, logging exactly the score selection would rank (CSR-native
+    // operands, so ingest cost matches the selection-time charge)
+    let mut samples = Vec::new();
+    for (_, a, b) in &work {
+        for _ in 0..REPS {
+            for k in reg.kernels() {
+                if k.algorithm() == Algorithm::Dense {
+                    continue;
+                }
+                let predicted = k.cost_hint(a, b).total() + k.ingest_cost(b, None);
+                let t = Instant::now();
+                if k.run(a, b).is_err() {
+                    continue;
+                }
+                samples.push(Sample {
+                    format: k.format(),
+                    algorithm: k.algorithm(),
+                    predicted,
+                    wall_us: t.elapsed().as_micros() as u64,
+                });
+            }
+        }
+    }
+    let fit = FittedModel::fit(&samples, MIN_SAMPLES);
+
+    // fitted registry: same kernels, selection now consults the model
+    let mut fitted_reg = Registry::with_default_kernels(Geometry::default(), 1);
+    let model = CostModel::new(0.0); // offline: no incumbent to protect
+    model.publish(fit.clone());
+    fitted_reg.set_cost_model(model);
+
+    let mut table = Table::new(
+        &format!(
+            "Selection — static cost hints vs fitted model ({} samples, {} kernels calibrated, \
+             seed {})",
+            samples.len(),
+            fit.len(),
+            opts.seed
+        ),
+        &["workload", "static pick", "static ms", "fitted pick", "fitted ms"],
+    );
+    let mut rows = Vec::new();
+    let timed = |k: &std::sync::Arc<dyn SpmmKernel>, a: &Csr, b: &Csr| {
+        let t = Instant::now();
+        let _ = k.run(a, b);
+        t.elapsed().as_secs_f64() * 1e3
+    };
+    for (name, a, b) in &work {
+        let (static_k, fitted_k) = match (reg.select(a, b), fitted_reg.select(a, b)) {
+            (Some(s), Some(f)) => (s, f),
+            _ => continue, // default registry is never empty
+        };
+        let static_ms = timed(&static_k, a, b);
+        let fitted_ms = timed(&fitted_k, a, b);
+        table.row(vec![
+            (*name).into(),
+            static_k.name().into(),
+            sig(static_ms),
+            fitted_k.name().into(),
+            sig(fitted_ms),
+        ]);
+        rows.push(obj([
+            ("workload", Json::from(*name)),
+            ("static_kernel", Json::from(static_k.name())),
+            ("static_ms", Json::from(static_ms)),
+            ("fitted_kernel", Json::from(fitted_k.name())),
+            ("fitted_ms", Json::from(fitted_ms)),
+        ]));
+    }
+
+    let calibration: Vec<Json> = fit
+        .entries()
+        .map(|(&(f, alg), c)| {
+            obj([
+                ("format", Json::from(f.name())),
+                ("algorithm", Json::from(alg.name())),
+                ("scale_us_per_unit", Json::from(c.scale)),
+                ("samples", Json::from(c.samples)),
+                ("mean_abs_err_us", Json::from(c.mean_abs_err_us)),
+            ])
+        })
+        .collect();
+
+    ExpResult {
+        id: "selection",
+        table,
+        json: obj([
+            ("seed", Json::from(opts.seed)),
+            ("samples", Json::from(samples.len())),
+            ("min_samples", Json::from(MIN_SAMPLES)),
+            ("calibration", Json::Arr(calibration)),
+            ("workloads", Json::Arr(rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_experiment_runs_scaled_down() {
+        let r = run(ExpOptions { seed: 11, scale: 0.15 });
+        assert_eq!(r.id, "selection");
+        // one comparison row per workload, each with a real kernel name on
+        // both sides (fitted falls back to the static pick when the sweep's
+        // walls are below timer resolution — still a valid pick)
+        assert_eq!(r.table.rows.len(), 3, "{:?}", r.table.rows);
+        for row in &r.table.rows {
+            assert!(!row[1].is_empty() && !row[3].is_empty(), "{row:?}");
+        }
+        let runs = r.json.at(&["workloads"]).unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 3);
+    }
+}

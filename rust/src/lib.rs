@@ -59,8 +59,20 @@
 //! `coalesced_jobs`, `operand_conversions`, `workspace_pool_hits`)
 //! surface in [`coordinator::MetricsSnapshot`], and every executed job
 //! logs a `(cost_hint, ingest_cost, measured wall)` datapoint into the
-//! bounded [`coordinator::Metrics::kernel_log`] for fitting the selection
-//! constants. Jobs may additionally ask for
+//! bounded [`coordinator::Metrics::kernel_log`] — the exact scores
+//! selection ranked, not an execute-time recomputation. The
+//! **learned-selection loop** ([`engine::learn`]) closes over that log:
+//! every `LearnConfig::refit_every` completed jobs the server
+//! least-squares-fits per-kernel scale constants (µs per cost unit) and
+//! publishes them to every worker's registry through a shared
+//! [`engine::CostModel`], so `Auto` selection ranks candidates in
+//! predicted microseconds — gated on full calibration (otherwise the
+//! static ranking decides, bit-for-bit), damped by per-workload-class
+//! hysteresis, persisted bit-exactly to a versioned plain-text model file
+//! (`LearnConfig::model_path`) and warm-loaded on restart. Refit counts
+//! (`model_refits`) and per-kernel calibration errors
+//! ([`coordinator::Metrics::calibration`]) are metered. Jobs may
+//! additionally ask for
 //! **sharded row-band execution** (`JobBuilder::shards(n)` →
 //! [`engine::shard`]): contiguous bands on channel-connected shard
 //! workers sharing one `PreparedB`, merged with no cross-shard reduction

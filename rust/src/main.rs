@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
-    CoalesceConfig, JobHandle, KernelSpec, Server, ServerConfig,
+    CoalesceConfig, JobHandle, KernelSpec, LearnConfig, Server, ServerConfig,
 };
 use spmm_accel::datasets;
 use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
@@ -85,7 +85,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let id = args
                 .str_opt("id")
                 .or_else(|| args.positional.get(1).map(String::as_str))
-                .ok_or("usage: spmm-accel exp --id <table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|all> [--scale F] [--seed N] [--save DIR]")?;
+                .ok_or("usage: spmm-accel exp --id <table1|table2|fig3|table4|fig4a|fig4b|fig5|table5|engines|selection|all> [--scale F] [--seed N] [--save DIR]")?;
             let opts = exp_options(args)?;
             let results = run_experiment(id, opts)?;
             for r in &results {
@@ -214,6 +214,14 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 enabled: !args.has("no-coalesce"),
                 ..Default::default()
             };
+            // learned selection: --model-path enables persistence (and the
+            // shutdown refit); --refit-every controls the in-flight cadence
+            let learn = LearnConfig {
+                refit_every: args.get_or("refit-every", 8u64)?,
+                margin: args.get_or("margin", 0.1f64)?,
+                model_path: args.str_opt("model-path").map(PathBuf::from),
+                ..Default::default()
+            };
             let server = Server::start(ServerConfig {
                 workers,
                 queue_depth: 8,
@@ -223,6 +231,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 tile_workers: args.get_or("tile-workers", 1usize)?,
                 artifacts_dir: Manifest::default_dir(),
                 coalesce,
+                learn,
                 ..Default::default()
             });
             let client = server.client();
@@ -268,6 +277,22 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  (Metrics::kernel_log)",
                 snap.kernel_observations
             );
+            if snap.model_refits > 0 {
+                println!(
+                    "learned selection: {} model refit(s), calibrated kernels:",
+                    snap.model_refits
+                );
+                for c in server.metrics.calibration() {
+                    println!(
+                        "  ({:>7}, {:>9}) scale~{:.3e} us/unit over {} samples, err~{:.1}us",
+                        c.format.name(),
+                        c.algorithm.name(),
+                        c.scale,
+                        c.samples,
+                        c.mean_abs_err_us
+                    );
+                }
+            }
             drop(client);
             server.shutdown();
             Ok(())
@@ -343,9 +368,13 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \n\
                  usage: spmm-accel <exp|gen|convert|locate|spmm|serve|kernels|info> [flags]\n\
                  \n\
+                 algorithms (--kernel): dense | gustavson | gustavson-fast | inner | outer \
+                 | tiled | block | auto\n\
+                 \n\
                  examples:\n\
                  \u{20}  spmm-accel exp --id table2\n\
                  \u{20}  spmm-accel exp --id engines --scale 0.5\n\
+                 \u{20}  spmm-accel exp --id selection --scale 0.5   # learned-selection calibration\n\
                  \u{20}  spmm-accel gen --dataset docword --out /tmp/docword.mtx\n\
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
                  \u{20}  spmm-accel spmm --kernel gustavson-fast --tile-workers 4   # vectorized pooled Gustavson\n\
@@ -354,6 +383,8 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\
                  \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\
+                 \u{20}  spmm-accel serve --kernel auto --model-path /tmp/cost.model --refit-every 8 \
+                 --margin 0.1\n\
                  \u{20}  spmm-accel kernels"
             );
             Ok(())

@@ -1,0 +1,205 @@
+//! Property tests for the learned-selection loop (`engine::learn`):
+//!
+//! 1. least-squares fitting recovers a planted per-kernel cost constant
+//!    from noiseless observations at any magnitude,
+//! 2. the versioned plain-text model file round-trips every fitted f64
+//!    bit-exactly (IEEE-754 bit patterns, not decimal renderings),
+//! 3. hysteresis bounds selection flapping: oscillating refits whose
+//!    predicted advantage stays inside the margin never switch the
+//!    incumbent, and
+//! 4. a fitted model steering selection is *only* steering — for every
+//!    registered kernel, forcing it through the fitted path produces
+//!    bit-identical results to invoking that kernel directly.
+
+use std::sync::Arc;
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::{
+    Algorithm, Calibration, CostModel, FittedModel, KernelKey, Registry, Sample, SpmmKernel,
+};
+use spmm_accel::formats::traits::{FormatKind, SparseMatrix};
+use spmm_accel::spmm::plan::Geometry;
+use spmm_accel::util::ptest::check;
+use spmm_accel::util::rng::Rng;
+
+/// A planted fitting problem: one kernel key, a true scale, and raw scores
+/// placed so the true walls land in [10, 10^4] µs — measurable, but still
+/// quantized to whole µs like a real timer.
+fn gen_planted(rng: &mut Rng) -> (f64, Vec<f64>) {
+    // true scale across 8 orders of magnitude — covers sub-µs SIMD
+    // kernels up to slow accelerator paths
+    let scale = 1e-6 * 10f64.powi(rng.usize_below(8) as i32) * (0.5 + rng.f64());
+    let n = 8 + rng.usize_below(24);
+    let scores = (0..n).map(|_| (10.0 + rng.f64() * 1e4) / scale).collect();
+    (scale, scores)
+}
+
+#[test]
+fn fit_recovers_planted_constants_at_any_magnitude() {
+    check(0x5CA1E, 40, gen_planted, |(scale, scores)| {
+        let samples: Vec<Sample> = scores
+            .iter()
+            .map(|&x| Sample {
+                format: FormatKind::Csr,
+                algorithm: Algorithm::Gustavson,
+                predicted: x,
+                wall_us: (scale * x).round() as u64,
+            })
+            .collect();
+        let fit = FittedModel::fit(&samples, 4);
+        let cal = fit
+            .get((FormatKind::Csr, Algorithm::Gustavson))
+            .ok_or("planted key not calibrated")?;
+        // µs quantization perturbs each observation by at most ±0.5µs on a
+        // ≥10µs wall, so the weighted fit lands within a few percent
+        let rel = (cal.scale - *scale).abs() / scale;
+        if rel > 0.06 {
+            return Err(format!(
+                "planted {scale:.3e}, fitted {:.3e} (rel err {rel:.3})",
+                cal.scale
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Random calibration table with scales and errors across the full range
+/// of representable-but-sane f64s.
+fn gen_model(rng: &mut Rng) -> FittedModel {
+    let keys: [KernelKey; 4] = [
+        (FormatKind::Csr, Algorithm::Gustavson),
+        (FormatKind::Csr, Algorithm::Tiled),
+        (FormatKind::InCrs, Algorithm::Inner),
+        (FormatKind::Csc, Algorithm::OuterProduct),
+    ];
+    let mut m = FittedModel::new();
+    for key in keys.iter().take(1 + rng.usize_below(4)) {
+        m.insert(
+            *key,
+            Calibration {
+                // deliberately awkward decimals: f64s whose shortest decimal
+                // rendering would not round-trip through naive formatting
+                scale: (rng.f64() + 1e-9) / (3.0 + rng.f64()),
+                samples: rng.next_u64() % 10_000,
+                mean_abs_err_us: rng.f64() * 1e4 / 7.0,
+            },
+        );
+    }
+    m
+}
+
+#[test]
+fn persisted_models_round_trip_bit_exactly() {
+    let dir = std::env::temp_dir();
+    check(0xB17E, 30, gen_model, |m| {
+        // text round-trip: every f64 must come back with identical bits
+        let back = FittedModel::from_text(&m.to_text()).map_err(|e| e.to_string())?;
+        for ((k, a), (bk, b)) in m.entries().zip(back.entries()) {
+            if k != bk {
+                return Err(format!("key changed: {k:?} vs {bk:?}"));
+            }
+            if a.scale.to_bits() != b.scale.to_bits()
+                || a.mean_abs_err_us.to_bits() != b.mean_abs_err_us.to_bits()
+                || a.samples != b.samples
+            {
+                return Err(format!("{k:?} drifted: {a:?} vs {b:?}"));
+            }
+        }
+        if back.len() != m.len() {
+            return Err("entry count changed".into());
+        }
+        // file round-trip: save/load goes through the same text form
+        let path = dir.join(format!("spmm_prop_learn_{}.model", std::process::id()));
+        m.save(&path).map_err(|e| e.to_string())?;
+        let loaded = FittedModel::load(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if loaded != back {
+            return Err("file round-trip differs from text round-trip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hysteresis_bounds_flapping_under_oscillating_refits() {
+    let key_a: KernelKey = (FormatKind::Csr, Algorithm::Gustavson);
+    let key_b: KernelKey = (FormatKind::Csr, Algorithm::Tiled);
+    let cal = |scale: f64| Calibration { scale, samples: 16, mean_abs_err_us: 0.0 };
+    let model = CostModel::new(0.25);
+    let scored = [(key_a, 1000.0), (key_b, 1000.0)];
+
+    // oscillating measurements: the two kernels trade a 10% advantage each
+    // refit, always inside the 25% margin — the first pick must hold
+    let mut first = None;
+    for round in 0..12 {
+        let (sa, sb) = if round % 2 == 0 { (1.0, 1.1) } else { (1.1, 1.0) };
+        let mut m = FittedModel::new();
+        m.insert(key_a, cal(sa));
+        m.insert(key_b, cal(sb));
+        model.publish(m);
+        let pick = model.choose(7, &scored).expect("fully calibrated");
+        match first {
+            None => first = Some(pick),
+            Some(p) => assert_eq!(pick, p, "flapped on round {round}"),
+        }
+    }
+    assert_eq!(model.switches(), 0, "in-margin oscillation must never switch");
+
+    // a decisive 10x advantage must still switch exactly once
+    let mut m = FittedModel::new();
+    m.insert(key_a, cal(10.0));
+    m.insert(key_b, cal(1.0));
+    model.publish(m);
+    assert_eq!(model.choose(7, &scored), Some(1));
+    assert_eq!(model.switches(), 1, "decisive advantage switches exactly once");
+}
+
+/// A fitted model that makes `target` the runaway winner and every other
+/// key prohibitively expensive — all keys calibrated, so the fitted path
+/// (not the static fallback) decides.
+fn forcing_model(registry: &Registry, target: KernelKey) -> FittedModel {
+    let mut m = FittedModel::new();
+    for key in registry.keys() {
+        if key == (FormatKind::Dense, Algorithm::Dense) {
+            continue; // dense never enters the candidate set
+        }
+        let scale = if key == target { 1e-12 } else { 1e6 };
+        m.insert(key, Calibration { scale, samples: 32, mean_abs_err_us: 0.0 });
+    }
+    m
+}
+
+#[test]
+fn fitted_selection_forces_each_kernel_with_bit_identical_results() {
+    let geometry = Geometry { block: 16, pairs: 32, slots: 16 };
+    let a = uniform(96, 64, 0.08, 21);
+    let b = uniform(64, 80, 0.08, 22);
+
+    let static_reg = Registry::with_default_kernels(geometry, 2);
+    for key in static_reg.keys() {
+        if key == (FormatKind::Dense, Algorithm::Dense) {
+            continue;
+        }
+        // fresh registry + model per key: no incumbent carries over
+        let mut reg = Registry::with_default_kernels(geometry, 2);
+        let model = CostModel::new(0.0);
+        model.publish(forcing_model(&reg, key));
+        reg.set_cost_model(model);
+
+        let picked = reg.select(&a, &b).expect("non-empty registry");
+        assert_eq!(
+            (picked.format(), picked.algorithm()),
+            key,
+            "fitted model failed to force {key:?}"
+        );
+        let direct: Arc<dyn SpmmKernel> =
+            static_reg.resolve(key.0, key.1).expect("registered kernel");
+        let via_model = picked.run(&a, &b).expect("forced kernel runs");
+        let reference = direct.run(&a, &b).expect("direct kernel runs");
+        assert_eq!(
+            via_model.c.data, reference.c.data,
+            "{key:?}: fitted-path result differs bitwise from direct invocation"
+        );
+        assert_eq!(via_model.c.shape(), reference.c.shape());
+    }
+}
