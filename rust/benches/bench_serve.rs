@@ -8,17 +8,21 @@
 //! path with `SPMM_BENCH_SERVE_OUT`), plus a learned-selection comparison
 //! — auto-selection latency with a serving-trained cost model warm-loaded
 //! vs static cost hints — to `BENCH_selection.json` (override with
-//! `SPMM_BENCH_SELECTION_OUT`).
+//! `SPMM_BENCH_SELECTION_OUT`), plus a socket-vs-in-process sharded
+//! execution comparison (two loopback shard workers, bit-identity
+//! asserted) to `BENCH_transport.json` (override with
+//! `SPMM_BENCH_TRANSPORT_OUT`).
 //!
 //! Run: `cargo bench --bench bench_serve`
 
+use std::net::TcpListener;
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
     CoalesceConfig, JobHandle, KernelSpec, LearnConfig, MetricsSnapshot, Server, ServerConfig,
 };
 use spmm_accel::datasets::synth::uniform;
-use spmm_accel::engine::Algorithm;
+use spmm_accel::engine::{remote, shard, Algorithm, Registry, ShardConfig, SocketTransport};
 use spmm_accel::formats::csr::Csr;
 use spmm_accel::formats::traits::FormatKind;
 use spmm_accel::spmm::plan::Geometry;
@@ -229,5 +233,93 @@ fn main() {
     match std::fs::write(&sel_path, sel.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {sel_path}"),
         Err(e) => println!("could not write {sel_path}: {e}"),
+    }
+
+    // socket transport: the same sharded job over two loopback socket
+    // workers (real OS sockets, full wire serialization) vs the in-process
+    // channel transport vs unsharded — bit-identity asserted, so this is
+    // both a perf number and a distributed-correctness smoke
+    const SHARDS: usize = 4;
+    let geom = Geometry::default();
+    let spawn_worker = || {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker");
+        let addr = listener.local_addr().expect("worker addr").to_string();
+        let reg = Arc::new(Registry::with_default_kernels(geom, 2));
+        std::thread::spawn(move || {
+            let _ = remote::serve(listener, reg);
+        });
+        addr
+    };
+    let peers = vec![spawn_worker(), spawn_worker()];
+    let socket = SocketTransport::connect(&peers).expect("connect to loopback workers");
+    let leader = Registry::with_default_kernels(geom, 2);
+    let kernel = leader
+        .resolve(FormatKind::Csr, Algorithm::Tiled)
+        .expect("tiled kernel");
+    let ta = uniform(1024, 1024, 0.02, 7);
+    let tb = uniform(1024, 512, 0.03, 8);
+    let prepared = kernel.prepare(&tb).expect("prepare B");
+    let cfg = ShardConfig { shards: SHARDS, block: geom.block };
+    let local = shard::execute(kernel.as_ref(), &ta, Some(&tb), &prepared, cfg)
+        .expect("in-process sharded run");
+    let over_socket = shard::execute_with(&socket, kernel.as_ref(), &ta, Some(&tb), &prepared, cfg)
+        .expect("socket sharded run");
+    let unsharded = kernel.execute(&ta, &prepared).expect("unsharded run");
+    assert_eq!(
+        over_socket.c.bit_pattern(),
+        local.c.bit_pattern(),
+        "socket transport diverged from in-process"
+    );
+    assert_eq!(
+        over_socket.c.bit_pattern(),
+        unsharded.c.bit_pattern(),
+        "socket transport diverged from unsharded"
+    );
+
+    let r_local = bench(1, 3, || {
+        let out = shard::execute(kernel.as_ref(), &ta, Some(&tb), &prepared, cfg)
+            .expect("in-process sharded run");
+        black_box(out.stats.real_pairs);
+    });
+    report(&format!("transport/in_process_{SHARDS}_shards"), r_local, 1.0, "jobs");
+    let r_socket = bench(1, 3, || {
+        let out = shard::execute_with(&socket, kernel.as_ref(), &ta, Some(&tb), &prepared, cfg)
+            .expect("socket sharded run");
+        black_box(out.stats.real_pairs);
+    });
+    report(&format!("transport/socket_{SHARDS}_shards"), r_socket, 1.0, "jobs");
+    let overhead = r_socket.median.as_secs_f64() / r_local.median.as_secs_f64();
+    println!(
+        "socket transport: {} remote band(s)/job, {} B replication(s) total, \
+         {:.2}x in-process wall",
+        over_socket.counters.remote_bands,
+        over_socket.counters.prepare_replications,
+        overhead
+    );
+
+    let tr_path = std::env::var("SPMM_BENCH_TRANSPORT_OUT")
+        .unwrap_or_else(|_| "BENCH_transport.json".into());
+    let tr = obj([
+        ("bench", Json::from("bench_serve/shard_transport")),
+        (
+            "workload",
+            Json::from(format!(
+                "tiled kernel, A 1024x1024 @ 2%, B 1024x512 @ 3%, {SHARDS} row-band \
+                 shards over 2 loopback socket workers vs in-process channels \
+                 (bit-identity asserted)"
+            )),
+        ),
+        ("shards", Json::from(SHARDS)),
+        ("workers", Json::from(peers.len())),
+        ("in_process_ms", Json::from(r_local.median.as_secs_f64() * 1e3)),
+        ("socket_ms", Json::from(r_socket.median.as_secs_f64() * 1e3)),
+        ("socket_overhead", Json::from(overhead)),
+        ("remote_bands_per_job", Json::from(over_socket.counters.remote_bands)),
+        ("prepare_replications", Json::from(over_socket.counters.prepare_replications)),
+        ("bit_identical", Json::from(true)),
+    ]);
+    match std::fs::write(&tr_path, tr.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {tr_path}"),
+        Err(e) => println!("could not write {tr_path}: {e}"),
     }
 }

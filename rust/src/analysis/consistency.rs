@@ -7,9 +7,12 @@
 //! the default kernel count), (b) documented in the README `## Backends`
 //! table under its `Algorithm::name()` string, and (c) reachable from the
 //! CLI — `src/main.rs` keeps a `kernels` listing that walks the registry
-//! and mentions every algorithm name in its `--kernel` help. A new kernel
-//! that skips the suite, the docs, or the CLI fails
-//! `cargo test --test repo_lint`.
+//! and mentions every algorithm name in its `--kernel` help. Additionally,
+//! every `PreparedB` variant must have a wire-format arm in
+//! `src/engine/transport/wire.rs` — a prepared representation the socket
+//! transport cannot ship would make remote sharding silently partial. A
+//! new kernel that skips the suite, the docs, the CLI, or the wire format
+//! fails `cargo test --test repo_lint`.
 //!
 //! The checks are pure functions over file contents so the fixtures in the
 //! test module can prove each one fires; [`super::run_repo_lint`] feeds
@@ -30,6 +33,9 @@ pub struct ConsistencyInput<'a> {
     pub readme_src: &'a str,
     /// `src/main.rs` (the CLI: the `kernels` listing and `--kernel` help).
     pub main_src: &'a str,
+    /// `src/engine/transport/wire.rs` (the serialization arms for every
+    /// `PreparedB` variant).
+    pub wire_src: &'a str,
 }
 
 /// Run every cross-file check. Returns the findings plus the number of
@@ -163,7 +169,65 @@ pub fn check(input: &ConsistencyInput<'_>) -> (Vec<Finding>, usize) {
         Some(_) => {}
     }
 
+    // (g) every `PreparedB` variant has a wire-format arm, so the socket
+    // transport can ship whatever any kernel's prepare produced
+    let prepared = prepared_variants(input.kernel_src);
+    if prepared.is_empty() {
+        findings.push(Finding {
+            rule: "C1",
+            path: "src/engine/kernel.rs".into(),
+            line: 0,
+            detail: "could not locate `pub enum PreparedB` — the consistency \
+                     pass needs updating"
+                .into(),
+        });
+    }
+    for v in &prepared {
+        checks += 1;
+        if !input.wire_src.contains(&format!("PreparedB::{v}")) {
+            findings.push(Finding {
+                rule: "C1",
+                path: "src/engine/transport/wire.rs".into(),
+                line: 0,
+                detail: format!(
+                    "PreparedB::{v} has no wire-format arm — remote shard \
+                     workers cannot receive this prepared representation"
+                ),
+            });
+        }
+    }
+
     (findings, checks)
+}
+
+/// Variant names of `pub enum PreparedB` (tuple variants: the identifier
+/// before the `(`), parsed from the blanked code view.
+fn prepared_variants(kernel_src: &str) -> Vec<String> {
+    let file = scan_source("engine/kernel.rs", kernel_src);
+    let mut variants = Vec::new();
+    let mut inside = false;
+    for line in &file.code {
+        if line.contains("pub enum PreparedB") {
+            inside = true;
+            continue;
+        }
+        if inside {
+            let t = line.trim();
+            if t.starts_with('}') {
+                break;
+            }
+            let ident: String = t
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric())
+                .collect();
+            if !ident.is_empty()
+                && ident.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+            {
+                variants.push(ident);
+            }
+        }
+    }
+    variants
 }
 
 /// Unit-variant names of `pub enum Algorithm`, parsed from the blanked
@@ -271,7 +335,21 @@ impl Algorithm {
         }
     }
 }
+
+/// A kernel's prepared B-operand { braces again }.
+pub enum PreparedB {
+    /// Plain CSR share.
+    Csr(Arc<Csr>),
+    Blocked(Arc<BlockedB>),
+}
 "#;
+
+    const WIRE_FIXTURE: &str = "
+    match prepared {
+        PreparedB::Csr(m) => put_csr(w, m),
+        PreparedB::Blocked(bb) => put_blocked(w, bb),
+    }
+";
 
     const REGISTRY_FIXTURE: &str = "
     pub fn with_default_kernels() -> Registry {
@@ -306,6 +384,7 @@ impl Algorithm {
             prop_engine_src: prop_engine,
             readme_src: readme,
             main_src,
+            wire_src: WIRE_FIXTURE,
         }
     }
 
@@ -319,8 +398,22 @@ impl Algorithm {
         let (findings, checks) = check(&input(GOOD_PROP, GOOD_README));
         assert!(findings.is_empty(), "{findings:?}");
         // 2 name checks + 2 suite checks + 2 readme checks + 1 CLI-listing
-        // check + 2 CLI-name checks + 1 floor check
-        assert_eq!(checks, 10);
+        // check + 2 CLI-name checks + 1 floor check + 2 wire-arm checks
+        assert_eq!(checks, 12);
+    }
+
+    #[test]
+    fn missing_wire_arm_fires() {
+        let mut inp = input(GOOD_PROP, GOOD_README);
+        inp.wire_src = "match prepared { PreparedB::Csr(m) => put_csr(w, m) }";
+        let (findings, _) = check(&inp);
+        assert!(
+            findings.iter().any(|f| {
+                f.path == "src/engine/transport/wire.rs"
+                    && f.detail.contains("PreparedB::Blocked")
+            }),
+            "{findings:?}"
+        );
     }
 
     #[test]
@@ -386,6 +479,7 @@ impl Algorithm {
     #[test]
     fn parsers_extract_the_real_shapes() {
         assert_eq!(algorithm_variants(KERNEL_FIXTURE), vec!["Dense", "Gustavson"]);
+        assert_eq!(prepared_variants(KERNEL_FIXTURE), vec!["Csr", "Blocked"]);
         assert_eq!(
             algorithm_names(KERNEL_FIXTURE),
             vec![

@@ -13,13 +13,13 @@ use super::scan::SourceFile;
 /// Modules where iteration order feeds numeric results or serving
 /// decisions — rule **D1** bans unordered hash collections here outright
 /// (test code included: a test asserting on hash order is still flaky).
-const D1_SCOPE: &[&str] = &["spmm", "engine", "formats", "coordinator"];
+const D1_SCOPE: &[&str] = &["spmm", "engine", "formats", "coordinator", "transport"];
 
 /// Kernel modules where **D2** looks for accumulation-order hazards.
 const D2_SCOPE: &[&str] = &["spmm", "engine"];
 
 /// Serving-path modules where **P1** audits the non-test panic surface.
-const P1_SCOPE: &[&str] = &["coordinator", "engine"];
+const P1_SCOPE: &[&str] = &["coordinator", "engine", "transport"];
 
 /// Identifiers D1 rejects: the unordered-hash surface of `std`.
 const D1_IDENTS: &[&str] = &["HashMap", "HashSet", "RandomState", "hash_map", "hash_set"];

@@ -69,6 +69,10 @@ pub struct JobOutput {
     /// Row-band shards the job actually executed on (1 = unsharded; the
     /// planner may use fewer bands than requested on small matrices).
     pub shards: usize,
+    /// Shards the caller *asked* for ([`JobOptions::shards`]). When the
+    /// planner clamps (`shards < shards_requested`) the server logs it once
+    /// and bumps the `shard_clamps` metric — the clamp used to be silent.
+    pub shards_requested: usize,
 }
 
 impl SpmmJob {

@@ -166,6 +166,26 @@ pub struct Metrics {
     pub shards_executed: AtomicU64,
     /// Sharded executions that failed (worker panic or band exec error).
     pub shard_failures: AtomicU64,
+    /// Sharded jobs whose requested shard count exceeded what the planner
+    /// could honor (more shards than plannable row bands) — the planner
+    /// clamps silently; this surfaces it (see `JobOutput::shards_requested`).
+    pub shard_clamps: AtomicU64,
+    /// Row bands executed on a *remote* socket worker (subset of
+    /// `shards_executed`; zero under the in-process transport).
+    pub remote_bands: AtomicU64,
+    /// Band submissions beyond each band's first attempt (timeouts, worker
+    /// errors, and lost-worker resubmissions).
+    pub band_retries: AtomicU64,
+    /// Bands whose hedged duplicate submission finished first.
+    pub hedges_won: AtomicU64,
+    /// Remote workers that died (EOF/write failure) mid-service.
+    pub workers_lost: AtomicU64,
+    /// `PreparedB` replications shipped to remote workers (wire-format
+    /// `Prepare` frames actually sent).
+    pub prepare_replications: AtomicU64,
+    /// Bands routed to a worker that already held the job's `B` under its
+    /// content fingerprint — the remote `PreparedCache` reuse, measured.
+    pub prepare_reuse: AtomicU64,
     /// Accumulator-workspace checkouts served from a `PreparedB` pool
     /// (the fast Gustavson kernel's workspace reuse across jobs,
     /// micro-batches, and shard workers).
@@ -235,6 +255,19 @@ impl Metrics {
         self.kernel_log.entries()
     }
 
+    /// Fold one sharded run's transport counters into the service totals
+    /// (called once per completed sharded job, whatever the transport —
+    /// the in-process transport contributes all-zero counters).
+    pub fn record_transport(&self, c: &crate::engine::TransportCounters) {
+        self.remote_bands.fetch_add(c.remote_bands, Ordering::Relaxed);
+        self.band_retries.fetch_add(c.band_retries, Ordering::Relaxed);
+        self.hedges_won.fetch_add(c.hedges_won, Ordering::Relaxed);
+        self.workers_lost.fetch_add(c.workers_lost, Ordering::Relaxed);
+        self.prepare_replications
+            .fetch_add(c.prepare_replications, Ordering::Relaxed);
+        self.prepare_reuse.fetch_add(c.prepare_reuse, Ordering::Relaxed);
+    }
+
     /// Publish the latest per-kernel calibration (refit loop only).
     pub fn set_calibration(&self, entries: Vec<CalibrationEntry>) {
         *lock_unpoisoned(&self.calibration) = entries;
@@ -263,6 +296,13 @@ impl Metrics {
             sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
             shards_executed: self.shards_executed.load(Ordering::Relaxed),
             shard_failures: self.shard_failures.load(Ordering::Relaxed),
+            shard_clamps: self.shard_clamps.load(Ordering::Relaxed),
+            remote_bands: self.remote_bands.load(Ordering::Relaxed),
+            band_retries: self.band_retries.load(Ordering::Relaxed),
+            hedges_won: self.hedges_won.load(Ordering::Relaxed),
+            workers_lost: self.workers_lost.load(Ordering::Relaxed),
+            prepare_replications: self.prepare_replications.load(Ordering::Relaxed),
+            prepare_reuse: self.prepare_reuse.load(Ordering::Relaxed),
             workspace_pool_hits: self.workspace_pool_hits.load(Ordering::Relaxed),
             workspace_pool_misses: self.workspace_pool_misses.load(Ordering::Relaxed),
             kernel_observations: self.kernel_observations.load(Ordering::Relaxed),
@@ -296,6 +336,13 @@ pub struct MetricsSnapshot {
     pub sharded_jobs: u64,
     pub shards_executed: u64,
     pub shard_failures: u64,
+    pub shard_clamps: u64,
+    pub remote_bands: u64,
+    pub band_retries: u64,
+    pub hedges_won: u64,
+    pub workers_lost: u64,
+    pub prepare_replications: u64,
+    pub prepare_reuse: u64,
     pub workspace_pool_hits: u64,
     pub workspace_pool_misses: u64,
     pub kernel_observations: u64,
@@ -477,6 +524,33 @@ mod tests {
         m.set_calibration(vec![entry]);
         assert_eq!(m.snapshot().model_refits, 1);
         assert_eq!(m.calibration(), vec![entry]);
+    }
+
+    #[test]
+    fn transport_counters_fold_into_the_snapshot() {
+        let m = Metrics::new();
+        m.record_transport(&crate::engine::TransportCounters {
+            remote_bands: 4,
+            band_retries: 2,
+            hedges_won: 1,
+            workers_lost: 1,
+            prepare_replications: 3,
+            prepare_reuse: 5,
+        });
+        // folding accumulates across jobs
+        m.record_transport(&crate::engine::TransportCounters {
+            remote_bands: 1,
+            ..Default::default()
+        });
+        m.shard_clamps.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.remote_bands, 5);
+        assert_eq!(s.band_retries, 2);
+        assert_eq!(s.hedges_won, 1);
+        assert_eq!(s.workers_lost, 1);
+        assert_eq!(s.prepare_replications, 3);
+        assert_eq!(s.prepare_reuse, 5);
+        assert_eq!(s.shard_clamps, 1);
     }
 
     #[test]

@@ -43,8 +43,9 @@ use super::metrics::{CalibrationEntry, Metrics};
 use super::router::KernelSpec;
 use crate::engine::learn::{CostModel, FittedModel, Sample, DEFAULT_MARGIN, DEFAULT_MIN_SAMPLES};
 use crate::engine::{
-    shard, AccelKernel, CsrMemo, EngineError, FingerprintMemo, PreparedCache,
-    PreparedKey, Registry, SelectionScores, SpmmKernel,
+    shard, AccelKernel, CsrMemo, EngineError, FingerprintMemo, InProcess, PreparedCache,
+    PreparedKey, Registry, RetryPolicy, SelectionScores, ShardTransport, SocketTransport,
+    SpmmKernel,
 };
 use crate::formats::csr::Csr;
 use crate::formats::operand::MatrixOperand;
@@ -135,6 +136,15 @@ pub struct ServerConfig {
     pub registry_hook: Option<RegistryHook>,
     /// Learned-selection loop (see [`LearnConfig`]; default: disabled).
     pub learn: LearnConfig,
+    /// Remote shard workers (`host:port`, `engine::remote::serve` peers).
+    /// Empty = sharded jobs run on in-process channel workers. Non-empty =
+    /// the server dials every peer at startup and routes row bands over the
+    /// socket transport ([`SocketTransport`]); if the dial fails it logs
+    /// and degrades to in-process rather than refusing to start.
+    pub remote_peers: Vec<String>,
+    /// Timeout/retry/hedging policy for the socket transport (ignored when
+    /// `remote_peers` is empty).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServerConfig {
@@ -150,6 +160,8 @@ impl Default for ServerConfig {
             coalesce: CoalesceConfig::default(),
             registry_hook: None,
             learn: LearnConfig::default(),
+            remote_peers: Vec::new(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -167,6 +179,8 @@ impl std::fmt::Debug for ServerConfig {
             .field("coalesce", &self.coalesce)
             .field("registry_hook", &self.registry_hook.as_ref().map(|_| "…"))
             .field("learn", &self.learn)
+            .field("remote_peers", &self.remote_peers)
+            .field("retry", &self.retry)
             .finish()
     }
 }
@@ -225,16 +239,34 @@ impl Server {
                 }
             }
         }
+        // one shard transport shared by every worker: remote jobs
+        // serialize on its link state, so the whole pool shares one set of
+        // sockets (and one staged-B view) instead of dialing per worker
+        let transport: Arc<dyn ShardTransport> = if cfg.remote_peers.is_empty() {
+            Arc::new(InProcess)
+        } else {
+            match SocketTransport::connect_with(&cfg.remote_peers, cfg.retry) {
+                Ok(t) => Arc::new(t),
+                Err(e) => {
+                    eprintln!(
+                        "remote shard transport unavailable ({e}); \
+                         degrading to in-process shard workers"
+                    );
+                    Arc::new(InProcess)
+                }
+            }
+        };
         let mut handles = Vec::new();
         for wid in 0..cfg.workers {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             let model = cost_model.clone();
+            let transport = Arc::clone(&transport);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("spmm-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg, rx, metrics, model))
+                    .spawn(move || worker_loop(wid, cfg, rx, metrics, model, transport))
                     // lint: allow(P1) — no worker thread at startup leaves no server to return
                     .expect("spawn worker"),
             );
@@ -454,6 +486,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Envelope>>>,
     metrics: Arc<Metrics>,
     model: CostModel,
+    transport: Arc<dyn ShardTransport>,
 ) {
     let registry = worker_registry(&cfg, &metrics, &model);
     let cap = if cfg.coalesce.enabled {
@@ -518,6 +551,7 @@ fn worker_loop(
             batch,
             &metrics,
             &model,
+            transport.as_ref(),
         );
         if saw_stop {
             return;
@@ -598,6 +632,7 @@ fn run_batch(
     batch: Vec<JobEnvelope>,
     metrics: &Metrics,
     model: &CostModel,
+    transport: &dyn ShardTransport,
 ) {
     // service latency is dequeue -> response ready: every job in this
     // batch was dequeued "now", so each one's latency (observed at reply
@@ -734,6 +769,7 @@ fn run_batch(
                 scores,
                 cfg,
                 metrics,
+                transport,
             );
             metrics
                 .busy_ns
@@ -783,6 +819,7 @@ fn exec_one(
     scores: SelectionScores,
     cfg: &ServerConfig,
     metrics: &Metrics,
+    transport: &dyn ShardTransport,
 ) -> Result<JobOutput, JobError> {
     let start = Instant::now();
     let shards = job.opts.shards.max(1);
@@ -809,20 +846,37 @@ fn exec_one(
             shards,
             block: cfg.geometry.block,
         };
-        let out = shard::execute(kernel, a_csr, Some(b_csr.as_ref()), prepared, shard_cfg)
-            .map_err(|e| {
-                metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
-                JobError::from(e)
-            })?;
+        let out = shard::execute_with(
+            transport,
+            kernel,
+            a_csr,
+            Some(b_csr.as_ref()),
+            prepared,
+            shard_cfg,
+        )
+        .map_err(|e| {
+            metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
+            JobError::from(e)
+        })?;
         metrics.sharded_jobs.fetch_add(1, Ordering::Relaxed);
         metrics
             .shards_executed
             .fetch_add(out.shards.len() as u64, Ordering::Relaxed);
+        metrics.record_transport(&out.counters);
         for stat in &out.shards {
             metrics.observe_shard_wall(stat.wall);
             metrics.observe_shard_queue_wait(stat.queue);
         }
         let bands = out.shards.len().max(1);
+        if bands < shards {
+            // the planner honored fewer bands than the job asked for (few
+            // rows, or alignment rounding) — it used to clamp silently
+            metrics.shard_clamps.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "job {}: requested {shards} shards, planner produced {bands} band(s)",
+                job.id
+            );
+        }
         (out.c, out.stats, bands)
     } else {
         let out = kernel.execute(a_csr, prepared)?;
@@ -870,6 +924,7 @@ fn exec_one(
         wall: start.elapsed(),
         max_err,
         shards: bands,
+        shards_requested: shards,
     })
 }
 
@@ -1083,6 +1138,74 @@ mod tests {
         assert_eq!(snap.shards_executed, sharded.shards as u64);
         assert!(snap.shard_wall_p50_us > 0, "{snap:?}");
         assert!(snap.shard_queue_p50_us > 0, "{snap:?}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn shard_clamp_is_surfaced_and_metered() {
+        let s = cpu_server(1, 4);
+        let a = Arc::new(uniform(6, 16, 0.5, 40));
+        let b = Arc::new(uniform(16, 12, 0.5, 41));
+        let rx = s.submit(
+            SpmmJob::new(1, a.clone(), b.clone())
+                .with_kernel(FormatKind::Csr, Algorithm::Gustavson)
+                .with_shards(16),
+        );
+        let out = rx.recv().unwrap().result.unwrap();
+        assert_eq!(out.shards_requested, 16);
+        assert!(
+            out.shards < out.shards_requested,
+            "a 6-row job cannot honor 16 shards (got {})",
+            out.shards
+        );
+        // unsharded jobs report request == actual and never count as clamps
+        let rx = s.submit(SpmmJob::new(2, a, b));
+        let out1 = rx.recv().unwrap().result.unwrap();
+        assert_eq!((out1.shards, out1.shards_requested), (1, 1));
+        assert_eq!(s.metrics.snapshot().shard_clamps, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn remote_peers_route_sharded_jobs_over_socket_workers() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let geom = Geometry { block: 8, pairs: 16, slots: 8 };
+        let remote_reg = Arc::new(Registry::with_default_kernels(geom, 1));
+        std::thread::spawn(move || {
+            let _ = crate::engine::remote::serve(listener, remote_reg);
+        });
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            geometry: geom,
+            remote_peers: vec![addr],
+            ..Default::default()
+        });
+        let a = Arc::new(uniform(64, 48, 0.2, 50));
+        let b = Arc::new(uniform(48, 40, 0.2, 51));
+        let run = |id: u64, shards: usize| {
+            s.submit(
+                SpmmJob::new(id, a.clone(), b.clone())
+                    .with_kernel(FormatKind::Csr, Algorithm::Gustavson)
+                    .with_shards(shards),
+            )
+            .recv()
+            .unwrap()
+            .result
+            .unwrap()
+        };
+        let base = run(1, 1);
+        let remote = run(2, 4);
+        assert!(remote.shards > 1, "planner produced {} bands", remote.shards);
+        assert_eq!(
+            base.c.as_ref().unwrap().bit_pattern(),
+            remote.c.as_ref().unwrap().bit_pattern(),
+            "remote sharded result diverges bitwise from the local run"
+        );
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.remote_bands, remote.shards as u64);
+        assert!(snap.prepare_replications >= 1, "{snap:?}");
         s.shutdown();
     }
 

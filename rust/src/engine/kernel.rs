@@ -364,6 +364,18 @@ pub trait SpmmKernel: Send + Sync {
         1
     }
 
+    /// Hand this kernel a live [`crate::engine::learn::CostModel`] handle.
+    /// Called by [`crate::engine::Registry::set_cost_model`] for every
+    /// registered kernel; the default ignores it. Kernels with fittable
+    /// constants inside their own `cost_hint` arithmetic (the outer
+    /// kernel's merge-round weight) keep the handle and consult the
+    /// fitted calibration on each hint — falling back to their static
+    /// constant while uncalibrated, so selection behavior is unchanged
+    /// until the learn loop has published a fit.
+    fn observe_model(&self, model: &crate::engine::learn::CostModel) {
+        let _ = model;
+    }
+
     /// Run `C = A × B` on a prepared operand.
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError>;
 

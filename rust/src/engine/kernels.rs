@@ -449,11 +449,43 @@ impl SpmmKernel for InnerKernel {
 /// [`GustavsonFastKernel`]'s workspace pool).
 pub struct OuterKernel {
     pub cfg: spmm::outer::OuterConfig,
+    /// Live learned-selection handle (set via `observe_model`): scales the
+    /// merge-round term of [`OuterKernel::cost_hint`] by the fitted
+    /// outer-vs-fast-Gustavson calibration ratio instead of the static
+    /// constant. `None`/uncalibrated ⇒ the original hard-coded weight.
+    model: std::sync::Mutex<Option<super::learn::CostModel>>,
 }
 
 impl OuterKernel {
     pub fn new(cfg: spmm::outer::OuterConfig) -> OuterKernel {
-        OuterKernel { cfg }
+        OuterKernel { cfg, model: std::sync::Mutex::new(None) }
+    }
+
+    /// The fitted merge-round weight: the ratio of this kernel's fitted
+    /// per-hint-unit scale to fast Gustavson's (the reference row-centric
+    /// kernel the hint competes against), clamped to `[0.25, 4]` so one
+    /// noisy refit can never invert selection wholesale. `1.0` — the
+    /// original constant, bit-for-bit the pre-fit hint — whenever no model
+    /// is attached or either calibration is missing or degenerate.
+    fn merge_round_weight(&self) -> f64 {
+        let guard = crate::util::lock_unpoisoned(&self.model);
+        let Some(model) = guard.as_ref() else {
+            return 1.0;
+        };
+        let fitted = model.fitted();
+        let outer = fitted.get((FormatKind::Csc, Algorithm::OuterProduct));
+        let fast = fitted.get((FormatKind::Csr, Algorithm::GustavsonFast));
+        match (outer, fast) {
+            (Some(o), Some(g))
+                if o.scale.is_finite()
+                    && g.scale.is_finite()
+                    && o.scale > 0.0
+                    && g.scale > 0.0 =>
+            {
+                (o.scale / g.scale).clamp(0.25, 4.0)
+            }
+            _ => 1.0,
+        }
     }
 }
 
@@ -475,15 +507,22 @@ impl SpmmKernel for OuterKernel {
         // streaming requires. Honest on ordinary inputs: the merge rounds
         // keep this above the fast-Gustavson hint, so auto-selection only
         // reaches for outer where hyper-sparsity makes the row-centric
-        // constants dominate.
+        // constants dominate. The per-round weight starts at the static
+        // constant (1.0) and is replaced by the kernel-observation-log fit
+        // once `observe_model` has attached a calibrated `CostModel` — see
+        // `merge_round_weight`.
         let products = a.nnz() as f64 * nd(b);
         let runs = a.cols().min(a.nnz()).max(2) as f64;
         let fan = self.cfg.fan_in.max(2) as f64;
         let rounds = (runs.ln() / fan.ln()).ceil().max(1.0);
+        let weight = self.merge_round_weight();
         CostHint {
-            flops: products * (1.0 + rounds) + (2 * a.nnz() + a.cols()) as f64,
+            flops: products * (1.0 + rounds * weight) + (2 * a.nnz() + a.cols()) as f64,
             prepare_words: 0.0,
         }
+    }
+    fn observe_model(&self, model: &super::learn::CostModel) {
+        *crate::util::lock_unpoisoned(&self.model) = Some(model.clone());
     }
     fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
         Ok(PreparedB::OuterPooled(Arc::new(OuterB::new(Arc::new(
@@ -606,6 +645,7 @@ impl SpmmKernel for TiledKernel {
 mod tests {
     use super::*;
     use crate::datasets::synth::uniform;
+    use crate::engine::learn::{Calibration, CostModel, FittedModel};
     use crate::spmm::dense::multiply as dense_ref;
     use crate::spmm::outer::OuterConfig;
 
@@ -822,6 +862,84 @@ mod tests {
         assert!(k.ingest_cost(&b, Some(&csc_op)) > 0.0);
         assert!(k.ingest_cost(&b, Some(&csc_op)) < k.ingest_cost(&b, Some(&coo_op)));
         assert_eq!(k.ingest_cost(&b, None), 0.0);
+    }
+
+    #[test]
+    fn outer_cost_hint_uncalibrated_matches_static_constant() {
+        let k = OuterKernel::new(OuterConfig { fan_in: 4, workers: 2 });
+        let a = uniform(60, 80, 0.05, 31);
+        let b = uniform(80, 50, 0.05, 32);
+        // the pre-fit formula, reproduced by hand: no model attached ⇒
+        // the hint must be bit-for-bit the original constant-weight form
+        let products = a.nnz() as f64 * (b.nnz() as f64 / b.rows().max(1) as f64);
+        let runs = a.cols().min(a.nnz()).max(2) as f64;
+        let rounds = (runs.ln() / 4f64.ln()).ceil().max(1.0);
+        let want = products * (1.0 + rounds) + (2 * a.nnz() + a.cols()) as f64;
+        assert_eq!(k.cost_hint(&a, &b).flops.to_bits(), want.to_bits());
+        // an attached but EMPTY model (nothing calibrated yet) is the same
+        k.observe_model(&CostModel::default());
+        assert_eq!(k.cost_hint(&a, &b).flops.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn outer_cost_hint_uses_fitted_merge_round_scale() {
+        let k = OuterKernel::new(OuterConfig { fan_in: 4, workers: 2 });
+        let a = uniform(60, 80, 0.05, 31);
+        let b = uniform(80, 50, 0.05, 32);
+        let uncalibrated = k.cost_hint(&a, &b).flops;
+        let cal = |scale: f64| Calibration { scale, samples: 8, mean_abs_err_us: 0.5 };
+
+        let model = CostModel::default();
+        let mut fm = FittedModel::default();
+        fm.insert((FormatKind::Csc, Algorithm::OuterProduct), cal(3.0));
+        fm.insert((FormatKind::Csr, Algorithm::GustavsonFast), cal(1.0));
+        model.publish(fm);
+        k.observe_model(&model);
+        // weight = 3.0/1.0: exactly the calibrated formula, and dearer
+        // than the static constant (so selection actually moves)
+        let products = a.nnz() as f64 * (b.nnz() as f64 / b.rows().max(1) as f64);
+        let runs = a.cols().min(a.nnz()).max(2) as f64;
+        let rounds = (runs.ln() / 4f64.ln()).ceil().max(1.0);
+        let want = products * (1.0 + rounds * 3.0) + (2 * a.nnz() + a.cols()) as f64;
+        let fitted_hint = k.cost_hint(&a, &b).flops;
+        assert_eq!(fitted_hint.to_bits(), want.to_bits());
+        assert!(fitted_hint > uncalibrated);
+
+        // extreme ratios clamp to [0.25, 4] so one bad refit can't flip
+        // selection wholesale
+        let mut fm = FittedModel::default();
+        fm.insert((FormatKind::Csc, Algorithm::OuterProduct), cal(100.0));
+        fm.insert((FormatKind::Csr, Algorithm::GustavsonFast), cal(1.0));
+        model.publish(fm);
+        let clamped = products * (1.0 + rounds * 4.0) + (2 * a.nnz() + a.cols()) as f64;
+        assert_eq!(k.cost_hint(&a, &b).flops.to_bits(), clamped.to_bits());
+
+        // a one-sided fit (reference kernel uncalibrated) falls back to
+        // the static constant instead of inventing a ratio
+        let mut fm = FittedModel::default();
+        fm.insert((FormatKind::Csc, Algorithm::OuterProduct), cal(3.0));
+        model.publish(fm);
+        assert_eq!(k.cost_hint(&a, &b).flops.to_bits(), uncalibrated.to_bits());
+    }
+
+    #[test]
+    fn registry_set_cost_model_reaches_outer_merge_round_fit() {
+        let mut r = crate::engine::Registry::new();
+        r.register(Arc::new(OuterKernel::new(OuterConfig { fan_in: 4, workers: 1 })));
+        let a = uniform(60, 80, 0.05, 31);
+        let b = uniform(80, 50, 0.05, 32);
+        let k = r.resolve(FormatKind::Csc, Algorithm::OuterProduct).unwrap();
+        let before = k.cost_hint(&a, &b).flops;
+        let model = CostModel::default();
+        let mut fm = FittedModel::default();
+        let cal = |scale: f64| Calibration { scale, samples: 4, mean_abs_err_us: 0.5 };
+        fm.insert((FormatKind::Csc, Algorithm::OuterProduct), cal(2.0));
+        fm.insert((FormatKind::Csr, Algorithm::GustavsonFast), cal(1.0));
+        model.publish(fm);
+        r.set_cost_model(model);
+        // the registry fan-out must have attached the handle to the live
+        // kernel Arc — the hint moves without re-registering anything
+        assert!(k.cost_hint(&a, &b).flops > before);
     }
 
     #[test]

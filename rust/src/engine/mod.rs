@@ -41,6 +41,16 @@
 //!   channel-connected shard workers with a reduction-free merge; wraps
 //!   any kernel ([`shard::ShardedKernel`]) and stays bit-identical to the
 //!   unsharded run at every shard count (see its invariants);
+//! * [`transport`] — the [`transport::ShardTransport`] boundary under the
+//!   shard executor: [`transport::InProcess`] (the PR-3 channel workers)
+//!   and a versioned, bit-exact wire format ([`transport::wire`]) for
+//!   band frames and every [`PreparedB`] variant;
+//! * [`remote`] — the socket transport ([`remote::SocketTransport`]) and
+//!   the worker loop ([`remote::serve`]) behind the `worker` CLI
+//!   subcommand: content-fingerprint-keyed `B` replication, weighted band
+//!   placement, per-band timeout/retry, hedged stragglers, and
+//!   lost-band-only resubmission on worker death — all metered through
+//!   [`transport::TransportCounters`];
 //! * [`accel::AccelKernel`] — `runtime::NumericEngine` (PJRT or its CPU
 //!   twin) adapted onto the same contract.
 //!
@@ -74,8 +84,10 @@ pub mod kernels;
 pub mod learn;
 pub mod prepared;
 pub mod registry;
+pub mod remote;
 pub mod shard;
 pub mod tiled;
+pub mod transport;
 
 pub use accel::AccelKernel;
 pub use error::EngineError;
@@ -89,5 +101,7 @@ pub use kernels::{
 pub use learn::{Calibration, CostModel, FittedModel, ModelError, Sample};
 pub use prepared::{fingerprint_csr, CsrMemo, FingerprintMemo, PreparedCache, PreparedKey};
 pub use registry::{KernelKey, Registry, SelectionScores};
+pub use remote::SocketTransport;
 pub use shard::{ShardBand, ShardConfig, ShardPlan, ShardPlanner, ShardedKernel};
 pub use tiled::TiledConfig;
+pub use transport::{InProcess, RetryPolicy, ShardTransport, TransportCounters};

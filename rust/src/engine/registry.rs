@@ -227,8 +227,15 @@ impl Registry {
 
     /// Attach (or replace) the learned-selection cost model consulted by
     /// [`Registry::select_native`]. The handle is shared: a refit loop
-    /// publishing into a clone is immediately visible here.
+    /// publishing into a clone is immediately visible here. The handle is
+    /// also fanned out to every registered kernel via
+    /// [`SpmmKernel::observe_model`], so kernels with fittable constants
+    /// inside their own hint arithmetic (the outer kernel's merge-round
+    /// weight) see each published fit live.
     pub fn set_cost_model(&mut self, model: super::learn::CostModel) {
+        for k in self.map.values() {
+            k.observe_model(&model);
+        }
         self.cost_model = Some(model);
     }
 

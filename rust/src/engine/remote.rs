@@ -1,0 +1,796 @@
+//! Socket shard transport and the worker it speaks to: cross-host
+//! execution of the shard planner's row bands over length-prefixed
+//! [`wire`](super::transport::wire) frames — hand-rolled TCP, no new
+//! dependencies, bit-identical output.
+//!
+//! # Topology
+//!
+//! One **leader** (the process running [`SocketTransport`]) connects to N
+//! **workers** (processes running [`serve`], the `worker` CLI subcommand).
+//! Per job the leader:
+//!
+//! 1. **replicates** the shared `PreparedB` to every live worker that has
+//!    not yet staged it, keyed by the content fingerprint
+//!    ([`super::transport::content_key`]) — a worker's staged cache is the
+//!    remote mirror of the coordinator's `PreparedCache`, and reuse across
+//!    jobs is metered (`prepare_reuse` vs `prepare_replications`);
+//! 2. **routes** bands by the shard planner's weights: heaviest band
+//!    first, each to the least-loaded live worker (deterministic
+//!    index-order tie-break);
+//! 3. **collects** replies on per-worker reader threads feeding one event
+//!    queue, enforcing the [`RetryPolicy`]: a band unanswered past
+//!    `band_timeout` is resubmitted (bounded by `retry_budget`); a
+//!    straggler past `hedge_after` is *hedged* — duplicated to another
+//!    live worker, first answer wins (`hedges_won`); a dead worker loses
+//!    only its in-flight bands, which are resubmitted to survivors
+//!    (`workers_lost`, `band_retries`) — the socket analogue of the
+//!    in-process executor's named-lost-shards path, except here the job
+//!    survives.
+//!
+//! The job fails typed only when a band exhausts its retry budget or no
+//! live worker remains — and the error names the unfinished shards.
+//!
+//! # Why results stay bit-identical
+//!
+//! A worker executes exactly the band slice the in-process transport would
+//! have handed a thread, against a `PreparedB` rebuilt from the same CSR
+//! bits, with the same kernel resolved by `(format, algorithm)` from its
+//! own registry. Matrix values cross the wire as IEEE-754 bit patterns,
+//! and the leader's merge is the transport-blind row copy in
+//! `shard::execute_with` — so retries, hedges, and re-placements can
+//! change *where* a band runs but never *what* it returns. Leader and
+//! workers must register comparable kernels (same `Geometry`, worker
+//! counts may differ — thread counts never change result bits; the
+//! `worker` subcommand takes the same kernel flags as `spmm`/`serve`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::formats::csr::Csr;
+use crate::util::lock_unpoisoned;
+
+use super::error::EngineError;
+use super::kernel::{EngineOutput, PreparedB};
+use super::prepared::PreparedKey;
+use super::registry::Registry;
+use super::transport::wire::{decode_frame, encode_frame, Frame};
+use super::transport::{
+    BandJob, BandResult, BandRun, RetryPolicy, ShardTransport, TransportCounters,
+};
+
+/// Upper bound on one frame's byte length — a desynchronized or hostile
+/// peer cannot make us allocate unboundedly.
+const MAX_FRAME: usize = 1 << 30;
+
+/// How often the leader's event loop wakes to sweep timeouts and hedges.
+const TICK: Duration = Duration::from_millis(20);
+
+fn write_frame(stream: &mut TcpStream, frame: &Frame) -> io::Result<()> {
+    let bytes = encode_frame(frame);
+    let mut msg = Vec::with_capacity(4 + bytes.len());
+    msg.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    msg.extend_from_slice(&bytes);
+    stream.write_all(&msg)
+}
+
+fn read_frame(stream: &mut TcpStream) -> io::Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "oversized frame"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+fn exec_err(msg: String) -> EngineError {
+    EngineError::ExecFailed(msg)
+}
+
+// ---------------------------------------------------------------------------
+// Leader side
+// ---------------------------------------------------------------------------
+
+struct WorkerLink {
+    addr: String,
+    stream: TcpStream,
+    /// Content keys staged on this worker (its remote prepared cache).
+    staged: BTreeSet<PreparedKey>,
+    alive: bool,
+}
+
+struct LinkState {
+    workers: Vec<WorkerLink>,
+    /// Globally unique submission ids — never reused, so a late reply from
+    /// a previous job's hedge loser is recognized as stale and ignored.
+    next_seq: u64,
+}
+
+/// The cross-host [`ShardTransport`]: ships bands to `worker` processes as
+/// wire frames, replicates `B` by content fingerprint, and survives worker
+/// loss/stragglers per the [`RetryPolicy`]. Jobs serialize through one
+/// transport (the connection set is a shared resource); clone-free band
+/// routing keeps each run deterministic given the reply timing.
+pub struct SocketTransport {
+    state: Mutex<LinkState>,
+    policy: RetryPolicy,
+}
+
+impl SocketTransport {
+    /// Connect and handshake every peer (`host:port`) with the default
+    /// [`RetryPolicy`]. Fails typed if any peer is unreachable or speaks a
+    /// different wire version — a half-connected fleet would silently
+    /// shrink capacity.
+    pub fn connect(peers: &[String]) -> Result<SocketTransport, EngineError> {
+        SocketTransport::connect_with(peers, RetryPolicy::default())
+    }
+
+    /// [`SocketTransport::connect`] with an explicit policy (tests use
+    /// tight timeouts; batch jobs may want a larger hedge threshold).
+    pub fn connect_with(
+        peers: &[String],
+        policy: RetryPolicy,
+    ) -> Result<SocketTransport, EngineError> {
+        if peers.is_empty() {
+            return Err(exec_err("socket transport: no worker peers given".into()));
+        }
+        let mut workers = Vec::with_capacity(peers.len());
+        for addr in peers {
+            let mut stream = TcpStream::connect(addr)
+                .map_err(|e| exec_err(format!("socket transport: connect {addr}: {e}")))?;
+            let _ = stream.set_nodelay(true);
+            write_frame(&mut stream, &Frame::Hello)
+                .map_err(|e| exec_err(format!("socket transport: hello {addr}: {e}")))?;
+            let body = read_frame(&mut stream)
+                .map_err(|e| exec_err(format!("socket transport: handshake {addr}: {e}")))?;
+            match decode_frame(&body) {
+                Ok(Frame::HelloAck) => {}
+                Ok(other) => {
+                    return Err(exec_err(format!(
+                        "socket transport: {addr} answered hello with {other:?}"
+                    )))
+                }
+                Err(e) => {
+                    return Err(exec_err(format!(
+                        "socket transport: {addr} handshake: {e}"
+                    )))
+                }
+            }
+            workers.push(WorkerLink {
+                addr: addr.clone(),
+                stream,
+                staged: BTreeSet::new(),
+                alive: true,
+            });
+        }
+        Ok(SocketTransport {
+            state: Mutex::new(LinkState { workers, next_seq: 0 }),
+            policy,
+        })
+    }
+
+    pub fn policy(&self) -> RetryPolicy {
+        self.policy
+    }
+
+    /// Workers still connected (drops as runs observe failures).
+    pub fn live_workers(&self) -> usize {
+        lock_unpoisoned(&self.state)
+            .workers
+            .iter()
+            .filter(|w| w.alive)
+            .count()
+    }
+
+    /// Peer addresses, in connect order (for logs and `JobOutput`).
+    pub fn peer_addrs(&self) -> Vec<String> {
+        lock_unpoisoned(&self.state)
+            .workers
+            .iter()
+            .map(|w| w.addr.clone())
+            .collect()
+    }
+}
+
+/// A band submission in flight.
+struct Pending {
+    shard: usize,
+    rows: (usize, usize),
+    worker: usize,
+    sent: Instant,
+    hedge: bool,
+}
+
+/// Per-shard delivery bookkeeping.
+struct Slot {
+    rows: (usize, usize),
+    weight: usize,
+    /// Submissions so far (first + retries; hedges don't count).
+    attempts: u32,
+    hedged: bool,
+    done: bool,
+}
+
+enum Event {
+    Frame(usize, Vec<u8>),
+    Dead(usize),
+}
+
+/// Least-loaded live worker, preferring not-`exclude` when another live
+/// worker exists; index order breaks ties, keeping placement deterministic.
+fn pick_worker(
+    workers: &[WorkerLink],
+    loads: &[usize],
+    exclude: Option<usize>,
+) -> Option<usize> {
+    let candidate = |skip: Option<usize>| {
+        (0..workers.len())
+            .filter(|&i| workers[i].alive && Some(i) != skip)
+            .min_by_key(|&i| loads[i])
+    };
+    candidate(exclude).or_else(|| candidate(None))
+}
+
+fn reader_loop(idx: usize, mut stream: TcpStream, tx: Sender<Event>, stop: &AtomicBool) {
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                let _ = tx.send(Event::Dead(idx));
+                return;
+            }
+            Ok(n) => {
+                acc.extend_from_slice(&chunk[..n]);
+                loop {
+                    if acc.len() < 4 {
+                        break;
+                    }
+                    let len =
+                        u32::from_le_bytes([acc[0], acc[1], acc[2], acc[3]]) as usize;
+                    if len > MAX_FRAME {
+                        // stream desync: unrecoverable, drop the worker
+                        let _ = tx.send(Event::Dead(idx));
+                        return;
+                    }
+                    if acc.len() < 4 + len {
+                        break;
+                    }
+                    let frame = acc[4..4 + len].to_vec();
+                    acc.drain(..4 + len);
+                    if tx.send(Event::Frame(idx, frame)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Dead(idx));
+                return;
+            }
+        }
+    }
+}
+
+impl ShardTransport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn run(&self, job: &BandJob<'_>) -> Result<BandRun, EngineError> {
+        let mut guard = lock_unpoisoned(&self.state);
+        let st = &mut *guard;
+        let mut counters = TransportCounters::default();
+        let total = job.plan.bands.len();
+        if total == 0 {
+            return Ok(BandRun { bands: Vec::new(), counters });
+        }
+
+        // --- stage B on every live worker missing it (content-keyed) ---
+        let mut lost_on_stage = Vec::new();
+        for (idx, w) in st.workers.iter_mut().enumerate().filter(|(_, w)| w.alive) {
+            if w.staged.contains(&job.key) {
+                counters.prepare_reuse += 1;
+                continue;
+            }
+            let frame = Frame::Prepare {
+                key: job.key,
+                prepared: job.prepared.clone(),
+            };
+            if write_frame(&mut w.stream, &frame).is_ok() {
+                w.staged.insert(job.key);
+                counters.prepare_replications += 1;
+            } else {
+                lost_on_stage.push(idx);
+            }
+        }
+        for idx in lost_on_stage {
+            st.workers[idx].alive = false;
+            counters.workers_lost += 1;
+        }
+        if !st.workers.iter().any(|w| w.alive) {
+            return Err(exec_err(
+                "socket transport: no live workers (all connections lost)".into(),
+            ));
+        }
+
+        // --- per-shard bookkeeping; heaviest band routes first ---
+        let mut slots: Vec<Slot> = job
+            .plan
+            .bands
+            .iter()
+            .map(|b| Slot {
+                rows: b.rows,
+                weight: b.weight,
+                attempts: 0,
+                hedged: false,
+                done: false,
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..total).collect();
+        order.sort_by(|&x, &y| {
+            slots[y]
+                .weight
+                .cmp(&slots[x].weight)
+                .then(x.cmp(&y))
+        });
+        let mut loads: Vec<usize> = vec![0; st.workers.len()];
+        let mut outstanding: BTreeMap<u64, Pending> = BTreeMap::new();
+        let mut results: Vec<BandResult> = Vec::with_capacity(total);
+
+        let stop = AtomicBool::new(false);
+        let (ev_tx, ev_rx) = channel::<Event>();
+
+        let outcome = std::thread::scope(|scope| -> Result<(), EngineError> {
+            for (idx, w) in st.workers.iter().enumerate() {
+                if !w.alive {
+                    continue;
+                }
+                let stream = match w.stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        let _ = ev_tx.send(Event::Dead(idx));
+                        continue;
+                    }
+                };
+                let _ = stream.set_read_timeout(Some(TICK));
+                let tx = ev_tx.clone();
+                let stop = &stop;
+                scope.spawn(move || reader_loop(idx, stream, tx, stop));
+            }
+
+            // the main loop runs in an immediately-invoked closure so that
+            // EVERY exit path — success or typed failure — flips the stop
+            // flag before the scope joins the reader threads (they poll it
+            // each read-timeout tick; without this the join would block
+            // on readers that never exit)
+            let main_loop = (|| -> Result<(), EngineError> {
+            // submit one band attempt; marks dead workers it trips over
+            // and keeps trying survivors. `hedge` submissions don't spend
+            // the retry budget.
+            let submit = |st: &mut LinkState,
+                          loads: &mut Vec<usize>,
+                          outstanding: &mut BTreeMap<u64, Pending>,
+                          counters: &mut TransportCounters,
+                          slots: &mut Vec<Slot>,
+                          shard: usize,
+                          exclude: Option<usize>,
+                          hedge: bool|
+             -> Result<(), EngineError> {
+                let (lo, hi) = slots[shard].rows;
+                loop {
+                    let Some(widx) = pick_worker(&st.workers, loads, exclude) else {
+                        let undone: Vec<usize> = slots
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| !s.done)
+                            .map(|(i, _)| i)
+                            .collect();
+                        return Err(exec_err(format!(
+                            "socket transport: no live workers left; shard(s) {undone:?} \
+                             of {} unfinished",
+                            slots.len()
+                        )));
+                    };
+                    // a worker that missed the staging pass (it was busy
+                    // dying) or a survivor taking over a lost band may not
+                    // hold B yet — stage before the band, same frame order
+                    // the wire contract expects
+                    if !st.workers[widx].staged.contains(&job.key) {
+                        let frame = Frame::Prepare {
+                            key: job.key,
+                            prepared: job.prepared.clone(),
+                        };
+                        if write_frame(&mut st.workers[widx].stream, &frame).is_err() {
+                            st.workers[widx].alive = false;
+                            counters.workers_lost += 1;
+                            continue;
+                        }
+                        st.workers[widx].staged.insert(job.key);
+                        counters.prepare_replications += 1;
+                    }
+                    let seq = st.next_seq;
+                    st.next_seq += 1;
+                    let frame = Frame::Band {
+                        seq,
+                        shard: shard as u64,
+                        rows: (lo as u64, hi as u64),
+                        key: job.key,
+                        a_band: job.a.row_band(lo, hi),
+                    };
+                    if write_frame(&mut st.workers[widx].stream, &frame).is_err() {
+                        st.workers[widx].alive = false;
+                        counters.workers_lost += 1;
+                        continue;
+                    }
+                    loads[widx] += slots[shard].weight.max(1);
+                    if !hedge {
+                        slots[shard].attempts += 1;
+                    }
+                    outstanding.insert(
+                        seq,
+                        Pending {
+                            shard,
+                            rows: (lo, hi),
+                            worker: widx,
+                            sent: Instant::now(),
+                            hedge,
+                        },
+                    );
+                    return Ok(());
+                }
+            };
+
+            for &shard in &order {
+                submit(
+                    st, &mut loads, &mut outstanding, &mut counters, &mut slots,
+                    shard, None, false,
+                )?;
+            }
+
+            while results.len() < total {
+                match ev_rx.recv_timeout(TICK) {
+                    Ok(Event::Frame(idx, bytes)) => match decode_frame(&bytes) {
+                        Ok(Frame::BandOk { seq, shard: _, wall_us, stats, c }) => {
+                            let Some(p) = outstanding.remove(&seq) else {
+                                continue; // stale (hedge loser or prior job)
+                            };
+                            if slots[p.shard].done {
+                                continue;
+                            }
+                            slots[p.shard].done = true;
+                            counters.remote_bands += 1;
+                            if p.hedge {
+                                counters.hedges_won += 1;
+                            }
+                            let wall = Duration::from_micros(wall_us);
+                            let queue = p.sent.elapsed().saturating_sub(wall);
+                            results.push(BandResult {
+                                shard: p.shard,
+                                rows: p.rows,
+                                queue,
+                                wall,
+                                output: EngineOutput { c, stats },
+                            });
+                            // forget sibling submissions for this shard
+                            let stale: Vec<u64> = outstanding
+                                .iter()
+                                .filter(|(_, q)| q.shard == p.shard)
+                                .map(|(&s, _)| s)
+                                .collect();
+                            for s in stale {
+                                outstanding.remove(&s);
+                            }
+                        }
+                        Ok(Frame::BandErr { seq, shard: _, message }) => {
+                            let Some(p) = outstanding.remove(&seq) else {
+                                continue;
+                            };
+                            if slots[p.shard].done {
+                                continue;
+                            }
+                            if slots[p.shard].attempts > self.policy.retry_budget {
+                                return Err(exec_err(format!(
+                                    "socket transport: shard {} failed on worker {}: \
+                                     {message} (retry budget {} exhausted)",
+                                    p.shard,
+                                    st.workers[p.worker].addr,
+                                    self.policy.retry_budget
+                                )));
+                            }
+                            counters.band_retries += 1;
+                            submit(
+                                st, &mut loads, &mut outstanding, &mut counters,
+                                &mut slots, p.shard, Some(p.worker), false,
+                            )?;
+                        }
+                        Ok(_) => {} // protocol noise; ignore
+                        Err(_) => {
+                            // undecodable bytes mean the stream is desynced
+                            let _ = ev_tx.send(Event::Dead(idx));
+                        }
+                    },
+                    Ok(Event::Dead(idx)) => {
+                        if st.workers[idx].alive {
+                            st.workers[idx].alive = false;
+                            counters.workers_lost += 1;
+                        }
+                        // resubmit ONLY this worker's in-flight bands — the
+                        // named-lost-shards path, now survivable
+                        let lost: Vec<u64> = outstanding
+                            .iter()
+                            .filter(|(_, p)| p.worker == idx)
+                            .map(|(&s, _)| s)
+                            .collect();
+                        for seq in lost {
+                            let Some(p) = outstanding.remove(&seq) else {
+                                continue;
+                            };
+                            if slots[p.shard].done {
+                                continue;
+                            }
+                            if slots[p.shard].attempts > self.policy.retry_budget {
+                                return Err(exec_err(format!(
+                                    "socket transport: lost worker {} and shard {} \
+                                     exhausted its retry budget ({})",
+                                    st.workers[idx].addr, p.shard, self.policy.retry_budget
+                                )));
+                            }
+                            counters.band_retries += 1;
+                            submit(
+                                st, &mut loads, &mut outstanding, &mut counters,
+                                &mut slots, p.shard, Some(idx), false,
+                            )?;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        let now = Instant::now();
+                        // timeout sweep: resubmit overdue bands
+                        let overdue: Vec<u64> = outstanding
+                            .iter()
+                            .filter(|(_, p)| {
+                                now.duration_since(p.sent) > self.policy.band_timeout
+                            })
+                            .map(|(&s, _)| s)
+                            .collect();
+                        for seq in overdue {
+                            let Some(p) = outstanding.remove(&seq) else {
+                                continue;
+                            };
+                            if slots[p.shard].done {
+                                continue;
+                            }
+                            if slots[p.shard].attempts > self.policy.retry_budget {
+                                return Err(exec_err(format!(
+                                    "socket transport: shard {} timed out {} time(s), \
+                                     retry budget {} exhausted",
+                                    p.shard,
+                                    slots[p.shard].attempts,
+                                    self.policy.retry_budget
+                                )));
+                            }
+                            counters.band_retries += 1;
+                            submit(
+                                st, &mut loads, &mut outstanding, &mut counters,
+                                &mut slots, p.shard, Some(p.worker), false,
+                            )?;
+                        }
+                        // hedge sweep: duplicate stragglers once, first
+                        // answer wins
+                        let live = st.workers.iter().filter(|w| w.alive).count();
+                        if live > 1 {
+                            let stragglers: Vec<(usize, usize)> = outstanding
+                                .values()
+                                .filter(|p| {
+                                    !p.hedge
+                                        && !slots[p.shard].hedged
+                                        && !slots[p.shard].done
+                                        && now.duration_since(p.sent)
+                                            > self.policy.hedge_after
+                                })
+                                .map(|p| (p.shard, p.worker))
+                                .collect();
+                            for (shard, worker) in stragglers {
+                                slots[shard].hedged = true;
+                                submit(
+                                    st, &mut loads, &mut outstanding, &mut counters,
+                                    &mut slots, shard, Some(worker), true,
+                                )?;
+                            }
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        let undone: Vec<usize> = slots
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| !s.done)
+                            .map(|(i, _)| i)
+                            .collect();
+                        return Err(exec_err(format!(
+                            "socket transport: every reader exited; shard(s) {undone:?} \
+                             of {total} unfinished"
+                        )));
+                    }
+                }
+            }
+            Ok(())
+            })();
+            stop.store(true, Ordering::Relaxed);
+            main_loop
+        });
+        outcome?;
+        Ok(BandRun { bands: results, counters })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Serve shard bands forever: accept leader connections on `listener`,
+/// one handler thread per connection, each holding a content-keyed staged
+/// operand cache and executing bands against `registry`'s kernels
+/// (resolved by the frame key's `(format, algorithm)` — workers run bands
+/// unsharded; thread-count differences never change result bits).
+///
+/// A kernel panic kills only that connection's handler thread — the
+/// dropped socket is what tells the leader to resubmit the in-flight
+/// bands elsewhere. The accept loop itself returns only on listener
+/// errors.
+pub fn serve(listener: TcpListener, registry: Arc<Registry>) -> io::Result<()> {
+    loop {
+        let (stream, _peer) = listener.accept()?;
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            let _ = handle_leader(stream, registry);
+        });
+    }
+}
+
+fn handle_leader(mut stream: TcpStream, registry: Arc<Registry>) -> io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut staged: BTreeMap<PreparedKey, PreparedB> = BTreeMap::new();
+    loop {
+        let body = read_frame(&mut stream)?;
+        let frame = match decode_frame(&body) {
+            Ok(f) => f,
+            // protocol/version error: drop the connection, the leader's
+            // reader surfaces it as a dead worker
+            Err(_) => return Ok(()),
+        };
+        match frame {
+            Frame::Hello => write_frame(&mut stream, &Frame::HelloAck)?,
+            Frame::Prepare { key, prepared } => {
+                staged.insert(key, prepared);
+            }
+            Frame::Band { seq, shard, rows: _, key, a_band } => {
+                let reply = run_band(seq, shard, key, &a_band, &staged, &registry);
+                write_frame(&mut stream, &reply)?;
+            }
+            Frame::Shutdown => return Ok(()),
+            // frames only a leader should receive; ignore
+            Frame::HelloAck | Frame::BandOk { .. } | Frame::BandErr { .. } => {}
+        }
+    }
+}
+
+fn run_band(
+    seq: u64,
+    shard: u64,
+    key: PreparedKey,
+    a_band: &Csr,
+    staged: &BTreeMap<PreparedKey, PreparedB>,
+    registry: &Registry,
+) -> Frame {
+    let Some(prepared) = staged.get(&key) else {
+        return Frame::BandErr {
+            seq,
+            shard,
+            message: format!("operand {key:?} not staged on this worker"),
+        };
+    };
+    let Some(kernel) = registry.resolve(key.format, key.algorithm) else {
+        return Frame::BandErr {
+            seq,
+            shard,
+            message: format!(
+                "no kernel for ({}, {}) on this worker",
+                key.format.name(),
+                key.algorithm.name()
+            ),
+        };
+    };
+    let t0 = Instant::now();
+    match kernel.execute(a_band, prepared) {
+        Ok(out) => Frame::BandOk {
+            seq,
+            shard,
+            wall_us: u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX),
+            stats: out.stats,
+            c: out.c,
+        },
+        Err(e) => Frame::BandErr { seq, shard, message: format!("{e}") },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::engine::kernels::GustavsonKernel;
+    use crate::engine::shard::{execute, execute_with, ShardConfig};
+    use crate::engine::SpmmKernel;
+    use crate::spmm::plan::Geometry;
+
+    fn test_registry() -> Arc<Registry> {
+        Arc::new(Registry::with_default_kernels(
+            Geometry { block: 16, pairs: 32, slots: 16 },
+            2,
+        ))
+    }
+
+    fn spawn_worker(registry: Arc<Registry>) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        std::thread::spawn(move || {
+            let _ = serve(listener, registry);
+        });
+        addr
+    }
+
+    #[test]
+    fn socket_transport_matches_in_process_bit_for_bit() {
+        let addr1 = spawn_worker(test_registry());
+        let addr2 = spawn_worker(test_registry());
+        let transport =
+            SocketTransport::connect(&[addr1, addr2]).expect("connect");
+        let k = GustavsonKernel;
+        let a = uniform(96, 80, 0.12, 31);
+        let b = uniform(80, 56, 0.12, 32);
+        let prepared = k.prepare(&b).unwrap();
+        let cfg = ShardConfig { shards: 4, block: 16 };
+        let local = execute(&k, &a, Some(&b), &prepared, cfg).unwrap();
+        let remote =
+            execute_with(&transport, &k, &a, Some(&b), &prepared, cfg).unwrap();
+        assert_eq!(remote.c.bit_pattern(), local.c.bit_pattern());
+        assert_eq!(remote.counters.remote_bands as usize, remote.shards.len());
+        assert_eq!(remote.counters.workers_lost, 0);
+        // a second job over the same B reuses the staged operands
+        let remote2 =
+            execute_with(&transport, &k, &a, Some(&b), &prepared, cfg).unwrap();
+        assert_eq!(remote2.c.bit_pattern(), local.c.bit_pattern());
+        assert!(remote2.counters.prepare_reuse >= 1);
+        assert_eq!(remote2.counters.prepare_replications, 0);
+    }
+
+    #[test]
+    fn connect_refuses_empty_and_unreachable_peers() {
+        assert!(SocketTransport::connect(&[]).is_err());
+        // a listener that never answers the handshake is bound but we
+        // close it immediately: connect must fail typed, not hang/panic
+        let gone = {
+            let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+            l.local_addr().expect("addr").to_string()
+        };
+        assert!(SocketTransport::connect(&[gone]).is_err());
+    }
+}

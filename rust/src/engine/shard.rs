@@ -30,20 +30,21 @@
 //!
 //! # Topology
 //!
-//! Workers are in-process threads connected by channels — one task channel
-//! per worker, one shared reply channel — deliberately shaped like a
-//! process/host boundary (the leader serializes a band slice of A; workers
-//! share one `PreparedB`, built once via the PR-2 `PreparedCache`; the
-//! blocked kernels now prepare a `PreparedB::Blocked` grid, so no shard
-//! worker re-blockizes `B` — each band consumes the one shared grid). A
-//! shard worker that panics is detected as a lost reply + failed join and
-//! surfaces as [`EngineError::ExecFailed`] on the job, never as a poisoned
-//! server worker. Cross-process/host execution is the named next step
-//! (ROADMAP).
+//! Band delivery lives behind [`ShardTransport`]
+//! (`engine::transport`): [`execute`] runs today's in-process
+//! channel-connected threads ([`InProcess`]), and [`execute_with`] accepts
+//! any transport — notably the socket transport
+//! (`engine::remote::SocketTransport`), which ships the same band slices
+//! as length-prefixed wire frames to `worker` processes, replicates the
+//! shared `PreparedB` by content fingerprint, and survives worker loss by
+//! resubmitting only the lost bands. In-process, a shard worker that
+//! panics is detected as a lost reply and surfaces as
+//! [`EngineError::ExecFailed`] on the job, never as a poisoned server
+//! worker. Planning and merging are transport-blind: the merge is a pure
+//! row copy, so *where* a band ran can never change the bits.
 
-use std::sync::mpsc::{channel, sync_channel};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::formats::csr::Csr;
 use crate::formats::dense::Dense;
@@ -55,6 +56,7 @@ use super::kernel::{
     Algorithm, CostHint, EngineOutput, ExecStats, PreparedB, SpmmKernel,
 };
 use super::tiled::partition_by_weight;
+use super::transport::{content_key, BandJob, InProcess, ShardTransport, TransportCounters};
 
 /// Sharding policy: how many row bands, and the band alignment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,13 +154,15 @@ pub struct ShardStat {
     pub stats: ExecStats,
 }
 
-/// A sharded run's result: the merged product, summed accounting, and the
-/// per-shard breakdown.
+/// A sharded run's result: the merged product, summed accounting, the
+/// per-shard breakdown, and the transport's delivery counters (all zero
+/// for in-process runs).
 #[derive(Debug)]
 pub struct ShardOutput {
     pub c: Dense,
     pub stats: ExecStats,
     pub shards: Vec<ShardStat>,
+    pub counters: TransportCounters,
 }
 
 fn lcm(x: usize, y: usize) -> usize {
@@ -171,24 +175,10 @@ fn lcm(x: usize, y: usize) -> usize {
     x / gcd(x, y) * y
 }
 
-struct ShardTask {
-    shard: usize,
-    rows: (usize, usize),
-    a_band: Csr,
-    enqueued: Instant,
-}
-
-struct ShardReply {
-    shard: usize,
-    rows: (usize, usize),
-    queue: Duration,
-    wall: Duration,
-    result: Result<EngineOutput, EngineError>,
-}
-
-/// Run `C = A × B` sharded: plan row bands, execute each band's
-/// `kernel.execute` on its own channel-connected worker against the shared
-/// `prepared` operand, and stitch the band outputs back row-for-row.
+/// Run `C = A × B` sharded over the in-process transport: plan row bands,
+/// execute each band's `kernel.execute` on its own channel-connected
+/// worker against the shared `prepared` operand, and stitch the band
+/// outputs back row-for-row.
 ///
 /// `b` feeds the planner's weight heuristic; pass the job's CSR `B` when
 /// available (the planner falls back to the `prepared` operand's CSR, then
@@ -196,6 +186,21 @@ struct ShardReply {
 /// [`EngineError::ExecFailed`] naming the lost shards; the caller's thread
 /// is never poisoned.
 pub fn execute(
+    kernel: &dyn SpmmKernel,
+    a: &Csr,
+    b: Option<&Csr>,
+    prepared: &PreparedB,
+    cfg: ShardConfig,
+) -> Result<ShardOutput, EngineError> {
+    execute_with(&InProcess, kernel, a, b, prepared, cfg)
+}
+
+/// [`execute`] over an explicit [`ShardTransport`] — the socket transport
+/// here ships each band to a remote `worker` process and the output stays
+/// bit-identical, because planning and the row-copy merge never leave this
+/// function.
+pub fn execute_with(
+    transport: &dyn ShardTransport,
     kernel: &dyn SpmmKernel,
     a: &Csr,
     b: Option<&Csr>,
@@ -239,79 +244,44 @@ pub fn execute(
             c: Dense::zeros(m, n),
             stats: ExecStats::default(),
             shards: Vec::new(),
+            counters: TransportCounters::default(),
         });
     }
 
-    let n_workers = plan.bands.len();
-    let (reply_tx, reply_rx) = channel::<ShardReply>();
-    let mut replies: Vec<ShardReply> = Vec::with_capacity(n_workers);
-    let mut lost_workers = 0usize;
+    let key = content_key(kernel, prepared, b_struct);
+    let run = transport.run(&BandJob {
+        kernel,
+        a,
+        prepared,
+        plan: &plan,
+        key,
+    })?;
 
-    std::thread::scope(|s| {
-        let mut task_txs = Vec::with_capacity(n_workers);
-        let handles: Vec<_> = (0..n_workers)
-            .map(|_| {
-                let (task_tx, task_rx) = sync_channel::<ShardTask>(1);
-                task_txs.push(task_tx);
-                let reply_tx = reply_tx.clone();
-                s.spawn(move || {
-                    // today each worker serves exactly one band; the loop is
-                    // the shape a process-boundary worker would keep
-                    while let Ok(task) = task_rx.recv() {
-                        let queue = task.enqueued.elapsed();
-                        let t0 = Instant::now();
-                        let result = kernel.execute(&task.a_band, prepared);
-                        let _ = reply_tx.send(ShardReply {
-                            shard: task.shard,
-                            rows: task.rows,
-                            queue,
-                            wall: t0.elapsed(),
-                            result,
-                        });
-                    }
-                })
-            })
-            .collect();
-        drop(reply_tx);
-
-        // leader side: slice and dispatch one band per worker (across a
-        // process boundary this send is where the band would serialize)
-        for (band, task_tx) in plan.bands.iter().zip(&task_txs) {
-            let _ = task_tx.send(ShardTask {
-                shard: band.shard,
-                rows: band.rows,
-                a_band: a.row_band(band.rows.0, band.rows.1),
-                enqueued: Instant::now(),
-            });
-        }
-        drop(task_txs);
-
-        while let Ok(reply) = reply_rx.recv() {
-            replies.push(reply);
-        }
-        for h in handles {
-            if h.join().is_err() {
-                lost_workers += 1;
-            }
-        }
-    });
-
-    if replies.len() < n_workers {
-        let got: Vec<usize> = replies.iter().map(|r| r.shard).collect();
-        let missing: Vec<usize> = (0..n_workers).filter(|i| !got.contains(i)).collect();
+    // every planned band must come back exactly once, whatever route (or
+    // retry) it took — the transport contract, re-checked here because a
+    // hole in the output grid is silent data loss
+    let mut results = run.bands;
+    results.sort_by_key(|r| r.shard);
+    let complete = results.len() == plan.bands.len()
+        && results
+            .iter()
+            .zip(&plan.bands)
+            .all(|(r, band)| r.shard == band.shard && r.rows == band.rows);
+    if !complete {
+        let got: Vec<usize> = results.iter().map(|r| r.shard).collect();
         return Err(EngineError::ExecFailed(format!(
-            "lost {lost_workers} shard worker(s): shard(s) {missing:?} of {n_workers} \
-             never replied (worker panicked)"
+            "transport {:?} returned bands {got:?} for a {}-band plan",
+            transport.name(),
+            plan.bands.len()
         )));
     }
 
-    replies.sort_by_key(|r| r.shard);
     let mut c = Dense::zeros(m, n);
     let mut total = ExecStats::default();
-    let mut shard_stats = Vec::with_capacity(replies.len());
-    for reply in replies {
-        let out = reply.result?;
-        let (lo, hi) = reply.rows;
+    let mut shard_stats = Vec::with_capacity(results.len());
+    for result in results {
+        let out = result.output;
+        let (lo, hi) = result.rows;
         debug_assert_eq!(out.c.shape(), (hi - lo, n));
         // the merge: a pure row copy — no reduction crosses a shard
         c.data[lo * n..hi * n].copy_from_slice(&out.c.data);
@@ -321,10 +291,10 @@ pub fn execute(
         total.macs_issued += out.stats.macs_issued;
         total.threads += out.stats.threads;
         shard_stats.push(ShardStat {
-            shard: reply.shard,
-            rows: reply.rows,
-            queue: reply.queue,
-            wall: reply.wall,
+            shard: result.shard,
+            rows: result.rows,
+            queue: result.queue,
+            wall: result.wall,
             stats: out.stats,
         });
     }
@@ -332,6 +302,7 @@ pub fn execute(
         c,
         stats: total,
         shards: shard_stats,
+        counters: run.counters,
     })
 }
 
@@ -342,11 +313,24 @@ pub fn execute(
 pub struct ShardedKernel {
     inner: Arc<dyn SpmmKernel>,
     cfg: ShardConfig,
+    transport: Arc<dyn ShardTransport>,
 }
 
 impl ShardedKernel {
+    /// Wrap over the in-process transport (PR 3 behavior, unchanged).
     pub fn wrap(inner: Arc<dyn SpmmKernel>, cfg: ShardConfig) -> ShardedKernel {
-        ShardedKernel { inner, cfg }
+        ShardedKernel::wrap_with(inner, cfg, Arc::new(InProcess))
+    }
+
+    /// Wrap over an explicit transport — pass the socket transport here
+    /// and every consumer of the kernel's registry key runs its bands on
+    /// remote workers, bit-identically.
+    pub fn wrap_with(
+        inner: Arc<dyn SpmmKernel>,
+        cfg: ShardConfig,
+        transport: Arc<dyn ShardTransport>,
+    ) -> ShardedKernel {
+        ShardedKernel { inner, cfg, transport }
     }
 
     pub fn config(&self) -> ShardConfig {
@@ -355,6 +339,10 @@ impl ShardedKernel {
 
     pub fn inner(&self) -> &Arc<dyn SpmmKernel> {
         &self.inner
+    }
+
+    pub fn transport(&self) -> &Arc<dyn ShardTransport> {
+        &self.transport
     }
 }
 
@@ -401,13 +389,20 @@ impl SpmmKernel for ShardedKernel {
         native: &crate::formats::operand::MatrixOperand,
     ) -> Option<Arc<dyn SpmmKernel>> {
         let sibling = self.inner.negotiate(native)?;
-        Some(Arc::new(ShardedKernel::wrap(sibling, self.cfg)))
+        Some(Arc::new(ShardedKernel::wrap_with(
+            sibling,
+            self.cfg,
+            Arc::clone(&self.transport),
+        )))
     }
     fn band_alignment(&self) -> usize {
         self.inner.band_alignment()
     }
+    fn observe_model(&self, model: &crate::engine::learn::CostModel) {
+        self.inner.observe_model(model)
+    }
     fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
-        let out = execute(self.inner.as_ref(), a, None, b, self.cfg)?;
+        let out = execute_with(self.transport.as_ref(), self.inner.as_ref(), a, None, b, self.cfg)?;
         Ok(EngineOutput { c: out.c, stats: out.stats })
     }
 }

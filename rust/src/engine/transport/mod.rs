@@ -1,0 +1,346 @@
+//! Shard transports: how planned row bands reach their workers.
+//!
+//! PR 3's shard executor hard-wired in-process channel workers. This
+//! module puts that machinery behind [`ShardTransport`] so the *same*
+//! planner, merge, and bit-reproducibility contract drive both:
+//!
+//! * [`InProcess`] — today's `thread::scope` + channel workers, verbatim.
+//!   A panicking worker is a lost reply and fails the job typed
+//!   ([`EngineError::ExecFailed`] naming the lost shards) — in-process
+//!   there is nowhere else to resubmit.
+//! * `Socket` ([`super::remote::SocketTransport`]) — length-prefixed
+//!   [`wire`] frames over TCP to `worker` processes, with retry, hedging,
+//!   and lost-band resubmission (there, worker loss is survivable).
+//!
+//! The transport owns *placement and delivery* only. Planning stays in
+//! [`super::shard::ShardPlanner`]; merging stays in the executor
+//! ([`super::shard::execute_with`]); both are transport-blind, which is
+//! what keeps remote output bit-identical to local — a transport can
+//! reorder or re-place bands freely because no reduction ever crosses a
+//! band.
+
+pub mod wire;
+
+use std::sync::mpsc::{channel, sync_channel};
+use std::time::{Duration, Instant};
+
+use crate::formats::csr::Csr;
+
+use super::error::EngineError;
+use super::kernel::{EngineOutput, PreparedB, SpmmKernel};
+use super::prepared::{fingerprint_csr, PreparedKey};
+use super::shard::ShardPlan;
+
+/// Delivery-robustness policy for transports that can lose or re-place
+/// work (the socket transport; [`InProcess`] ignores it — an in-process
+/// panic has no surviving worker to retry on).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Per-attempt band deadline; a band not answered within it is
+    /// resubmitted (consuming retry budget).
+    pub band_timeout: Duration,
+    /// Extra attempts allowed per band beyond the first submission.
+    pub retry_budget: u32,
+    /// Straggler threshold: a band still outstanding after this long is
+    /// *hedged* — duplicated to another live worker, first answer wins.
+    pub hedge_after: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            band_timeout: Duration::from_secs(30),
+            retry_budget: 2,
+            hedge_after: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Delivery accounting for one sharded run. All zeros for [`InProcess`];
+/// the socket transport meters every robustness action here, and the
+/// coordinator folds them into its metrics counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportCounters {
+    /// Bands whose result was computed by a remote worker.
+    pub remote_bands: u64,
+    /// Band resubmissions (timeout or worker loss).
+    pub band_retries: u64,
+    /// Hedged duplicates that answered before the original submission.
+    pub hedges_won: u64,
+    /// Worker connections lost mid-run.
+    pub workers_lost: u64,
+    /// `Prepare` frames shipped (a B replicated to a worker's cache).
+    pub prepare_replications: u64,
+    /// Bands that found B already staged on their worker (remote
+    /// `PreparedCache` reuse).
+    pub prepare_reuse: u64,
+}
+
+impl TransportCounters {
+    /// Fold another run's counters into this accumulator.
+    pub fn merge(&mut self, other: &TransportCounters) {
+        self.remote_bands += other.remote_bands;
+        self.band_retries += other.band_retries;
+        self.hedges_won += other.hedges_won;
+        self.workers_lost += other.workers_lost;
+        self.prepare_replications += other.prepare_replications;
+        self.prepare_reuse += other.prepare_reuse;
+    }
+}
+
+/// One sharded job as the transport sees it: the plan, the operands, and
+/// the content key the socket transport stages B under remotely.
+pub struct BandJob<'a> {
+    pub kernel: &'a dyn SpmmKernel,
+    pub a: &'a Csr,
+    pub prepared: &'a PreparedB,
+    pub plan: &'a ShardPlan,
+    /// Content-addressed identity of `prepared` (see [`content_key`]);
+    /// remote workers cache staged operands under this key.
+    pub key: PreparedKey,
+}
+
+/// One band's finished result, however it travelled.
+pub struct BandResult {
+    pub shard: usize,
+    pub rows: (usize, usize),
+    /// Submission → dequeue (in-process queue wait, or wire + remote
+    /// queue time for socket bands).
+    pub queue: Duration,
+    /// Kernel execute wall time on whichever worker ran the band.
+    pub wall: Duration,
+    pub output: EngineOutput,
+}
+
+/// A transport run: exactly one result per planned band (any order — the
+/// executor sorts by shard before merging), plus delivery accounting.
+pub struct BandRun {
+    pub bands: Vec<BandResult>,
+    pub counters: TransportCounters,
+}
+
+/// Delivers a job's planned bands to workers and collects their results.
+///
+/// Contract: on `Ok`, `bands` holds exactly one bit-exact result per
+/// entry of `job.plan.bands`. A transport that cannot complete every band
+/// (worker loss with no survivors, retry budget exhausted, a band's typed
+/// execute error) returns `Err` naming the shards it lost.
+pub trait ShardTransport: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, job: &BandJob<'_>) -> Result<BandRun, EngineError>;
+}
+
+/// FNV-1a over raw bytes — the same hash family `prepared::fingerprint_csr`
+/// uses, for operands with no canonical CSR source.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content-addressed identity for a prepared operand under a kernel: the
+/// existing CSR content fingerprint when the operand carries its canonical
+/// source (`Csr`/`Blocked`/`Pooled`/`OuterPooled`, or the job's explicit
+/// `b`), else FNV-1a over the operand's wire encoding. Same content ⇒ same
+/// key ⇒ a remote worker's staged cache hits across jobs.
+pub fn content_key(
+    kernel: &dyn SpmmKernel,
+    prepared: &PreparedB,
+    b: Option<&Csr>,
+) -> PreparedKey {
+    let fingerprint = match (b, prepared) {
+        (Some(b), _) => fingerprint_csr(b),
+        (None, PreparedB::Csr(m)) => fingerprint_csr(m),
+        (None, PreparedB::Blocked(bb)) => fingerprint_csr(&bb.src),
+        (None, PreparedB::Pooled(pb)) => fingerprint_csr(&pb.src),
+        (None, PreparedB::OuterPooled(ob)) => fingerprint_csr(&ob.src),
+        (None, _) => {
+            let mut w = wire::WireWriter::new();
+            wire::put_prepared(&mut w, prepared);
+            fnv1a64(&w.into_bytes())
+        }
+    };
+    PreparedKey {
+        fingerprint,
+        format: kernel.format(),
+        algorithm: kernel.algorithm(),
+    }
+}
+
+struct ShardTask {
+    shard: usize,
+    rows: (usize, usize),
+    a_band: Csr,
+    enqueued: Instant,
+}
+
+struct ShardReply {
+    shard: usize,
+    rows: (usize, usize),
+    queue: Duration,
+    wall: Duration,
+    result: Result<EngineOutput, EngineError>,
+}
+
+/// The channel-connected in-process transport: one thread + task channel
+/// per band, one shared reply channel — PR 3's executor machinery moved
+/// behind the trait unchanged. A panicked worker surfaces as
+/// [`EngineError::ExecFailed`] naming the lost shards; the caller's
+/// thread is never poisoned. No retry/hedging: in-process, a panic means
+/// the kernel itself is broken and every "worker" shares it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcess;
+
+impl ShardTransport for InProcess {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn run(&self, job: &BandJob<'_>) -> Result<BandRun, EngineError> {
+        let kernel = job.kernel;
+        let prepared = job.prepared;
+        let n_workers = job.plan.bands.len();
+        let (reply_tx, reply_rx) = channel::<ShardReply>();
+        let mut replies: Vec<ShardReply> = Vec::with_capacity(n_workers);
+        let mut lost_workers = 0usize;
+
+        std::thread::scope(|s| {
+            let mut task_txs = Vec::with_capacity(n_workers);
+            let handles: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    let (task_tx, task_rx) = sync_channel::<ShardTask>(1);
+                    task_txs.push(task_tx);
+                    let reply_tx = reply_tx.clone();
+                    s.spawn(move || {
+                        // each worker serves exactly one band today; the
+                        // loop is the shape a socket worker keeps
+                        while let Ok(task) = task_rx.recv() {
+                            let queue = task.enqueued.elapsed();
+                            let t0 = Instant::now();
+                            let result = kernel.execute(&task.a_band, prepared);
+                            let _ = reply_tx.send(ShardReply {
+                                shard: task.shard,
+                                rows: task.rows,
+                                queue,
+                                wall: t0.elapsed(),
+                                result,
+                            });
+                        }
+                    })
+                })
+                .collect();
+            drop(reply_tx);
+
+            // leader side: slice and dispatch one band per worker (the
+            // socket transport serializes exactly this slice as a frame)
+            for (band, task_tx) in job.plan.bands.iter().zip(&task_txs) {
+                let _ = task_tx.send(ShardTask {
+                    shard: band.shard,
+                    rows: band.rows,
+                    a_band: job.a.row_band(band.rows.0, band.rows.1),
+                    enqueued: Instant::now(),
+                });
+            }
+            drop(task_txs);
+
+            while let Ok(reply) = reply_rx.recv() {
+                replies.push(reply);
+            }
+            for h in handles {
+                if h.join().is_err() {
+                    lost_workers += 1;
+                }
+            }
+        });
+
+        if replies.len() < n_workers {
+            let got: Vec<usize> = replies.iter().map(|r| r.shard).collect();
+            let missing: Vec<usize> =
+                (0..n_workers).filter(|i| !got.contains(i)).collect();
+            return Err(EngineError::ExecFailed(format!(
+                "lost {lost_workers} shard worker(s): shard(s) {missing:?} of {n_workers} \
+                 never replied (worker panicked)"
+            )));
+        }
+
+        replies.sort_by_key(|r| r.shard);
+        let mut bands = Vec::with_capacity(replies.len());
+        for reply in replies {
+            bands.push(BandResult {
+                shard: reply.shard,
+                rows: reply.rows,
+                queue: reply.queue,
+                wall: reply.wall,
+                output: reply.result?,
+            });
+        }
+        Ok(BandRun {
+            bands,
+            counters: TransportCounters::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+    use crate::engine::kernels::GustavsonKernel;
+    use crate::engine::shard::{ShardConfig, ShardPlanner};
+    use std::sync::Arc;
+
+    #[test]
+    fn in_process_run_answers_every_band() {
+        let k = GustavsonKernel;
+        let a = uniform(48, 64, 0.2, 1);
+        let b = uniform(64, 32, 0.2, 2);
+        let prepared = k.prepare(&b).unwrap();
+        let plan =
+            ShardPlanner::plan(&a, Some(&b), ShardConfig { shards: 3, block: 16 });
+        let key = content_key(&k, &prepared, Some(&b));
+        let run = InProcess
+            .run(&BandJob { kernel: &k, a: &a, prepared: &prepared, plan: &plan, key })
+            .unwrap();
+        assert_eq!(run.bands.len(), plan.bands.len());
+        assert_eq!(run.counters, TransportCounters::default());
+        let mut shards: Vec<usize> = run.bands.iter().map(|r| r.shard).collect();
+        shards.sort();
+        assert_eq!(shards, (0..plan.bands.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn content_key_tracks_content_not_identity() {
+        let k = GustavsonKernel;
+        let b1 = uniform(40, 30, 0.2, 5);
+        let b2 = b1.clone();
+        let b3 = uniform(40, 30, 0.2, 6);
+        let p1 = k.prepare(&b1).unwrap();
+        let p2 = k.prepare(&b2).unwrap();
+        let p3 = k.prepare(&b3).unwrap();
+        let k1 = content_key(&k, &p1, None);
+        let k2 = content_key(&k, &p2, None);
+        let k3 = content_key(&k, &p3, None);
+        assert_eq!(k1, k2, "same content must share a key");
+        assert_ne!(k1, k3, "different content must not collide");
+        assert_eq!(k1.format, k.format());
+        assert_eq!(k1.algorithm, k.algorithm());
+    }
+
+    #[test]
+    fn content_key_covers_operands_without_a_csr_source() {
+        use crate::formats::dense::Dense;
+        use crate::formats::traits::SparseMatrix;
+        let k = GustavsonKernel;
+        let b = uniform(16, 12, 0.4, 7);
+        let dense = PreparedB::Dense(Arc::new(Dense::from_coo(&b.to_coo())));
+        let again = PreparedB::Dense(Arc::new(Dense::from_coo(&b.to_coo())));
+        assert_eq!(
+            content_key(&k, &dense, None),
+            content_key(&k, &again, None),
+            "wire-encoding fingerprint must be deterministic"
+        );
+    }
+}

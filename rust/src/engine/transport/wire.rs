@@ -1,0 +1,821 @@
+//! Versioned, deterministic wire format for distributed shard execution.
+//!
+//! Everything that crosses a process boundary — row-band task frames and
+//! every [`PreparedB`] variant — encodes through this module. The format
+//! is little-endian, length-free at the field level (the transport adds a
+//! single length prefix per frame), and **bit-exact**: every f32 matrix
+//! value travels as its IEEE-754 bit pattern ([`WireWriter::put_f32_bits`])
+//! and every f64 as its 64-bit pattern ([`WireWriter::put_f64_bits`], the
+//! same convention the cost-model file uses), so a band executed on a
+//! remote worker returns exactly the bits the local run would produce.
+//!
+//! Versioning: every frame starts with [`WIRE_MAGIC`] + [`WIRE_VERSION`].
+//! A reader that sees a different version rejects the frame whole
+//! ([`WireError::BadVersion`]) — no partial parses of future layouts.
+//!
+//! Pool-carrying prepared operands (`Pooled`, `OuterPooled`) serialize
+//! their canonical `src` only; the receiving host rebuilds the
+//! workspace/merge pool locally ([`PooledCsrB::new`] / [`OuterB::new`]) —
+//! pools are scratch, not content, and never cross the wire. `Blocked`
+//! ships its tile size and rebuilds the grid ([`BlockedB::build`], a
+//! deterministic function of `src`); `InCrs` ships its
+//! [`InCrsParams`] and rebuilds the counter vectors.
+//!
+//! Decoding is total: malformed input yields a typed [`WireError`], never
+//! a panic — structure is validated *before* the formats' constructors
+//! (whose debug assertions then hold by construction).
+
+use std::sync::Arc;
+
+use crate::formats::csr::Csr;
+use crate::formats::dense::Dense;
+use crate::formats::incrs::{InCrs, InCrsParams};
+use crate::formats::traits::{FormatKind, SparseMatrix};
+
+use super::super::kernel::{
+    Algorithm, BlockedB, ExecStats, OuterB, PooledCsrB, PreparedB,
+};
+use super::super::prepared::PreparedKey;
+
+/// Frame preamble: "SPMM" in ASCII.
+pub const WIRE_MAGIC: u32 = 0x5350_4d4d;
+/// Bump on any layout change; readers reject other versions whole.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Typed decode failure. Lifted into `EngineError::ExecFailed` at the
+/// transport boundary (see `engine::transport`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the field did.
+    Truncated { need: usize, have: usize },
+    /// The frame does not start with [`WIRE_MAGIC`].
+    BadMagic(u32),
+    /// The frame was written by a different wire version.
+    BadVersion(u16),
+    /// An enum tag (frame kind, prepared variant, format, algorithm) is
+    /// out of range.
+    BadTag { what: &'static str, tag: u8 },
+    /// Structurally invalid payload (non-monotone row pointers, index out
+    /// of bounds, length mismatch, …).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(w, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic(m) => write!(w, "bad frame magic {m:#010x}"),
+            WireError::BadVersion(v) => write!(
+                w,
+                "wire version {v} (this build speaks {WIRE_VERSION})"
+            ),
+            WireError::BadTag { what, tag } => write!(w, "unknown {what} tag {tag}"),
+            WireError::Malformed(msg) => write!(w, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for super::super::error::EngineError {
+    fn from(e: WireError) -> Self {
+        super::super::error::EngineError::ExecFailed(format!("wire: {e}"))
+    }
+}
+
+/// Little-endian byte-buffer writer. All floats go through the `_bits`
+/// methods so the encoding is a bit pattern, never a formatted value.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> WireWriter {
+        WireWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// An f32 as its IEEE-754 bit pattern (NaN payloads, -0.0, and
+    /// subnormals survive the round trip untouched).
+    pub fn put_f32_bits(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// An f64 as its IEEE-754 bit pattern — the same convention the
+    /// cost-model persistence layer uses (`engine::learn`).
+    pub fn put_f64_bits(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn put_u32_slice(&mut self, xs: &[u32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_u32(x);
+        }
+    }
+
+    /// Length-prefixed f32 slice, each value as its bit pattern.
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_f32_bits(x);
+        }
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Bounds-checked reader over one frame's bytes.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn get_f32_bits(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_f64_bits(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    fn get_len(&mut self, what: &str) -> Result<usize, WireError> {
+        let n = self.get_u64()?;
+        let n = usize::try_from(n)
+            .map_err(|_| WireError::Malformed(format!("{what} length {n} overflows")))?;
+        // a length can never exceed the bytes left (every element is ≥ 1
+        // byte), so a hostile length cannot force a huge allocation
+        if n > self.remaining() {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        Ok(n)
+    }
+
+    pub fn get_u32_vec(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.get_len("u32 slice")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.get_len("f32 slice")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32_bits()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_str(&mut self) -> Result<String, WireError> {
+        let n = self.get_len("string")?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| WireError::Malformed(format!("non-UTF-8 string: {e}")))
+    }
+}
+
+fn get_usize(r: &mut WireReader<'_>, what: &str) -> Result<usize, WireError> {
+    let v = r.get_u64()?;
+    usize::try_from(v).map_err(|_| WireError::Malformed(format!("{what} {v} overflows usize")))
+}
+
+// ---------------------------------------------------------------------------
+// FormatKind / Algorithm codes — explicit exhaustive maps, so adding an enum
+// variant without a wire code fails to compile here (and detlint C1 checks
+// that every `PreparedB` variant has an arm in this file).
+// ---------------------------------------------------------------------------
+
+/// Stable wire code for a [`FormatKind`] (NOT the enum discriminant — the
+/// wire contract survives enum reordering).
+pub fn format_code(f: FormatKind) -> u8 {
+    match f {
+        FormatKind::Dense => 0,
+        FormatKind::Csr => 1,
+        FormatKind::Csc => 2,
+        FormatKind::Coo => 3,
+        FormatKind::Sll => 4,
+        FormatKind::Ellpack => 5,
+        FormatKind::Lil => 6,
+        FormatKind::Jad => 7,
+        FormatKind::InCrs => 8,
+    }
+}
+
+pub fn format_from_code(c: u8) -> Result<FormatKind, WireError> {
+    Ok(match c {
+        0 => FormatKind::Dense,
+        1 => FormatKind::Csr,
+        2 => FormatKind::Csc,
+        3 => FormatKind::Coo,
+        4 => FormatKind::Sll,
+        5 => FormatKind::Ellpack,
+        6 => FormatKind::Lil,
+        7 => FormatKind::Jad,
+        8 => FormatKind::InCrs,
+        tag => return Err(WireError::BadTag { what: "format", tag }),
+    })
+}
+
+/// Stable wire code for an [`Algorithm`].
+pub fn algorithm_code(a: Algorithm) -> u8 {
+    match a {
+        Algorithm::Dense => 0,
+        Algorithm::Gustavson => 1,
+        Algorithm::GustavsonFast => 2,
+        Algorithm::Inner => 3,
+        Algorithm::OuterProduct => 4,
+        Algorithm::Tiled => 5,
+        Algorithm::Block => 6,
+    }
+}
+
+pub fn algorithm_from_code(c: u8) -> Result<Algorithm, WireError> {
+    Ok(match c {
+        0 => Algorithm::Dense,
+        1 => Algorithm::Gustavson,
+        2 => Algorithm::GustavsonFast,
+        3 => Algorithm::Inner,
+        4 => Algorithm::OuterProduct,
+        5 => Algorithm::Tiled,
+        6 => Algorithm::Block,
+        tag => return Err(WireError::BadTag { what: "algorithm", tag }),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Matrix payloads
+// ---------------------------------------------------------------------------
+
+fn put_raw_csr(
+    w: &mut WireWriter,
+    rows: usize,
+    cols: usize,
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    vals: &[f32],
+) {
+    w.put_u64(rows as u64);
+    w.put_u64(cols as u64);
+    w.put_u32_slice(row_ptr);
+    w.put_u32_slice(col_idx);
+    w.put_f32_slice(vals);
+}
+
+/// Serialize a CSR matrix: shape, structure, value bits.
+pub fn put_csr(w: &mut WireWriter, m: &Csr) {
+    put_raw_csr(w, m.rows(), m.cols(), &m.row_ptr, &m.col_idx, &m.vals);
+}
+
+/// Decode and structurally validate a CSR matrix. Validation happens
+/// *here*, so [`Csr::from_parts`]'s construction assertions hold for any
+/// byte stream — a malformed frame is a typed error, never a panic.
+pub fn get_csr(r: &mut WireReader<'_>) -> Result<Csr, WireError> {
+    let rows = get_usize(r, "rows")?;
+    let cols = get_usize(r, "cols")?;
+    let row_ptr = r.get_u32_vec()?;
+    let col_idx = r.get_u32_vec()?;
+    let vals = r.get_f32_vec()?;
+    if row_ptr.len() != rows + 1 {
+        return Err(WireError::Malformed(format!(
+            "row_ptr has {} entries for {rows} rows",
+            row_ptr.len()
+        )));
+    }
+    if row_ptr[0] != 0 {
+        return Err(WireError::Malformed("row_ptr[0] != 0".into()));
+    }
+    if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(WireError::Malformed("row_ptr not monotone".into()));
+    }
+    let nnz = row_ptr[rows] as usize;
+    if col_idx.len() != nnz || vals.len() != nnz {
+        return Err(WireError::Malformed(format!(
+            "nnz mismatch: row_ptr says {nnz}, col_idx {}, vals {}",
+            col_idx.len(),
+            vals.len()
+        )));
+    }
+    for i in 0..rows {
+        let (lo, hi) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+        let row = &col_idx[lo..hi];
+        if row.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(WireError::Malformed(format!("row {i} indices not sorted")));
+        }
+        if row.iter().any(|&c| c as usize >= cols) {
+            return Err(WireError::Malformed(format!("row {i} index out of bounds")));
+        }
+    }
+    Ok(Csr::from_parts(rows, cols, row_ptr, col_idx, vals))
+}
+
+/// Serialize a dense matrix: shape + value bit patterns.
+pub fn put_dense(w: &mut WireWriter, m: &Dense) {
+    let (rows, cols) = m.shape();
+    w.put_u64(rows as u64);
+    w.put_u64(cols as u64);
+    w.put_f32_slice(&m.data);
+}
+
+pub fn get_dense(r: &mut WireReader<'_>) -> Result<Dense, WireError> {
+    let rows = get_usize(r, "rows")?;
+    let cols = get_usize(r, "cols")?;
+    let data = r.get_f32_vec()?;
+    let want = rows
+        .checked_mul(cols)
+        .ok_or_else(|| WireError::Malformed(format!("dense shape {rows}x{cols} overflows")))?;
+    if data.len() != want {
+        return Err(WireError::Malformed(format!(
+            "dense {rows}x{cols} carries {} values",
+            data.len()
+        )));
+    }
+    Ok(Dense::new(rows, cols, data))
+}
+
+fn put_stats(w: &mut WireWriter, s: &ExecStats) {
+    w.put_u64(s.dispatches);
+    w.put_u64(s.real_pairs);
+    w.put_u64(s.padded_pairs);
+    w.put_u64(s.macs_issued);
+    w.put_u64(s.threads as u64);
+}
+
+fn get_stats(r: &mut WireReader<'_>) -> Result<ExecStats, WireError> {
+    Ok(ExecStats {
+        dispatches: r.get_u64()?,
+        real_pairs: r.get_u64()?,
+        padded_pairs: r.get_u64()?,
+        macs_issued: r.get_u64()?,
+        threads: get_usize(r, "threads")?,
+    })
+}
+
+fn put_key(w: &mut WireWriter, key: PreparedKey) {
+    w.put_u64(key.fingerprint);
+    w.put_u8(format_code(key.format));
+    w.put_u8(algorithm_code(key.algorithm));
+}
+
+fn get_key(r: &mut WireReader<'_>) -> Result<PreparedKey, WireError> {
+    Ok(PreparedKey {
+        fingerprint: r.get_u64()?,
+        format: format_from_code(r.get_u8()?)?,
+        algorithm: algorithm_from_code(r.get_u8()?)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PreparedB — one wire arm per variant (detlint C1 cross-checks this file
+// against the enum in engine/kernel.rs)
+// ---------------------------------------------------------------------------
+
+const PREP_CSR: u8 = 0;
+const PREP_INCRS: u8 = 1;
+const PREP_DENSE: u8 = 2;
+const PREP_BLOCKED: u8 = 3;
+const PREP_POOLED: u8 = 4;
+const PREP_OUTER_POOLED: u8 = 5;
+
+/// Serialize a prepared operand. Pools never cross the wire: `Pooled` /
+/// `OuterPooled` ship their canonical `src` and the receiver rebuilds the
+/// pool host-local; `Blocked` ships `src` + tile size and the receiver
+/// re-runs the deterministic blockization; `InCrs` ships its params and
+/// underlying arrays and the receiver rebuilds the counter vectors.
+pub fn put_prepared(w: &mut WireWriter, b: &PreparedB) {
+    match b {
+        PreparedB::Csr(m) => {
+            w.put_u8(PREP_CSR);
+            put_csr(w, m);
+        }
+        PreparedB::InCrs(m) => {
+            w.put_u8(PREP_INCRS);
+            w.put_u64(m.params.section as u64);
+            w.put_u64(m.params.block as u64);
+            let (rows, cols) = m.shape();
+            put_raw_csr(w, rows, cols, &m.row_ptr, &m.col_idx, &m.vals);
+        }
+        PreparedB::Dense(m) => {
+            w.put_u8(PREP_DENSE);
+            put_dense(w, m);
+        }
+        PreparedB::Blocked(bb) => {
+            w.put_u8(PREP_BLOCKED);
+            w.put_u64(bb.block() as u64);
+            put_csr(w, &bb.src);
+        }
+        PreparedB::Pooled(pb) => {
+            w.put_u8(PREP_POOLED);
+            put_csr(w, &pb.src);
+        }
+        PreparedB::OuterPooled(ob) => {
+            w.put_u8(PREP_OUTER_POOLED);
+            put_csr(w, &ob.src);
+        }
+    }
+}
+
+/// Decode a prepared operand, rebuilding host-local state (pools, block
+/// grids, counter vectors) deterministically from the shipped source.
+pub fn get_prepared(r: &mut WireReader<'_>) -> Result<PreparedB, WireError> {
+    let tag = r.get_u8()?;
+    Ok(match tag {
+        PREP_CSR => PreparedB::Csr(Arc::new(get_csr(r)?)),
+        PREP_INCRS => {
+            let section = get_usize(r, "incrs section")?;
+            let block = get_usize(r, "incrs block")?;
+            let src = get_csr(r)?;
+            let params = InCrsParams { section, block };
+            let incrs = InCrs::from_csr_params(&src, params)
+                .map_err(|e| WireError::Malformed(format!("incrs rebuild: {e}")))?;
+            PreparedB::InCrs(Arc::new(incrs))
+        }
+        PREP_DENSE => PreparedB::Dense(Arc::new(get_dense(r)?)),
+        PREP_BLOCKED => {
+            let block = get_usize(r, "blocked tile size")?;
+            if block == 0 {
+                return Err(WireError::Malformed("blocked tile size 0".into()));
+            }
+            let src = get_csr(r)?;
+            PreparedB::Blocked(Arc::new(BlockedB::build(Arc::new(src), block)))
+        }
+        PREP_POOLED => {
+            let src = get_csr(r)?;
+            PreparedB::Pooled(Arc::new(PooledCsrB::new(Arc::new(src))))
+        }
+        PREP_OUTER_POOLED => {
+            let src = get_csr(r)?;
+            PreparedB::OuterPooled(Arc::new(OuterB::new(Arc::new(src))))
+        }
+        tag => return Err(WireError::BadTag { what: "prepared operand", tag }),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+const FRAME_HELLO: u8 = 0;
+const FRAME_HELLO_ACK: u8 = 1;
+const FRAME_PREPARE: u8 = 2;
+const FRAME_BAND: u8 = 3;
+const FRAME_BAND_OK: u8 = 4;
+const FRAME_BAND_ERR: u8 = 5;
+const FRAME_SHUTDOWN: u8 = 6;
+
+/// One protocol message. The transport length-prefixes the encoded bytes;
+/// the frame itself carries magic + version so a desynchronized or
+/// cross-version stream is rejected typed.
+#[derive(Debug)]
+pub enum Frame {
+    /// Leader → worker, first frame on a connection.
+    Hello,
+    /// Worker → leader: the handshake answer.
+    HelloAck,
+    /// Leader → worker: stage a prepared operand under its content key.
+    Prepare { key: PreparedKey, prepared: PreparedB },
+    /// Leader → worker: execute one row band of A against a staged operand.
+    Band {
+        /// Leader-assigned submission id (retries/hedges get fresh seqs).
+        seq: u64,
+        shard: u64,
+        rows: (u64, u64),
+        key: PreparedKey,
+        a_band: Csr,
+    },
+    /// Worker → leader: a band's bit-exact result.
+    BandOk {
+        seq: u64,
+        shard: u64,
+        wall_us: u64,
+        stats: ExecStats,
+        c: Dense,
+    },
+    /// Worker → leader: a band failed typed (kernel missing, operand not
+    /// staged, execute error).
+    BandErr { seq: u64, shard: u64, message: String },
+    /// Leader → worker: drain and close this connection.
+    Shutdown,
+}
+
+/// Encode one frame (magic + version + tag + payload).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_u32(WIRE_MAGIC);
+    w.put_u16(WIRE_VERSION);
+    match f {
+        Frame::Hello => w.put_u8(FRAME_HELLO),
+        Frame::HelloAck => w.put_u8(FRAME_HELLO_ACK),
+        Frame::Prepare { key, prepared } => {
+            w.put_u8(FRAME_PREPARE);
+            put_key(&mut w, *key);
+            put_prepared(&mut w, prepared);
+        }
+        Frame::Band { seq, shard, rows, key, a_band } => {
+            w.put_u8(FRAME_BAND);
+            w.put_u64(*seq);
+            w.put_u64(*shard);
+            w.put_u64(rows.0);
+            w.put_u64(rows.1);
+            put_key(&mut w, *key);
+            put_csr(&mut w, a_band);
+        }
+        Frame::BandOk { seq, shard, wall_us, stats, c } => {
+            w.put_u8(FRAME_BAND_OK);
+            w.put_u64(*seq);
+            w.put_u64(*shard);
+            w.put_u64(*wall_us);
+            put_stats(&mut w, stats);
+            put_dense(&mut w, c);
+        }
+        Frame::BandErr { seq, shard, message } => {
+            w.put_u8(FRAME_BAND_ERR);
+            w.put_u64(*seq);
+            w.put_u64(*shard);
+            w.put_str(message);
+        }
+        Frame::Shutdown => w.put_u8(FRAME_SHUTDOWN),
+    }
+    w.into_bytes()
+}
+
+/// Decode one frame; rejects foreign magic and other wire versions whole.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame, WireError> {
+    let mut r = WireReader::new(bytes);
+    let magic = r.get_u32()?;
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = r.get_u16()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let tag = r.get_u8()?;
+    Ok(match tag {
+        FRAME_HELLO => Frame::Hello,
+        FRAME_HELLO_ACK => Frame::HelloAck,
+        FRAME_PREPARE => Frame::Prepare {
+            key: get_key(&mut r)?,
+            prepared: get_prepared(&mut r)?,
+        },
+        FRAME_BAND => Frame::Band {
+            seq: r.get_u64()?,
+            shard: r.get_u64()?,
+            rows: (r.get_u64()?, r.get_u64()?),
+            key: get_key(&mut r)?,
+            a_band: get_csr(&mut r)?,
+        },
+        FRAME_BAND_OK => Frame::BandOk {
+            seq: r.get_u64()?,
+            shard: r.get_u64()?,
+            wall_us: r.get_u64()?,
+            stats: get_stats(&mut r)?,
+            c: get_dense(&mut r)?,
+        },
+        FRAME_BAND_ERR => Frame::BandErr {
+            seq: r.get_u64()?,
+            shard: r.get_u64()?,
+            message: r.get_str()?,
+        },
+        FRAME_SHUTDOWN => Frame::Shutdown,
+        tag => return Err(WireError::BadTag { what: "frame", tag }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::uniform;
+
+    fn roundtrip_prepared(b: &PreparedB) -> PreparedB {
+        let mut w = WireWriter::new();
+        put_prepared(&mut w, b);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let out = get_prepared(&mut r).expect("decode");
+        assert_eq!(r.remaining(), 0, "trailing bytes after decode");
+        out
+    }
+
+    #[test]
+    fn csr_roundtrip_is_bit_exact() {
+        let m = uniform(37, 53, 0.13, 7);
+        let mut w = WireWriter::new();
+        put_csr(&mut w, &m);
+        let bytes = w.into_bytes();
+        let got = get_csr(&mut WireReader::new(&bytes)).unwrap();
+        assert_eq!(got.bit_pattern(), m.bit_pattern());
+    }
+
+    #[test]
+    fn awkward_float_bit_patterns_survive() {
+        // NaN payloads, -0.0, subnormals, infinities — for both widths
+        let f32s = [
+            f32::from_bits(0x7fc0_dead), // quiet NaN with payload
+            f32::from_bits(0xff80_0001), // signaling-ish NaN
+            -0.0f32,
+            f32::from_bits(1),           // smallest subnormal
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE / 2.0,
+        ];
+        let f64s = [
+            f64::from_bits(0x7ff8_0000_0000_beef),
+            f64::from_bits(0xfff0_0000_0000_0001),
+            -0.0f64,
+            f64::from_bits(1),
+            f64::INFINITY,
+            f64::MIN_POSITIVE / 2.0,
+        ];
+        let mut w = WireWriter::new();
+        for &v in &f32s {
+            w.put_f32_bits(v);
+        }
+        for &v in &f64s {
+            w.put_f64_bits(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        for &v in &f32s {
+            assert_eq!(r.get_f32_bits().unwrap().to_bits(), v.to_bits());
+        }
+        for &v in &f64s {
+            assert_eq!(r.get_f64_bits().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn every_prepared_variant_roundtrips() {
+        let src = Arc::new(uniform(24, 40, 0.2, 3));
+        let cases: Vec<PreparedB> = vec![
+            PreparedB::Csr(Arc::clone(&src)),
+            PreparedB::InCrs(Arc::new(
+                InCrs::from_csr_params(&src, InCrsParams { section: 8, block: 4 }).unwrap(),
+            )),
+            PreparedB::Dense(Arc::new(Dense::from_coo(&src.to_coo()))),
+            PreparedB::Blocked(Arc::new(BlockedB::build(Arc::clone(&src), 16))),
+            PreparedB::Pooled(Arc::new(PooledCsrB::new(Arc::clone(&src)))),
+            PreparedB::OuterPooled(Arc::new(OuterB::new(Arc::clone(&src)))),
+        ];
+        for case in &cases {
+            let got = roundtrip_prepared(case);
+            assert_eq!(got.label(), case.label());
+            assert_eq!(got.shape(), case.shape());
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_version_gate() {
+        let m = uniform(8, 8, 0.4, 1);
+        let key = PreparedKey {
+            fingerprint: 0xfeed_beef,
+            format: FormatKind::Csr,
+            algorithm: Algorithm::Gustavson,
+        };
+        let frame = Frame::Band {
+            seq: 42,
+            shard: 3,
+            rows: (16, 32),
+            key,
+            a_band: m.clone(),
+        };
+        let bytes = encode_frame(&frame);
+        match decode_frame(&bytes).unwrap() {
+            Frame::Band { seq, shard, rows, key: k, a_band } => {
+                assert_eq!((seq, shard, rows), (42, 3, (16, 32)));
+                assert_eq!(k, key);
+                assert_eq!(a_band.bit_pattern(), m.bit_pattern());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // corrupt the magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadMagic(_))));
+        // bump the version
+        let mut bad = bytes.clone();
+        bad[4] = bad[4].wrapping_add(1);
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadVersion(_))));
+        // truncate
+        assert!(matches!(
+            decode_frame(&bytes[..bytes.len() - 3]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_structure_is_typed_not_a_panic() {
+        // row_ptr says 4 nnz but only 2 indices follow
+        let mut w = WireWriter::new();
+        put_raw_csr(&mut w, 1, 8, &[0, 4], &[1, 2], &[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            get_csr(&mut WireReader::new(&bytes)),
+            Err(WireError::Malformed(_))
+        ));
+        // out-of-bounds column index
+        let mut w = WireWriter::new();
+        put_raw_csr(&mut w, 1, 2, &[0, 1], &[5], &[1.0]);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            get_csr(&mut WireReader::new(&bytes)),
+            Err(WireError::Malformed(_))
+        ));
+        // unsorted row
+        let mut w = WireWriter::new();
+        put_raw_csr(&mut w, 1, 8, &[0, 2], &[3, 1], &[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            get_csr(&mut WireReader::new(&bytes)),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn format_and_algorithm_codes_roundtrip_exhaustively() {
+        for f in FormatKind::ALL {
+            assert_eq!(format_from_code(format_code(f)).unwrap(), f);
+        }
+        for a in Algorithm::ALL {
+            assert_eq!(algorithm_from_code(algorithm_code(a)).unwrap(), a);
+        }
+        assert!(format_from_code(200).is_err());
+        assert!(algorithm_from_code(200).is_err());
+    }
+}

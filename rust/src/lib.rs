@@ -76,7 +76,22 @@
 //! **sharded row-band execution** (`JobBuilder::shards(n)` →
 //! [`engine::shard`]): contiguous bands on channel-connected shard
 //! workers sharing one `PreparedB`, merged with no cross-shard reduction
-//! — bit-identical to the unsharded run at any shard count.
+//! — bit-identical to the unsharded run at any shard count (a clamped
+//! shard request is surfaced in `JobOutput::shards_requested` and the
+//! `shard_clamps` metric, never silent). The same executor runs
+//! **cross-host** over [`engine::transport`]: a versioned wire format
+//! ships each row band and every `PreparedB` variant (floats as IEEE-754
+//! bit patterns; `Pooled`/`OuterPooled` pools rebuilt host-local) to
+//! socket shard workers (`spmm-accel worker`, [`engine::remote`]), with
+//! fingerprint-keyed operand replication into each worker's
+//! `PreparedCache`, per-band timeout/retry, straggler hedging (first
+//! bit-identical answer wins), and loss recovery that resubmits **only a
+//! dead worker's outstanding bands** — all metered
+//! (`remote_bands`, `band_retries`, `hedges_won`, `workers_lost`,
+//! `prepare_replications`, `prepare_reuse`). Because planning and the
+//! row-copy merge never leave the leader, the socket path is
+//! bit-identical to in-process and unsharded execution for every
+//! registered kernel (`tests/prop_transport.rs`).
 //!
 //! ```ignore
 //! let server = Server::start(ServerConfig::default());
@@ -116,7 +131,8 @@
 //! * [`spmm`] — CPU SpMM algorithm bodies + 32×32 blocking/planning for the
 //!   accelerator dispatch path.
 //! * [`engine`] — **the unified execution layer**: kernel trait, registry,
-//!   multi-threaded tiled executor, accelerator adapter.
+//!   multi-threaded tiled executor, accelerator adapter, and the
+//!   distributed shard transport (wire format + socket leader/worker).
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels
 //!   (feature `pjrt`; CPU twin otherwise).
 //! * [`coordinator`] — job router/scheduler/batching server (L3) over the

@@ -6,6 +6,7 @@
 //!   convert    convert a MatrixMarket file between sparse formats (reports storage)
 //!   locate     measure random-access cost of every format on a dataset
 //!   spmm       run one SpMM job through the coordinator (any registered kernel)
+//!   worker     join a leader as a remote shard worker (socket transport)
 //!   serve      start the batching server and drive a synthetic workload
 //!   kernels    list the registered (format, algorithm) kernels + cost hints
 //!   info       print artifact/runtime info
@@ -160,18 +161,32 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             )?;
             let (a_fmt, b_fmt) = (a.format(), b.format());
             let shards = args.get_or("shards", 1usize)?;
+            // --transport socket --peers host:port[,host:port…] routes the
+            // job's row bands to remote `worker` processes
+            let remote_peers = match args.str_or("transport", "in-process") {
+                "socket" => args
+                    .list::<String>("peers")?
+                    .filter(|p| !p.is_empty())
+                    .ok_or("--transport socket needs --peers host:port[,host:port…]")?,
+                "in-process" => Vec::new(),
+                other => return Err(format!("unknown transport {other:?} (in-process|socket)")),
+            };
+            let remote = !remote_peers.is_empty();
             let server = Server::start(ServerConfig {
                 workers: 1,
                 kernel,
                 prefer_pjrt,
                 tile_workers: args.get_or("tile-workers", 4usize)?,
+                remote_peers,
                 ..Default::default()
             });
             let client = server.client();
             let out = client
-                .job(a, b)
+                .job(a.clone(), b.clone())
                 .verify(true)
-                .keep_result(false)
+                // the remote path keeps the dense result so it can be
+                // bit-checked against a local run below
+                .keep_result(remote)
                 .shards(shards)
                 .submit()?
                 .wait()?;
@@ -186,6 +201,31 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 out.wall,
                 out.max_err
             );
+            if out.shards < out.shards_requested {
+                println!(
+                    "note: planner clamped {} requested shards to {} band(s)",
+                    out.shards_requested, out.shards
+                );
+            }
+            if remote {
+                // same job, unsharded, on the leader: remote execution must
+                // be bit-identical, not merely within verify tolerance
+                let local = client
+                    .job(a, b)
+                    .keep_result(true)
+                    .shards(1)
+                    .submit()?
+                    .wait()?;
+                let (remote_c, local_c) = (out.c.as_ref(), local.c.as_ref());
+                let identical = match (remote_c, local_c) {
+                    (Some(r), Some(l)) => r.bit_pattern() == l.bit_pattern(),
+                    _ => false,
+                };
+                if !identical {
+                    return Err("remote result is NOT bit-identical to the local run".into());
+                }
+                println!("remote result bit-identical to local: ok");
+            }
             let snap = client.metrics();
             if snap.operand_conversions > 0 {
                 println!(
@@ -202,9 +242,39 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                     snap.shard_queue_p50_us
                 );
             }
+            if remote {
+                println!(
+                    "transport: {} remote band(s), {} retries, {} hedges won, \
+                     {} worker(s) lost, {} B replication(s), {} staged reuse(s)",
+                    snap.remote_bands,
+                    snap.band_retries,
+                    snap.hedges_won,
+                    snap.workers_lost,
+                    snap.prepare_replications,
+                    snap.prepare_reuse
+                );
+            }
             drop(client);
             server.shutdown();
             Ok(())
+        }
+        "worker" => {
+            // remote shard worker: bind, print the bound address (the CI
+            // smoke scrapes it), serve leaders until killed
+            let listen = args.str_or("listen", "127.0.0.1:7070");
+            let geom = Geometry::default();
+            let reg = Arc::new(Registry::with_default_kernels(
+                geom,
+                args.get_or("tile-workers", 4usize)?,
+            ));
+            let listener = std::net::TcpListener::bind(listen)
+                .map_err(|e| format!("worker bind {listen}: {e}"))?;
+            let bound = listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| listen.to_string());
+            println!("worker listening on {bound} ({} kernels)", reg.len());
+            spmm_accel::engine::remote::serve(listener, reg).map_err(|e| e.to_string())
         }
         "serve" => {
             let workers = args.get_or("workers", 2usize)?;
@@ -366,7 +436,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             println!(
                 "spmm-accel — InCRS + synchronized systolic SpMM (Golnari & Malik 2019)\n\
                  \n\
-                 usage: spmm-accel <exp|gen|convert|locate|spmm|serve|kernels|info> [flags]\n\
+                 usage: spmm-accel <exp|gen|convert|locate|spmm|worker|serve|kernels|info> [flags]\n\
                  \n\
                  algorithms (--kernel): dense | gustavson | gustavson-fast | inner | outer \
                  | tiled | block | auto\n\
@@ -379,6 +449,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel spmm --rows 512 --cols 512 --density 0.05 --kernel tiled --tile-workers 4\n\
                  \u{20}  spmm-accel spmm --kernel gustavson-fast --tile-workers 4   # vectorized pooled Gustavson\n\
                  \u{20}  spmm-accel spmm --kernel tiled --shards 4   # row-band sharded execution\n\
+                 \u{20}  spmm-accel worker --listen 127.0.0.1:7070   # remote shard worker\n\
+                 \u{20}  spmm-accel spmm --kernel tiled --shards 4 --transport socket \
+                 --peers 127.0.0.1:7070   # cross-host sharding (bit-checked vs local)\n\
                  \u{20}  spmm-accel spmm --kernel outer --shards 2 --b-format csc   # outer-product merge (hyper-sparse)\n\
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\

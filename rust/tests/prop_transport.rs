@@ -1,0 +1,294 @@
+//! Distributed-transport property suite (`engine::transport` +
+//! `engine::remote`): the wire format round-trips every `PreparedB`
+//! variant bit-exactly (awkward floats included — NaN payloads, -0.0,
+//! subnormals, infinities), and a sharded job routed over the socket
+//! transport to real OS sockets is bit-identical to the in-process run
+//! and the unsharded kernel for EVERY kernel in the default registry.
+//! Fault injection: killing a socket worker mid-band resubmits only that
+//! worker's lost bands to the survivor and still merges the bit-identical
+//! result.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::remote::serve;
+use spmm_accel::engine::transport::wire;
+use spmm_accel::engine::{
+    shard, Algorithm, CostHint, EngineError, EngineOutput, GustavsonKernel, PreparedB,
+    Registry, RetryPolicy, ShardConfig, SocketTransport, SpmmKernel,
+};
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::traits::FormatKind;
+use spmm_accel::spmm::plan::Geometry;
+
+/// Band alignment shared by the registry's blocked kernels and the shard
+/// planner (same precondition as `prop_shard.rs`).
+const BLOCK: usize = 16;
+
+fn registry() -> Registry {
+    Registry::with_default_kernels(Geometry { block: BLOCK, pairs: 32, slots: 16 }, 2)
+}
+
+/// Bind an ephemeral port, serve a shard worker on it forever (the thread
+/// dies with the test process), and return its address.
+fn spawn_worker(reg: Arc<Registry>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker listener");
+    let addr = listener.local_addr().expect("worker addr").to_string();
+    std::thread::spawn(move || {
+        let _ = serve(listener, reg);
+    });
+    addr
+}
+
+/// A retry policy with hedging effectively disabled, so fault-injection
+/// counters measure exactly the loss-resubmission path.
+fn no_hedge_policy() -> RetryPolicy {
+    RetryPolicy {
+        band_timeout: Duration::from_secs(30),
+        retry_budget: 2,
+        hedge_after: Duration::from_secs(600),
+    }
+}
+
+// ---------------------------------------------------------------- wire
+
+/// Every registered kernel's own `prepare` output survives the wire: the
+/// decoded operand executes bit-identically to the original. This is the
+/// real contract — `Pooled`/`Blocked` state is rebuilt host-local, so
+/// byte-equality of the structs is neither required nor meaningful.
+#[test]
+fn every_kernels_prepared_operand_round_trips_the_wire_bit_exactly() {
+    let reg = registry();
+    let a = uniform(40, 48, 0.15, 101);
+    let b = uniform(48, 36, 0.15, 102);
+    let mut seen = Vec::new();
+    for kernel in reg.kernels() {
+        let prepared = kernel.prepare(&b).expect("prepare");
+        seen.push(prepared.label());
+        let mut w = wire::WireWriter::new();
+        wire::put_prepared(&mut w, &prepared);
+        let bytes = w.into_bytes();
+        let mut r = wire::WireReader::new(&bytes);
+        let decoded = wire::get_prepared(&mut r).expect("decode prepared");
+        assert_eq!(r.remaining(), 0, "{}: trailing wire bytes", kernel.name());
+        assert_eq!(decoded.label(), prepared.label(), "{}", kernel.name());
+        let want = kernel.execute(&a, &prepared).expect("execute original");
+        let got = kernel.execute(&a, &decoded).expect("execute decoded");
+        assert_eq!(
+            got.c.bit_pattern(),
+            want.c.bit_pattern(),
+            "{}: decoded operand executes differently",
+            kernel.name()
+        );
+    }
+    // the suite actually covered multiple distinct prepared representations
+    seen.sort_unstable();
+    seen.dedup();
+    assert!(seen.len() >= 4, "only prepared variants {seen:?} exercised");
+}
+
+#[test]
+fn awkward_float_bit_patterns_survive_the_wire() {
+    // f32 payloads inside a CSR: NaN with payload, -0.0, subnormal, ±inf
+    let vals = vec![
+        f32::from_bits(0x7fc0_1234),
+        -0.0f32,
+        f32::from_bits(0x0000_0001),
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+    ];
+    let m = Csr::from_parts(2, 5, vec![0, 3, 5], vec![0, 2, 4, 1, 3], vals.clone());
+    let mut w = wire::WireWriter::new();
+    wire::put_csr(&mut w, &m);
+    let bytes = w.into_bytes();
+    let mut r = wire::WireReader::new(&bytes);
+    let back = wire::get_csr(&mut r).expect("csr with awkward floats");
+    for (orig, got) in vals.iter().zip(&back.vals) {
+        assert_eq!(orig.to_bits(), got.to_bits(), "f32 bit pattern changed");
+    }
+    // f64 bit patterns through the scalar path
+    for bits in [
+        0x7ff8_0000_0000_beefu64, // NaN with payload
+        0x8000_0000_0000_0000,    // -0.0
+        0x0000_0000_0000_0001,    // smallest subnormal
+        0xfff0_0000_0000_0000,    // -inf
+        0x3ff0_0000_0000_0001,    // 1.0 + 1ulp
+    ] {
+        let mut w = wire::WireWriter::new();
+        w.put_f64_bits(f64::from_bits(bits));
+        let bytes = w.into_bytes();
+        let mut r = wire::WireReader::new(&bytes);
+        let back = r.get_f64_bits().expect("f64");
+        assert_eq!(back.to_bits(), bits, "f64 bit pattern changed");
+    }
+}
+
+// -------------------------------------------------------------- sockets
+
+/// The acceptance property: for every registered kernel, a sharded job
+/// over real OS sockets (two workers) is bit-identical to the in-process
+/// transport and to the unsharded kernel.
+#[test]
+fn socket_sharding_is_bit_identical_for_every_registered_kernel() {
+    let peers = vec![
+        spawn_worker(Arc::new(registry())),
+        spawn_worker(Arc::new(registry())),
+    ];
+    let socket = SocketTransport::connect_with(&peers, no_hedge_policy()).expect("connect");
+    let leader = registry();
+    let cfg = ShardConfig { shards: 3, block: BLOCK };
+    for (i, kernel) in leader.kernels().enumerate() {
+        let seed = 200 + i as u64 * 7;
+        let a = uniform(40 + i * 3, 48, 0.12, seed);
+        let b = uniform(48, 36, 0.15, seed ^ 0x5A4D);
+        let prepared = kernel.prepare(&b).expect("prepare");
+        let unsharded = kernel.execute(&a, &prepared).expect("unsharded");
+        let local = shard::execute(kernel.as_ref(), &a, Some(&b), &prepared, cfg)
+            .expect("in-process sharded");
+        let remote = shard::execute_with(&socket, kernel.as_ref(), &a, Some(&b), &prepared, cfg)
+            .unwrap_or_else(|e| panic!("{}: socket run failed: {e}", kernel.name()));
+        assert_eq!(
+            remote.c.bit_pattern(),
+            local.c.bit_pattern(),
+            "{}: socket diverges from in-process",
+            kernel.name()
+        );
+        assert_eq!(
+            remote.c.bit_pattern(),
+            unsharded.c.bit_pattern(),
+            "{}: socket diverges from unsharded",
+            kernel.name()
+        );
+        assert_eq!(
+            remote.counters.remote_bands,
+            remote.shards.len() as u64,
+            "{}: every band must have executed remotely",
+            kernel.name()
+        );
+        assert_eq!(remote.counters.workers_lost, 0, "{}", kernel.name());
+        assert_eq!(local.counters.remote_bands, 0, "in-process is local by definition");
+    }
+}
+
+/// Re-running with the same B must hit the remote staged cache instead of
+/// re-shipping the operand (content-fingerprint keyed replication).
+#[test]
+fn repeated_jobs_reuse_the_remotely_staged_operand() {
+    let peers = vec![spawn_worker(Arc::new(registry()))];
+    let socket = SocketTransport::connect_with(&peers, no_hedge_policy()).expect("connect");
+    let kernel = GustavsonKernel;
+    let a = uniform(32, 40, 0.2, 301);
+    let b = uniform(40, 24, 0.2, 302);
+    let prepared = kernel.prepare(&b).expect("prepare");
+    let cfg = ShardConfig { shards: 2, block: BLOCK };
+    let first = shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg).expect("first");
+    assert!(first.counters.prepare_replications >= 1, "{:?}", first.counters);
+    let second =
+        shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg).expect("second");
+    assert_eq!(second.counters.prepare_replications, 0, "{:?}", second.counters);
+    assert!(second.counters.prepare_reuse >= 1, "{:?}", second.counters);
+    assert_eq!(first.c.bit_pattern(), second.c.bit_pattern());
+}
+
+// ------------------------------------------------------ fault injection
+
+/// A kernel that dies mid-execute — installed on ONE worker's registry to
+/// simulate a worker crash while bands are in flight (the handler thread
+/// unwinds, the socket drops, the leader sees EOF).
+struct PanicKernel;
+
+impl SpmmKernel for PanicKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Gustavson
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        "panic-on-execute"
+    }
+    fn cost_hint(&self, _a: &Csr, _b: &Csr) -> CostHint {
+        CostHint { flops: 0.0, prepare_words: 0.0 }
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        Ok(PreparedB::Csr(Arc::new(b.clone())))
+    }
+    fn execute(&self, _a: &Csr, _b: &PreparedB) -> Result<EngineOutput, EngineError> {
+        panic!("injected worker fault");
+    }
+}
+
+/// Kill a socket worker mid-band: the leader must resubmit ONLY the lost
+/// worker's outstanding bands to the survivor (not restart the job), count
+/// exactly one lost worker, and still merge a result bit-identical to the
+/// 1-shard local run.
+#[test]
+fn killing_a_worker_mid_band_resubmits_only_its_lost_bands() {
+    let healthy = spawn_worker(Arc::new(registry()));
+    let mut doomed_reg = registry();
+    doomed_reg.register(Arc::new(PanicKernel));
+    let doomed = spawn_worker(Arc::new(doomed_reg));
+    let socket =
+        SocketTransport::connect_with(&[healthy, doomed], no_hedge_policy()).expect("connect");
+
+    let kernel = GustavsonKernel;
+    let a = uniform(64, 48, 0.2, 401);
+    let b = uniform(48, 40, 0.2, 402);
+    let prepared = kernel.prepare(&b).expect("prepare");
+    let want = shard::execute(&kernel, &a, Some(&b), &prepared, ShardConfig {
+        shards: 1,
+        block: BLOCK,
+    })
+    .expect("1-shard local");
+
+    let cfg = ShardConfig { shards: 4, block: BLOCK };
+    let out = shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg)
+        .expect("job must survive losing one worker");
+    let bands = out.shards.len() as u64;
+    assert_eq!(bands, 4, "planner should honor 4 bands on 64 rows");
+    assert_eq!(
+        out.c.bit_pattern(),
+        want.c.bit_pattern(),
+        "result after worker loss diverges from the 1-shard local run"
+    );
+    let c = out.counters;
+    assert_eq!(c.workers_lost, 1, "{c:?}");
+    assert!(
+        c.band_retries >= 1 && c.band_retries < bands,
+        "only the dead worker's bands may be resubmitted, not the whole job: {c:?}"
+    );
+    assert_eq!(c.hedges_won, 0, "hedging was disabled for this test: {c:?}");
+    assert_eq!(c.remote_bands, bands, "every band still completed remotely: {c:?}");
+
+    // the transport stays usable on the survivor afterwards
+    let again = shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg)
+        .expect("survivor keeps serving");
+    assert_eq!(again.c.bit_pattern(), want.c.bit_pattern());
+    assert_eq!(again.counters.workers_lost, 0, "{:?}", again.counters);
+}
+
+/// With every worker dead the transport must fail typed — naming the
+/// shards it could not place — rather than hang or panic.
+#[test]
+fn losing_every_worker_is_a_typed_error() {
+    let mut doomed_reg = registry();
+    doomed_reg.register(Arc::new(PanicKernel));
+    let doomed = spawn_worker(Arc::new(doomed_reg));
+    let socket = SocketTransport::connect_with(&[doomed], no_hedge_policy()).expect("connect");
+    let kernel = GustavsonKernel;
+    let a = uniform(32, 24, 0.3, 501);
+    let b = uniform(24, 16, 0.3, 502);
+    let prepared = kernel.prepare(&b).expect("prepare");
+    let err = shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, ShardConfig {
+        shards: 2,
+        block: BLOCK,
+    })
+    .expect_err("no survivors should be a typed error");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("shard") || msg.contains("worker"),
+        "error should name the lost work: {msg}"
+    );
+}
