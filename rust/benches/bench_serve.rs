@@ -19,7 +19,8 @@ use std::net::TcpListener;
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
-    CoalesceConfig, JobHandle, KernelSpec, LearnConfig, MetricsSnapshot, Server, ServerConfig,
+    AdmissionConfig, CoalesceConfig, JobError, JobHandle, KernelSpec, LearnConfig,
+    MetricsSnapshot, Server, ServerConfig,
 };
 use spmm_accel::datasets::synth::uniform;
 use spmm_accel::engine::{remote, shard, Algorithm, Registry, ShardConfig, SocketTransport};
@@ -321,5 +322,92 @@ fn main() {
     match std::fs::write(&tr_path, tr.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {tr_path}"),
         Err(e) => println!("could not write {tr_path}: {e}"),
+    }
+
+    // admission: the same burst against one worker, gated vs ungated.
+    // Ungated, every job queues and the p99 queue wait absorbs the whole
+    // backlog; gated, the excess is shed at the door with a typed
+    // `Overloaded { retry_after }` and the tail of what IS admitted stays
+    // bounded — the shed-vs-block tradeoff, quantified
+    let burst = |budget: Option<std::time::Duration>| {
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 64,
+            kernel: KernelSpec::Fixed(FormatKind::InCrs, Algorithm::Inner),
+            geometry: Geometry::default(),
+            admission: AdmissionConfig { max_queue_delay: budget, ..Default::default() },
+            ..Default::default()
+        });
+        let client = server.client();
+        // train the service-rate estimate (an untrained gate admits all)
+        client
+            .job(Arc::clone(&a_set[0]), Arc::clone(&b))
+            .id(9_000)
+            .keep_result(false)
+            .submit()
+            .expect("training job admitted")
+            .wait()
+            .expect("training job");
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        let mut shed = 0u64;
+        for (i, a) in a_set.iter().enumerate() {
+            let job = client
+                .job(Arc::clone(a), Arc::clone(&b))
+                .id(i as u64)
+                .keep_result(false)
+                .build();
+            match client.submit(job) {
+                Ok(h) => handles.push(h),
+                Err(JobError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("unexpected rejection: {e}"),
+            }
+        }
+        for res in JobHandle::batch_wait_all(handles) {
+            black_box(res.expect("admitted job ok").report.real_pairs);
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let snap = client.metrics();
+        drop(client);
+        server.shutdown();
+        (snap, shed, wall_ms)
+    };
+    const GATE_US: u64 = 500;
+    let (snap_open, shed_open, wall_open_ms) = burst(None);
+    let (snap_gated, shed_gated, wall_gated_ms) =
+        burst(Some(std::time::Duration::from_micros(GATE_US)));
+    assert_eq!(shed_open, 0, "an ungated server must not shed");
+    println!(
+        "admission ({GATE_US}us budget): gated shed {shed_gated}/{JOBS}, \
+         queue p99 {}us (ungated {}us), job p99 {}us (ungated {}us)",
+        snap_gated.queue_p99_us, snap_open.queue_p99_us, snap_gated.p99_us, snap_open.p99_us
+    );
+
+    let adm_path = std::env::var("SPMM_BENCH_ADMISSION_OUT")
+        .unwrap_or_else(|_| "BENCH_admission.json".into());
+    let adm = obj([
+        ("bench", Json::from("bench_serve/admission")),
+        (
+            "workload",
+            Json::from(format!(
+                "{JOBS}-job burst sharing one B (256x512 @ 5%), A 48x256 @ 8%, \
+                 1 worker, inner-incrs kernel; ungated vs a {GATE_US}us \
+                 queue-delay budget (service rate pre-trained)"
+            )),
+        ),
+        ("jobs", Json::from(JOBS)),
+        ("budget_us", Json::from(GATE_US)),
+        ("gated_shed", Json::from(shed_gated)),
+        ("gated_completed", Json::from(snap_gated.jobs_completed)),
+        ("gated_queue_p99_us", Json::from(snap_gated.queue_p99_us)),
+        ("gated_p99_us", Json::from(snap_gated.p99_us)),
+        ("gated_wall_ms", Json::from(wall_gated_ms)),
+        ("ungated_queue_p99_us", Json::from(snap_open.queue_p99_us)),
+        ("ungated_p99_us", Json::from(snap_open.p99_us)),
+        ("ungated_wall_ms", Json::from(wall_open_ms)),
+    ]);
+    match std::fs::write(&adm_path, adm.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {adm_path}"),
+        Err(e) => println!("could not write {adm_path}: {e}"),
     }
 }

@@ -10,9 +10,11 @@
 //! and mentions every algorithm name in its `--kernel` help. Additionally,
 //! every `PreparedB` variant must have a wire-format arm in
 //! `src/engine/transport/wire.rs` — a prepared representation the socket
-//! transport cannot ship would make remote sharding silently partial. A
-//! new kernel that skips the suite, the docs, the CLI, or the wire format
-//! fails `cargo test --test repo_lint`.
+//! transport cannot ship would make remote sharding silently partial —
+//! and every `JobError` variant must have a row in the README error table
+//! (`| \`Variant\` |`), so a new failure mode is documented the moment it
+//! exists. A new kernel (or error) that skips the suite, the docs, the
+//! CLI, or the wire format fails `cargo test --test repo_lint`.
 //!
 //! The checks are pure functions over file contents so the fixtures in the
 //! test module can prove each one fires; [`super::run_repo_lint`] feeds
@@ -36,6 +38,9 @@ pub struct ConsistencyInput<'a> {
     /// `src/engine/transport/wire.rs` (the serialization arms for every
     /// `PreparedB` variant).
     pub wire_src: &'a str,
+    /// `src/coordinator/error.rs` (declares `JobError`, the serving
+    /// layer's complete failure surface).
+    pub error_src: &'a str,
 }
 
 /// Run every cross-file check. Returns the findings plus the number of
@@ -197,7 +202,83 @@ pub fn check(input: &ConsistencyInput<'_>) -> (Vec<Finding>, usize) {
         }
     }
 
+    // (h) every `JobError` variant has a row in the README error table, so
+    // the documented failure surface can never lag the typed one
+    let errors = job_error_variants(input.error_src);
+    if errors.is_empty() {
+        findings.push(Finding {
+            rule: "C1",
+            path: "src/coordinator/error.rs".into(),
+            line: 0,
+            detail: "could not locate `pub enum JobError` — the consistency \
+                     pass needs updating"
+                .into(),
+        });
+    }
+    for v in &errors {
+        checks += 1;
+        if !input.readme_src.contains(&format!("| `{v}`")) {
+            findings.push(Finding {
+                rule: "C1",
+                path: "README.md".into(),
+                line: 0,
+                detail: format!(
+                    "JobError::{v} missing from the README error table — add \
+                     a row documenting when callers see it"
+                ),
+            });
+        }
+    }
+
     (findings, checks)
+}
+
+/// Variant names of `pub enum JobError` (unit, tuple, or struct-shaped),
+/// parsed from the blanked code view with brace-depth tracking so a
+/// struct variant's fields are never mistaken for variants.
+fn job_error_variants(error_src: &str) -> Vec<String> {
+    let file = scan_source("coordinator/error.rs", error_src);
+    let mut variants = Vec::new();
+    let mut inside = false;
+    let mut depth = 0i32;
+    for line in &file.code {
+        if !inside {
+            if line.contains("pub enum JobError") {
+                inside = true;
+                for c in line.chars() {
+                    match c {
+                        '{' => depth += 1,
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+            }
+            continue;
+        }
+        if depth == 1 {
+            let ident: String = line
+                .trim()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric())
+                .collect();
+            if !ident.is_empty()
+                && ident.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+            {
+                variants.push(ident);
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth == 0 {
+            break;
+        }
+    }
+    variants
 }
 
 /// Variant names of `pub enum PreparedB` (tuple variants: the identifier
@@ -369,6 +450,23 @@ pub enum PreparedB {
     }
 ";
 
+    const ERROR_FIXTURE: &str = "
+/// What went wrong with a submitted job.
+pub enum JobError {
+    QueueFull,
+    Overloaded {
+        /// How long the caller should wait before retrying.
+        retry_after: Duration,
+    },
+}
+
+impl JobError {
+    pub fn is_transient(&self) -> bool {
+        matches!(self, JobError::QueueFull | JobError::Overloaded { .. })
+    }
+}
+";
+
     fn input<'a>(prop_engine: &'a str, readme: &'a str) -> ConsistencyInput<'a> {
         input_with_main(prop_engine, readme, MAIN_FIXTURE)
     }
@@ -385,13 +483,15 @@ pub enum PreparedB {
             readme_src: readme,
             main_src,
             wire_src: WIRE_FIXTURE,
+            error_src: ERROR_FIXTURE,
         }
     }
 
     const GOOD_PROP: &str =
         "assert!(registry.len() >= 2); Algorithm::Dense; Algorithm::Gustavson;";
-    const GOOD_README: &str =
-        "## Backends\n| `(dense, dense)` | x |\n| `(crs, gustavson)` | y |\n\n## Next\n";
+    const GOOD_README: &str = "## Backends\n| `(dense, dense)` | x |\n\
+         | `(crs, gustavson)` | y |\n\n## Errors\n| `QueueFull` | bounded |\n\
+         | `Overloaded` | shed |\n\n## Next\n";
 
     #[test]
     fn clean_inputs_produce_no_findings_and_count_checks() {
@@ -399,7 +499,21 @@ pub enum PreparedB {
         assert!(findings.is_empty(), "{findings:?}");
         // 2 name checks + 2 suite checks + 2 readme checks + 1 CLI-listing
         // check + 2 CLI-name checks + 1 floor check + 2 wire-arm checks
-        assert_eq!(checks, 12);
+        // + 2 error-table checks
+        assert_eq!(checks, 14);
+    }
+
+    #[test]
+    fn missing_error_table_row_fires() {
+        let readme = "## Backends\n| `(dense, dense)` | x |\n\
+             | `(crs, gustavson)` | y |\n\n## Errors\n| `QueueFull` | bounded |\n";
+        let (findings, _) = check(&input(GOOD_PROP, readme));
+        assert!(
+            findings.iter().any(|f| {
+                f.path == "README.md" && f.detail.contains("JobError::Overloaded")
+            }),
+            "{findings:?}"
+        );
     }
 
     #[test]
@@ -488,6 +602,10 @@ pub enum PreparedB {
             ]
         );
         assert_eq!(default_register_count(REGISTRY_FIXTURE), 2);
+        assert_eq!(
+            job_error_variants(ERROR_FIXTURE),
+            vec!["QueueFull", "Overloaded"]
+        );
         assert_eq!(prop_engine_len_floor(GOOD_PROP), Some(2));
         assert!(backends_section(GOOD_README)
             .is_some_and(|s| s.contains("gustavson") && !s.contains("Next")));

@@ -15,7 +15,7 @@
 //! | **D1** | `spmm`, `engine`, `formats`, `coordinator`, `transport` | `HashMap`/`HashSet`/`RandomState` — unspecified iteration order feeding numeric results or serving decisions; use `BTreeMap`/`BTreeSet` or index vectors |
 //! | **D2** | `spmm`, `engine` | accumulation-order hazards: `partial_cmp` (NaN makes the order partial), float `.sum::<fN>()`/`.product::<fN>()` turbofish, `.reduce(…)`/`.scan(…)` near floats, `sort_unstable` near float keys (`fold` with an explicit order is the sanctioned idiom) |
 //! | **P1** | `coordinator`, `engine`, `transport` (non-test code) | `.unwrap()` / `.expect()` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` — the serving path returns typed `EngineError`/`JobError` |
-//! | **C1** | cross-file | a kernel registered in `Registry::with_default_kernels` that the `prop_engine` all-kernels suite, the README Backends table, or the CLI (`kernels` listing + `--kernel` help) doesn't cover; a `PreparedB` variant without a wire-format arm in `engine/transport/wire.rs` |
+//! | **C1** | cross-file | a kernel registered in `Registry::with_default_kernels` that the `prop_engine` all-kernels suite, the README Backends table, or the CLI (`kernels` listing + `--kernel` help) doesn't cover; a `PreparedB` variant without a wire-format arm in `engine/transport/wire.rs`; a `JobError` variant without a row in the README error table |
 //! | **A0** | everywhere | allowlist hygiene: unused or unjustified `lint: allow` annotations |
 //!
 //! A genuinely-unreachable panic site is annotated in place — a comment
@@ -105,6 +105,7 @@ pub fn run_repo_lint(crate_root: &Path) -> LintReport {
     let readme_src = read("../README.md", &mut report);
     let main_src = read("src/main.rs", &mut report);
     let wire_src = read("src/engine/transport/wire.rs", &mut report);
+    let error_src = read("src/coordinator/error.rs", &mut report);
     let (findings, checks) = consistency::check(&consistency::ConsistencyInput {
         kernel_src: &kernel_src,
         registry_src: &registry_src,
@@ -112,6 +113,7 @@ pub fn run_repo_lint(crate_root: &Path) -> LintReport {
         readme_src: &readme_src,
         main_src: &main_src,
         wire_src: &wire_src,
+        error_src: &error_src,
     });
     report.findings.extend(findings);
     report.consistency_checks = checks;

@@ -1,0 +1,436 @@
+//! Traffic resilience in front of the micro-batch coalescer: admission
+//! control (predictive load shedding) and priority-aware weighted fair
+//! queuing with an explicit starvation bound.
+//!
+//! **Admission** ([`AdmissionGate`]): the client consults the gate before
+//! enqueueing. The gate predicts queue delay as `backlog × observed
+//! service time / workers` (service time is an EWMA fed by the workers);
+//! when the prediction exceeds the configured budget the job is shed with
+//! a typed [`JobError::Overloaded`] carrying a `retry_after` hint —
+//! replacing the old behavior of silently parking the caller on the
+//! bounded channel. With no budget configured the gate admits everything
+//! and submission behaves exactly as before.
+//!
+//! **Fair queuing** (`FairQueue`, crate-internal): each server worker drains available
+//! envelopes into a small reorder window and picks micro-batches by
+//! priority class ([`Priority`]), round-robin across tenants within a
+//! class, FIFO within a tenant. B-sharing coalescing still applies — the
+//! batch is extended with every windowed job sharing the anchor's `B`,
+//! whatever its class, because riding an existing `prepare` delays nobody.
+//! Every job left in the window ages by one *bypass*; a job bypassed
+//! [`AdmissionConfig::starvation_bound`] times is promoted ahead of
+//! everything newer regardless of class, so coalescing and priorities can
+//! no longer defer a singleton job indefinitely.
+//!
+//! [`JobError::Overloaded`]: super::error::JobError::Overloaded
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::job::{Priority, PRIORITY_CLASSES};
+use super::server::JobEnvelope;
+
+/// Admission + fairness knobs (part of `ServerConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Queue-delay budget: shed a submission when `backlog × observed
+    /// service time / workers` exceeds this. `None` disables the gate
+    /// (submission blocks under backpressure, as before).
+    pub max_queue_delay: Option<Duration>,
+    /// How many micro-batches may bypass a queued job before it is forced
+    /// to anchor the next batch regardless of priority class or tenant.
+    pub starvation_bound: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_queue_delay: None,
+            starvation_bound: 4,
+        }
+    }
+}
+
+/// Shared gate state: clients consult it at submit time, workers feed it
+/// observations. Lock-free — two atomics, no queue traversal.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    /// Budget in µs; `None` = gate disabled.
+    max_delay_us: Option<u64>,
+    workers: u64,
+    /// Jobs accepted (enqueued or windowed in a worker's fair queue) but
+    /// not yet executing — the true backlog, channel + reorder windows.
+    backlog: AtomicU64,
+    /// EWMA of per-job service time, µs (0 = no observation yet; the gate
+    /// admits everything until the first job completes).
+    service_ewma_us: AtomicU64,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: &AdmissionConfig, workers: usize) -> AdmissionGate {
+        AdmissionGate {
+            max_delay_us: cfg.max_queue_delay.map(|d| d.as_micros() as u64),
+            workers: workers.max(1) as u64,
+            backlog: AtomicU64::new(0),
+            service_ewma_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Jobs accepted but not yet executing.
+    pub fn backlog(&self) -> u64 {
+        self.backlog.load(Ordering::Relaxed)
+    }
+
+    /// Current per-job service-time estimate, µs (0 until the first job).
+    pub fn service_estimate_us(&self) -> u64 {
+        self.service_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Predicted queue delay for a job admitted now.
+    pub fn predicted_delay(&self) -> Duration {
+        Duration::from_micros(self.predicted_delay_us())
+    }
+
+    fn predicted_delay_us(&self) -> u64 {
+        let backlog = self.backlog.load(Ordering::Relaxed);
+        let ewma = self.service_ewma_us.load(Ordering::Relaxed);
+        backlog.saturating_mul(ewma) / self.workers
+    }
+
+    /// Admit or shed. `Err(retry_after)` means the predicted queue delay
+    /// exceeds the budget; the hint is how long until enough backlog
+    /// drains for the prediction to fit again (at least one service slot).
+    pub fn admit(&self) -> Result<(), Duration> {
+        let Some(budget) = self.max_delay_us else {
+            return Ok(());
+        };
+        let predicted = self.predicted_delay_us();
+        if predicted <= budget {
+            Ok(())
+        } else {
+            let excess = predicted - budget;
+            Err(Duration::from_micros(excess.max(self.retry_slot_us())))
+        }
+    }
+
+    /// Backoff hint when shedding without a prediction (e.g. a bounded
+    /// wait that timed out): one service slot, floored at 1ms.
+    pub fn retry_hint(&self) -> Duration {
+        Duration::from_micros(self.retry_slot_us())
+    }
+
+    fn retry_slot_us(&self) -> u64 {
+        self.service_ewma_us.load(Ordering::Relaxed).max(1_000)
+    }
+
+    /// A job was enqueued (call after a successful send).
+    pub fn on_enqueue(&self) {
+        self.backlog.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` jobs left the backlog (entered an executing batch, or were
+    /// drained at shutdown). Saturating: a miscount can never wrap the
+    /// gate into refusing everything.
+    pub fn on_start(&self, n: usize) {
+        let _ = self
+            .backlog
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n as u64))
+            });
+    }
+
+    /// Feed one completed job's service time into the EWMA (¾ old + ¼
+    /// new). The update is load/store racy across workers — acceptable:
+    /// the EWMA is a smoothed estimate, not an invariant.
+    pub fn observe_service(&self, service: Duration) {
+        let us = (service.as_micros() as u64).max(1);
+        let prev = self.service_ewma_us.load(Ordering::Relaxed);
+        let next = if prev == 0 { us } else { (3 * prev + us) / 4 };
+        self.service_ewma_us.store(next, Ordering::Relaxed);
+    }
+}
+
+struct PendingJob {
+    env: JobEnvelope,
+    /// Micro-batches that have been taken while this job waited.
+    bypassed: u32,
+}
+
+/// Per-worker reorder window implementing weighted fair queuing over the
+/// FIFO channel: priority class first, tenant round-robin within a class,
+/// FIFO within a tenant, same-`B` coalescing across everything, and the
+/// starvation bound overriding all of it.
+pub(crate) struct FairQueue {
+    pending: Vec<PendingJob>,
+    bound: u32,
+    /// Last tenant served per class — the round-robin cursor.
+    last_tenant: [Option<u32>; PRIORITY_CLASSES],
+}
+
+impl FairQueue {
+    pub(crate) fn new(starvation_bound: u32) -> FairQueue {
+        FairQueue {
+            pending: Vec::new(),
+            bound: starvation_bound.max(1),
+            last_tenant: [None; PRIORITY_CLASSES],
+        }
+    }
+
+    pub(crate) fn push(&mut self, env: JobEnvelope) {
+        self.pending.push(PendingJob { env, bypassed: 0 });
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Select the next micro-batch (≥ 1 job when non-empty): the anchor by
+    /// starvation override → priority → tenant round-robin → FIFO, then
+    /// every windowed job sharing the anchor's `B` (any class/tenant) up
+    /// to `max_batch`. Jobs left behind age by one bypass.
+    pub(crate) fn take_batch(&mut self, max_batch: usize) -> Vec<JobEnvelope> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let anchor = self.pending.remove(self.select_anchor());
+        let mut batch = vec![anchor.env];
+        let cap = max_batch.max(1);
+        let mut i = 0;
+        while i < self.pending.len() && batch.len() < cap {
+            if self.pending[i].env.job.b.same_source(&batch[0].job.b) {
+                batch.push(self.pending.remove(i).env);
+            } else {
+                i += 1;
+            }
+        }
+        for p in &mut self.pending {
+            p.bypassed += 1;
+        }
+        batch
+    }
+
+    fn select_anchor(&mut self) -> usize {
+        // starvation override: the most-bypassed job at/over the bound
+        // (earliest wins ties, preserving FIFO among equally starved jobs)
+        let mut starved: Option<usize> = None;
+        for (i, p) in self.pending.iter().enumerate() {
+            if p.bypassed >= self.bound {
+                let beats = match starved {
+                    Some(j) => p.bypassed > self.pending[j].bypassed,
+                    None => true,
+                };
+                if beats {
+                    starved = Some(i);
+                }
+            }
+        }
+        if let Some(i) = starved {
+            return i;
+        }
+        // highest priority class present in the window
+        let best = self
+            .pending
+            .iter()
+            .map(|p| p.env.job.opts.priority.class())
+            .min()
+            .unwrap_or(Priority::Normal.class());
+        // round-robin across the class's tenants so one tenant's burst
+        // cannot monopolize the worker within its own class
+        let mut tenants: Vec<u32> = self
+            .pending
+            .iter()
+            .filter(|p| p.env.job.opts.priority.class() == best)
+            .map(|p| p.env.job.opts.tenant)
+            .collect();
+        tenants.sort_unstable();
+        tenants.dedup();
+        let next_tenant = match self.last_tenant[best] {
+            Some(last) => tenants
+                .iter()
+                .copied()
+                .find(|&t| t > last)
+                .unwrap_or(tenants[0]),
+            None => tenants[0],
+        };
+        self.last_tenant[best] = Some(next_tenant);
+        self.pending
+            .iter()
+            .position(|p| {
+                p.env.job.opts.priority.class() == best && p.env.job.opts.tenant == next_tenant
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::SpmmJob;
+    use crate::datasets::synth::uniform;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn env(id: u64, b: &Arc<crate::formats::csr::Csr>, tenant: u32, prio: Priority) -> JobEnvelope {
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let (reply, _rx) = sync_channel(1);
+        // leak the receiver so replies don't error (irrelevant here)
+        std::mem::forget(_rx);
+        JobEnvelope {
+            job: SpmmJob::new(id, a, Arc::clone(b))
+                .with_tenant(tenant)
+                .with_priority(prio),
+            reply,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn ids(batch: &[JobEnvelope]) -> Vec<u64> {
+        batch.iter().map(|e| e.job.id).collect()
+    }
+
+    #[test]
+    fn gate_disabled_admits_everything() {
+        let g = AdmissionGate::new(&AdmissionConfig::default(), 1);
+        g.observe_service(Duration::from_millis(100));
+        for _ in 0..1000 {
+            g.on_enqueue();
+        }
+        assert!(g.admit().is_ok());
+    }
+
+    #[test]
+    fn gate_sheds_when_predicted_delay_exceeds_budget() {
+        let cfg = AdmissionConfig {
+            max_queue_delay: Some(Duration::from_millis(10)),
+            ..Default::default()
+        };
+        let g = AdmissionGate::new(&cfg, 2);
+        // no observations yet: everything admits
+        g.on_enqueue();
+        assert!(g.admit().is_ok());
+        // 10ms/job, 2 workers, 4 queued -> predicted 20ms > 10ms budget
+        g.observe_service(Duration::from_millis(10));
+        for _ in 0..3 {
+            g.on_enqueue();
+        }
+        let retry = g.admit().expect_err("must shed over budget");
+        assert!(retry >= Duration::from_millis(1), "{retry:?}");
+        // draining the backlog re-admits
+        g.on_start(4);
+        assert_eq!(g.backlog(), 0);
+        assert!(g.admit().is_ok());
+    }
+
+    #[test]
+    fn gate_backlog_never_underflows() {
+        let g = AdmissionGate::new(&AdmissionConfig::default(), 1);
+        g.on_start(10);
+        assert_eq!(g.backlog(), 0);
+        g.on_enqueue();
+        g.on_start(100);
+        assert_eq!(g.backlog(), 0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_observations() {
+        let g = AdmissionGate::new(&AdmissionConfig::default(), 1);
+        assert_eq!(g.service_estimate_us(), 0);
+        g.observe_service(Duration::from_micros(1_000));
+        assert_eq!(g.service_estimate_us(), 1_000);
+        for _ in 0..32 {
+            g.observe_service(Duration::from_micros(2_000));
+        }
+        let est = g.service_estimate_us();
+        assert!((1_900..=2_000).contains(&est), "{est}");
+    }
+
+    #[test]
+    fn higher_priority_anchors_before_lower() {
+        let b1 = Arc::new(uniform(4, 4, 0.5, 2));
+        let b2 = Arc::new(uniform(4, 4, 0.5, 3));
+        let mut q = FairQueue::new(8);
+        q.push(env(1, &b1, 0, Priority::Low));
+        q.push(env(2, &b2, 0, Priority::High));
+        assert_eq!(ids(&q.take_batch(1)), vec![2]);
+        assert_eq!(ids(&q.take_batch(1)), vec![1]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_b_jobs_coalesce_across_classes() {
+        let b = Arc::new(uniform(4, 4, 0.5, 2));
+        let b_other = Arc::new(uniform(4, 4, 0.5, 3));
+        let mut q = FairQueue::new(8);
+        q.push(env(1, &b, 0, Priority::Low));
+        q.push(env(2, &b_other, 0, Priority::High));
+        q.push(env(3, &b, 1, Priority::Normal));
+        // anchor = job 2 (high); no other job shares its B
+        assert_eq!(ids(&q.take_batch(4)), vec![2]);
+        // next anchor = job 3 (normal beats low); job 1 shares its B and rides
+        assert_eq!(ids(&q.take_batch(4)), vec![3, 1]);
+    }
+
+    #[test]
+    fn tenants_round_robin_within_a_class() {
+        let mut q = FairQueue::new(100);
+        let bs: Vec<_> = (0..6)
+            .map(|i| Arc::new(uniform(4, 4, 0.5, 10 + i)))
+            .collect();
+        // tenant 0: jobs 0,1,2 queued first; tenant 1: jobs 3,4; tenant 2: job 5
+        q.push(env(0, &bs[0], 0, Priority::Normal));
+        q.push(env(1, &bs[1], 0, Priority::Normal));
+        q.push(env(2, &bs[2], 0, Priority::Normal));
+        q.push(env(3, &bs[3], 1, Priority::Normal));
+        q.push(env(4, &bs[4], 1, Priority::Normal));
+        q.push(env(5, &bs[5], 2, Priority::Normal));
+        let mut order = Vec::new();
+        while !q.is_empty() {
+            order.extend(ids(&q.take_batch(1)));
+        }
+        // round-robin 0,1,2 then wrap: tenant 0's burst cannot monopolize
+        assert_eq!(order, vec![0, 3, 5, 1, 4, 2]);
+    }
+
+    #[test]
+    fn starvation_bound_promotes_bypassed_jobs() {
+        let bound = 3;
+        let mut q = FairQueue::new(bound);
+        let b_low = Arc::new(uniform(4, 4, 0.5, 2));
+        q.push(env(0, &b_low, 0, Priority::Low));
+        // keep feeding high-priority singletons; the low job must still
+        // run within `bound + 1` batches
+        let mut served_low_after = None;
+        for round in 0..10u32 {
+            let b = Arc::new(uniform(4, 4, 0.5, 100 + round as u64));
+            q.push(env(1000 + round as u64, &b, 0, Priority::High));
+            let batch = q.take_batch(1);
+            if ids(&batch) == vec![0] {
+                served_low_after = Some(round);
+                break;
+            }
+        }
+        let round = served_low_after.expect("low-priority job starved forever");
+        assert!(
+            round <= bound,
+            "low job served only after {round} batches (bound {bound})"
+        );
+    }
+
+    #[test]
+    fn take_batch_respects_max_batch_and_empty_queue() {
+        let mut q = FairQueue::new(4);
+        assert!(q.take_batch(8).is_empty());
+        let b = Arc::new(uniform(4, 4, 0.5, 2));
+        for i in 0..5 {
+            q.push(env(i, &b, 0, Priority::Normal));
+        }
+        assert_eq!(q.take_batch(3).len(), 3);
+        assert_eq!(q.take_batch(3).len(), 2);
+        assert!(q.is_empty());
+    }
+}

@@ -24,8 +24,9 @@ use std::sync::mpsc::{
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::admission::AdmissionGate;
 use super::error::JobError;
-use super::job::{JobOptions, JobOutput, JobResult, SpmmJob};
+use super::job::{JobOptions, JobOutput, JobResult, Priority, SpmmJob};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::server::{Envelope, JobEnvelope};
 use crate::engine::Algorithm;
@@ -39,6 +40,7 @@ pub struct SpmmClient {
     metrics: Arc<Metrics>,
     closed: Arc<AtomicBool>,
     next_id: Arc<AtomicU64>,
+    admission: Arc<AdmissionGate>,
 }
 
 impl SpmmClient {
@@ -47,8 +49,21 @@ impl SpmmClient {
         metrics: Arc<Metrics>,
         closed: Arc<AtomicBool>,
         next_id: Arc<AtomicU64>,
+        admission: Arc<AdmissionGate>,
     ) -> SpmmClient {
-        SpmmClient { tx, metrics, closed, next_id }
+        SpmmClient { tx, metrics, closed, next_id, admission }
+    }
+
+    /// Consult the admission gate; shed with a typed error when over
+    /// budget. A disabled gate (no `max_queue_delay`) admits everything.
+    fn gate(&self) -> Result<(), JobError> {
+        match self.admission.admit() {
+            Ok(()) => Ok(()),
+            Err(retry_after) => {
+                self.metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+                Err(JobError::Overloaded { retry_after })
+            }
+        }
     }
 
     /// Start building a job for `C = A × B`. Operands may arrive in **any**
@@ -75,10 +90,15 @@ impl SpmmClient {
     }
 
     /// Submit a job; blocks when the bounded queue is full (backpressure).
+    /// When the server has an admission budget configured
+    /// (`AdmissionConfig::max_queue_delay`), an over-budget submission is
+    /// shed up front with [`JobError::Overloaded`] instead of parking this
+    /// thread behind a queue it predictably cannot clear in time.
     pub fn submit(&self, job: SpmmJob) -> Result<JobHandle, JobError> {
         if self.closed.load(Ordering::Acquire) {
             return Err(JobError::Shutdown);
         }
+        self.gate()?;
         let id = job.id;
         let (rtx, rrx) = sync_channel(1);
         self.tx
@@ -88,16 +108,74 @@ impl SpmmClient {
                 enqueued: Instant::now(),
             }))
             .map_err(|_| JobError::Shutdown)?;
+        self.admission.on_enqueue();
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         Ok(JobHandle::new(id, rrx))
     }
 
-    /// Non-blocking submit: [`JobError::QueueFull`] when the bounded queue
-    /// is at capacity (`SpmmJob` is cheap to clone — two `Arc`s — so keep
-    /// a copy if you intend to retry).
-    pub fn try_submit(&self, job: SpmmJob) -> Result<JobHandle, JobError> {
+    /// Bounded-wait submit: block under backpressure for at most
+    /// `max_wait`, then shed with [`JobError::Overloaded`] (the retry hint
+    /// is the gate's current service-slot estimate). The admission gate
+    /// still applies up front, exactly as in [`SpmmClient::submit`].
+    pub fn submit_within(&self, job: SpmmJob, max_wait: Duration) -> Result<JobHandle, JobError> {
         if self.closed.load(Ordering::Acquire) {
             return Err(JobError::Shutdown);
+        }
+        self.gate()?;
+        let give_up = Instant::now() + max_wait;
+        let id = job.id;
+        let (rtx, rrx) = sync_channel(1);
+        let mut envelope = JobEnvelope {
+            job,
+            reply: rtx,
+            enqueued: Instant::now(),
+        };
+        loop {
+            match self.tx.try_send(Envelope::Job(envelope)) {
+                Ok(()) => {
+                    self.admission.on_enqueue();
+                    self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(JobHandle::new(id, rrx));
+                }
+                Err(TrySendError::Full(Envelope::Job(je))) => {
+                    let now = Instant::now();
+                    if now >= give_up {
+                        self.metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+                        return Err(JobError::Overloaded {
+                            retry_after: self.admission.retry_hint(),
+                        });
+                    }
+                    let remaining = give_up - now;
+                    std::thread::sleep(remaining.min(Duration::from_millis(1)));
+                    envelope = je;
+                }
+                Err(_) => return Err(JobError::Shutdown),
+            }
+        }
+    }
+
+    /// Non-blocking submit: [`JobError::QueueFull`] when the bounded queue
+    /// is at capacity, [`JobError::Overloaded`] when the admission gate
+    /// sheds first (`SpmmJob` is cheap to clone — two `Arc`s — so keep
+    /// a copy if you intend to retry; or use
+    /// [`SpmmClient::try_submit_reclaim`] to get the job back un-cloned).
+    pub fn try_submit(&self, job: SpmmJob) -> Result<JobHandle, JobError> {
+        self.try_submit_reclaim(job).map_err(|(_, e)| e)
+    }
+
+    /// Non-blocking submit that hands the job back on refusal, without
+    /// cloning it: `Err((job, reason))` where `reason` is
+    /// [`JobError::QueueFull`], [`JobError::Overloaded`], or
+    /// [`JobError::Shutdown`].
+    pub fn try_submit_reclaim(
+        &self,
+        job: SpmmJob,
+    ) -> Result<JobHandle, (SpmmJob, JobError)> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err((job, JobError::Shutdown));
+        }
+        if let Err(e) = self.gate() {
+            return Err((job, e));
         }
         let id = job.id;
         let (rtx, rrx) = sync_channel(1);
@@ -107,11 +185,19 @@ impl SpmmClient {
             enqueued: Instant::now(),
         })) {
             Ok(()) => {
+                self.admission.on_enqueue();
                 self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(JobHandle::new(id, rrx))
             }
-            Err(TrySendError::Full(_)) => Err(JobError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(JobError::Shutdown),
+            Err(TrySendError::Full(Envelope::Job(je))) => Err((je.job, JobError::QueueFull)),
+            Err(TrySendError::Disconnected(Envelope::Job(je))) => {
+                Err((je.job, JobError::Shutdown))
+            }
+            Err(TrySendError::Full(Envelope::Stop))
+            | Err(TrySendError::Disconnected(Envelope::Stop)) => {
+                // lint: allow(P1) — try_send returns the exact value passed in, always a Job here
+                unreachable!("try_send returned a different envelope than sent")
+            }
         }
     }
 
@@ -183,6 +269,35 @@ impl JobBuilder<'_> {
         self
     }
 
+    /// Tenant id: jobs from different tenants in the same priority class
+    /// are drained round-robin, so one tenant's burst cannot monopolize a
+    /// worker. 0 (the default) is the anonymous tenant.
+    pub fn tenant(mut self, tenant: u32) -> Self {
+        self.job.opts.tenant = tenant;
+        self
+    }
+
+    /// Priority class for the fair-queuing drain. Higher classes are
+    /// served first, bounded by the server's starvation bound.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.job.opts.priority = priority;
+        self
+    }
+
+    /// Absolute deadline: the job is dropped with
+    /// [`JobError::DeadlineExceeded`] at the cheapest point after expiry
+    /// (dequeue, pre-`prepare`, or pre-band-dispatch) instead of running.
+    pub fn deadline(mut self, deadline: Instant) -> Self {
+        self.job.opts.deadline = Some(deadline);
+        self
+    }
+
+    /// Relative deadline: `now + budget`.
+    pub fn deadline_in(mut self, budget: Duration) -> Self {
+        self.job.opts.deadline = Some(Instant::now() + budget);
+        self
+    }
+
     /// Replace all options at once (escape hatch for stored configs).
     pub fn opts(mut self, opts: JobOptions) -> Self {
         self.job.opts = opts;
@@ -204,6 +319,13 @@ impl JobBuilder<'_> {
     pub fn try_submit(self) -> Result<JobHandle, JobError> {
         let JobBuilder { client, job } = self;
         client.try_submit(job)
+    }
+
+    /// Bounded-wait submit: blocks under backpressure for at most
+    /// `max_wait`, then sheds with [`JobError::Overloaded`].
+    pub fn submit_within(self, max_wait: Duration) -> Result<JobHandle, JobError> {
+        let JobBuilder { client, job } = self;
+        client.submit_within(job, max_wait)
     }
 }
 
@@ -416,6 +538,82 @@ mod tests {
         for r in JobHandle::batch_wait_all(handles) {
             assert!(r.is_ok());
         }
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn try_submit_reclaim_hands_the_job_back_uncloned() {
+        let s = small_server(1, 1);
+        let client = s.client();
+        let a = Arc::new(uniform(64, 64, 0.4, 7));
+        let mut handles = Vec::new();
+        let mut reclaimed = None;
+        for i in 0..30 {
+            let job = client.job(a.clone(), a.clone()).id(i).build();
+            match client.try_submit_reclaim(job) {
+                Ok(h) => handles.push(h),
+                Err((job, e)) => {
+                    assert_eq!(e, JobError::QueueFull);
+                    assert_eq!(job.id, i, "must get the same job back");
+                    reclaimed = Some(job);
+                }
+            }
+        }
+        let job = reclaimed.expect("queue never filled");
+        for r in JobHandle::batch_wait_all(handles) {
+            assert!(r.is_ok());
+        }
+        // the reclaimed job is fully usable: resubmit it blocking
+        assert!(client.submit(job).unwrap().wait().is_ok());
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn submit_within_sheds_with_a_typed_overloaded_error() {
+        let s = small_server(1, 1);
+        let client = s.client();
+        let a = Arc::new(uniform(64, 64, 0.4, 8));
+        let mut handles = Vec::new();
+        let mut shed = 0;
+        for i in 0..30 {
+            let job = client.job(a.clone(), a.clone()).id(i).build();
+            match client.submit_within(job, Duration::from_micros(200)) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    assert!(matches!(e, JobError::Overloaded { .. }), "{e}");
+                    assert!(e.is_transient());
+                    assert!(e.retry_after().is_some());
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "bounded wait never gave up");
+        for r in JobHandle::batch_wait_all(handles) {
+            assert!(r.is_ok());
+        }
+        assert_eq!(client.metrics().jobs_shed, shed);
+        drop(client);
+        s.shutdown();
+    }
+
+    #[test]
+    fn builder_carries_traffic_options() {
+        use crate::coordinator::job::Priority;
+        let s = small_server(1, 2);
+        let client = s.client();
+        let a = Arc::new(uniform(8, 8, 0.5, 9));
+        let soon = Instant::now() + Duration::from_secs(60);
+        let job = client
+            .job(a.clone(), a)
+            .tenant(5)
+            .priority(Priority::Low)
+            .deadline(soon)
+            .build();
+        assert_eq!(job.opts.tenant, 5);
+        assert_eq!(job.opts.priority, Priority::Low);
+        assert_eq!(job.opts.deadline, Some(soon));
         drop(client);
         s.shutdown();
     }

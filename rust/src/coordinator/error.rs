@@ -1,12 +1,15 @@
 //! Typed job errors — the serving layer's failure surface.
 //!
-//! Everything a submitted job can die of is one of five variants; callers
+//! Everything a submitted job can die of is one of these variants; callers
 //! match instead of scraping strings. Engine-side failures
 //! ([`crate::engine::EngineError`]) lift losslessly via `From`, and the
-//! coordinator adds the two failure modes only it can observe: a full
-//! bounded queue and a server that shut down before (or while) the job ran.
+//! coordinator adds the failure modes only it can observe: a full bounded
+//! queue, an admission gate shedding load ([`JobError::Overloaded`]), a
+//! deadline that expired before execution ([`JobError::DeadlineExceeded`]),
+//! and a server that shut down before (or while) the job ran.
 
 use std::fmt;
+use std::time::Duration;
 
 use crate::engine::{Algorithm, EngineError};
 use crate::formats::error::FormatError;
@@ -36,6 +39,15 @@ pub enum JobError {
     Format(FormatError),
     /// The kernel's prepare or execute step failed.
     ExecFailed(String),
+    /// The admission gate shed this job: predicted queue delay (depth ×
+    /// observed service time) exceeded the configured budget. `retry_after`
+    /// is the gate's estimate of when capacity frees up — resubmit after
+    /// that long (or route to another server).
+    Overloaded { retry_after: Duration },
+    /// The job's [`super::JobOptions::deadline`] expired before it could be
+    /// (fully) executed. Expired work is dropped at the cheapest possible
+    /// point — dequeue, pre-`prepare`, or pre-band-dispatch — never run.
+    DeadlineExceeded,
     /// The server shut down before the job could complete (or the reply
     /// channel was lost). Accepted-but-unserved jobs drain with this.
     Shutdown,
@@ -44,8 +56,25 @@ pub enum JobError {
 impl JobError {
     /// Transient conditions worth retrying (against this or another
     /// server); the other variants are deterministic job defects.
+    /// `Overloaded` is transient by construction (it carries a
+    /// `retry_after` hint); `DeadlineExceeded` is *not* — the caller's
+    /// budget is spent, and resubmitting the same expired deadline would
+    /// only be shed again. Mint a fresh deadline to retry.
     pub fn is_transient(&self) -> bool {
-        matches!(self, JobError::QueueFull | JobError::Shutdown)
+        matches!(
+            self,
+            JobError::QueueFull | JobError::Overloaded { .. } | JobError::Shutdown
+        )
+    }
+
+    /// For [`JobError::Overloaded`], the gate's backoff hint; `None` for
+    /// every other variant. Lets retry loops sleep exactly as long as the
+    /// server predicted instead of guessing.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            JobError::Overloaded { retry_after } => Some(*retry_after),
+            _ => None,
+        }
     }
 }
 
@@ -82,6 +111,12 @@ impl fmt::Display for JobError {
             }
             JobError::Format(e) => write!(w, "format error: {e}"),
             JobError::ExecFailed(msg) => write!(w, "execution failed: {msg}"),
+            JobError::Overloaded { retry_after } => write!(
+                w,
+                "overloaded (load shed): retry after {}ms",
+                retry_after.as_millis()
+            ),
+            JobError::DeadlineExceeded => write!(w, "deadline exceeded"),
             JobError::Shutdown => write!(w, "server shut down"),
         }
     }
@@ -126,9 +161,22 @@ mod tests {
     fn transience_classification() {
         assert!(JobError::QueueFull.is_transient());
         assert!(JobError::Shutdown.is_transient());
+        assert!(JobError::Overloaded { retry_after: Duration::from_millis(5) }.is_transient());
+        assert!(!JobError::DeadlineExceeded.is_transient());
         assert!(!JobError::ShapeMismatch { a: (1, 1), b: (2, 2) }.is_transient());
         assert!(!JobError::ExecFailed("x".into()).is_transient());
         assert!(!JobError::Format(FormatError::UnknownFormat("x".into())).is_transient());
+    }
+
+    #[test]
+    fn retry_after_surfaces_only_on_overloaded() {
+        let e = JobError::Overloaded { retry_after: Duration::from_millis(40) };
+        assert_eq!(e.retry_after(), Some(Duration::from_millis(40)));
+        assert_eq!(JobError::QueueFull.retry_after(), None);
+        assert_eq!(JobError::DeadlineExceeded.retry_after(), None);
+        // Display carries the hint so the CLI error text shows it verbatim.
+        assert!(e.to_string().contains("retry after 40ms"));
+        assert!(JobError::DeadlineExceeded.to_string().contains("deadline exceeded"));
     }
 
     #[test]

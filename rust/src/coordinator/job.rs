@@ -2,7 +2,7 @@
 //! routes, schedules, and dispatches through the kernel registry.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::error::JobError;
 use crate::engine::{Algorithm, ExecStats};
@@ -22,6 +22,50 @@ pub struct SpmmJob {
     pub opts: JobOptions,
 }
 
+/// Priority class for the fair-queuing drain (`coordinator::admission`).
+/// Higher classes are served first, but the starvation bound guarantees
+/// lower classes still run: a job bypassed `starvation_bound` times is
+/// promoted ahead of everything newer regardless of class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+/// Number of priority classes — sizes the per-class metric histograms.
+pub const PRIORITY_CLASSES: usize = 3;
+
+impl Priority {
+    /// Dense class index (0 = High … 2 = Low) for per-class metrics.
+    pub fn class(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse a CLI/bench spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct JobOptions {
     /// Cross-check the result against the CPU oracle (test/debug traffic;
@@ -36,6 +80,18 @@ pub struct JobOptions {
     /// > 1 splits execution across that many channel-connected shard
     /// workers, bit-identical to the unsharded run.
     pub shards: usize,
+    /// Tenant id for fair queuing — jobs from different tenants in the same
+    /// priority class are drained round-robin instead of FIFO, so one
+    /// tenant's burst cannot monopolize a worker. 0 = the default tenant.
+    pub tenant: u32,
+    /// Priority class ([`Priority`]). Higher classes drain first, bounded
+    /// by the admission layer's starvation bound.
+    pub priority: Priority,
+    /// Absolute deadline. Checked at dequeue, pre-`prepare`, and pre-band-
+    /// dispatch; expired jobs die cheaply with
+    /// [`JobError::DeadlineExceeded`] instead of burning a `prepare`.
+    /// Remote bands inherit the remaining budget as their wire timeout.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for JobOptions {
@@ -45,6 +101,9 @@ impl Default for JobOptions {
             keep_result: true,
             kernel: None,
             shards: 1,
+            tenant: 0,
+            priority: Priority::Normal,
+            deadline: None,
         }
     }
 }
@@ -114,6 +173,30 @@ impl SpmmJob {
         self.opts.shards = shards.max(1);
         self
     }
+
+    /// Builder-style tenant id (fair-queuing round-robin key).
+    pub fn with_tenant(mut self, tenant: u32) -> SpmmJob {
+        self.opts.tenant = tenant;
+        self
+    }
+
+    /// Builder-style priority class.
+    pub fn with_priority(mut self, priority: Priority) -> SpmmJob {
+        self.opts.priority = priority;
+        self
+    }
+
+    /// Builder-style absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> SpmmJob {
+        self.opts.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder-style relative deadline: `now + budget`.
+    pub fn with_deadline_in(self, budget: Duration) -> SpmmJob {
+        let deadline = Instant::now() + budget;
+        self.with_deadline(deadline)
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +227,36 @@ mod tests {
         assert_eq!(j.opts.shards, 4);
         let j0 = SpmmJob::new(2, a.clone(), a).with_shards(0);
         assert_eq!(j0.opts.shards, 1);
+    }
+
+    #[test]
+    fn traffic_options_default_neutral_and_build() {
+        let a = Arc::new(uniform(4, 4, 0.5, 1));
+        let j = SpmmJob::new(1, a.clone(), a.clone());
+        assert_eq!(j.opts.tenant, 0);
+        assert_eq!(j.opts.priority, Priority::Normal);
+        assert!(j.opts.deadline.is_none());
+
+        let soon = Instant::now() + Duration::from_millis(50);
+        let j = SpmmJob::new(2, a.clone(), a)
+            .with_tenant(7)
+            .with_priority(Priority::High)
+            .with_deadline(soon);
+        assert_eq!(j.opts.tenant, 7);
+        assert_eq!(j.opts.priority, Priority::High);
+        assert_eq!(j.opts.deadline, Some(soon));
+    }
+
+    #[test]
+    fn priority_classes_are_dense_and_parse_round_trips() {
+        let all = [Priority::High, Priority::Normal, Priority::Low];
+        for (i, p) in all.iter().enumerate() {
+            assert_eq!(p.class(), i);
+            assert!(p.class() < PRIORITY_CLASSES);
+            assert_eq!(Priority::parse(p.name()), Some(*p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
     }
 
     #[test]

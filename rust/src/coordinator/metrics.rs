@@ -9,6 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::job::PRIORITY_CLASSES;
 use crate::engine::Algorithm;
 use crate::formats::traits::FormatKind;
 use crate::util::lock_unpoisoned;
@@ -192,6 +193,17 @@ pub struct Metrics {
     pub workspace_pool_hits: AtomicU64,
     /// Workspace checkouts that had to allocate (pool empty).
     pub workspace_pool_misses: AtomicU64,
+    /// Jobs the admission gate refused ([`JobError::Overloaded`]): the
+    /// predicted queue delay exceeded the configured budget, so the job
+    /// was shed with a retry-after hint instead of parking the caller.
+    pub jobs_shed: AtomicU64,
+    /// Jobs dropped because their deadline expired before execution —
+    /// at dequeue, pre-`prepare`, or pre-band-dispatch
+    /// ([`JobError::DeadlineExceeded`]). Subset of `jobs_failed`.
+    pub deadline_drops: AtomicU64,
+    /// Remote workers revived by the transport's circuit breaker (Hello
+    /// re-handshake after loss; staged `B`s re-replicate on first use).
+    pub workers_readmitted: AtomicU64,
     /// Kernel-selection datapoints recorded (total, including any beyond
     /// the bounded log's retention).
     pub kernel_observations: AtomicU64,
@@ -210,6 +222,13 @@ pub struct Metrics {
     pub latency: Histogram,
     /// Per-job queue wait (submit → dequeue) — the backpressure signal.
     pub queue_wait: Histogram,
+    /// Service time split by priority class (index = `Priority::class()`).
+    /// The aggregate `latency` histogram still sees every job.
+    pub latency_by_class: [Histogram; PRIORITY_CLASSES],
+    /// Queue wait split by priority class — the fairness signal: under
+    /// load, low-priority queue p99 may grow, but the starvation bound
+    /// keeps it finite.
+    pub queue_wait_by_class: [Histogram; PRIORITY_CLASSES],
     /// Per-shard execute wall time on the shard worker.
     pub shard_wall: Histogram,
     /// Per-shard queue wait (band dispatch → shard worker dequeue).
@@ -227,6 +246,20 @@ impl Metrics {
 
     pub fn observe_queue_wait(&self, d: Duration) {
         self.queue_wait.observe(d);
+    }
+
+    /// Observe service latency into both the aggregate histogram and the
+    /// job's priority-class split. Out-of-range classes (future-proofing)
+    /// fold into the lowest class.
+    pub fn observe_latency_class(&self, d: Duration, class: usize) {
+        self.latency.observe(d);
+        self.latency_by_class[class.min(PRIORITY_CLASSES - 1)].observe(d);
+    }
+
+    /// Observe queue wait into both the aggregate and per-class histograms.
+    pub fn observe_queue_wait_class(&self, d: Duration, class: usize) {
+        self.queue_wait.observe(d);
+        self.queue_wait_by_class[class.min(PRIORITY_CLASSES - 1)].observe(d);
     }
 
     pub fn observe_shard_wall(&self, d: Duration) {
@@ -266,6 +299,8 @@ impl Metrics {
         self.prepare_replications
             .fetch_add(c.prepare_replications, Ordering::Relaxed);
         self.prepare_reuse.fetch_add(c.prepare_reuse, Ordering::Relaxed);
+        self.workers_readmitted
+            .fetch_add(c.workers_readmitted, Ordering::Relaxed);
     }
 
     /// Publish the latest per-kernel calibration (refit loop only).
@@ -305,18 +340,33 @@ impl Metrics {
             prepare_reuse: self.prepare_reuse.load(Ordering::Relaxed),
             workspace_pool_hits: self.workspace_pool_hits.load(Ordering::Relaxed),
             workspace_pool_misses: self.workspace_pool_misses.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
+            workers_readmitted: self.workers_readmitted.load(Ordering::Relaxed),
             kernel_observations: self.kernel_observations.load(Ordering::Relaxed),
             model_refits: self.model_refits.load(Ordering::Relaxed),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             queue_p50_us: self.queue_wait.quantile_us(0.5),
             queue_p99_us: self.queue_wait.quantile_us(0.99),
+            class_p50_us: quantiles(&self.latency_by_class, 0.5),
+            class_p99_us: quantiles(&self.latency_by_class, 0.99),
+            class_queue_p50_us: quantiles(&self.queue_wait_by_class, 0.5),
+            class_queue_p99_us: quantiles(&self.queue_wait_by_class, 0.99),
             shard_wall_p50_us: self.shard_wall.quantile_us(0.5),
             shard_wall_p99_us: self.shard_wall.quantile_us(0.99),
             shard_queue_p50_us: self.shard_queue_wait.quantile_us(0.5),
             shard_queue_p99_us: self.shard_queue_wait.quantile_us(0.99),
         }
     }
+}
+
+fn quantiles(hists: &[Histogram; PRIORITY_CLASSES], q: f64) -> [u64; PRIORITY_CLASSES] {
+    let mut out = [0u64; PRIORITY_CLASSES];
+    for (slot, h) in out.iter_mut().zip(hists.iter()) {
+        *slot = h.quantile_us(q);
+    }
+    out
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -345,12 +395,21 @@ pub struct MetricsSnapshot {
     pub prepare_reuse: u64,
     pub workspace_pool_hits: u64,
     pub workspace_pool_misses: u64,
+    pub jobs_shed: u64,
+    pub deadline_drops: u64,
+    pub workers_readmitted: u64,
     pub kernel_observations: u64,
     pub model_refits: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub queue_p50_us: u64,
     pub queue_p99_us: u64,
+    /// Service-latency quantiles per priority class (index =
+    /// `Priority::class()`: 0 = high, 1 = normal, 2 = low).
+    pub class_p50_us: [u64; PRIORITY_CLASSES],
+    pub class_p99_us: [u64; PRIORITY_CLASSES],
+    pub class_queue_p50_us: [u64; PRIORITY_CLASSES],
+    pub class_queue_p99_us: [u64; PRIORITY_CLASSES],
     pub shard_wall_p50_us: u64,
     pub shard_wall_p99_us: u64,
     pub shard_queue_p50_us: u64,
@@ -536,6 +595,7 @@ mod tests {
             workers_lost: 1,
             prepare_replications: 3,
             prepare_reuse: 5,
+            workers_readmitted: 2,
         });
         // folding accumulates across jobs
         m.record_transport(&crate::engine::TransportCounters {
@@ -550,7 +610,44 @@ mod tests {
         assert_eq!(s.workers_lost, 1);
         assert_eq!(s.prepare_replications, 3);
         assert_eq!(s.prepare_reuse, 5);
+        assert_eq!(s.workers_readmitted, 2);
         assert_eq!(s.shard_clamps, 1);
+    }
+
+    #[test]
+    fn shed_and_deadline_counters_surface_in_the_snapshot() {
+        let m = Metrics::new();
+        m.jobs_shed.fetch_add(3, Ordering::Relaxed);
+        m.deadline_drops.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_shed, 3);
+        assert_eq!(s.deadline_drops, 2);
+        assert_eq!(s.workers_readmitted, 0);
+    }
+
+    #[test]
+    fn per_class_histograms_split_by_priority_and_feed_the_aggregate() {
+        let m = Metrics::new();
+        // class 0 (high) fast, class 2 (low) slow; aggregate sees both
+        for _ in 0..10 {
+            m.observe_latency_class(Duration::from_micros(10), 0);
+            m.observe_queue_wait_class(Duration::from_micros(2), 0);
+        }
+        for _ in 0..10 {
+            m.observe_latency_class(Duration::from_micros(50_000), 2);
+            m.observe_queue_wait_class(Duration::from_micros(20_000), 2);
+        }
+        let s = m.snapshot();
+        assert!(s.class_p50_us[0] <= 16, "{s:?}");
+        assert!(s.class_p50_us[2] >= 32_768, "{s:?}");
+        assert_eq!(s.class_p50_us[1], 0, "no normal-class traffic: {s:?}");
+        assert!(s.class_queue_p50_us[0] <= 4, "{s:?}");
+        assert!(s.class_queue_p50_us[2] >= 16_384, "{s:?}");
+        assert_eq!(m.latency.count(), 20, "aggregate must see every job");
+        assert_eq!(m.queue_wait.count(), 20);
+        // out-of-range classes clamp to the lowest class, never panic
+        m.observe_latency_class(Duration::from_micros(1), 99);
+        assert_eq!(m.latency_by_class[PRIORITY_CLASSES - 1].count(), 11);
     }
 
     #[test]

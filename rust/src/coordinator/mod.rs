@@ -7,9 +7,15 @@
 //!   points (`submit_many`/`stream`). Jobs ingest typed
 //!   [`crate::formats::MatrixOperand`]s — any Table-I format, CSR staying
 //!   zero-cost.
-//! * [`error`] — typed [`JobError`] (queue full, kernel unavailable, shape
-//!   mismatch, format/ingestion failure, exec failure, shutdown); engine
-//!   and formats errors lift via `From`.
+//! * [`admission`] — the traffic-resilience layer: an [`AdmissionGate`]
+//!   shedding load with typed `Overloaded { retry_after }` when predicted
+//!   queue delay exceeds the budget, and the per-worker [`admission`] fair
+//!   queue (priority classes, tenant round-robin, same-`B` coalescing,
+//!   explicit starvation bound).
+//! * [`error`] — typed [`JobError`] (queue full, overloaded/shed with
+//!   retry-after, deadline exceeded, kernel unavailable, shape mismatch,
+//!   format/ingestion failure, exec failure, shutdown); engine and formats
+//!   errors lift via `From`.
 //! * [`job`] — SpMM job descriptors/results (with per-job kernel override).
 //! * [`router`] — format strategy (InCRS or not) + kernel-key selection
 //!   over the engine registry, the paper's §II/§III decision as an
@@ -34,6 +40,7 @@
 //! cost model to all workers (with hysteresis damping flapping), and the
 //! model persists to [`LearnConfig::model_path`] across restarts.
 
+pub mod admission;
 pub mod client;
 pub mod error;
 pub mod job;
@@ -42,9 +49,10 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use admission::{AdmissionConfig, AdmissionGate};
 pub use client::{JobBuilder, JobHandle, JobStream, SpmmClient};
 pub use error::JobError;
-pub use job::{JobOptions, JobOutput, JobResult, SpmmJob};
+pub use job::{JobOptions, JobOutput, JobResult, Priority, SpmmJob, PRIORITY_CLASSES};
 pub use metrics::{CalibrationEntry, Histogram, KernelObservation, Metrics, MetricsSnapshot};
 pub use router::{route, AccessStrategy, KernelSpec, Route, RoutingPolicy};
 pub use scheduler::{describe, split_batches, Batch, ScheduleInfo};

@@ -36,6 +36,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::admission::{AdmissionConfig, AdmissionGate, FairQueue};
 use super::client::SpmmClient;
 use super::error::JobError;
 use super::job::{JobOutput, JobResult, SpmmJob};
@@ -145,6 +146,10 @@ pub struct ServerConfig {
     /// Timeout/retry/hedging policy for the socket transport (ignored when
     /// `remote_peers` is empty).
     pub retry: RetryPolicy,
+    /// Admission control + fair-queuing policy (see
+    /// [`super::admission::AdmissionConfig`]). Default: gate disabled,
+    /// starvation bound 4.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServerConfig {
@@ -162,6 +167,7 @@ impl Default for ServerConfig {
             learn: LearnConfig::default(),
             remote_peers: Vec::new(),
             retry: RetryPolicy::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -181,6 +187,7 @@ impl std::fmt::Debug for ServerConfig {
             .field("learn", &self.learn)
             .field("remote_peers", &self.remote_peers)
             .field("retry", &self.retry)
+            .field("admission", &self.admission)
             .finish()
     }
 }
@@ -208,6 +215,7 @@ pub struct Server {
     workers: usize,
     learn: LearnConfig,
     cost_model: CostModel,
+    admission: Arc<AdmissionGate>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -256,6 +264,9 @@ impl Server {
                 }
             }
         };
+        // one admission gate shared by every client handle (enqueue side)
+        // and every worker (dequeue + service-rate side)
+        let admission = Arc::new(AdmissionGate::new(&cfg.admission, cfg.workers));
         let mut handles = Vec::new();
         for wid in 0..cfg.workers {
             let rx = Arc::clone(&rx);
@@ -263,10 +274,11 @@ impl Server {
             let cfg = cfg.clone();
             let model = cost_model.clone();
             let transport = Arc::clone(&transport);
+            let admission = Arc::clone(&admission);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("spmm-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg, rx, metrics, model, transport))
+                    .spawn(move || worker_loop(wid, cfg, rx, metrics, model, transport, admission))
                     // lint: allow(P1) — no worker thread at startup leaves no server to return
                     .expect("spawn worker"),
             );
@@ -280,6 +292,7 @@ impl Server {
             workers: cfg.workers,
             learn: cfg.learn,
             cost_model,
+            admission,
             metrics,
         }
     }
@@ -298,6 +311,7 @@ impl Server {
             Arc::clone(&self.metrics),
             Arc::clone(&self.closed),
             Arc::clone(&self.next_id),
+            Arc::clone(&self.admission),
         )
     }
 
@@ -317,9 +331,11 @@ impl Server {
     /// `Err(job)` hands the job back when the queue is full. Prefer
     /// `client.try_submit(job)`, which reports [`JobError::QueueFull`].
     pub fn try_submit(&self, job: SpmmJob) -> Result<Receiver<JobResult>, SpmmJob> {
-        match self.client().try_submit(job.clone()) {
+        // try_submit_reclaim moves the job and hands it back un-cloned on
+        // rejection, so even multi-MB operands never copy on this path
+        match self.client().try_submit_reclaim(job) {
             Ok(h) => Ok(h.into_receiver()),
-            Err(_) => Err(job),
+            Err((job, _)) => Err(job),
         }
     }
 
@@ -339,6 +355,7 @@ impl Server {
             workers,
             learn,
             cost_model,
+            admission,
             metrics,
         } = self;
         closed.store(true, Ordering::Release);
@@ -376,6 +393,7 @@ impl Server {
         for pass in 0..2 {
             while let Ok(env) = guard.try_recv() {
                 if let Envelope::Job(je) = env {
+                    admission.on_start(1); // keep the backlog gauge honest
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                     let _ = je.reply.send(JobResult {
                         id: je.job.id,
@@ -480,6 +498,7 @@ fn calibration_entries(fitted: &FittedModel) -> Vec<CalibrationEntry> {
     out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     _wid: usize,
     cfg: ServerConfig,
@@ -487,6 +506,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     model: CostModel,
     transport: Arc<dyn ShardTransport>,
+    admission: Arc<AdmissionGate>,
 ) {
     let registry = worker_registry(&cfg, &metrics, &model);
     let cap = if cfg.coalesce.enabled {
@@ -501,47 +521,52 @@ fn worker_loop(
     // operand→CSR ingestion conversions, memoized by source identity so
     // steady-state non-CSR traffic converts once per worker, not per job
     let mut csr_memo = CsrMemo::new(cap.max(4) * 2);
+    // the per-worker reorder window: priority classes beat FIFO, tenants
+    // round-robin within a class, same-B jobs coalesce into the anchor's
+    // batch, and the starvation bound caps how often a queued job may be
+    // bypassed (see `coordinator::admission::FairQueue`). The window is
+    // bounded by max_batch, so a burst of unrelated jobs still fans out
+    // across the other workers instead of pooling behind one.
+    let mut fair = FairQueue::new(cfg.admission.starvation_bound);
+    let window = if cfg.coalesce.enabled {
+        cfg.coalesce.max_batch.max(1)
+    } else {
+        1
+    };
+    let mut stopping = false;
 
     loop {
-        let mut batch: Vec<JobEnvelope> = Vec::new();
-        let mut saw_stop = false;
         {
             // a sibling worker panicking mid-recv poisons this mutex; the
             // Receiver itself is still sound, so keep serving rather than
             // silently exiting the pool (see `util::lock_unpoisoned`)
             let guard = lock_unpoisoned(&rx);
-            match guard.recv() {
-                // disconnected + drained: shutdown
-                Err(_) => return,
-                Ok(Envelope::Stop) => return,
-                Ok(Envelope::Job(je)) => batch.push(je),
+            if fair.is_empty() && !stopping {
+                match guard.recv() {
+                    // disconnected + drained: shutdown
+                    Err(_) => return,
+                    // our pill: drain the window first, then exit
+                    Ok(Envelope::Stop) => stopping = true,
+                    Ok(Envelope::Job(je)) => fair.push(je),
+                }
             }
-            if cfg.coalesce.enabled {
-                // opportunistic drain, bounded to the shared-B run: keep
-                // pulling queued jobs only while they share the first
-                // job's B operand (Arc identity), so a burst of unrelated
-                // jobs still fans out across the other workers. The first
-                // non-matching job ends the run but rides along (it is
-                // already popped; its own group executes in this batch).
-                while batch.len() < cfg.coalesce.max_batch.max(1) {
-                    match guard.try_recv() {
-                        Ok(Envelope::Job(je)) => {
-                            let same_b = je.job.b.same_source(&batch[0].job.b);
-                            batch.push(je);
-                            if !same_b {
-                                break;
-                            }
-                        }
-                        // our pill: finish this batch first, then exit
-                        Ok(Envelope::Stop) => {
-                            saw_stop = true;
-                            break;
-                        }
-                        Err(_) => break,
-                    }
+            // opportunistic, non-blocking refill of the reorder window
+            while !stopping && fair.len() < window {
+                match guard.try_recv() {
+                    Ok(Envelope::Job(je)) => fair.push(je),
+                    Ok(Envelope::Stop) => stopping = true,
+                    Err(_) => break,
                 }
             }
         } // queue unlocked while the batch executes
+        if fair.is_empty() {
+            if stopping {
+                return;
+            }
+            continue;
+        }
+        let batch = fair.take_batch(window);
+        admission.on_start(batch.len());
         run_batch(
             &registry,
             &cfg,
@@ -552,8 +577,9 @@ fn worker_loop(
             &metrics,
             &model,
             transport.as_ref(),
+            &admission,
         );
-        if saw_stop {
+        if stopping && fair.is_empty() {
             return;
         }
     }
@@ -608,14 +634,23 @@ fn resolve_kernel(
 
 /// Reply with a failure, keeping the metric invariants: the job counts as
 /// failed and still lands in the service-latency histogram (`batch_start`
-/// is its dequeue time).
+/// is its dequeue time), split by its priority class.
 fn reply_err(env: JobEnvelope, err: JobError, metrics: &Metrics, batch_start: Instant) {
     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-    metrics.observe_latency(batch_start.elapsed());
+    metrics.observe_latency_class(batch_start.elapsed(), env.job.opts.priority.class());
     let _ = env.reply.send(JobResult {
         id: env.job.id,
         result: Err(err),
     });
+}
+
+/// Whether a job's deadline has already passed. Jobs without a deadline
+/// never expire.
+fn deadline_expired(job: &SpmmJob) -> bool {
+    match job.opts.deadline {
+        Some(d) => Instant::now() >= d,
+        None => false,
+    }
 }
 
 /// Execute one micro-batch: ingest each job's operands to canonical CSR
@@ -633,6 +668,7 @@ fn run_batch(
     metrics: &Metrics,
     model: &CostModel,
     transport: &dyn ShardTransport,
+    admission: &AdmissionGate,
 ) {
     // service latency is dequeue -> response ready: every job in this
     // batch was dequeued "now", so each one's latency (observed at reply
@@ -641,7 +677,14 @@ fn run_batch(
     let mut groups: Vec<PrepGroup> = Vec::new();
 
     for env in batch {
-        metrics.observe_queue_wait(env.enqueued.elapsed());
+        metrics.observe_queue_wait_class(env.enqueued.elapsed(), env.job.opts.priority.class());
+        // deadline check at dequeue: a job whose budget expired while
+        // queued dies here, before any conversion or kernel work
+        if deadline_expired(&env.job) {
+            metrics.deadline_drops.fetch_add(1, Ordering::Relaxed);
+            reply_err(env, JobError::DeadlineExceeded, metrics, batch_start);
+            continue;
+        }
         // shape check on the native operands, before any conversion
         if env.job.a.cols() != env.job.b.rows() {
             let err = JobError::ShapeMismatch {
@@ -721,6 +764,21 @@ fn run_batch(
     }
 
     for PrepGroup { key, kernel, native, b_csr, envs } in groups {
+        // pre-`prepare` deadline check: jobs whose budget expired while
+        // earlier groups executed die before this group pays its prepare
+        let mut live = Vec::with_capacity(envs.len());
+        for (env, a_csr, scores) in envs {
+            if deadline_expired(&env.job) {
+                metrics.deadline_drops.fetch_add(1, Ordering::Relaxed);
+                reply_err(env, JobError::DeadlineExceeded, metrics, batch_start);
+            } else {
+                live.push((env, a_csr, scores));
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let envs = live;
         let t_prep = Instant::now();
         // trivial keys are Arc identities (only unique within this batch),
         // so they bypass the content-keyed cross-batch cache — their
@@ -774,6 +832,10 @@ fn run_batch(
             metrics
                 .busy_ns
                 .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            // feed the admission gate's service-rate estimate: per-job
+            // execute wall (prepare amortizes across the group, so the
+            // EWMA tracks marginal cost per admitted job)
+            admission.observe_service(start.elapsed());
             match &result {
                 Ok(out) => {
                     let done = metrics.jobs_completed.fetch_add(1, Ordering::Relaxed) + 1;
@@ -794,7 +856,7 @@ fn run_batch(
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            metrics.observe_latency(batch_start.elapsed());
+            metrics.observe_latency_class(batch_start.elapsed(), env.job.opts.priority.class());
             let _ = env.reply.send(JobResult {
                 id: env.job.id,
                 result,
@@ -821,6 +883,13 @@ fn exec_one(
     metrics: &Metrics,
     transport: &dyn ShardTransport,
 ) -> Result<JobOutput, JobError> {
+    // pre-dispatch deadline check: an expired job dies here — before the
+    // kernel runs or any remote band ships — instead of burning cycles on
+    // an answer whose caller already gave up
+    if deadline_expired(job) {
+        metrics.deadline_drops.fetch_add(1, Ordering::Relaxed);
+        return Err(JobError::DeadlineExceeded);
+    }
     let start = Instant::now();
     let shards = job.opts.shards.max(1);
     // pooled operands (the fast Gustavson kernel's row workspaces, the
@@ -846,13 +915,16 @@ fn exec_one(
             shards,
             block: cfg.geometry.block,
         };
-        let out = shard::execute_with(
+        // remote bands inherit the job's remaining deadline budget as a
+        // cap on the transport's per-band timeout (no-op in-process)
+        let out = shard::execute_with_deadline(
             transport,
             kernel,
             a_csr,
             Some(b_csr.as_ref()),
             prepared,
             shard_cfg,
+            job.opts.deadline,
         )
         .map_err(|e| {
             metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
@@ -931,10 +1003,11 @@ fn exec_one(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::JobOptions;
+    use crate::coordinator::job::{JobOptions, Priority};
     use crate::datasets::synth::uniform;
     use crate::engine::Algorithm;
     use crate::formats::traits::{FormatKind, SparseMatrix};
+    use std::time::Duration;
 
     fn cpu_server(workers: usize, depth: usize) -> Server {
         Server::start(ServerConfig {
@@ -1014,6 +1087,103 @@ mod tests {
         }
         assert!(rejected > 0, "queue never filled");
         for rx in accepted {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_dies_cheaply_with_a_typed_error() {
+        let s = cpu_server(1, 4);
+        let a = Arc::new(uniform(16, 16, 0.3, 30));
+        // a deadline of "now" is already expired by the time a worker
+        // dequeues the job
+        let rx = s.submit(SpmmJob::new(1, a.clone(), a.clone()).with_deadline(Instant::now()));
+        assert_eq!(
+            rx.recv().unwrap().result.unwrap_err(),
+            JobError::DeadlineExceeded
+        );
+        // a generous budget sails through
+        let rx = s.submit(
+            SpmmJob::new(2, a.clone(), a).with_deadline_in(Duration::from_secs(60)),
+        );
+        assert!(rx.recv().unwrap().result.is_ok());
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.deadline_drops, 1);
+        assert_eq!(snap.jobs_failed, 1);
+        assert_eq!(snap.jobs_completed, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_a_typed_retry_after() {
+        // zero queue-delay budget: once the service estimate trains, any
+        // backlog at all predicts delay > 0 and the gate sheds
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            geometry: Geometry { block: 8, pairs: 16, slots: 8 },
+            admission: AdmissionConfig {
+                max_queue_delay: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let client = s.client();
+        let a = Arc::new(uniform(64, 64, 0.4, 31));
+        // train the service-rate estimate (an untrained gate admits all)
+        client
+            .submit(SpmmJob::new(0, a.clone(), a.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 1..=12 {
+            match client.submit(SpmmJob::new(i, a.clone(), a.clone())) {
+                Ok(h) => accepted.push(h),
+                Err(e) => {
+                    assert!(e.is_transient());
+                    assert!(e.retry_after().is_some_and(|d| d > Duration::ZERO));
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "zero-budget gate never shed under a burst");
+        // shedding rejects at the door — it never drops accepted work
+        for h in accepted {
+            assert!(h.wait().is_ok());
+        }
+        assert_eq!(s.metrics.snapshot().jobs_shed, shed);
+        s.shutdown();
+    }
+
+    #[test]
+    fn high_priority_overtakes_queued_low_priority_work() {
+        // single worker: while the blocker executes, three low-priority
+        // jobs and one high-priority job queue behind it. The fair queue
+        // anchors the next batch at the high job although it arrived last.
+        let s = cpu_server(1, 8);
+        let blocker_a = Arc::new(uniform(96, 96, 0.4, 40));
+        let blocker = s.submit(SpmmJob::new(0, blocker_a.clone(), blocker_a));
+        let low_a = Arc::new(uniform(96, 96, 0.4, 41));
+        let lows: Vec<_> = (1..=3)
+            .map(|i| {
+                s.submit(
+                    SpmmJob::new(i, low_a.clone(), low_a.clone()).with_priority(Priority::Low),
+                )
+            })
+            .collect();
+        let high_a = Arc::new(uniform(24, 24, 0.3, 42));
+        let high =
+            s.submit(SpmmJob::new(9, high_a.clone(), high_a).with_priority(Priority::High));
+        assert!(blocker.recv().unwrap().result.is_ok());
+        assert!(high.recv().unwrap().result.is_ok());
+        // right after the high reply the lows (each a real 96×96
+        // multiply) cannot all have finished: high was served first
+        let done_lows = lows.iter().filter(|rx| rx.try_recv().is_ok()).count();
+        assert!(done_lows < 3, "high-priority job was served last");
+        for rx in lows {
             assert!(rx.recv().unwrap().result.is_ok());
         }
         s.shutdown();

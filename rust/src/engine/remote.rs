@@ -45,7 +45,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::{self, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -69,6 +69,15 @@ const MAX_FRAME: usize = 1 << 30;
 
 /// How often the leader's event loop wakes to sweep timeouts and hedges.
 const TICK: Duration = Duration::from_millis(20);
+
+/// Circuit-breaker backoff for re-admitting a lost worker: first probe is
+/// immediate (next run), then delays double per consecutive failure.
+const RECONNECT_BASE: Duration = Duration::from_millis(50);
+/// Backoff ceiling — a long-dead peer is probed at most this rarely.
+const RECONNECT_MAX: Duration = Duration::from_secs(30);
+/// Dial + handshake budget for one re-admission probe, so probing a
+/// black-holed peer can't stall a live run.
+const RECONNECT_PROBE: Duration = Duration::from_millis(250);
 
 fn write_frame(stream: &mut TcpStream, frame: &Frame) -> io::Result<()> {
     let bytes = encode_frame(frame);
@@ -104,6 +113,12 @@ struct WorkerLink {
     /// Content keys staged on this worker (its remote prepared cache).
     staged: BTreeSet<PreparedKey>,
     alive: bool,
+    /// Circuit breaker: consecutive failed re-admission probes since the
+    /// link died (drives the exponential backoff).
+    reconnect_failures: u32,
+    /// Earliest instant the next re-admission probe may run (`None` =
+    /// probe immediately on the next run).
+    next_retry: Option<Instant>,
 }
 
 struct LinkState {
@@ -143,31 +158,14 @@ impl SocketTransport {
         }
         let mut workers = Vec::with_capacity(peers.len());
         for addr in peers {
-            let mut stream = TcpStream::connect(addr)
-                .map_err(|e| exec_err(format!("socket transport: connect {addr}: {e}")))?;
-            let _ = stream.set_nodelay(true);
-            write_frame(&mut stream, &Frame::Hello)
-                .map_err(|e| exec_err(format!("socket transport: hello {addr}: {e}")))?;
-            let body = read_frame(&mut stream)
-                .map_err(|e| exec_err(format!("socket transport: handshake {addr}: {e}")))?;
-            match decode_frame(&body) {
-                Ok(Frame::HelloAck) => {}
-                Ok(other) => {
-                    return Err(exec_err(format!(
-                        "socket transport: {addr} answered hello with {other:?}"
-                    )))
-                }
-                Err(e) => {
-                    return Err(exec_err(format!(
-                        "socket transport: {addr} handshake: {e}"
-                    )))
-                }
-            }
+            let stream = dial(addr, None)?;
             workers.push(WorkerLink {
                 addr: addr.clone(),
                 stream,
                 staged: BTreeSet::new(),
                 alive: true,
+                reconnect_failures: 0,
+                next_retry: None,
             });
         }
         Ok(SocketTransport {
@@ -196,6 +194,96 @@ impl SocketTransport {
             .iter()
             .map(|w| w.addr.clone())
             .collect()
+    }
+
+    /// Circuit-breaker re-admission: probe every lost peer whose backoff
+    /// window elapsed. A probe that dials and re-handshakes replaces the
+    /// link's stream, clears its staged view (the revived process holds
+    /// nothing — B re-replicates lazily through the normal staging path),
+    /// and returns the worker to the routable pool; a failed probe doubles
+    /// the backoff. Runs at the top of every [`SocketTransport::run`], so
+    /// a dead peer stays dead for at most one run plus its backoff.
+    fn try_readmit(st: &mut LinkState, counters: &mut TransportCounters) {
+        let now = Instant::now();
+        for w in st.workers.iter_mut().filter(|w| !w.alive) {
+            if let Some(t) = w.next_retry {
+                if now < t {
+                    continue; // breaker still open
+                }
+            }
+            match dial(&w.addr, Some(RECONNECT_PROBE)) {
+                Ok(stream) => {
+                    w.stream = stream;
+                    w.staged.clear();
+                    w.alive = true;
+                    w.reconnect_failures = 0;
+                    w.next_retry = None;
+                    counters.workers_readmitted += 1;
+                }
+                Err(_) => {
+                    let shift = w.reconnect_failures.min(9);
+                    w.reconnect_failures = w.reconnect_failures.saturating_add(1);
+                    let delay = RECONNECT_BASE
+                        .saturating_mul(1u32 << shift)
+                        .min(RECONNECT_MAX);
+                    w.next_retry = Some(now + delay);
+                }
+            }
+        }
+    }
+}
+
+/// Dial a worker and complete the Hello/HelloAck handshake. `timeout`
+/// bounds both the connect and the handshake read (re-admission probes);
+/// `None` blocks, as the initial fleet connect always has.
+fn dial(addr: &str, timeout: Option<Duration>) -> Result<TcpStream, EngineError> {
+    let mut stream = match timeout {
+        None => TcpStream::connect(addr)
+            .map_err(|e| exec_err(format!("socket transport: connect {addr}: {e}")))?,
+        Some(t) => {
+            let addrs = addr
+                .to_socket_addrs()
+                .map_err(|e| exec_err(format!("socket transport: resolve {addr}: {e}")))?;
+            let mut last: Option<io::Error> = None;
+            let mut conn: Option<TcpStream> = None;
+            for sa in addrs {
+                match TcpStream::connect_timeout(&sa, t) {
+                    Ok(s) => {
+                        conn = Some(s);
+                        break;
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match conn {
+                Some(s) => s,
+                None => {
+                    let detail = match last {
+                        Some(e) => e.to_string(),
+                        None => "no resolved addresses".into(),
+                    };
+                    return Err(exec_err(format!(
+                        "socket transport: connect {addr}: {detail}"
+                    )));
+                }
+            }
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    // bound the handshake read so a black-holed peer can't stall a probe;
+    // the reader threads set their own timeout after this returns
+    let _ = stream.set_read_timeout(timeout);
+    write_frame(&mut stream, &Frame::Hello)
+        .map_err(|e| exec_err(format!("socket transport: hello {addr}: {e}")))?;
+    let body = read_frame(&mut stream)
+        .map_err(|e| exec_err(format!("socket transport: handshake {addr}: {e}")))?;
+    let _ = stream.set_read_timeout(None);
+    match decode_frame(&body) {
+        Ok(Frame::HelloAck) => Ok(stream),
+        Ok(other) => Err(exec_err(format!(
+            "socket transport: {addr} answered hello with {other:?}"
+        ))),
+        Err(e) => Err(exec_err(format!("socket transport: {addr} handshake: {e}"))),
     }
 }
 
@@ -304,6 +392,23 @@ impl ShardTransport for SocketTransport {
         if total == 0 {
             return Ok(BandRun { bands: Vec::new(), counters });
         }
+
+        // re-admit lost workers before placement: a revived peer joins
+        // this run's routable pool (and re-stages B below)
+        Self::try_readmit(st, &mut counters);
+
+        // the job's remaining deadline budget caps every band attempt's
+        // timeout — a remote band can never out-wait the job that asked
+        // for it (floored at one tick so a nearly-spent budget degrades
+        // to fast typed retries, not a spin)
+        let band_timeout = match job.deadline {
+            Some(d) => self
+                .policy
+                .band_timeout
+                .min(d.saturating_duration_since(Instant::now()))
+                .max(TICK),
+            None => self.policy.band_timeout,
+        };
 
         // --- stage B on every live worker missing it (content-keyed) ---
         let mut lost_on_stage = Vec::new();
@@ -567,9 +672,7 @@ impl ShardTransport for SocketTransport {
                         // timeout sweep: resubmit overdue bands
                         let overdue: Vec<u64> = outstanding
                             .iter()
-                            .filter(|(_, p)| {
-                                now.duration_since(p.sent) > self.policy.band_timeout
-                            })
+                            .filter(|(_, p)| now.duration_since(p.sent) > band_timeout)
                             .map(|(&s, _)| s)
                             .collect();
                         for seq in overdue {
@@ -780,6 +883,119 @@ mod tests {
         assert_eq!(remote2.c.bit_pattern(), local.c.bit_pattern());
         assert!(remote2.counters.prepare_reuse >= 1);
         assert_eq!(remote2.counters.prepare_replications, 0);
+    }
+
+    #[test]
+    fn lost_worker_is_readmitted_with_a_fresh_handshake() {
+        use crate::engine::kernel::{Algorithm, CostHint};
+        use crate::formats::traits::FormatKind;
+
+        // panics on the first band it executes, then behaves
+        struct FlakyKernel {
+            fail_once: Arc<AtomicBool>,
+        }
+        impl crate::engine::SpmmKernel for FlakyKernel {
+            fn algorithm(&self) -> Algorithm {
+                Algorithm::Gustavson
+            }
+            fn format(&self) -> FormatKind {
+                FormatKind::Csr
+            }
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+                GustavsonKernel.cost_hint(a, b)
+            }
+            fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+                GustavsonKernel.prepare(b)
+            }
+            fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+                if self.fail_once.swap(false, Ordering::SeqCst) {
+                    panic!("injected worker fault");
+                }
+                GustavsonKernel.execute(a, b)
+            }
+        }
+
+        let fail_once = Arc::new(AtomicBool::new(true));
+        let mut reg = crate::engine::Registry::with_default_kernels(
+            Geometry { block: 16, pairs: 32, slots: 16 },
+            2,
+        );
+        reg.register(Arc::new(FlakyKernel { fail_once: Arc::clone(&fail_once) }));
+        let addr = spawn_worker(Arc::new(reg));
+        let transport = SocketTransport::connect_with(
+            &[addr],
+            RetryPolicy {
+                band_timeout: Duration::from_secs(5),
+                retry_budget: 1,
+                hedge_after: Duration::from_secs(5),
+            },
+        )
+        .expect("connect");
+
+        let k = GustavsonKernel;
+        let a = uniform(64, 48, 0.2, 33);
+        let b = uniform(48, 40, 0.2, 34);
+        let prepared = k.prepare(&b).unwrap();
+        let cfg = ShardConfig { shards: 2, block: 16 };
+        // first run: the only worker's handler panics mid-band, the
+        // connection drops, and with no survivors the job fails typed
+        let first = execute_with(&transport, &k, &a, Some(&b), &prepared, cfg);
+        assert!(first.is_err(), "sole-worker loss must fail the job");
+        assert_eq!(transport.live_workers(), 0);
+        // second run: the circuit breaker re-dials, the worker's accept
+        // loop answers a fresh Hello, B re-replicates, and the revived
+        // worker serves bit-identical bands
+        let local = execute(&k, &a, Some(&b), &prepared, cfg).unwrap();
+        let remote = execute_with(&transport, &k, &a, Some(&b), &prepared, cfg).unwrap();
+        assert_eq!(remote.c.bit_pattern(), local.c.bit_pattern());
+        assert!(remote.counters.workers_readmitted >= 1, "revival must be metered");
+        assert!(remote.counters.prepare_replications >= 1, "B must re-stage after revival");
+        assert_eq!(transport.live_workers(), 1);
+    }
+
+    #[test]
+    fn readmission_backs_off_while_the_peer_stays_down() {
+        // bind-then-drop: the address is real but nothing listens there
+        let gone = {
+            let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+            l.local_addr().expect("addr").to_string()
+        };
+        let mut st = LinkState {
+            workers: vec![WorkerLink {
+                addr: gone,
+                // self-connected placeholder stream (never read)
+                stream: {
+                    let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+                    let a = l.local_addr().expect("addr");
+                    let s = TcpStream::connect(a).expect("self-connect");
+                    let _ = l.accept();
+                    s
+                },
+                staged: BTreeSet::new(),
+                alive: false,
+                reconnect_failures: 0,
+                next_retry: None,
+            }],
+            next_seq: 0,
+        };
+        let mut counters = TransportCounters::default();
+        SocketTransport::try_readmit(&mut st, &mut counters);
+        assert_eq!(counters.workers_readmitted, 0);
+        assert!(!st.workers[0].alive);
+        assert_eq!(st.workers[0].reconnect_failures, 1);
+        let first_retry = st.workers[0].next_retry.expect("breaker must arm");
+        // a probe inside the backoff window is skipped entirely
+        SocketTransport::try_readmit(&mut st, &mut counters);
+        assert_eq!(st.workers[0].reconnect_failures, 1, "breaker window must gate probes");
+        // force the window open: the next probe fails again and doubles
+        st.workers[0].next_retry = Some(Instant::now());
+        SocketTransport::try_readmit(&mut st, &mut counters);
+        assert_eq!(st.workers[0].reconnect_failures, 2);
+        let second_retry = st.workers[0].next_retry.expect("breaker stays armed");
+        assert!(second_retry > first_retry, "backoff must extend");
     }
 
     #[test]

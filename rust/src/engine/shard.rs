@@ -207,6 +207,23 @@ pub fn execute_with(
     prepared: &PreparedB,
     cfg: ShardConfig,
 ) -> Result<ShardOutput, EngineError> {
+    execute_with_deadline(transport, kernel, a, b, prepared, cfg, None)
+}
+
+/// [`execute_with`] carrying the submitting job's absolute deadline: the
+/// socket transport caps each band attempt's timeout at the remaining
+/// budget, so a remote band can never out-wait the job that asked for it.
+/// `None` (and any in-process run) behaves exactly as [`execute_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn execute_with_deadline(
+    transport: &dyn ShardTransport,
+    kernel: &dyn SpmmKernel,
+    a: &Csr,
+    b: Option<&Csr>,
+    prepared: &PreparedB,
+    cfg: ShardConfig,
+    deadline: Option<std::time::Instant>,
+) -> Result<ShardOutput, EngineError> {
     let (b_rows, b_cols) = prepared.shape();
     if a.cols() != b_rows {
         return Err(EngineError::ShapeMismatch {
@@ -255,6 +272,7 @@ pub fn execute_with(
         prepared,
         plan: &plan,
         key,
+        deadline,
     })?;
 
     // every planned band must come back exactly once, whatever route (or

@@ -74,6 +74,9 @@ pub struct TransportCounters {
     /// Bands that found B already staged on their worker (remote
     /// `PreparedCache` reuse).
     pub prepare_reuse: u64,
+    /// Lost workers revived through the circuit-breaker re-admission
+    /// path (reconnect + re-handshake; staged B re-replicates lazily).
+    pub workers_readmitted: u64,
 }
 
 impl TransportCounters {
@@ -85,6 +88,7 @@ impl TransportCounters {
         self.workers_lost += other.workers_lost;
         self.prepare_replications += other.prepare_replications;
         self.prepare_reuse += other.prepare_reuse;
+        self.workers_readmitted += other.workers_readmitted;
     }
 }
 
@@ -98,6 +102,11 @@ pub struct BandJob<'a> {
     /// Content-addressed identity of `prepared` (see [`content_key`]);
     /// remote workers cache staged operands under this key.
     pub key: PreparedKey,
+    /// The submitting job's absolute deadline, if any. The socket
+    /// transport caps each band attempt's timeout at the remaining
+    /// budget; [`InProcess`] ignores it (the coordinator already killed
+    /// expired jobs before dispatch).
+    pub deadline: Option<Instant>,
 }
 
 /// One band's finished result, however it travelled.
@@ -302,7 +311,14 @@ mod tests {
             ShardPlanner::plan(&a, Some(&b), ShardConfig { shards: 3, block: 16 });
         let key = content_key(&k, &prepared, Some(&b));
         let run = InProcess
-            .run(&BandJob { kernel: &k, a: &a, prepared: &prepared, plan: &plan, key })
+            .run(&BandJob {
+                kernel: &k,
+                a: &a,
+                prepared: &prepared,
+                plan: &plan,
+                key,
+                deadline: None,
+            })
             .unwrap();
         assert_eq!(run.bands.len(), plan.bands.len());
         assert_eq!(run.counters, TransportCounters::default());

@@ -15,7 +15,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use spmm_accel::coordinator::{
-    CoalesceConfig, JobHandle, KernelSpec, LearnConfig, Server, ServerConfig,
+    AdmissionConfig, CoalesceConfig, JobError, JobHandle, KernelSpec, LearnConfig, Server,
+    ServerConfig,
 };
 use spmm_accel::datasets;
 use spmm_accel::engine::{Algorithm, Registry, SpmmKernel};
@@ -292,6 +293,15 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 model_path: args.str_opt("model-path").map(PathBuf::from),
                 ..Default::default()
             };
+            // --max-queue-delay <ms> arms the admission gate: submissions
+            // predicted to wait longer are shed with a typed Overloaded
+            // error (and a retry-after hint) instead of blocking
+            let admission = AdmissionConfig {
+                max_queue_delay: args
+                    .get::<u64>("max-queue-delay")?
+                    .map(std::time::Duration::from_millis),
+                ..Default::default()
+            };
             let server = Server::start(ServerConfig {
                 workers,
                 queue_depth: 8,
@@ -302,6 +312,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                 artifacts_dir: Manifest::default_dir(),
                 coalesce,
                 learn,
+                admission,
                 ..Default::default()
             });
             let client = server.client();
@@ -312,8 +323,18 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             let batch = (0..jobs as u64)
                 .map(|i| client.job(a.clone(), a.clone()).id(i).keep_result(false).build());
             let handles = client.submit_many(batch);
+            let mut shed_errs = 0u64;
             for res in JobHandle::batch_wait_all(handles) {
-                res?;
+                match res {
+                    Ok(_) => {}
+                    // under an armed gate, sheds are expected traffic
+                    // management, not a CLI failure — report and go on
+                    Err(e @ JobError::Overloaded { .. }) => {
+                        shed_errs += 1;
+                        eprintln!("job shed: {e}");
+                    }
+                    Err(e) => return Err(format!("job failed: {e}")),
+                }
             }
             let snap = client.metrics();
             println!(
@@ -347,6 +368,12 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  (Metrics::kernel_log)",
                 snap.kernel_observations
             );
+            if snap.jobs_shed + snap.deadline_drops + snap.workers_readmitted + shed_errs > 0 {
+                println!(
+                    "traffic: {} shed (admission), {} deadline drops, {} workers readmitted",
+                    snap.jobs_shed, snap.deadline_drops, snap.workers_readmitted
+                );
+            }
             if snap.model_refits > 0 {
                 println!(
                     "learned selection: {} model refit(s), calibrated kernels:",
@@ -456,6 +483,8 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
                  \u{20}  spmm-accel spmm --kernel inner --format incrs\n\
                  \u{20}  spmm-accel spmm --a-format coo --b-format incrs   # non-CSR operand ingestion\n\
                  \u{20}  spmm-accel serve --workers 4 --jobs 32 --kernel auto [--no-coalesce]\n\
+                 \u{20}  spmm-accel serve --workers 2 --jobs 64 --max-queue-delay 5   # admission \
+                 control: shed past a 5ms predicted queue delay\n\
                  \u{20}  spmm-accel serve --kernel auto --model-path /tmp/cost.model --refit-every 8 \
                  --margin 0.1\n\
                  \u{20}  spmm-accel kernels"

@@ -1,0 +1,279 @@
+//! Traffic-resilience property suite (`coordinator::admission` +
+//! `engine::remote` re-admission): an armed admission gate sheds with a
+//! typed `Overloaded { retry_after }` instead of queueing unboundedly,
+//! but NEVER drops a job it admitted — every accepted handle resolves,
+//! bit-identically across the whole burst. Priority classes respect the
+//! fair queue's explicit starvation bound (a low job overtaken by a
+//! high-priority stream is still served before the stream drains), and a
+//! socket worker that dies mid-band is re-admitted on a later job with a
+//! fresh handshake, producing bit-identical results.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use spmm_accel::coordinator::{
+    AdmissionConfig, CoalesceConfig, JobError, JobOptions, Priority, Server, ServerConfig,
+    SpmmJob,
+};
+use spmm_accel::datasets::synth::uniform;
+use spmm_accel::engine::remote::serve;
+use spmm_accel::engine::{
+    shard, Algorithm, CostHint, EngineError, EngineOutput, GustavsonKernel, PreparedB,
+    Registry, RetryPolicy, ShardConfig, SocketTransport, SpmmKernel,
+};
+use spmm_accel::formats::csr::Csr;
+use spmm_accel::formats::traits::FormatKind;
+use spmm_accel::spmm::plan::Geometry;
+
+const BLOCK: usize = 16;
+
+fn geometry() -> Geometry {
+    Geometry { block: 8, pairs: 16, slots: 8 }
+}
+
+/// A server whose gate sheds on ANY predicted queue delay once the
+/// service-rate estimate has trained — the harshest admission setting.
+fn zero_budget_server(workers: usize, depth: usize) -> Server {
+    Server::start(ServerConfig {
+        workers,
+        queue_depth: depth,
+        geometry: geometry(),
+        admission: AdmissionConfig {
+            max_queue_delay: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+// ----------------------------------------------------------- admission
+
+/// (a) Load shedding rejects at the door, never after: under a burst that
+/// saturates a zero-budget gate, every job the gate ADMITTED completes,
+/// and all accepted runs of the identical multiply are bit-identical.
+/// Accounting is exact: `jobs_shed` counts the sheds, `jobs_completed`
+/// the admissions.
+#[test]
+fn admitted_jobs_are_never_dropped_under_saturation() {
+    let s = zero_budget_server(2, 16);
+    let client = s.client();
+    let a = Arc::new(uniform(64, 64, 0.4, 11));
+    // train the service-rate estimate (an untrained gate admits all)
+    let trained = client
+        .submit(SpmmJob::new(0, a.clone(), a.clone()))
+        .expect("untrained gate admits")
+        .wait()
+        .expect("training job");
+    let want = trained.c.expect("keep_result defaults on").bit_pattern();
+
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for i in 1..=24u64 {
+        let job = SpmmJob::new(i, a.clone(), a.clone()).with_tenant((i % 3) as u32);
+        match client.submit(job) {
+            Ok(h) => accepted.push(h),
+            Err(JobError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+    }
+    assert!(shed >= 1, "zero-budget gate never shed under a 24-job burst");
+    assert!(!accepted.is_empty(), "gate shed everything, including at zero backlog");
+    let n = accepted.len() as u64;
+    for h in accepted {
+        let out = h.wait().expect("admitted job was dropped");
+        assert_eq!(
+            out.c.expect("result kept").bit_pattern(),
+            want,
+            "accepted jobs diverged under load shedding"
+        );
+    }
+    let snap = s.metrics.snapshot();
+    assert_eq!(snap.jobs_shed, shed);
+    assert_eq!(snap.jobs_completed, n + 1);
+    assert_eq!(snap.jobs_failed, 0);
+    s.shutdown();
+}
+
+/// (b) Sheds are typed and actionable: `Overloaded` carries a nonzero
+/// `retry_after`, classifies as transient, and the bounded-wait path
+/// (`submit_within`) converts the shed into admission once the backlog
+/// drains instead of making the caller hand-roll a retry loop.
+#[test]
+fn sheds_are_typed_and_the_bounded_wait_path_recovers() {
+    let s = zero_budget_server(1, 16);
+    let client = s.client();
+    let a = Arc::new(uniform(64, 64, 0.4, 21));
+    client
+        .submit(SpmmJob::new(0, a.clone(), a.clone()))
+        .expect("untrained gate admits")
+        .wait()
+        .expect("training job");
+
+    let mut handles = Vec::new();
+    let mut sheds = Vec::new();
+    for i in 1..=12u64 {
+        match client.submit(SpmmJob::new(i, a.clone(), a.clone())) {
+            Ok(h) => handles.push(h),
+            Err(e) => sheds.push(e),
+        }
+    }
+    assert!(!sheds.is_empty(), "burst never shed");
+    for e in &sheds {
+        assert!(matches!(e, JobError::Overloaded { .. }), "untyped shed: {e}");
+        assert!(e.is_transient(), "sheds must invite a retry: {e}");
+        let hint = e.retry_after().expect("Overloaded carries retry_after");
+        assert!(hint > Duration::ZERO, "zero retry hint");
+        let msg = format!("{e}");
+        assert!(msg.contains("retry"), "shed message hides the hint: {msg}");
+    }
+    // the bounded-wait path rides out the backlog the plain submit shed on
+    let out = client
+        .submit_within(SpmmJob::new(99, a.clone(), a.clone()), Duration::from_secs(30))
+        .expect("bounded wait should admit once the queue drains")
+        .wait()
+        .expect("admitted job completes");
+    assert!(out.c.is_some());
+    for h in handles {
+        h.wait().expect("admitted job was dropped");
+    }
+    s.shutdown();
+}
+
+/// (c) The starvation bound is real: a low-priority job buried under a
+/// stream of high-priority work is bypassed at most `starvation_bound`
+/// times, so it completes while high-priority jobs are still pending —
+/// overtaken, but never starved.
+#[test]
+fn low_priority_is_bypassed_at_most_the_starvation_bound() {
+    let s = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 32,
+        geometry: geometry(),
+        // tiny batch window: the high stream needs many take_batch rounds
+        // to drain, so the low job's bypass counter actually climbs
+        coalesce: CoalesceConfig { enabled: true, max_batch: 2, cache_capacity: 8 },
+        ..Default::default()
+    });
+    let blocker_a = Arc::new(uniform(96, 96, 0.4, 31));
+    let blocker = s.submit(SpmmJob::new(0, blocker_a.clone(), blocker_a));
+    // queued while the blocker executes: one low job, then a 20-job
+    // high-priority stream (shared B, distinct from the low's)
+    let low_a = Arc::new(uniform(96, 96, 0.4, 32));
+    let low = s.submit(
+        SpmmJob::new(1, low_a.clone(), low_a)
+            .with_opts(JobOptions { priority: Priority::Low, ..Default::default() }),
+    );
+    let high_a = Arc::new(uniform(96, 96, 0.4, 33));
+    let highs: Vec<_> = (2..22u64)
+        .map(|i| {
+            s.submit(
+                SpmmJob::new(i, high_a.clone(), high_a.clone())
+                    .with_opts(JobOptions { priority: Priority::High, ..Default::default() }),
+            )
+        })
+        .collect();
+    assert!(blocker.recv().unwrap().result.is_ok());
+    assert!(low.recv().unwrap().result.is_ok());
+    // with bound 4 and window 2 the low is served by roughly the fifth
+    // batch — ten-ish of the twenty highs must still be queued behind it
+    let pending_highs = highs.iter().filter(|rx| rx.try_recv().is_err()).count();
+    assert!(
+        pending_highs >= 1,
+        "low-priority job waited for the entire high-priority stream"
+    );
+    for rx in highs {
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+    s.shutdown();
+}
+
+// -------------------------------------------------------- re-admission
+
+/// Dies on its first execute only, then behaves exactly like the kernel
+/// it shadows — a worker crash that a later re-admission should survive.
+struct FlakyKernel {
+    fail_once: Arc<AtomicBool>,
+}
+
+impl SpmmKernel for FlakyKernel {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Gustavson
+    }
+    fn format(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+    fn name(&self) -> &'static str {
+        "flaky-gustavson"
+    }
+    fn cost_hint(&self, a: &Csr, b: &Csr) -> CostHint {
+        GustavsonKernel.cost_hint(a, b)
+    }
+    fn prepare(&self, b: &Csr) -> Result<PreparedB, EngineError> {
+        GustavsonKernel.prepare(b)
+    }
+    fn execute(&self, a: &Csr, b: &PreparedB) -> Result<EngineOutput, EngineError> {
+        if self.fail_once.swap(false, Ordering::SeqCst) {
+            panic!("injected worker crash");
+        }
+        GustavsonKernel.execute(a, b)
+    }
+}
+
+/// (d) A worker that crashed mid-band is re-admitted by a later job: the
+/// circuit breaker re-dials, re-handshakes, re-replicates the staged
+/// operand, and the revived run is bit-identical to the local one —
+/// metered as `workers_readmitted`.
+#[test]
+fn revived_worker_rejoins_and_stays_bit_identical() {
+    let mut reg = Registry::with_default_kernels(
+        Geometry { block: BLOCK, pairs: 32, slots: 16 },
+        2,
+    );
+    let fail_once = Arc::new(AtomicBool::new(true));
+    reg.register(Arc::new(FlakyKernel { fail_once }));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker listener");
+    let addr = listener.local_addr().expect("worker addr").to_string();
+    let reg = Arc::new(reg);
+    let serve_reg = Arc::clone(&reg);
+    std::thread::spawn(move || {
+        let _ = serve(listener, serve_reg);
+    });
+    let socket = SocketTransport::connect_with(&[addr], RetryPolicy {
+        band_timeout: Duration::from_secs(30),
+        retry_budget: 1,
+        hedge_after: Duration::from_secs(600),
+    })
+    .expect("connect");
+
+    let kernel = GustavsonKernel;
+    let a = uniform(64, 48, 0.2, 41);
+    let b = uniform(48, 40, 0.2, 42);
+    let prepared = kernel.prepare(&b).expect("prepare");
+    let cfg = ShardConfig { shards: 2, block: BLOCK };
+    let want = shard::execute(&kernel, &a, Some(&b), &prepared, cfg).expect("local run");
+
+    // first job: the only worker panics mid-band and the transport fails
+    // typed — nothing left to place the bands on
+    shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg)
+        .expect_err("sole worker died — the job cannot complete");
+    assert_eq!(socket.live_workers(), 0, "dead worker still counted live");
+
+    // second job: the breaker probes, re-handshakes, re-stages B, and the
+    // revived worker produces the bit-identical result
+    let out = shard::execute_with(&socket, &kernel, &a, Some(&b), &prepared, cfg)
+        .expect("revived worker serves again");
+    assert_eq!(
+        out.c.bit_pattern(),
+        want.c.bit_pattern(),
+        "revived worker diverges from the local run"
+    );
+    assert!(out.counters.workers_readmitted >= 1, "{:?}", out.counters);
+    assert!(
+        out.counters.prepare_replications >= 1,
+        "re-admission must re-stage B (the old staging died with the socket): {:?}",
+        out.counters
+    );
+    assert_eq!(socket.live_workers(), 1);
+}
